@@ -1,0 +1,73 @@
+//! Quickstart: open the proxy, send one prompt under each delegation level,
+//! inspect the transparency metadata, and regenerate for a better answer.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use llmbridge::api::{Request, ServiceType};
+use llmbridge::coordinator::Bridge;
+use llmbridge::models::pricing::ModelId;
+
+fn show(tag: &str, resp: &llmbridge::api::Response) {
+    let m = &resp.metadata;
+    let models: Vec<String> = m
+        .models_used
+        .iter()
+        .map(|(model, role)| format!("{model}[{role}]"))
+        .collect();
+    println!(
+        "{tag:<16} cost=${:<9.6} in={:<4} out={:<3} ctx={} cache={:?} models={}",
+        m.cost_usd,
+        m.input_tokens,
+        m.output_tokens,
+        m.context_messages,
+        m.cache,
+        models.join(", ")
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let bridge = Bridge::open("artifacts")?;
+    let user = "quickstart";
+    let prompt = "tell me about vaccination and why people in my community talk about it so much";
+
+    // 1. Full delegation: the proxy picks models via the verification
+    //    cascade (§3.3).
+    let resp = bridge.handle(
+        Request::new(user, "c1", prompt).service_type(ServiceType::default()),
+    )?;
+    show("model_selector", &resp);
+    let first_id = resp.metadata.request_id;
+
+    // 2. Explicit low-level control (Table 2's `fixed`).
+    let resp = bridge.handle(Request::new(user, "c2", prompt).service_type(
+        ServiceType::Fixed {
+            model: ModelId::Gpt4oMini,
+            cache: llmbridge::api::CachePolicy::Skip,
+            context_k: 0,
+        },
+    ))?;
+    show("fixed(4o-mini)", &resp);
+
+    // 3. The cost/quality extremes.
+    let resp = bridge
+        .handle(Request::new(user, "c3", prompt).service_type(ServiceType::Cost))?;
+    show("cost", &resp);
+    let resp = bridge
+        .handle(Request::new(user, "c4", prompt).service_type(ServiceType::Quality))?;
+    show("quality", &resp);
+
+    // 4. Iterate: not satisfied? regenerate() nudges toward quality
+    //    (the WhatsApp "Get Better Answer" button).
+    let better = bridge.regenerate(first_id, None)?;
+    show("regenerate", &better);
+
+    // 5. Everything is also visible through telemetry.
+    println!(
+        "\ntotal spent: ${:.6} across {} requests",
+        bridge.telemetry().costs.total_usd(),
+        bridge.telemetry().counters.get("requests"),
+    );
+    Ok(())
+}

@@ -1,0 +1,138 @@
+"""AOT pipeline: lower the L2 model pool to HLO-text artifacts for rust.
+
+Emits into artifacts/ (default ../artifacts relative to python/):
+    lm_nano.hlo.txt / lm_mini.hlo.txt / lm_large.hlo.txt
+    embedder.hlo.txt
+    lm_*.bin, embedder.bin        flat little-endian f32 weight blobs
+    manifest.json                 registry consumed by rust/src/runtime
+
+Interchange is HLO *text*, never a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Pallas kernels are lowered with interpret=True so the resulting HLO is
+plain ops executable on the CPU PJRT plugin (real-TPU lowering would emit
+Mosaic custom-calls).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+SEED = 0x11A3B71D6E
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_lm(variant: str, fused: bool = False) -> str:
+    d, layers = model.VARIANTS[variant]
+    n_params = model.param_count(model.lm_param_spec(d, layers))
+    fn = model.lm_step_fn(variant, interpret=True, fused=fused)
+
+    def wrapped(tokens, length, theta):
+        return (fn(tokens, length, theta),)
+
+    lowered = jax.jit(wrapped).lower(
+        jax.ShapeDtypeStruct((model.SEQ_LEN,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((n_params,), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_embedder() -> str:
+    n_params = model.param_count(model.embed_param_spec())
+
+    def wrapped(tokens, length, theta):
+        return (model.embed(tokens, length, theta),)
+
+    lowered = jax.jit(wrapped).lower(
+        jax.ShapeDtypeStruct((model.SEQ_LEN,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((n_params,), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def dump_weights(path: str, theta) -> int:
+    arr = np.asarray(theta, dtype="<f4")
+    arr.tofile(path)
+    return arr.size
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    key = jax.random.PRNGKey(SEED % (2**32))
+    manifest = {
+        "tokenizer": {
+            "kind": "fnv1a-word",
+            "vocab": model.VOCAB,
+            "seq_len": model.SEQ_LEN,
+            "pad": model.PAD,
+            "bos": model.BOS,
+            "eos": model.EOS,
+            "first_word_id": model.FIRST_WORD_ID,
+        },
+        "models": [],
+        "embedder": None,
+    }
+
+    for variant in model.VARIANTS:
+        entry = model.manifest_entry(variant)
+        hlo = lower_lm(variant)
+        with open(os.path.join(args.out_dir, entry["hlo"]), "w") as f:
+            f.write(hlo)
+        # Fused (XLA:CPU-friendly) twin of the same computation; the rust
+        # engine serves this one on CPU (EXPERIMENTS.md §Perf).
+        hlo_fused = lower_lm(variant, fused=True)
+        with open(os.path.join(args.out_dir, entry["hlo_fused"]), "w") as f:
+            f.write(hlo_fused)
+        key, sub = jax.random.split(key)
+        d, layers = model.VARIANTS[variant]
+        theta = model.init_lm_params(sub, d, layers)
+        n = dump_weights(os.path.join(args.out_dir, entry["weights"]), theta)
+        assert n == entry["params"], (variant, n, entry["params"])
+        manifest["models"].append(entry)
+        print(f"lowered lm_{variant}: d={d} L={layers} params={n}")
+
+    hlo = lower_embedder()
+    with open(os.path.join(args.out_dir, "embedder.hlo.txt"), "w") as f:
+        f.write(hlo)
+    key, sub = jax.random.split(key)
+    theta_e = model.init_embed_params(sub)
+    n = dump_weights(os.path.join(args.out_dir, "embedder.bin"), theta_e)
+    manifest["embedder"] = {
+        "dim": model.EMBED_DIM,
+        "bigram_buckets": model.BIGRAM_BUCKETS,
+        "seq_len": model.SEQ_LEN,
+        "params": n,
+        "hlo": "embedder.hlo.txt",
+        "weights": "embedder.bin",
+    }
+    print(f"lowered embedder: dim={model.EMBED_DIM} params={n}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

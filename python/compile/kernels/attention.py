@@ -1,0 +1,128 @@
+"""L1: fused multi-head causal attention as a Pallas kernel.
+
+TPU adaptation of the flash-attention insight (see DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks staging K/V tiles through
+shared memory, the BlockSpec grid streams per-(head, q-block) tiles
+HBM->VMEM, the Q tile stays VMEM-resident, QK^T hits the MXU via jnp.dot
+with f32 accumulation, and the online-softmax running statistics (m, l)
+live in registers/VMEM scratch rather than shared memory.
+
+Grid: (num_heads, T // BLOCK_Q).  Each program instance owns one q-block of
+one head and loops over k-blocks with the numerically-stable streaming
+softmax.  `interpret=True` is mandatory on CPU: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+VMEM budget per instance (f32):
+    q tile     BLOCK_Q x Dh
+    k,v block  BLOCK_K x Dh  (x2)
+    scores     BLOCK_Q x BLOCK_K
+With BLOCK_Q = BLOCK_K = 32 and Dh <= 64 this is < 64 KiB, far inside the
+~16 MiB VMEM of a TPU core; the roomy margin lets real-TPU builds raise
+BLOCK_K for better MXU occupancy (see vmem_report.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale, block_k):
+    """One (head, q-block) program instance of streaming causal attention."""
+    qi = pl.program_id(1)
+    q = q_ref[0]                      # (BQ, Dh)
+    k = k_ref[0]                      # (T, Dh) — full key range for this head
+    v = v_ref[0]                      # (T, Dh)
+    bias = bias_ref[...]              # (T,)  0 for valid keys, -inf for padding
+
+    block_q, dh = q.shape
+    seq_len = k.shape[0]
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k_blk = jax.lax.dynamic_slice(k, (kb * block_k, 0), (block_k, dh))
+        v_blk = jax.lax.dynamic_slice(v, (kb * block_k, 0), (block_k, dh))
+        b_blk = jax.lax.dynamic_slice(bias, (kb * block_k,), (block_k,))
+        # MXU: (BQ, Dh) @ (Dh, BK) with f32 accumulation.
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32) * scale
+        k_pos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1
+        )
+        causal = k_pos <= q_pos       # (BQ, BK)
+        s = jnp.where(causal, s + b_blk[None, :], NEG_INF)
+        # Online softmax update.
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32
+        )
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, dh), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    nkb = seq_len // block_k
+    acc, _, l = jax.lax.fori_loop(0, nkb, body, (acc0, m0, l0))
+    o_ref[0] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "interpret")
+)
+def attention(
+    q,
+    k,
+    v,
+    kbias,
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+):
+    """Causal multi-head attention.
+
+    Args:
+      q, k, v: (H, T, Dh) f32.
+      kbias: (T,) f32 additive key bias; 0 for valid positions and a large
+        negative value for padding beyond the live sequence length.
+    Returns:
+      (H, T, Dh) f32 attention output.
+    """
+    h, t, dh = q.shape
+    assert t % block_q == 0 and t % block_k == 0, (t, block_q, block_k)
+    scale = 1.0 / (dh ** 0.5)
+    grid = (h, t // block_q)
+    kernel = functools.partial(_attn_kernel, scale=scale, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda hh, qq: (hh, qq, 0)),
+            pl.BlockSpec((1, t, dh), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda hh, qq: (hh, 0, 0)),
+            pl.BlockSpec((t,), lambda hh, qq: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda hh, qq: (hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, dh), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, kbias)
+
+
+def vmem_bytes(block_q: int, block_k: int, dh: int, t: int) -> int:
+    """Estimated per-instance VMEM footprint in bytes (f32)."""
+    tiles = (
+        block_q * dh        # q tile
+        + 2 * t * dh        # k, v (streamed range; worst case resident)
+        + block_q * block_k  # score tile
+        + 2 * block_q * dh  # acc + output
+    )
+    return 4 * tiles

@@ -1,0 +1,57 @@
+"""L1: blocked matmul Pallas kernel used by the transformer MLP layers.
+
+Grid tiles the (M, N) output; the K dimension is kept VMEM-resident per
+instance (K = model width <= 192 here, so an (BM, K) A-tile plus a (K, BN)
+B-tile is a few tens of KiB — trivially inside VMEM).  On real TPU the
+jnp.dot maps onto the 128x128 MXU systolic array; BM/BN are chosen as
+multiples of 8x128 lanes where shapes allow, and we fall back to exact
+divisors for the small widths used in this repo.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim: int, want: int) -> int:
+    if dim % want == 0:
+        return want
+    for cand in (64, 32, 16, 8, 4, 2, 1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def matmul(a, b, *, block_m: int = 32, block_n: int = 64, interpret: bool = True):
+    """C = A @ B with a (BM, BN)-tiled Pallas grid.
+
+    a: (M, K) f32, b: (K, N) f32 -> (M, N) f32.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

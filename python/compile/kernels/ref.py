@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must agree with its oracle to float32
+tolerance across the shape/dtype sweep in python/tests/.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, kbias):
+    """Naive causal multi-head attention. q,k,v: (H, T, Dh); kbias: (T,)."""
+    h, t, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("hqd,hkd->hqk", q, k) * scale          # (H, T, T)
+    pos = jnp.arange(t)
+    causal = pos[None, :] <= pos[:, None]                  # (T, T) q>=k
+    s = jnp.where(causal[None, :, :], s + kbias[None, None, :], NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def matmul_ref(a, b):
+    return a @ b

@@ -1,0 +1,79 @@
+"""L1 perf report: VMEM footprint + MXU utilization *estimates* per block
+shape for the Pallas attention kernel.
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the L1
+optimization target is structural: keep every (head, q-block) instance
+comfortably inside a TPU core's ~16 MiB VMEM while maximizing MXU occupancy
+(tiles as close to the 128x128 systolic array as the model width allows).
+
+Usage: cd python && python -m compile.kernels.vmem_report
+"""
+
+from . import attention
+from .. import model
+
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128
+
+
+def mxu_utilization(block_q: int, block_k: int, dh: int) -> float:
+    """Fraction of the 128x128 MXU a QK^T tile occupies (both operand dims
+    clamped at the systolic array edge)."""
+    return min(block_q, MXU_DIM) * min(block_k, MXU_DIM) / (MXU_DIM * MXU_DIM)
+
+
+def report(seq_len: int | None = None):
+    seq_len = seq_len or model.SEQ_LEN
+    rows = []
+    for variant, (d, layers) in model.VARIANTS.items():
+        dh = d // model.NUM_HEADS
+        for bq in (16, 32, 64):
+            for bk in (16, 32, 64):
+                if seq_len % bq or seq_len % bk:
+                    continue
+                vmem = attention.vmem_bytes(bq, bk, dh, seq_len)
+                rows.append(
+                    {
+                        "variant": variant,
+                        "layers": layers,
+                        "dh": dh,
+                        "block_q": bq,
+                        "block_k": bk,
+                        "vmem_bytes": vmem,
+                        "vmem_frac": vmem / VMEM_BYTES,
+                        "mxu_util": mxu_utilization(bq, bk, dh),
+                        "grid": (model.NUM_HEADS, seq_len // bq),
+                    }
+                )
+    return rows
+
+
+def main():
+    print(
+        f"{'variant':<8} {'dh':>3} {'bq':>3} {'bk':>3} {'grid':>8} "
+        f"{'vmem':>10} {'%vmem':>7} {'mxu_util':>9}"
+    )
+    best = {}
+    for r in report():
+        print(
+            f"{r['variant']:<8} {r['dh']:>3} {r['block_q']:>3} {r['block_k']:>3} "
+            f"{str(r['grid']):>8} {r['vmem_bytes']:>10,} "
+            f"{100*r['vmem_frac']:>6.2f}% {r['mxu_util']:>9.3f}"
+        )
+        key = r["variant"]
+        # Best = max MXU utilization subject to <25% VMEM (leave room for
+        # double-buffering and the MLP tiles).
+        if r["vmem_frac"] < 0.25 and (
+            key not in best or r["mxu_util"] > best[key]["mxu_util"]
+        ):
+            best[key] = r
+    print("\nchosen block shapes (max MXU util under 25% VMEM):")
+    for k, r in best.items():
+        print(
+            f"  {k}: block_q={r['block_q']} block_k={r['block_k']} "
+            f"(vmem {100*r['vmem_frac']:.2f}%, mxu {r['mxu_util']:.3f})"
+        )
+
+
+if __name__ == "__main__":
+    main()

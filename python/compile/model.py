@@ -1,0 +1,291 @@
+"""L2: the simulated model pool — word-level transformer LMs in JAX.
+
+These are the "LLMs" behind LLMBridge's model adapter.  Three width/depth
+variants stand in for the nano / mini / large capability classes of the
+paper's pool (Phi-3/Haiku-class, GPT-3.5/4o-mini-class, GPT-4/4o-class).
+The forward pass calls the L1 Pallas kernels (attention.py, matmul.py) so
+the whole stack lowers into one HLO module per variant.
+
+Artifact signatures (all f32 / i32, fixed shapes, AOT-lowered by aot.py):
+
+    lm_step(tokens i32[T], length i32[], theta f32[P]) -> logits f32[V]
+        Next-token logits at position length-1.  Rust drives the decode
+        loop, re-invoking lm_step with the growing token buffer.
+
+    embed(tokens i32[T], length i32[], theta f32[PE]) -> f32[EMBED_DIM]
+        L2-normalized text embedding: random-projected word unigram +
+        bigram counts (a Johnson-Lindenstrauss sketch of lexical content;
+        stands in for the paper's OpenAI text-embedding-3-large).
+
+The word-hash tokenizer (FNV-1a over lowercased words, ids 16..V-1,
+PAD=0 BOS=1 EOS=2 UNK=3) is mirrored bit-for-bit by rust/src/runtime/
+tokenizer.rs; python/tests/test_tokenizer.py pins shared vectors.
+"""
+
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.matmul import matmul
+from .kernels.ref import attention_ref, matmul_ref
+
+VOCAB = 4096
+SEQ_LEN = 128
+NUM_HEADS = 4
+EMBED_DIM = 64
+BIGRAM_BUCKETS = 4096
+NEG_INF = -1e30
+
+# Pool variants: name -> (width, layers).  Width must divide by NUM_HEADS.
+VARIANTS = {
+    "nano": (64, 2),
+    "mini": (96, 3),
+    "large": (128, 4),
+}
+
+
+# --------------------------------------------------------------------------
+# Tokenizer (mirrored in rust/src/runtime/tokenizer.rs)
+# --------------------------------------------------------------------------
+
+PAD, BOS, EOS, UNK = 0, 1, 2, 3
+FIRST_WORD_ID = 16
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def fnv1a(data: bytes) -> int:
+    h = _FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * _FNV_PRIME) & _MASK64
+    return h
+
+
+def words(text: str):
+    out, cur = [], []
+    for ch in text.lower():
+        if ch.isascii() and ch.isalnum():
+            cur.append(ch)
+        else:
+            if cur:
+                out.append("".join(cur))
+                cur = []
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def word_id(word: str) -> int:
+    return FIRST_WORD_ID + fnv1a(word.encode()) % (VOCAB - FIRST_WORD_ID)
+
+
+def tokenize(text: str, seq_len: int = SEQ_LEN):
+    """-> (tokens list[int] length seq_len, live length int)."""
+    ids = [BOS] + [word_id(w) for w in words(text)][: seq_len - 2] + [EOS]
+    length = len(ids)
+    ids = ids + [PAD] * (seq_len - length)
+    return ids, length
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+
+def lm_param_spec(d: int, layers: int):
+    """Ordered (name, shape) list; theta is this, flattened & concatenated."""
+    spec = [("tok_emb", (VOCAB, d)), ("pos_emb", (SEQ_LEN, d))]
+    for i in range(layers):
+        spec += [
+            (f"l{i}.ln1_g", (d,)),
+            (f"l{i}.ln1_b", (d,)),
+            (f"l{i}.w_qkv", (d, 3 * d)),
+            (f"l{i}.b_qkv", (3 * d,)),
+            (f"l{i}.w_o", (d, d)),
+            (f"l{i}.b_o", (d,)),
+            (f"l{i}.ln2_g", (d,)),
+            (f"l{i}.ln2_b", (d,)),
+            (f"l{i}.w_mlp1", (d, 4 * d)),
+            (f"l{i}.b_mlp1", (4 * d,)),
+            (f"l{i}.w_mlp2", (4 * d, d)),
+            (f"l{i}.b_mlp2", (d,)),
+        ]
+    spec += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return spec
+
+
+def embed_param_spec():
+    return [
+        ("r_uni", (VOCAB, EMBED_DIM)),
+        ("r_bi", (BIGRAM_BUCKETS, EMBED_DIM)),
+    ]
+
+
+def param_count(spec) -> int:
+    n = 0
+    for _, shape in spec:
+        size = 1
+        for s in shape:
+            size *= s
+        n += size
+    return n
+
+
+def unflatten(theta, spec):
+    """Slice the flat theta back into named arrays (static offsets)."""
+    params, off = {}, 0
+    for name, shape in spec:
+        size = 1
+        for s in shape:
+            size *= s
+        params[name] = theta[off : off + size].reshape(shape)
+        off += size
+    return params
+
+
+def init_lm_params(key, d: int, layers: int):
+    spec = lm_param_spec(d, layers)
+    chunks = []
+    for name, shape in spec:
+        key, sub = jax.random.split(key)
+        if name.endswith("_g"):
+            arr = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_b"):
+            arr = jnp.zeros(shape, jnp.float32)
+        elif name in ("tok_emb", "pos_emb"):
+            arr = 0.06 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            arr = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(
+                float(fan_in)
+            )
+        chunks.append(arr.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+def init_embed_params(key):
+    spec = embed_param_spec()
+    chunks = []
+    for _, shape in spec:
+        key, sub = jax.random.split(key)
+        chunks.append(
+            (jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(shape[1]))
+            .reshape(-1)
+        )
+    return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def lm_step(
+    tokens, length, theta, *, d: int, layers: int, interpret=True, fused=False
+):
+    """Next-token logits at position length-1.  tokens: i32[T].
+
+    Two lowering paths, bit-compatible to f32 tolerance (pinned by
+    python/tests/test_model.py::test_fused_matches_pallas):
+
+    * ``fused=False`` — the L1 Pallas kernels (interpret=True for CPU).
+      This is the TPU-shaped path: on real hardware the kernels lower to
+      Mosaic and own the VMEM/MXU schedule.
+    * ``fused=True``  — plain jnp ops that XLA:CPU fuses aggressively.
+      On the CPU PJRT plugin interpret-mode Pallas costs ~2.3x (the grid
+      loop defeats fusion), so the serving artifacts default to this path
+      (EXPERIMENTS.md §Perf).
+    """
+    p = unflatten(theta, lm_param_spec(d, layers))
+    t = SEQ_LEN
+    dh = d // NUM_HEADS
+    pos = jnp.arange(t)
+    kbias = jnp.where(pos < length, 0.0, NEG_INF).astype(jnp.float32)
+
+    def mm(a, b):
+        if fused:
+            return matmul_ref(a, b)
+        return matmul(a, b, interpret=interpret)
+
+    def attn(q, k, v, bias):
+        if fused:
+            return attention_ref(q, k, v, bias)
+        return attention(q, k, v, bias, interpret=interpret)
+
+    x = p["tok_emb"][tokens] + p["pos_emb"]
+    for i in range(layers):
+        h = layer_norm(x, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+        qkv = mm(h, p[f"l{i}.w_qkv"]) + p[f"l{i}.b_qkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(z):  # (T, d) -> (H, T, dh)
+            return z.reshape(t, NUM_HEADS, dh).transpose(1, 0, 2)
+
+        o = attn(heads(q), heads(k), heads(v), kbias)
+        o = o.transpose(1, 0, 2).reshape(t, d)
+        x = x + mm(o, p[f"l{i}.w_o"]) + p[f"l{i}.b_o"]
+        h2 = layer_norm(x, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+        m = mm(h2, p[f"l{i}.w_mlp1"]) + p[f"l{i}.b_mlp1"]
+        m = jax.nn.gelu(m)
+        x = x + mm(m, p[f"l{i}.w_mlp2"]) + p[f"l{i}.b_mlp2"]
+
+    x = layer_norm(x, p["lnf_g"], p["lnf_b"])
+    x_last = jax.lax.dynamic_slice(x, (length - 1, 0), (1, d))  # (1, d)
+    logits = (x_last @ p["tok_emb"].T)[0]                        # tied head
+    return logits
+
+
+def embed(tokens, length, theta):
+    """L2-normalized lexical sketch embedding.  tokens: i32[T]."""
+    p = unflatten(theta, embed_param_spec())
+    pos = jnp.arange(SEQ_LEN)
+    valid = (tokens >= FIRST_WORD_ID) & (pos < length)
+    uni = jnp.zeros((VOCAB,), jnp.float32).at[tokens].add(
+        valid.astype(jnp.float32)
+    )
+    bg = (tokens[:-1] * 31 + tokens[1:]) % BIGRAM_BUCKETS
+    vbg = (valid[:-1] & valid[1:]).astype(jnp.float32)
+    big = jnp.zeros((BIGRAM_BUCKETS,), jnp.float32).at[bg].add(vbg)
+    # Damp raw counts so repeated words don't dominate (soft tf).
+    uni = jnp.log1p(uni)
+    big = jnp.log1p(big)
+    e = uni @ p["r_uni"] + big @ p["r_bi"]
+    return e / jnp.maximum(jnp.linalg.norm(e), 1e-9)
+
+
+def lm_step_fn(variant: str, interpret: bool = True, fused: bool = False):
+    d, layers = VARIANTS[variant]
+    return functools.partial(
+        lm_step, d=d, layers=layers, interpret=interpret, fused=fused
+    )
+
+
+def manifest_entry(variant: str) -> dict:
+    d, layers = VARIANTS[variant]
+    return {
+        "variant": variant,
+        "d_model": d,
+        "layers": layers,
+        "heads": NUM_HEADS,
+        "seq_len": SEQ_LEN,
+        "vocab": VOCAB,
+        "params": param_count(lm_param_spec(d, layers)),
+        "hlo": f"lm_{variant}.hlo.txt",
+        "hlo_fused": f"lm_{variant}_fused.hlo.txt",
+        "weights": f"lm_{variant}.bin",
+    }
+
+
+if __name__ == "__main__":
+    print(json.dumps([manifest_entry(v) for v in VARIANTS], indent=2))

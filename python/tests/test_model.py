@@ -1,0 +1,129 @@
+"""L2 model-pool tests: shapes, masking semantics, determinism, embedder."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def nano_theta():
+    return model.init_lm_params(jax.random.PRNGKey(7), *model.VARIANTS["nano"])
+
+
+@pytest.fixture(scope="module")
+def embed_theta():
+    return model.init_embed_params(jax.random.PRNGKey(9))
+
+
+def _toks(text):
+    ids, length = model.tokenize(text)
+    return jnp.array(ids, jnp.int32), jnp.int32(length)
+
+
+def test_lm_step_shape(nano_theta):
+    toks, length = _toks("what is the capital of sudan")
+    logits = model.lm_step_fn("nano")(toks, length, nano_theta)
+    assert logits.shape == (model.VOCAB,)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_lm_step_deterministic(nano_theta):
+    toks, length = _toks("tell me about sigcomm")
+    f = model.lm_step_fn("nano")
+    a = f(toks, length, nano_theta)
+    b = f(toks, length, nano_theta)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lm_step_padding_inert(nano_theta):
+    """Garbage in padded positions must not change the logits."""
+    toks, length = _toks("hello world")
+    f = model.lm_step_fn("nano")
+    base = f(toks, length, nano_theta)
+    toks2 = toks.at[int(length) :].set(1234)
+    pert = f(toks2, length, nano_theta)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(pert), atol=1e-5)
+
+
+def test_lm_step_context_sensitive(nano_theta):
+    """Different prefixes must produce different next-token logits."""
+    f = model.lm_step_fn("nano")
+    t1, l1 = _toks("the weather in karachi today")
+    t2, l2 = _toks("the history of the roman empire")
+    a, b = f(t1, l1, nano_theta), f(t2, l2, nano_theta)
+    assert float(jnp.max(jnp.abs(a - b))) > 1e-3
+
+
+@settings(max_examples=6, deadline=None)
+@given(variant=st.sampled_from(["nano", "mini"]), seed=st.integers(0, 1000))
+def test_lm_param_spec_roundtrip(variant, seed):
+    d, layers = model.VARIANTS[variant]
+    spec = model.lm_param_spec(d, layers)
+    n = model.param_count(spec)
+    theta = jnp.arange(n, dtype=jnp.float32)
+    params = model.unflatten(theta, spec)
+    # Every element is used exactly once and order is preserved.
+    flat = jnp.concatenate([params[k].reshape(-1) for k, _ in spec])
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(theta))
+
+
+# ------------------------------------------------------------------ embedder
+
+
+def test_embed_normalized(embed_theta):
+    toks, length = _toks("how do i speed up my cache")
+    e = model.embed(toks, length, embed_theta)
+    assert e.shape == (model.EMBED_DIM,)
+    np.testing.assert_allclose(float(jnp.linalg.norm(e)), 1.0, atol=1e-5)
+
+
+def test_embed_semantic_structure(embed_theta):
+    """Lexically-overlapping texts must embed closer than unrelated ones.
+
+    This is the property the semantic cache (§3.5) relies on; the paper's
+    example pair ('Tell me about SoCC' vs 'Talk to me about the SoCC
+    conference') has high similarity while unrelated prompts score low.
+    """
+
+    def emb(text):
+        toks, length = _toks(text)
+        return model.embed(toks, length, embed_theta)
+
+    a = emb("tell me about the socc conference")
+    b = emb("talk to me about socc conference please")
+    c = emb("recipe for chicken biryani with rice")
+    sim_ab = float(jnp.dot(a, b))
+    sim_ac = float(jnp.dot(a, c))
+    assert sim_ab > sim_ac + 0.2, (sim_ab, sim_ac)
+    assert sim_ab > 0.4
+
+
+def test_embed_padding_inert(embed_theta):
+    toks, length = _toks("health tips for winter")
+    base = model.embed(toks, length, embed_theta)
+    toks2 = toks.at[int(length) :].set(777)
+    pert = model.embed(toks2, length, embed_theta)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(pert), atol=1e-6)
+
+
+def test_embed_empty_text(embed_theta):
+    toks, length = _toks("")
+    e = model.embed(toks, length, embed_theta)
+    assert bool(jnp.all(jnp.isfinite(e)))
+
+
+def test_fused_matches_pallas(nano_theta):
+    """The fused (XLA:CPU) lowering and the Pallas-kernel lowering must be
+    numerically identical — the engine may serve either (§Perf)."""
+    toks, length = _toks("compare the two lowering paths please")
+    a = model.lm_step_fn("nano", interpret=True, fused=False)(
+        toks, length, nano_theta
+    )
+    b = model.lm_step_fn("nano", interpret=True, fused=True)(
+        toks, length, nano_theta
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-4, rtol=1e-4)

@@ -1,0 +1,69 @@
+"""Tokenizer vectors pinned against the rust implementation.
+
+rust/tests/tokenizer_vectors.rs asserts the exact same (text -> ids)
+pairs; if either side changes hashing these fail on both sides.
+"""
+
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+# Shared pinned vectors (keep in sync with rust/tests/tokenizer_vectors.rs).
+VECTORS = [
+    ("", [1, 2]),
+    ("hello world", [1, model.word_id("hello"), model.word_id("world"), 2]),
+    (
+        "Tell me about Sigcomm!",
+        [
+            1,
+            model.word_id("tell"),
+            model.word_id("me"),
+            model.word_id("about"),
+            model.word_id("sigcomm"),
+            2,
+        ],
+    ),
+]
+
+
+def test_fnv1a_known_values():
+    # Canonical FNV-1a 64 test vectors.
+    assert model.fnv1a(b"") == 0xCBF29CE484222325
+    assert model.fnv1a(b"a") == 0xAF63DC4C8601EC8C
+    assert model.fnv1a(b"foobar") == 0x85944171F73967E8
+
+
+def test_word_ids_in_range():
+    for w in ["hello", "a", "1", "sigcomm", "x" * 50]:
+        wid = model.word_id(w)
+        assert model.FIRST_WORD_ID <= wid < model.VOCAB
+
+
+def test_pinned_vectors():
+    for text, want in VECTORS:
+        ids, length = model.tokenize(text)
+        assert ids[:length] == want, text
+        assert all(t == model.PAD for t in ids[length:])
+
+
+def test_case_and_punct_insensitive():
+    a, _ = model.tokenize("Hello, WORLD!")
+    b, _ = model.tokenize("hello world")
+    assert a == b
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.text(min_size=0, max_size=400))
+def test_tokenize_total_function(text):
+    ids, length = model.tokenize(text)
+    assert len(ids) == model.SEQ_LEN
+    assert 2 <= length <= model.SEQ_LEN
+    assert ids[0] == model.BOS
+    assert ids[length - 1] == model.EOS
+    assert all(0 <= t < model.VOCAB for t in ids)
+
+
+def test_truncation():
+    long = " ".join(f"word{i}" for i in range(500))
+    ids, length = model.tokenize(long)
+    assert length == model.SEQ_LEN

@@ -1,0 +1,36 @@
+//! Shared bench harness setup.
+
+use std::sync::Arc;
+
+use llmbridge::coordinator::{Bridge, BridgeConfig};
+use llmbridge::models::pricing::Generation;
+use llmbridge::runtime::{EngineHandle, Registry};
+
+pub fn engine() -> EngineHandle {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    EngineHandle::spawn(Registry::load(dir).expect("run `make artifacts`")).unwrap()
+}
+
+pub fn bridge(generation: Generation) -> Arc<Bridge> {
+    Arc::new(
+        Bridge::from_engine(
+            engine(),
+            BridgeConfig {
+                generation,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    )
+}
+
+/// Query budget for replay benches: small by default so `cargo bench`
+/// finishes quickly; the `figures` binary regenerates the full-dataset
+/// numbers.
+pub fn query_limit() -> Option<usize> {
+    if std::env::var("LLMBRIDGE_BENCH_FULL").map(|v| v == "1").unwrap_or(false) {
+        None
+    } else {
+        Some(40)
+    }
+}

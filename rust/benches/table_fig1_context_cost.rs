@@ -1,0 +1,49 @@
+//! Bench for Fig 1 (context growth): times the last-k replay end-to-end and
+//! prints the paper's series (input tokens + quality percentiles per k).
+//!
+//! `LLMBRIDGE_BENCH_FULL=1` runs the full 50-query conversation.
+
+mod bench_common;
+
+use llmbridge::experiments as exp;
+use llmbridge::models::pricing::Generation;
+use llmbridge::util::bench::bench;
+
+fn main() {
+    let bridge = bench_common::bridge(Generation::New);
+    let limit = bench_common::query_limit().map(|l| l.min(15));
+
+    let mut rows = None;
+    let r = bench("fig1/replay_last_k_sweep", 0, 1, || {
+        rows = Some(exp::fig1(&bridge, exp::DEFAULT_SEED, limit).unwrap());
+    });
+    let rows = rows.unwrap();
+    println!("\nFig 1a — input tokens vs k (limit={limit:?}):");
+    let base = rows[0].input_tokens.max(1);
+    for row in &rows {
+        println!(
+            "  k={:<3} input_tokens={:>7}  x{:>5.1}  cost=${:.4}",
+            row.k,
+            row.input_tokens,
+            row.input_tokens as f64 / base as f64,
+            row.cost_usd
+        );
+    }
+    println!("\nFig 1b — quality vs k (reference k=50):");
+    for row in &rows {
+        let ps = exp::percentiles(row.quality_scores.clone(), &[0.05, 0.2, 0.5]);
+        println!(
+            "  k={:<3} mean={:.2} p05={:.2} p20={:.2} p50={:.2}",
+            row.k,
+            exp::mean(&row.quality_scores),
+            ps[0].1,
+            ps[1].1,
+            ps[2].1
+        );
+    }
+    println!(
+        "\n[fig1 sweep wall time: {:?} for 5 strategies x {} queries]",
+        r.mean,
+        rows[0].quality_scores.len()
+    );
+}

@@ -1,0 +1,44 @@
+//! Bench for Fig 4 (model-selection quality, old + new generations):
+//! replays the verification cascade vs random routing vs M1-only and prints
+//! the paper's CDF rows + escalation fractions.
+
+mod bench_common;
+
+use llmbridge::experiments as exp;
+use llmbridge::models::pricing::Generation;
+use llmbridge::util::bench::bench;
+
+fn main() {
+    let limit = bench_common::query_limit();
+    for generation in [Generation::Old, Generation::New] {
+        let bridge = bench_common::bridge(generation);
+        let mut out = None;
+        bench(
+            &format!("fig4/replay_{generation:?}"),
+            0,
+            1,
+            || {
+                out = Some(
+                    exp::fig45(&bridge, exp::DEFAULT_SEED, generation, limit).unwrap(),
+                );
+            },
+        );
+        let out = out.unwrap();
+        println!(
+            "\nFig 4{} ({generation:?} models) — escalation {:.0}% (paper: {}):",
+            if generation == Generation::Old { "a" } else { "b" },
+            out.escalation_fraction * 100.0,
+            if generation == Generation::Old { ">60%" } else { "~25%" }
+        );
+        for (label, scores) in &out.quality {
+            let ps = exp::percentiles(scores.clone(), &[0.05, 0.2, 0.5]);
+            println!(
+                "  {label:<24} mean={:.2} p05={:.2} p20={:.2} p50={:.2}",
+                exp::mean(scores),
+                ps[0].1,
+                ps[1].1,
+                ps[2].1
+            );
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench for Fig 5 (model-selection cost & time, old generation): prints
+//! normalized total cost and total LLM time per strategy.
+
+mod bench_common;
+
+use llmbridge::experiments as exp;
+use llmbridge::models::pricing::Generation;
+use llmbridge::util::bench::bench;
+
+fn main() {
+    let bridge = bench_common::bridge(Generation::Old);
+    let limit = bench_common::query_limit();
+    let mut out = None;
+    bench("fig5/replay_old_generation", 0, 1, || {
+        out = Some(exp::fig45(&bridge, exp::DEFAULT_SEED, Generation::Old, limit).unwrap());
+    });
+    let out = out.unwrap();
+
+    println!("\nFig 5a — cost normalized to M1-only (paper: verification ~40% under M2-only):");
+    for (label, c) in &out.cost {
+        println!("  {label:<24} x{c:.2}");
+    }
+    let verify = out
+        .cost
+        .iter()
+        .find(|(l, _)| l.starts_with("verification"))
+        .unwrap()
+        .1;
+    let m2 = out.cost.last().unwrap().1;
+    println!(
+        "  -> verification vs M2-only: {:.0}% cheaper",
+        (1.0 - verify / m2) * 100.0
+    );
+
+    println!("\nFig 5b — LLM time normalized to M1-only (paper: verification ~5x M1):");
+    for (label, t) in &out.time {
+        println!("  {label:<24} x{t:.2}");
+    }
+}

@@ -1,0 +1,43 @@
+//! Bench for Fig 6 (SmartContext): cost per strategy, quality vs LastK(5),
+//! and the share of time spent on the context-LLM decision call.
+
+mod bench_common;
+
+use llmbridge::experiments as exp;
+use llmbridge::models::pricing::Generation;
+use llmbridge::util::bench::bench;
+
+fn main() {
+    let bridge = bench_common::bridge(Generation::New);
+    let limit = bench_common::query_limit();
+    let mut out = None;
+    bench("fig6/replay_context_strategies", 0, 1, || {
+        out = Some(exp::fig6(&bridge, exp::DEFAULT_SEED, limit).unwrap());
+    });
+    let out = out.unwrap();
+
+    println!("\nFig 6a — cost normalized, cheapest = 1 (paper: smart ~30-50% under last-k):");
+    for (label, c) in &out.cost {
+        println!("  {label:<24} x{c:.2}");
+    }
+    println!("\nFig 6b — quality vs LastK(5) reference:");
+    for (label, scores) in &out.quality {
+        let ps = exp::percentiles(scores.clone(), &[0.05, 0.2, 0.5]);
+        println!(
+            "  {label:<24} mean={:.2} p05={:.2} p20={:.2} p50={:.2}",
+            exp::mean(scores),
+            ps[0].1,
+            ps[1].1,
+            ps[2].1
+        );
+    }
+    println!("\nFig 6c — fraction of LLM time in the SmartContext decision:");
+    println!("  (paper: <20% for ~80% of messages; max <50%)");
+    for (label, fracs) in &out.decision_time_fraction {
+        let ps = exp::percentiles(fracs.clone(), &[0.5, 0.8, 1.0]);
+        println!(
+            "  {label:<24} p50={:.2} p80={:.2} max={:.2}",
+            ps[0].1, ps[1].1, ps[2].1
+        );
+    }
+}

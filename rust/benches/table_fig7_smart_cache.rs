@@ -1,0 +1,42 @@
+//! Bench for Fig 7 (SmartCache): populates the cache from the synthetic
+//! encyclopedia via delegated PUT and compares grounded small-model answers
+//! against direct GPT-4o-class / Phi-3-class answers on factual queries.
+
+mod bench_common;
+
+use llmbridge::experiments as exp;
+use llmbridge::models::pricing::Generation;
+use llmbridge::util::bench::bench;
+
+fn main() {
+    let bridge = bench_common::bridge(Generation::New);
+    let limit = bench_common::query_limit();
+    let mut out = None;
+    bench("fig7/replay_smart_cache", 0, 1, || {
+        out = Some(exp::fig7(&bridge, exp::DEFAULT_SEED, limit).unwrap());
+    });
+    let out = out.unwrap();
+
+    println!(
+        "\nFig 7 — {} factual queries, cache used on {}:",
+        out.n_factual, out.n_cache_used
+    );
+    println!("\nFig 7a — quality vs sonar-huge-online reference:");
+    for (label, scores) in &out.quality {
+        let min = scores.iter().cloned().fold(f64::INFINITY, f64::min);
+        println!(
+            "  {label:<28} mean={:.2} min={:.2}",
+            exp::mean(scores),
+            min
+        );
+    }
+    println!("\nFig 7b — subset where smart_cache used the cache (paper: min 4 vs 1):");
+    for (label, scores) in &out.cache_used_quality {
+        let min = scores.iter().cloned().fold(f64::INFINITY, f64::min);
+        println!(
+            "  {label:<28} mean={:.2} min={:.2}",
+            exp::mean(scores),
+            min
+        );
+    }
+}

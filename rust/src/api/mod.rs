@@ -1,0 +1,540 @@
+//! The LLMBridge API (paper §3.2, Table 2): a high-level, **bidirectional**
+//! interface.
+//!
+//! * Applications *delegate* by choosing a [`ServiceType`] per request —
+//!   from fully explicit (`Fixed`) to fully delegated (`ModelSelector`,
+//!   `SmartContext`, `SmartCache`).
+//! * The proxy is *transparent*: every [`Response`] carries [`Metadata`]
+//!   describing exactly how the prompt was resolved (models used, cache
+//!   outcome, context size, cost) — the LLM analog of `X-Cache`/`Age`.
+//! * Applications *iterate*: `Bridge::regenerate` re-resolves a prompt,
+//!   nudging the proxy toward quality (same service type) or any new
+//!   preference (different service type).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::models::pricing::ModelId;
+use crate::models::quality::QueryTraits;
+use crate::util::json::Json;
+use crate::util::{fnv1a, seed_of};
+
+/// Cache participation for `Fixed` requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Exact-match prefetch lookup only (the default fast path).
+    Auto,
+    /// Bypass the cache entirely.
+    Skip,
+    /// Serve from cache or fail over to the model.
+    Semantic,
+}
+
+/// The service types shipped in the paper (§3.2) plus the usage-based and
+/// latency-first types from the deployments (§5.1, §5.2).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServiceType {
+    /// Fully explicit configuration: model, cache policy, last-k context.
+    Fixed {
+        model: ModelId,
+        cache: CachePolicy,
+        context_k: usize,
+    },
+    /// Most expensive model, as much context as the window allows.
+    Quality,
+    /// Cheapest model, no context.
+    Cost,
+    /// Verification-based model selection (§3.3): cheap M1 answers, a
+    /// verifier scores it, expensive M2 is consulted below `threshold`.
+    /// Uses last-5 context per the paper.
+    ModelSelector {
+        threshold: f64,
+        m1: Option<ModelId>,
+        m2: Option<ModelId>,
+        verifier: Option<ModelId>,
+    },
+    /// Small model decides whether the last-k context is needed (§3.4).
+    SmartContext { k: usize, model: ModelId },
+    /// Small model decides whether cached content answers the prompt
+    /// (§3.5), grounding its reply in retrieved facts.
+    SmartCache { model: ModelId },
+    /// Classroom deployment (§5.2): curated model list + token quotas.
+    UsageBased {
+        allowed: Vec<ModelId>,
+        fallback: ModelId,
+    },
+    /// §5.1 "latency-centric" type: fastest model answers now, a better
+    /// answer is prefetched asynchronously for "Get Better Answer".
+    LatencyFirst,
+}
+
+impl Default for ServiceType {
+    fn default() -> Self {
+        ServiceType::ModelSelector {
+            threshold: 8.0,
+            m1: None,
+            m2: None,
+            verifier: None,
+        }
+    }
+}
+
+impl ServiceType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServiceType::Fixed { .. } => "fixed",
+            ServiceType::Quality => "quality",
+            ServiceType::Cost => "cost",
+            ServiceType::ModelSelector { .. } => "model_selector",
+            ServiceType::SmartContext { .. } => "smart_context",
+            ServiceType::SmartCache { .. } => "smart_cache",
+            ServiceType::UsageBased { .. } => "usage_based",
+            ServiceType::LatencyFirst => "latency_first",
+        }
+    }
+
+    /// Parse from the REST representation: `{"name": ..., params...}`.
+    pub fn from_json(j: &Json) -> Result<ServiceType> {
+        let name = j.str_of("name")?;
+        Ok(match name.as_str() {
+            "fixed" => ServiceType::Fixed {
+                model: ModelId::parse(&j.str_of("model")?)?,
+                cache: match j.get("cache").and_then(|c| c.as_str()).unwrap_or("auto") {
+                    "skip" => CachePolicy::Skip,
+                    "semantic" => CachePolicy::Semantic,
+                    _ => CachePolicy::Auto,
+                },
+                context_k: j.get("context_k").and_then(|v| v.as_usize()).unwrap_or(0),
+            },
+            "quality" => ServiceType::Quality,
+            "cost" => ServiceType::Cost,
+            "model_selector" => ServiceType::ModelSelector {
+                threshold: j.get("threshold").and_then(|v| v.as_f64()).unwrap_or(8.0),
+                m1: j
+                    .get("m1")
+                    .and_then(|v| v.as_str())
+                    .map(ModelId::parse)
+                    .transpose()?,
+                m2: j
+                    .get("m2")
+                    .and_then(|v| v.as_str())
+                    .map(ModelId::parse)
+                    .transpose()?,
+                verifier: j
+                    .get("verifier")
+                    .and_then(|v| v.as_str())
+                    .map(ModelId::parse)
+                    .transpose()?,
+            },
+            "smart_context" => ServiceType::SmartContext {
+                k: j.get("k").and_then(|v| v.as_usize()).unwrap_or(5),
+                model: j
+                    .get("model")
+                    .and_then(|v| v.as_str())
+                    .map(ModelId::parse)
+                    .transpose()?
+                    .unwrap_or(ModelId::Claude3Haiku),
+            },
+            "smart_cache" => ServiceType::SmartCache {
+                model: j
+                    .get("model")
+                    .and_then(|v| v.as_str())
+                    .map(ModelId::parse)
+                    .transpose()?
+                    .unwrap_or(ModelId::Phi3Mini),
+            },
+            "usage_based" => {
+                let allowed = j
+                    .get("allowed")
+                    .and_then(|a| a.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .filter_map(|v| v.as_str())
+                            .map(ModelId::parse)
+                            .collect::<Result<Vec<_>>>()
+                    })
+                    .transpose()?
+                    .unwrap_or_else(|| {
+                        vec![
+                            ModelId::Gpt4oMini,
+                            ModelId::Claude3Haiku,
+                            ModelId::Llama38b,
+                            ModelId::Phi3Mini,
+                        ]
+                    });
+                let fallback = allowed.first().copied().unwrap_or(ModelId::Gpt4oMini);
+                ServiceType::UsageBased { allowed, fallback }
+            }
+            "latency_first" => ServiceType::LatencyFirst,
+            other => bail!("unknown service_type '{other}'"),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("name", Json::str(self.name()))];
+        match self {
+            ServiceType::Fixed {
+                model,
+                cache,
+                context_k,
+            } => {
+                pairs.push(("model", Json::str(model.as_str())));
+                pairs.push((
+                    "cache",
+                    Json::str(match cache {
+                        CachePolicy::Auto => "auto",
+                        CachePolicy::Skip => "skip",
+                        CachePolicy::Semantic => "semantic",
+                    }),
+                ));
+                pairs.push(("context_k", Json::num(*context_k as f64)));
+            }
+            ServiceType::ModelSelector {
+                threshold,
+                m1,
+                m2,
+                verifier,
+            } => {
+                pairs.push(("threshold", Json::Num(*threshold)));
+                if let Some(m) = m1 {
+                    pairs.push(("m1", Json::str(m.as_str())));
+                }
+                if let Some(m) = m2 {
+                    pairs.push(("m2", Json::str(m.as_str())));
+                }
+                if let Some(m) = verifier {
+                    pairs.push(("verifier", Json::str(m.as_str())));
+                }
+            }
+            ServiceType::SmartContext { k, model } => {
+                pairs.push(("k", Json::num(*k as f64)));
+                pairs.push(("model", Json::str(model.as_str())));
+            }
+            ServiceType::SmartCache { model } => {
+                pairs.push(("model", Json::str(model.as_str())));
+            }
+            ServiceType::UsageBased { allowed, fallback } => {
+                pairs.push((
+                    "allowed",
+                    Json::Arr(allowed.iter().map(|m| Json::str(m.as_str())).collect()),
+                ));
+                pairs.push(("fallback", Json::str(fallback.as_str())));
+            }
+            _ => {}
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// An application request (`proxy.request` in Table 2).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub user: String,
+    pub conversation: String,
+    pub prompt: String,
+    pub service_type: ServiceType,
+    /// Whether this interaction should be appended to the conversation
+    /// history (§3.4: some prompts read context without updating it, e.g.
+    /// TWIPS' mood detection).
+    pub update_context: bool,
+    /// Extra key-value parameters (Table 2's `(key, value)` pairs).
+    pub params: BTreeMap<String, String>,
+    /// Latent traits injected by the workload generator; `None` derives
+    /// defaults from the prompt hash (see [`Request::effective_traits`]).
+    pub traits: Option<QueryTraits>,
+}
+
+impl Request {
+    pub fn new(user: &str, conversation: &str, prompt: &str) -> Request {
+        Request {
+            user: user.to_string(),
+            conversation: conversation.to_string(),
+            prompt: prompt.to_string(),
+            service_type: ServiceType::default(),
+            update_context: true,
+            params: BTreeMap::new(),
+            traits: None,
+        }
+    }
+
+    pub fn service_type(mut self, st: ServiceType) -> Request {
+        self.service_type = st;
+        self
+    }
+
+    pub fn with_traits(mut self, traits: QueryTraits) -> Request {
+        self.traits = Some(traits);
+        self
+    }
+
+    pub fn no_context_update(mut self) -> Request {
+        self.update_context = false;
+        self
+    }
+
+    /// Traits used by the quality simulation: explicit if provided by the
+    /// workload, otherwise derived deterministically from the prompt.
+    pub fn effective_traits(&self) -> QueryTraits {
+        if let Some(t) = &self.traits {
+            return t.clone();
+        }
+        let h = fnv1a(self.prompt.as_bytes());
+        let mut rng = crate::util::rng::Rng::new(h);
+        QueryTraits {
+            id: format!("auto-{h:016x}"),
+            difficulty: rng.range_f64(0.2, 0.75),
+            factual: rng.chance(0.3),
+            requires_context: looks_context_dependent(&self.prompt),
+        }
+    }
+
+    /// Stable id for queue grouping / regeneration bookkeeping.
+    pub fn stable_id(&self) -> u64 {
+        seed_of(&[&self.user, &self.conversation, &self.prompt, self.service_type.name()])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request> {
+        let mut req = Request::new(
+            &j.str_of("user")?,
+            &j.get("conversation")
+                .and_then(|v| v.as_str())
+                .unwrap_or("default")
+                .to_string(),
+            &j.str_of("prompt")?,
+        );
+        if let Some(st) = j.get("service_type") {
+            req.service_type = ServiceType::from_json(st)?;
+        }
+        if let Some(u) = j.get("update_context").and_then(|v| v.as_bool()) {
+            req.update_context = u;
+        }
+        Ok(req)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("user", Json::str(self.user.clone())),
+            ("conversation", Json::str(self.conversation.clone())),
+            ("prompt", Json::str(self.prompt.clone())),
+            ("service_type", self.service_type.to_json()),
+            ("update_context", Json::Bool(self.update_context)),
+        ])
+    }
+}
+
+/// Heuristic used for out-of-band (non-workload) prompts: short anaphoric
+/// follow-ups likely need conversation context.
+pub fn looks_context_dependent(prompt: &str) -> bool {
+    let lower = prompt.to_lowercase();
+    let openers = [
+        "what about", "and ", "why", "how about", "tell me more", "more about",
+        "that", "it ", "them", "explain more", "go on", "also",
+    ];
+    let wc = crate::runtime::tokenizer::words(prompt).len();
+    wc <= 4 || openers.iter().any(|o| lower.starts_with(o))
+}
+
+/// How the cache participated in a response.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CacheOutcome {
+    /// Not consulted.
+    Skipped,
+    /// Consulted, nothing usable.
+    Miss,
+    /// Exact prefetch hit (WhatsApp follow-up buttons, §5.1).
+    ExactHit,
+    /// Semantic hit used to ground the response (similarity score).
+    SemanticHit { score: f64 },
+}
+
+impl CacheOutcome {
+    fn to_json(&self) -> Json {
+        match self {
+            CacheOutcome::Skipped => Json::str("skipped"),
+            CacheOutcome::Miss => Json::str("miss"),
+            CacheOutcome::ExactHit => Json::str("exact_hit"),
+            CacheOutcome::SemanticHit { score } => Json::obj(vec![
+                ("kind", Json::str("semantic_hit")),
+                ("score", Json::Num(*score)),
+            ]),
+        }
+    }
+}
+
+/// Transparency metadata (§3.2): the low-level choices made on behalf of
+/// the application.
+#[derive(Clone, Debug)]
+pub struct Metadata {
+    pub request_id: u64,
+    pub service_type: String,
+    /// (model, role) pairs, e.g. `("gpt-3.5-turbo", "m1")`,
+    /// `("claude-3-opus", "verifier")`, `("gpt-4", "m2")`.
+    pub models_used: Vec<(String, String)>,
+    pub cache: CacheOutcome,
+    /// Number of history messages included as context.
+    pub context_messages: usize,
+    pub input_tokens: u64,
+    pub output_tokens: u64,
+    pub cost_usd: f64,
+    pub latency_ms: f64,
+    pub verifier_score: Option<f64>,
+    /// Milliseconds spent in delegated context-LLM calls (Fig 6c).
+    pub context_llm_ms: f64,
+    /// Milliseconds of LLM execution in total (excludes proxy overhead).
+    pub llm_ms: f64,
+    /// Simulation-only latent quality of the served response (surfaced so
+    /// benches can score without re-deriving; not part of the paper API).
+    pub latent_quality: f64,
+    pub grounded: bool,
+    pub regen_count: u32,
+}
+
+impl Metadata {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("request_id", Json::str(format!("{:016x}", self.request_id))),
+            ("service_type", Json::str(self.service_type.clone())),
+            (
+                "models_used",
+                Json::Arr(
+                    self.models_used
+                        .iter()
+                        .map(|(m, r)| {
+                            Json::obj(vec![
+                                ("model", Json::str(m.clone())),
+                                ("role", Json::str(r.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("cache", self.cache.to_json()),
+            ("context_messages", Json::num(self.context_messages as f64)),
+            ("input_tokens", Json::num(self.input_tokens as f64)),
+            ("output_tokens", Json::num(self.output_tokens as f64)),
+            ("cost_usd", Json::Num(self.cost_usd)),
+            ("latency_ms", Json::Num(self.latency_ms)),
+            (
+                "verifier_score",
+                self.verifier_score.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            ("grounded", Json::Bool(self.grounded)),
+            ("regen_count", Json::num(self.regen_count as f64)),
+        ])
+    }
+}
+
+/// `proxy.result`: the response plus transparency metadata.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub text: String,
+    pub metadata: Metadata,
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("text", Json::str(self.text.clone())),
+            ("metadata", self.metadata.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_type_json_roundtrip() {
+        let cases = vec![
+            ServiceType::Quality,
+            ServiceType::Cost,
+            ServiceType::Fixed {
+                model: ModelId::Gpt4oMini,
+                cache: CachePolicy::Skip,
+                context_k: 3,
+            },
+            ServiceType::ModelSelector {
+                threshold: 7.5,
+                m1: Some(ModelId::Gpt35Turbo),
+                m2: Some(ModelId::Gpt4),
+                verifier: Some(ModelId::Claude3Opus),
+            },
+            ServiceType::SmartContext {
+                k: 5,
+                model: ModelId::Claude3Haiku,
+            },
+            ServiceType::SmartCache {
+                model: ModelId::Phi3Mini,
+            },
+            ServiceType::LatencyFirst,
+        ];
+        for st in cases {
+            let j = st.to_json();
+            let back = ServiceType::from_json(&j).unwrap();
+            assert_eq!(st, back, "{j:?}", j = j.to_string());
+        }
+    }
+
+    #[test]
+    fn unknown_service_type_rejected() {
+        let j = Json::obj(vec![("name", Json::str("warp_speed"))]);
+        assert!(ServiceType::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn request_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"user":"u1","conversation":"c9","prompt":"hi there",
+                "service_type":{"name":"cost"},"update_context":false}"#,
+        )
+        .unwrap();
+        let r = Request::from_json(&j).unwrap();
+        assert_eq!(r.user, "u1");
+        assert_eq!(r.service_type, ServiceType::Cost);
+        assert!(!r.update_context);
+    }
+
+    #[test]
+    fn derived_traits_deterministic() {
+        let r = Request::new("u", "c", "what is the capital of sudan");
+        let a = r.effective_traits();
+        let b = r.effective_traits();
+        assert_eq!(a.difficulty, b.difficulty);
+        assert_eq!(a.id, b.id);
+    }
+
+    #[test]
+    fn context_dependence_heuristic() {
+        assert!(looks_context_dependent("what about in sudan?"));
+        assert!(looks_context_dependent("tell me more"));
+        assert!(!looks_context_dependent(
+            "give me a detailed history of the roman empire please"
+        ));
+    }
+
+    #[test]
+    fn metadata_serializes() {
+        let m = Metadata {
+            request_id: 42,
+            service_type: "cost".into(),
+            models_used: vec![("gpt-4o-mini".into(), "m1".into())],
+            cache: CacheOutcome::SemanticHit { score: 0.93 },
+            context_messages: 2,
+            input_tokens: 10,
+            output_tokens: 20,
+            cost_usd: 0.0001,
+            latency_ms: 12.5,
+            verifier_score: Some(7.0),
+            context_llm_ms: 0.0,
+            llm_ms: 10.0,
+            latent_quality: 8.1,
+            grounded: true,
+            regen_count: 0,
+        };
+        let j = m.to_json().to_string();
+        assert!(j.contains("semantic_hit"));
+        assert!(j.contains("gpt-4o-mini"));
+    }
+}

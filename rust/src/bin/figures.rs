@@ -1,0 +1,281 @@
+//! `figures` — regenerate every table and figure of the paper's evaluation.
+//!
+//! ```text
+//! figures --all                 # everything (slow: full 244-query replays)
+//! figures --fig 1a|1b|4a|4b|5a|5b|6a|6b|6c|7a|7b
+//! figures --table 3             # context-filter grammar resolution
+//! figures --queries 60          # subsample for a quick pass
+//! figures --artifacts DIR --seed N
+//! ```
+//!
+//! Output is the same rows/series the paper plots; EXPERIMENTS.md records a
+//! full run against the paper's numbers.
+
+use anyhow::Result;
+
+use llmbridge::context::Filter;
+use llmbridge::coordinator::{Bridge, BridgeConfig};
+use llmbridge::experiments as exp;
+use llmbridge::models::pricing::{Generation, ModelId};
+use llmbridge::util::cli::Args;
+
+const CDF_PS: &[f64] = &[0.01, 0.05, 0.10, 0.20, 0.50, 0.80, 0.95];
+
+fn print_cdf(label: &str, scores: &[f64]) {
+    let ps = exp::percentiles(scores.to_vec(), CDF_PS);
+    let cells: Vec<String> = ps
+        .iter()
+        .map(|(p, v)| format!("p{:02.0}={v:.2}", p * 100.0))
+        .collect();
+    println!(
+        "  {label:<28} mean={:.2}  {}",
+        exp::mean(scores),
+        cells.join("  ")
+    );
+}
+
+struct Ctx {
+    engine: llmbridge::runtime::EngineHandle,
+    seed: u64,
+    limit: Option<usize>,
+}
+
+impl Ctx {
+    fn bridge(&self, generation: Generation) -> Result<Bridge> {
+        Bridge::from_engine(
+            self.engine.clone(),
+            BridgeConfig {
+                generation,
+                ..Default::default()
+            },
+        )
+    }
+}
+
+fn fig1(cx: &Ctx, which: &str) -> Result<()> {
+    let bridge = cx.bridge(Generation::New)?;
+    let rows = exp::fig1(&bridge, cx.seed, cx.limit)?;
+    if which != "1b" {
+        println!("\n== Fig 1a: input tokens vs last-k (50-query conversation) ==");
+        println!("  (paper: k=50 uses ~55x the input tokens of k=0; k=1 ~3x; growth is O(n^2))");
+        let base = rows[0].input_tokens.max(1);
+        for r in &rows {
+            println!(
+                "  k={:<3} input_tokens={:>8}  x{:.1} of k=0  cost=${:.4}",
+                r.k,
+                r.input_tokens,
+                r.input_tokens as f64 / base as f64,
+                r.cost_usd
+            );
+        }
+    }
+    if which != "1a" {
+        println!("\n== Fig 1b: response quality CDF vs k (reference: k=50) ==");
+        println!("  (paper: no-context is worst, difference concentrated in tail 20%)");
+        for r in &rows {
+            print_cdf(&format!("last-{}", r.k), &r.quality_scores);
+        }
+    }
+    Ok(())
+}
+
+fn fig45(cx: &Ctx, which: &str) -> Result<()> {
+    // 4a + 5a/5b use old models per the paper; 4b uses new.
+    let generation = if which == "4b" { Generation::New } else { Generation::Old };
+    let bridge = cx.bridge(generation)?;
+    let out = exp::fig45(&bridge, cx.seed, generation, cx.limit)?;
+    let (m1, m2, v) = exp::fig45_models(generation);
+    let print_quality = matches!(which, "4a" | "4b" | "45");
+    let print_cost_time = matches!(which, "5a" | "5b" | "45");
+    if print_quality {
+            println!(
+                "\n== Fig {which}: model-selection quality CDF ({generation:?} models: M1={m1}, M2={m2}, verifier={v}) =="
+            );
+            println!(
+                "  escalation: verifier t=8 routed {:.0}% of prompts to M2 (paper: {}%)",
+                out.escalation_fraction * 100.0,
+                if generation == Generation::Old { ">60" } else { "~25" },
+            );
+            for (label, scores) in &out.quality {
+                print_cdf(label, scores);
+            }
+    }
+    if print_cost_time {
+            println!("\n== Fig 5a: total cost, normalized to M1-only ({generation:?} models) ==");
+            println!("  (paper: verification is ~40% cheaper than M2-only)");
+            for (label, c) in &out.cost {
+                println!("  {label:<28} cost x{c:.2}");
+            }
+            let verify_cost = out.cost.iter().find(|(l, _)| l.starts_with("verification")).unwrap().1;
+            let m2_cost = out.cost.last().unwrap().1;
+            println!(
+                "  -> verification / M2-only = {:.2} ({:.0}% reduction)",
+                verify_cost / m2_cost,
+                (1.0 - verify_cost / m2_cost) * 100.0
+            );
+            println!("\n== Fig 5b: total LLM time, normalized to M1-only ==");
+            println!("  (paper: verification ~5x M1-only, well under M2-only)");
+            for (label, t) in &out.time {
+                println!("  {label:<28} time x{t:.2}");
+            }
+    }
+    Ok(())
+}
+
+fn fig6(cx: &Ctx, which: &str) -> Result<()> {
+    let bridge = cx.bridge(Generation::New)?;
+    let out = exp::fig6(&bridge, cx.seed, cx.limit)?;
+    if which == "6a" || which == "6" {
+        println!("\n== Fig 6a: context strategies, cost normalized (cheapest = 1) ==");
+        println!("  (paper: smart+k1 ~30% and smart+k5 ~50% cheaper than their last-k)");
+        for (label, c) in &out.cost {
+            println!("  {label:<28} cost x{c:.2}");
+        }
+    }
+    if which == "6b" || which == "6" {
+        println!("\n== Fig 6b: quality CDF vs LastK(5) reference ==");
+        println!("  (paper: smart strategies fall between k=0 and k=1; tail-20% effect)");
+        for (label, scores) in &out.quality {
+            print_cdf(label, scores);
+        }
+    }
+    if which == "6c" || which == "6" {
+        println!("\n== Fig 6c: fraction of LLM time spent deciding (SmartContext call) ==");
+        println!("  (paper: <20% of total time for ~80% of messages; max <50%)");
+        for (label, fracs) in &out.decision_time_fraction {
+            print_cdf(label, fracs);
+        }
+    }
+    Ok(())
+}
+
+fn fig7(cx: &Ctx, which: &str) -> Result<()> {
+    let bridge = cx.bridge(Generation::New)?;
+    let out = exp::fig7(&bridge, cx.seed, cx.limit)?;
+    println!(
+        "\n  factual queries: {}  |  smart_cache used cached content on {}",
+        out.n_factual, out.n_cache_used
+    );
+    if which == "7a" || which == "7" {
+        println!("\n== Fig 7a: quality CDF on factual queries (reference: sonar-huge-online) ==");
+        println!("  (paper: GPT-4o >> Phi-3; smart_cache lifts the worst 20%, 4x worst-case)");
+        for (label, scores) in &out.quality {
+            print_cdf(label, scores);
+        }
+    }
+    if which == "7b" || which == "7" {
+        println!("\n== Fig 7b: subset where smart_cache used the cache ==");
+        println!("  (paper: min score 4 with cache vs 1 with Phi-3 alone)");
+        for (label, scores) in &out.cache_used_quality {
+            let min = scores.iter().cloned().fold(f64::INFINITY, f64::min);
+            print_cdf(label, scores);
+            println!("    min score: {min:.2}");
+        }
+    }
+    Ok(())
+}
+
+fn ablation(cx: &Ctx) -> Result<()> {
+    let bridge = cx.bridge(Generation::Old)?;
+    println!("\n== Ablation: verifier threshold sweep (old models, D) ==");
+    let limit = cx.limit.or(Some(80));
+    let rows = exp::ablation_threshold(&bridge, cx.seed, &[6.0, 7.0, 8.0, 9.0], limit)?;
+    println!("  {:<6} {:>11} {:>13} {:>11}", "t", "escalation", "mean quality", "cost/M2");
+    for r in &rows {
+        println!(
+            "  t={:<4} {:>10.0}% {:>13.2} {:>11.2}",
+            r.threshold,
+            r.escalation * 100.0,
+            r.mean_quality,
+            r.cost_vs_m2
+        );
+    }
+    println!("\n== Ablation: SmartContext single vs double classifier call ==");
+    for cap in [0.45, 0.60, 0.78] {
+        let (one, two) = exp::smart_context_false_positive_rates(cap);
+        println!(
+            "  context-LLM capability {cap:.2}: false-positive rate {one:.3} (1 call) -> {two:.3} (2 calls)"
+        );
+    }
+    Ok(())
+}
+
+fn table3() {
+    println!("\n== Table 3: context filter grammar (resolved plans) ==");
+    let rows: Vec<(&str, Filter)> = vec![
+        (
+            "SmartContext(LLM)",
+            Filter::SmartContext {
+                model: ModelId::Claude3Haiku,
+            },
+        ),
+        (
+            "[LastK(5), SmartContext]",
+            Filter::smart_last_k(5, ModelId::Claude3Haiku),
+        ),
+        (
+            "[[LastK(4), SmartContext], LastK(1)]",
+            Filter::smart_with_floor(5, ModelId::Claude3Haiku),
+        ),
+        (
+            "Similar(0.5)",
+            Filter::Similar {
+                threshold: 0.5,
+                max: 5,
+            },
+        ),
+        (
+            "Summarize(LLM)",
+            Filter::Summarize {
+                model: ModelId::Claude3Haiku,
+            },
+        ),
+    ];
+    for (name, f) in rows {
+        println!("  {name:<40} => {f:?}");
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let registry =
+        llmbridge::runtime::Registry::load(args.get_or("artifacts", "artifacts"))?;
+    let cx = Ctx {
+        engine: llmbridge::runtime::EngineHandle::spawn(registry)?,
+        seed: args.u64_or("seed", exp::DEFAULT_SEED),
+        limit: args.get("queries").and_then(|q| q.parse().ok()),
+    };
+
+    let all = args.flag("all") || (args.get("fig").is_none() && args.get("table").is_none());
+    if let Some(t) = args.get("table") {
+        if t == "3" {
+            table3();
+        }
+    }
+    if args.flag("ablation") {
+        ablation(&cx)?;
+    }
+    let figs: Vec<String> = if all {
+        // Each experiment computed once: "1" prints 1a+1b, "45" prints
+        // 4a+5a+5b, "4b" the new-generation quality CDF, "6" all of 6a-c,
+        // "7" both cache panels.
+        ["1", "45", "4b", "6", "7"].iter().map(|s| s.to_string()).collect()
+    } else {
+        args.get("fig").map(|f| vec![f.to_string()]).unwrap_or_default()
+    };
+    for f in &figs {
+        let t0 = std::time::Instant::now();
+        match f.as_str() {
+            "1" | "1a" | "1b" => fig1(&cx, f)?,
+            "45" | "4a" | "4b" | "5a" | "5b" => fig45(&cx, f)?,
+            "6" | "6a" | "6b" | "6c" => fig6(&cx, f)?,
+            "7" | "7a" | "7b" => fig7(&cx, f)?,
+            other => eprintln!("unknown figure '{other}'"),
+        }
+        eprintln!("  [fig {f} took {:.1?}]", t0.elapsed());
+    }
+    if all {
+        table3();
+    }
+    Ok(())
+}

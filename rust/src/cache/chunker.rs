@@ -1,0 +1,315 @@
+//! Document chunking + key generation for the delegated PUT path (§3.5 and
+//! the §5.2 RAG workflows).
+//!
+//! Handles the "structural variability" the classroom deployment hit:
+//! FAQ-style documents are segmented around Q/A pairs, sectioned documents
+//! around headers, and plain prose into sentence groups. For each chunk the
+//! cache-LLM derives extra keys: keywords, hypothetical questions, a
+//! summary, and the list of facts present in the chunk.
+
+/// A document chunk with its derived keys.
+#[derive(Clone, Debug)]
+pub struct Chunk {
+    pub text: String,
+    pub keywords: Vec<String>,
+    pub hypothetical_questions: Vec<String>,
+    pub summary: String,
+    pub facts: Vec<String>,
+}
+
+const STOPWORDS: &[&str] = &[
+    "the", "a", "an", "of", "in", "on", "to", "is", "are", "was", "were",
+    "and", "or", "for", "with", "it", "its", "as", "by", "at", "from",
+    "that", "this", "be", "has", "have", "had", "about", "which", "their",
+    "known", "also", "most", "more", "one", "two", "can", "will",
+    // Question-pattern words: keyword extraction must surface the *topic*
+    // of a prompt, not its interrogative scaffolding (prefetch keys, §5.1).
+    "tell", "me", "please", "give", "share", "know", "say", "explain",
+    "what", "should", "how", "why", "when", "did", "does", "do", "i", "my",
+    "you", "your", "we", "they", "them", "who", "where", "would", "could",
+    "these", "those", "there", "some", "any", "much", "many", "every",
+    "people", "person", "day", "days", "year", "years", "week", "today",
+];
+
+fn is_stopword(w: &str) -> bool {
+    STOPWORDS.contains(&w) || w.len() <= 2 || w.chars().all(|c| c.is_ascii_digit())
+}
+
+/// Split text into sentences (., !, ? and newline boundaries). A period
+/// followed by a digit is treated as a decimal point ("5.2 million"), not a
+/// boundary.
+pub fn sentences(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let chars: Vec<char> = text.chars().collect();
+    for (i, &ch) in chars.iter().enumerate() {
+        cur.push(ch);
+        let decimal_point =
+            ch == '.' && chars.get(i + 1).map(|c| c.is_ascii_digit()).unwrap_or(false);
+        if matches!(ch, '.' | '!' | '?' | '\n') && !decimal_point {
+            let trimmed = cur.trim();
+            if !trimmed.is_empty() {
+                out.push(trimmed.to_string());
+            }
+            cur.clear();
+        }
+    }
+    let trimmed = cur.trim();
+    if !trimmed.is_empty() {
+        out.push(trimmed.to_string());
+    }
+    out
+}
+
+/// Document structure detected for chunking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DocStructure {
+    /// `Q:`/`A:` pairs.
+    Faq,
+    /// `## ` section headers.
+    Sectioned,
+    /// Plain prose.
+    Prose,
+}
+
+pub fn detect_structure(text: &str) -> DocStructure {
+    let lines: Vec<&str> = text.lines().collect();
+    let q_lines = lines.iter().filter(|l| l.trim_start().starts_with("Q:")).count();
+    if q_lines >= 2 {
+        return DocStructure::Faq;
+    }
+    let headers = lines.iter().filter(|l| l.trim_start().starts_with("## ")).count();
+    if headers >= 2 {
+        return DocStructure::Sectioned;
+    }
+    DocStructure::Prose
+}
+
+/// Split a document into chunk texts per its structure. `max_words` bounds
+/// prose chunks.
+pub fn split_document(text: &str, max_words: usize) -> Vec<String> {
+    match detect_structure(text) {
+        DocStructure::Faq => {
+            let mut chunks = Vec::new();
+            let mut cur = String::new();
+            for line in text.lines() {
+                if line.trim_start().starts_with("Q:") && !cur.trim().is_empty() {
+                    chunks.push(cur.trim().to_string());
+                    cur.clear();
+                }
+                cur.push_str(line);
+                cur.push('\n');
+            }
+            if !cur.trim().is_empty() {
+                chunks.push(cur.trim().to_string());
+            }
+            chunks
+        }
+        DocStructure::Sectioned => {
+            let mut chunks = Vec::new();
+            let mut cur = String::new();
+            for line in text.lines() {
+                if line.trim_start().starts_with("## ") && !cur.trim().is_empty() {
+                    chunks.push(cur.trim().to_string());
+                    cur.clear();
+                }
+                cur.push_str(line);
+                cur.push('\n');
+            }
+            if !cur.trim().is_empty() {
+                chunks.push(cur.trim().to_string());
+            }
+            chunks
+        }
+        DocStructure::Prose => {
+            let mut chunks = Vec::new();
+            let mut cur = String::new();
+            let mut words_in_cur = 0;
+            for s in sentences(text) {
+                let wc = crate::runtime::tokenizer::words(&s).len();
+                if words_in_cur > 0 && words_in_cur + wc > max_words {
+                    chunks.push(cur.trim().to_string());
+                    cur.clear();
+                    words_in_cur = 0;
+                }
+                cur.push_str(&s);
+                cur.push(' ');
+                words_in_cur += wc;
+            }
+            if !cur.trim().is_empty() {
+                chunks.push(cur.trim().to_string());
+            }
+            chunks
+        }
+    }
+}
+
+/// Top-n keywords by term frequency, stopwords removed, first-seen order
+/// for ties (deterministic).
+pub fn keywords(text: &str, n: usize) -> Vec<String> {
+    let ws = crate::runtime::tokenizer::words(text);
+    let mut counts: Vec<(String, usize)> = Vec::new();
+    for w in ws {
+        if is_stopword(&w) {
+            continue;
+        }
+        if let Some(e) = counts.iter_mut().find(|(k, _)| *k == w) {
+            e.1 += 1;
+        } else {
+            counts.push((w, 1));
+        }
+    }
+    counts.sort_by(|a, b| b.1.cmp(&a.1));
+    counts.truncate(n);
+    counts.into_iter().map(|(k, _)| k).collect()
+}
+
+/// Sentences likely to carry factual content (contain digits or copulas) —
+/// the "list of facts" keys §3.5 generates for factual workloads.
+pub fn facts(text: &str) -> Vec<String> {
+    sentences(text)
+        .into_iter()
+        .filter(|s| {
+            let lower = s.to_lowercase();
+            s.chars().any(|c| c.is_ascii_digit())
+                || lower.contains(" is ")
+                || lower.contains(" are ")
+                || lower.contains(" was ")
+        })
+        .collect()
+}
+
+/// Template-generated hypothetical questions a chunk could answer.
+pub fn hypothetical_questions(chunk: &str, kws: &[String]) -> Vec<String> {
+    let mut qs = Vec::new();
+    if let Some(k) = kws.first() {
+        qs.push(format!("what is {k}"));
+        qs.push(format!("tell me about {k}"));
+    }
+    if kws.len() >= 2 {
+        qs.push(format!("how does {} relate to {}", kws[0], kws[1]));
+    }
+    if facts(chunk).iter().any(|f| f.chars().any(|c| c.is_ascii_digit())) {
+        if let Some(k) = kws.first() {
+            qs.push(format!("how many {k}"));
+        }
+    }
+    qs
+}
+
+/// Full delegated-PUT chunking: structure-aware split + per-chunk keys.
+/// The `summary_of` callback lets the caller route summary generation
+/// through the cache-LLM (a real pool call); tests pass a pure closure.
+pub fn chunk_document(
+    text: &str,
+    max_words: usize,
+    mut summary_of: impl FnMut(&str) -> String,
+) -> Vec<Chunk> {
+    split_document(text, max_words)
+        .into_iter()
+        .map(|chunk_text| {
+            let kws = keywords(&chunk_text, 6);
+            let hq = hypothetical_questions(&chunk_text, &kws);
+            let fs = facts(&chunk_text);
+            let summary = summary_of(&chunk_text);
+            Chunk {
+                text: chunk_text,
+                keywords: kws,
+                hypothetical_questions: hq,
+                summary,
+                facts: fs,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PROSE: &str = "Khartoum is the capital of Sudan. It lies at the \
+        confluence of the White Nile and Blue Nile. The city has a population \
+        of about 5.2 million people. Khartoum is known for its markets. The \
+        city hosts the national museum. Traders come from across the region.";
+
+    const FAQ: &str = "Q: How do I reset my password?\nA: Use the settings \
+        page.\nQ: How do I contact support?\nA: Email support@example.com.\n\
+        Q: What are the office hours?\nA: 9am to 5pm weekdays.";
+
+    const SECTIONED: &str = "## History\nThe university was founded in 1902. \
+        It grew quickly.\n## Campus\nThe campus covers 140 acres. It has \
+        12 libraries.\n## Athletics\nThe teams are called the Jumbos.";
+
+    #[test]
+    fn structure_detection() {
+        assert_eq!(detect_structure(PROSE), DocStructure::Prose);
+        assert_eq!(detect_structure(FAQ), DocStructure::Faq);
+        assert_eq!(detect_structure(SECTIONED), DocStructure::Sectioned);
+    }
+
+    #[test]
+    fn faq_chunks_are_qa_pairs() {
+        let chunks = split_document(FAQ, 40);
+        assert_eq!(chunks.len(), 3);
+        assert!(chunks[0].starts_with("Q: How do I reset"));
+        assert!(chunks[0].contains("A:"));
+    }
+
+    #[test]
+    fn sectioned_chunks_follow_headers() {
+        let chunks = split_document(SECTIONED, 40);
+        assert_eq!(chunks.len(), 3);
+        assert!(chunks[1].starts_with("## Campus"));
+    }
+
+    #[test]
+    fn prose_chunks_bounded() {
+        let chunks = split_document(PROSE, 20);
+        assert!(chunks.len() >= 2);
+        for c in &chunks {
+            // A single sentence may exceed the budget, but grouped chunks
+            // stay near it.
+            assert!(crate::runtime::tokenizer::words(c).len() <= 30);
+        }
+    }
+
+    #[test]
+    fn keywords_skip_stopwords() {
+        let kws = keywords(PROSE, 5);
+        assert!(kws.contains(&"khartoum".to_string()));
+        assert!(!kws.iter().any(|k| k == "the" || k == "is"));
+    }
+
+    #[test]
+    fn facts_catch_numbers_and_copulas() {
+        let fs = facts(PROSE);
+        assert!(fs.iter().any(|f| f.contains("5.2 million")));
+        assert!(fs.iter().any(|f| f.contains("capital of Sudan")));
+    }
+
+    #[test]
+    fn hypothetical_questions_generated() {
+        let kws = keywords(PROSE, 4);
+        let qs = hypothetical_questions(PROSE, &kws);
+        assert!(qs.iter().any(|q| q.starts_with("what is ")));
+        assert!(qs.len() >= 2);
+    }
+
+    #[test]
+    fn chunk_document_end_to_end() {
+        let chunks = chunk_document(PROSE, 25, |c| {
+            format!("summary: {}", &c[..c.len().min(20)])
+        });
+        assert!(!chunks.is_empty());
+        for c in &chunks {
+            assert!(!c.keywords.is_empty());
+            assert!(c.summary.starts_with("summary:"));
+        }
+    }
+
+    #[test]
+    fn empty_document() {
+        assert!(split_document("", 40).is_empty());
+        assert!(keywords("", 5).is_empty());
+    }
+}

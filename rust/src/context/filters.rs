@@ -1,0 +1,430 @@
+//! The context filter grammar of Table 3.
+//!
+//! `Filter([Message], prompt) -> [Message]` — each filter narrows which
+//! history messages ride along with the prompt. Filters compose:
+//!
+//! * `Pipeline([f1, f2])` — apply f2 to f1's output
+//!   (Table 3 row 2: `[LastK(5), SmartContext]`).
+//! * `Union([a, b])` — union of both selections
+//!   (Table 3 row 3: `[[LastK(4), SmartContext], LastK(1)]` — always keep
+//!   one message even if SmartContext says none).
+//!
+//! `SmartContext` and `Summarize` delegate to a low-cost LLM: those calls
+//! are *real* pool completions (cost + latency measured), while the
+//! correctness of the delegated decision follows the calibrated classifier
+//! model (DESIGN.md §Substitutions).
+
+use anyhow::Result;
+
+use super::history::Message;
+use crate::models::generator::{Completion, Generator};
+use crate::models::pricing::ModelId;
+use crate::models::quality::{classify, QueryTraits};
+use crate::vecdb::Metric;
+
+/// Execution context shared by filters.
+pub struct FilterCtx<'a> {
+    pub generator: &'a Generator,
+    pub traits: &'a QueryTraits,
+}
+
+/// Outcome of running a filter tree.
+#[derive(Debug, Default)]
+pub struct Selection {
+    /// Indices into the original message slice, ascending.
+    pub indices: Vec<usize>,
+    /// A synthetic replacement message (Summarize).
+    pub synthetic: Option<Message>,
+    /// Delegated LLM calls made while filtering (billed to the request).
+    pub llm_calls: Vec<Completion>,
+    /// SmartContext explicitly decided "no context needed".
+    pub decided_no_context: bool,
+}
+
+impl Selection {
+    /// Materialize the selected messages.
+    pub fn messages(&self, all: &[Message]) -> Vec<Message> {
+        if let Some(s) = &self.synthetic {
+            return vec![s.clone()];
+        }
+        self.indices.iter().map(|&i| all[i].clone()).collect()
+    }
+
+    /// Context sufficiency for the quality model: 1.0 when the immediately
+    /// preceding turn is present (what anaphoric follow-ups need), 0.5 when
+    /// only older turns are, 0.8 for a summary, 0 for nothing.
+    pub fn sufficiency(&self, total: usize) -> f64 {
+        if self.synthetic.is_some() {
+            return 0.8;
+        }
+        if total == 0 {
+            return 1.0; // nothing to miss
+        }
+        if self.indices.contains(&(total - 1)) {
+            1.0
+        } else if !self.indices.is_empty() {
+            0.5
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The filter grammar (Table 3).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Filter {
+    /// All history (window packing happens downstream).
+    All,
+    /// No history.
+    None,
+    /// The k most recent messages.
+    LastK(usize),
+    /// LLM decides whether context is needed at all (§3.4). Invoked twice;
+    /// context is dropped only if *both* calls deem the prompt standalone
+    /// (cuts false positives).
+    SmartContext { model: ModelId },
+    /// Messages with embedding similarity > threshold to the prompt,
+    /// most-similar first, at most `max`.
+    Similar { threshold: f64, max: usize },
+    /// LLM compresses the selected history into one synthetic message.
+    Summarize { model: ModelId },
+    /// f_{i+1} applied to f_i's output.
+    Pipeline(Vec<Filter>),
+    /// Union of selections (dedup, ascending order).
+    Union(Vec<Filter>),
+}
+
+impl Filter {
+    /// Table 3 row 2: `[LastK(k), SmartContext]`.
+    pub fn smart_last_k(k: usize, model: ModelId) -> Filter {
+        Filter::Pipeline(vec![Filter::LastK(k), Filter::SmartContext { model }])
+    }
+
+    /// Table 3 row 3: `[[LastK(k-1), SmartContext], LastK(1)]`.
+    pub fn smart_with_floor(k: usize, model: ModelId) -> Filter {
+        Filter::Union(vec![
+            Filter::smart_last_k(k.saturating_sub(1), model),
+            Filter::LastK(1),
+        ])
+    }
+
+    pub fn apply(
+        &self,
+        msgs: &[Message],
+        prompt: &str,
+        cx: &FilterCtx,
+    ) -> Result<Selection> {
+        self.apply_to(&(0..msgs.len()).collect::<Vec<_>>(), msgs, prompt, cx)
+    }
+
+    fn apply_to(
+        &self,
+        current: &[usize],
+        all: &[Message],
+        prompt: &str,
+        cx: &FilterCtx,
+    ) -> Result<Selection> {
+        match self {
+            Filter::All => Ok(Selection {
+                indices: current.to_vec(),
+                ..Default::default()
+            }),
+            Filter::None => Ok(Selection::default()),
+            Filter::LastK(k) => {
+                let start = current.len().saturating_sub(*k);
+                Ok(Selection {
+                    indices: current[start..].to_vec(),
+                    ..Default::default()
+                })
+            }
+            Filter::SmartContext { model } => {
+                if current.is_empty() {
+                    return Ok(Selection::default());
+                }
+                // Two real context-LLM calls (kept short: label-style
+                // output), per §3.4's double-check protocol.
+                let mut calls = Vec::new();
+                let last = &all[*current.last().unwrap()];
+                let classify_input = format!(
+                    "does this prompt need the previous conversation? \
+                     previous: {} current: {}",
+                    last.prompt, prompt
+                );
+                let cap = model.spec().capability;
+                let mut votes_standalone = 0;
+                let truth_standalone = !cx.traits.requires_context;
+                for attempt in 0..2u32 {
+                    calls.push(cx.generator.classify_call(*model, &classify_input)?);
+                    if classify(truth_standalone, cap, &cx.traits.id, attempt) {
+                        votes_standalone += 1;
+                    }
+                }
+                if votes_standalone == 2 {
+                    Ok(Selection {
+                        llm_calls: calls,
+                        decided_no_context: true,
+                        ..Default::default()
+                    })
+                } else {
+                    Ok(Selection {
+                        indices: current.to_vec(),
+                        llm_calls: calls,
+                        ..Default::default()
+                    })
+                }
+            }
+            Filter::Similar { threshold, max } => {
+                if current.is_empty() {
+                    return Ok(Selection::default());
+                }
+                let engine = cx.generator.engine();
+                let q = engine.embed_text(prompt)?;
+                let mut scored: Vec<(usize, f32)> = Vec::new();
+                for &i in current {
+                    let e = engine.embed_text(&all[i].prompt)?;
+                    let s = Metric::Cosine.score(&q, &e);
+                    if s as f64 > *threshold {
+                        scored.push((i, s));
+                    }
+                }
+                scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                scored.truncate(*max);
+                let mut indices: Vec<usize> = scored.into_iter().map(|(i, _)| i).collect();
+                indices.sort_unstable();
+                Ok(Selection {
+                    indices,
+                    ..Default::default()
+                })
+            }
+            Filter::Summarize { model } => {
+                if current.is_empty() {
+                    return Ok(Selection::default());
+                }
+                let joined: String = current
+                    .iter()
+                    .map(|&i| all[i].render())
+                    .collect::<Vec<_>>()
+                    .join("\n");
+                let call = cx.generator.generate(
+                    *model,
+                    &format!("summarize this conversation briefly:\n{joined}"),
+                    Some(24),
+                )?;
+                // The synthetic summary keeps head words of each turn so
+                // downstream lexical signals (embeddings) survive.
+                let gist: String = current
+                    .iter()
+                    .flat_map(|&i| {
+                        crate::runtime::tokenizer::words(&all[i].prompt)
+                            .into_iter()
+                            .take(4)
+                    })
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                let synthetic = Message {
+                    prompt: "summary of earlier conversation".to_string(),
+                    response: format!("{gist} {}", call.text),
+                    model: model.as_str().to_string(),
+                    grounded_citations: false,
+                    seq: all.len() as u64,
+                };
+                Ok(Selection {
+                    indices: current.to_vec(),
+                    synthetic: Some(synthetic),
+                    llm_calls: vec![call],
+                    ..Default::default()
+                })
+            }
+            Filter::Pipeline(stages) => {
+                let mut sel = Selection {
+                    indices: current.to_vec(),
+                    ..Default::default()
+                };
+                for stage in stages {
+                    let mut next = stage.apply_to(&sel.indices, all, prompt, cx)?;
+                    next.llm_calls = {
+                        let mut calls = std::mem::take(&mut sel.llm_calls);
+                        calls.extend(next.llm_calls);
+                        calls
+                    };
+                    next.decided_no_context |= sel.decided_no_context;
+                    if next.synthetic.is_none() {
+                        next.synthetic = sel.synthetic.take();
+                    }
+                    sel = next;
+                }
+                Ok(sel)
+            }
+            Filter::Union(branches) => {
+                let mut indices: Vec<usize> = Vec::new();
+                let mut calls = Vec::new();
+                let mut synthetic = None;
+                let mut all_decided_none = !branches.is_empty();
+                for b in branches {
+                    let s = b.apply_to(current, all, prompt, cx)?;
+                    for i in s.indices {
+                        if !indices.contains(&i) {
+                            indices.push(i);
+                        }
+                    }
+                    calls.extend(s.llm_calls);
+                    all_decided_none &= s.decided_no_context;
+                    if synthetic.is_none() {
+                        synthetic = s.synthetic;
+                    }
+                }
+                indices.sort_unstable();
+                Ok(Selection {
+                    indices,
+                    synthetic,
+                    llm_calls: calls,
+                    decided_no_context: all_decided_none,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msgs(n: usize) -> Vec<Message> {
+        (0..n)
+            .map(|i| Message {
+                prompt: format!("question {i}"),
+                response: format!("answer {i}"),
+                model: "m".into(),
+                grounded_citations: false,
+                seq: i as u64,
+            })
+            .collect()
+    }
+
+    // Engine-free filters can be tested by constructing Selection directly
+    // through apply_to via a FilterCtx with a dangling generator is not
+    // possible; instead pure filters are tested through a tiny harness that
+    // never touches the generator.
+    fn pure_apply(f: &Filter, n: usize) -> Selection {
+        // Safety: the filters under test (LastK/All/None/Pipeline/Union of
+        // those) never dereference cx.generator.
+        let all = msgs(n);
+        let indices: Vec<usize> = (0..n).collect();
+        pure_apply_to(f, &indices, &all)
+    }
+
+    fn pure_apply_to(f: &Filter, current: &[usize], all: &[Message]) -> Selection {
+        match f {
+            Filter::All => Selection {
+                indices: current.to_vec(),
+                ..Default::default()
+            },
+            Filter::None => Selection::default(),
+            Filter::LastK(k) => {
+                let start = current.len().saturating_sub(*k);
+                Selection {
+                    indices: current[start..].to_vec(),
+                    ..Default::default()
+                }
+            }
+            Filter::Pipeline(stages) => {
+                let mut sel = Selection {
+                    indices: current.to_vec(),
+                    ..Default::default()
+                };
+                for s in stages {
+                    sel = pure_apply_to(s, &sel.indices, all);
+                }
+                sel
+            }
+            Filter::Union(branches) => {
+                let mut indices = Vec::new();
+                for b in branches {
+                    for i in pure_apply_to(b, current, all).indices {
+                        if !indices.contains(&i) {
+                            indices.push(i);
+                        }
+                    }
+                }
+                indices.sort_unstable();
+                Selection {
+                    indices,
+                    ..Default::default()
+                }
+            }
+            _ => unreachable!("pure harness only covers engine-free filters"),
+        }
+    }
+
+    #[test]
+    fn last_k_takes_tail() {
+        let s = pure_apply(&Filter::LastK(3), 10);
+        assert_eq!(s.indices, vec![7, 8, 9]);
+        let s = pure_apply(&Filter::LastK(20), 5);
+        assert_eq!(s.indices, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pipeline_composes() {
+        let f = Filter::Pipeline(vec![Filter::LastK(5), Filter::LastK(2)]);
+        let s = pure_apply(&f, 10);
+        assert_eq!(s.indices, vec![8, 9]);
+    }
+
+    #[test]
+    fn union_dedups_and_sorts() {
+        let f = Filter::Union(vec![Filter::LastK(1), Filter::LastK(3)]);
+        let s = pure_apply(&f, 10);
+        assert_eq!(s.indices, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn sufficiency_levels() {
+        let sel = Selection {
+            indices: vec![9],
+            ..Default::default()
+        };
+        assert_eq!(sel.sufficiency(10), 1.0);
+        let sel = Selection {
+            indices: vec![0],
+            ..Default::default()
+        };
+        assert_eq!(sel.sufficiency(10), 0.5);
+        let sel = Selection::default();
+        assert_eq!(sel.sufficiency(10), 0.0);
+        assert_eq!(sel.sufficiency(0), 1.0);
+    }
+
+    #[test]
+    fn table3_constructors() {
+        assert_eq!(
+            Filter::smart_last_k(5, ModelId::Claude3Haiku),
+            Filter::Pipeline(vec![
+                Filter::LastK(5),
+                Filter::SmartContext {
+                    model: ModelId::Claude3Haiku
+                }
+            ])
+        );
+        // smart_with_floor always yields at least the most recent message.
+        let f = Filter::smart_with_floor(5, ModelId::Claude3Haiku);
+        if let Filter::Union(branches) = &f {
+            assert_eq!(branches.len(), 2);
+            assert_eq!(branches[1], Filter::LastK(1));
+        } else {
+            panic!("expected union");
+        }
+    }
+
+    #[test]
+    fn selection_messages_materialize() {
+        let all = msgs(4);
+        let sel = Selection {
+            indices: vec![1, 3],
+            ..Default::default()
+        };
+        let picked = sel.messages(&all);
+        assert_eq!(picked.len(), 2);
+        assert_eq!(picked[1].prompt, "question 3");
+    }
+}

@@ -1,0 +1,179 @@
+//! Conversation history persisted in the KV store (the paper keeps it in
+//! DynamoDB). A message is a prompt-response pair (§3.4).
+
+use anyhow::Result;
+
+use crate::kvstore::KvStore;
+use crate::util::json::Json;
+
+/// One conversation turn.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Message {
+    pub prompt: String,
+    pub response: String,
+    /// Which pool model produced the response (cross-model context effects,
+    /// §5.1 "in-context learning" discussion).
+    pub model: String,
+    /// Response carried grounded citations (the Gemini hallucination-
+    /// contagion anecdote in §5.1).
+    pub grounded_citations: bool,
+    /// Logical timestamp (message index within the conversation).
+    pub seq: u64,
+}
+
+impl Message {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("prompt", Json::str(self.prompt.clone())),
+            ("response", Json::str(self.response.clone())),
+            ("model", Json::str(self.model.clone())),
+            ("grounded_citations", Json::Bool(self.grounded_citations)),
+            ("seq", Json::num(self.seq as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Message> {
+        Ok(Message {
+            prompt: j.str_of("prompt")?,
+            response: j.str_of("response")?,
+            model: j.str_of("model")?,
+            grounded_citations: j
+                .get("grounded_citations")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+            seq: j.f64_of("seq")? as u64,
+        })
+    }
+
+    /// Serialized form included in an LLM input.
+    pub fn render(&self) -> String {
+        format!("user: {}\nassistant: {}", self.prompt, self.response)
+    }
+}
+
+/// History store over the KV substrate, keyed `hist:{user}:{conversation}`.
+pub struct HistoryStore<'a> {
+    kv: &'a KvStore,
+}
+
+impl<'a> HistoryStore<'a> {
+    pub fn new(kv: &'a KvStore) -> HistoryStore<'a> {
+        HistoryStore { kv }
+    }
+
+    fn key(user: &str, conversation: &str) -> String {
+        format!("hist:{user}:{conversation}")
+    }
+
+    pub fn get(&self, user: &str, conversation: &str) -> Vec<Message> {
+        self.kv
+            .get(&Self::key(user, conversation))
+            .and_then(|j| {
+                j.as_arr().map(|arr| {
+                    arr.iter()
+                        .filter_map(|m| Message::from_json(m).ok())
+                        .collect()
+                })
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn append(&self, user: &str, conversation: &str, mut msg: Message) {
+        self.kv.update(&Self::key(user, conversation), |old| {
+            let mut arr = old
+                .and_then(|j| j.as_arr().map(|a| a.to_vec()))
+                .unwrap_or_default();
+            msg.seq = arr.len() as u64;
+            arr.push(msg.to_json());
+            Json::Arr(arr)
+        });
+    }
+
+    /// Replace the most recent message (regeneration, §5.1: "the initial
+    /// response is removed from the context").
+    pub fn replace_last(&self, user: &str, conversation: &str, msg: Message) {
+        self.kv.update(&Self::key(user, conversation), |old| {
+            let mut arr = old
+                .and_then(|j| j.as_arr().map(|a| a.to_vec()))
+                .unwrap_or_default();
+            let seq = arr.len().saturating_sub(1) as u64;
+            let mut msg = msg.clone();
+            msg.seq = seq;
+            if arr.is_empty() {
+                arr.push(msg.to_json());
+            } else {
+                let last = arr.len() - 1;
+                arr[last] = msg.to_json();
+            }
+            Json::Arr(arr)
+        });
+    }
+
+    pub fn len(&self, user: &str, conversation: &str) -> usize {
+        self.get(user, conversation).len()
+    }
+
+    pub fn clear(&self, user: &str, conversation: &str) {
+        self.kv.delete(&Self::key(user, conversation));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(p: &str, r: &str) -> Message {
+        Message {
+            prompt: p.into(),
+            response: r.into(),
+            model: "gpt-4o-mini".into(),
+            grounded_citations: false,
+            seq: 0,
+        }
+    }
+
+    #[test]
+    fn append_and_get_ordered() {
+        let kv = KvStore::new();
+        let h = HistoryStore::new(&kv);
+        h.append("u", "c", msg("q1", "a1"));
+        h.append("u", "c", msg("q2", "a2"));
+        let msgs = h.get("u", "c");
+        assert_eq!(msgs.len(), 2);
+        assert_eq!(msgs[0].prompt, "q1");
+        assert_eq!(msgs[1].seq, 1);
+    }
+
+    #[test]
+    fn conversations_isolated() {
+        let kv = KvStore::new();
+        let h = HistoryStore::new(&kv);
+        h.append("u", "c1", msg("q1", "a1"));
+        h.append("u", "c2", msg("q2", "a2"));
+        assert_eq!(h.len("u", "c1"), 1);
+        assert_eq!(h.get("u", "c2")[0].prompt, "q2");
+    }
+
+    #[test]
+    fn replace_last_for_regeneration() {
+        let kv = KvStore::new();
+        let h = HistoryStore::new(&kv);
+        h.append("u", "c", msg("q1", "first answer"));
+        h.replace_last("u", "c", msg("q1", "better answer"));
+        let msgs = h.get("u", "c");
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].response, "better answer");
+    }
+
+    #[test]
+    fn message_json_roundtrip() {
+        let m = msg("hello \"world\"", "line\nbreak");
+        let back = Message::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn render_format() {
+        assert_eq!(msg("q", "a").render(), "user: q\nassistant: a");
+    }
+}

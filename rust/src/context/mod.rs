@@ -1,0 +1,13 @@
+//! Context manager (paper §3.4): tracks conversation history and selects
+//! which past messages accompany each prompt via a composable filter
+//! grammar (Table 3).
+//!
+//! Keeping context in the proxy lets LLMBridge (a) optimize exactly what
+//! context is sent — the LLM analog of HTTP compression — and (b) support
+//! iterative regeneration without the app resending context.
+
+pub mod filters;
+pub mod history;
+
+pub use filters::{Filter, FilterCtx, Selection};
+pub use history::{HistoryStore, Message};

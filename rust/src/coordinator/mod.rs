@@ -1,0 +1,7 @@
+//! The coordinator: LLMBridge's request pipeline (paper Fig 2, order
+//! ②-④: cache → context manager → model adapter), regeneration,
+//! per-user FIFO dispatch, quotas, and follow-up prefetching.
+
+pub mod pipeline;
+
+pub use pipeline::{Bridge, BridgeConfig};

@@ -1,0 +1,698 @@
+//! The Bridge: everything a request touches, in the paper's order —
+//! cache (§3.5) → context manager (§3.4) → model adapter (§3.3) — plus
+//! transparency metadata, history updates, regeneration, quotas, and
+//! prefetch of anticipated follow-ups (§5.1).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::adapter::{cascade_models, Cascade};
+use crate::api::{CacheOutcome, CachePolicy, Metadata, Request, Response, ServiceType};
+use crate::cache::SemanticCache;
+use crate::context::{Filter, FilterCtx, HistoryStore, Message};
+use crate::kvstore::KvStore;
+use crate::models::generator::{Completion, Generator};
+use crate::models::pricing::{Generation, LatencyClass, ModelId, POOL};
+use crate::models::quality::{latent_score, GenCondition};
+use crate::runtime::{EngineHandle, Registry};
+use crate::telemetry::Telemetry;
+use crate::workload::classroom::Quota;
+
+/// Proxy configuration.
+#[derive(Clone, Debug)]
+pub struct BridgeConfig {
+    /// Synchronously prefetch follow-up answers into the exact cache after
+    /// each response (the WhatsApp buttons; async in production, sync here
+    /// for determinism).
+    pub prefetch_followups: bool,
+    /// Which model generation the delegated service types draw from.
+    pub generation: Generation,
+    /// Memoize completions (replay accelerator; see Generator docs).
+    pub memoize: bool,
+    /// Per-user quota for the usage-based service type.
+    pub quota: Quota,
+}
+
+impl Default for BridgeConfig {
+    fn default() -> Self {
+        BridgeConfig {
+            prefetch_followups: false,
+            generation: Generation::New,
+            memoize: true,
+            quota: Quota::default(),
+        }
+    }
+}
+
+#[derive(Default, Clone, Debug)]
+struct QuotaState {
+    requests: u64,
+    input_tokens: u64,
+    output_tokens: u64,
+}
+
+struct StoredExchange {
+    request: Request,
+    regen_count: u32,
+}
+
+/// The LLMBridge proxy.
+pub struct Bridge {
+    engine: EngineHandle,
+    generator: Arc<Generator>,
+    kv: KvStore,
+    cache: SemanticCache,
+    telemetry: Arc<Telemetry>,
+    exchanges: Mutex<HashMap<u64, StoredExchange>>,
+    quotas: Mutex<HashMap<String, QuotaState>>,
+    pub config: BridgeConfig,
+}
+
+impl Bridge {
+    /// Load artifacts from `dir` and bring up the proxy.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Bridge> {
+        Bridge::open_with(dir, BridgeConfig::default())
+    }
+
+    pub fn open_with(dir: impl AsRef<Path>, config: BridgeConfig) -> Result<Bridge> {
+        let registry = Registry::load(dir)?;
+        let engine = EngineHandle::spawn(registry)?;
+        Bridge::from_engine(engine, config)
+    }
+
+    /// Build on an already-running engine (shared across bridges in tests).
+    pub fn from_engine(engine: EngineHandle, config: BridgeConfig) -> Result<Bridge> {
+        let mut generator = Generator::new(engine.clone());
+        generator.memoize = config.memoize;
+        let embed_dim = engine.embed_dim();
+        Ok(Bridge {
+            engine,
+            generator: Arc::new(generator),
+            kv: KvStore::new(),
+            cache: SemanticCache::new(embed_dim),
+            telemetry: Arc::new(Telemetry::default()),
+            exchanges: Mutex::new(HashMap::new()),
+            quotas: Mutex::new(HashMap::new()),
+            config,
+        })
+    }
+
+    pub fn engine(&self) -> &EngineHandle {
+        &self.engine
+    }
+
+    pub fn generator(&self) -> &Generator {
+        &self.generator
+    }
+
+    pub fn cache(&self) -> &SemanticCache {
+        &self.cache
+    }
+
+    pub fn kv(&self) -> &KvStore {
+        &self.kv
+    }
+
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
+    }
+
+    pub fn history(&self, user: &str, conversation: &str) -> Vec<Message> {
+        HistoryStore::new(&self.kv).get(user, conversation)
+    }
+
+    pub fn clear_history(&self, user: &str, conversation: &str) {
+        HistoryStore::new(&self.kv).clear(user, conversation)
+    }
+
+    // ------------------------------------------------------------ handle
+
+    /// `proxy.request` (Table 2).
+    pub fn handle(&self, req: Request) -> Result<Response> {
+        let resp = self.resolve(&req, 0)?;
+        self.exchanges.lock().unwrap().insert(
+            resp.metadata.request_id,
+            StoredExchange {
+                request: req,
+                regen_count: 0,
+            },
+        );
+        Ok(resp)
+    }
+
+    /// `proxy.regenerate` (Table 2): re-resolve a previous request.
+    /// `new_service_type = None` keeps the same type but nudges the proxy
+    /// toward quality (§3.2).
+    pub fn regenerate(
+        &self,
+        request_id: u64,
+        new_service_type: Option<ServiceType>,
+    ) -> Result<Response> {
+        let (mut req, count) = {
+            let ex = self.exchanges.lock().unwrap();
+            let e = ex
+                .get(&request_id)
+                .ok_or_else(|| anyhow::anyhow!("unknown request id {request_id:x}"))?;
+            (e.request.clone(), e.regen_count + 1)
+        };
+        req.service_type = match new_service_type {
+            Some(st) => st,
+            None => escalate(&req.service_type, self.config.generation),
+        };
+        self.telemetry.counters.incr("regenerations");
+        let resp = self.resolve(&req, count)?;
+        self.exchanges.lock().unwrap().insert(
+            resp.metadata.request_id,
+            StoredExchange {
+                request: req,
+                regen_count: count,
+            },
+        );
+        Ok(resp)
+    }
+
+    // ---------------------------------------------------------- pipeline
+
+    fn resolve(&self, req: &Request, regen_count: u32) -> Result<Response> {
+        let start = Instant::now();
+        self.telemetry.counters.incr("requests");
+
+        let mut models_used: Vec<(String, String)> = Vec::new();
+        let mut calls: Vec<Completion> = Vec::new();
+        let mut cache_outcome = CacheOutcome::Skipped;
+        let mut grounded = false;
+        let mut verifier_score = None;
+
+        // ---- Stage ②: cache -------------------------------------------
+        // Exact-match lookup runs before history/traits are materialized:
+        // the prefetched-button path (§5.1) is the latency-critical one
+        // (EXPERIMENTS.md §Perf).
+        let skip_cache = matches!(
+            req.service_type,
+            ServiceType::Fixed {
+                cache: CachePolicy::Skip,
+                ..
+            }
+        );
+        if !skip_cache && regen_count == 0 {
+            if let Some(text) = self.cache.get_exact(&req.prompt) {
+                // Prefetched exact hit (WhatsApp buttons): zero LLM cost.
+                self.telemetry.counters.incr("cache_exact_hits");
+                let traits = req.effective_traits();
+                let latent = latent_score(&traits, 0.9, GenCondition::default());
+                let latency_ms = start.elapsed().as_secs_f64() * 1e3;
+                self.telemetry.request_latency.record(start.elapsed());
+                return Ok(self.finish(
+                    req,
+                    regen_count,
+                    text,
+                    Metadata {
+                        request_id: exchange_id(req, regen_count),
+                        service_type: req.service_type.name().to_string(),
+                        models_used: vec![],
+                        cache: CacheOutcome::ExactHit,
+                        context_messages: 0,
+                        input_tokens: 0,
+                        output_tokens: 0,
+                        cost_usd: 0.0,
+                        latency_ms,
+                        verifier_score: None,
+                        context_llm_ms: 0.0,
+                        llm_ms: 0.0,
+                        latent_quality: latent,
+                        grounded: false,
+                        regen_count,
+                    },
+                    "cache".to_string(),
+                    false,
+                ));
+            }
+        }
+        let traits = req.effective_traits();
+        let history = HistoryStore::new(&self.kv);
+        let msgs = history.get(&req.user, &req.conversation);
+        let mut smart_cache_response: Option<String> = None;
+        if let ServiceType::SmartCache { model } = &req.service_type {
+            if regen_count == 0 {
+                let out =
+                    self.cache
+                        .smart_get(&self.generator, *model, &req.prompt, &traits)?;
+                calls.extend(out.llm_calls.iter().cloned());
+                for c in &out.llm_calls {
+                    models_used.push((c.model.as_str().to_string(), "cache-llm".into()));
+                }
+                match (&out.hit, out.used) {
+                    (Some(h), true) => {
+                        cache_outcome = CacheOutcome::SemanticHit { score: h.score };
+                        grounded = true;
+                        smart_cache_response = out.response.clone();
+                        self.telemetry.counters.incr("cache_semantic_hits");
+                    }
+                    (Some(_), false) | (None, _) => {
+                        cache_outcome = CacheOutcome::Miss;
+                        self.telemetry.counters.incr("cache_misses");
+                    }
+                }
+            } else {
+                cache_outcome = CacheOutcome::Skipped;
+            }
+        }
+
+        // ---- Stage ③: context manager ---------------------------------
+        let filter = self.context_filter(&req.service_type, regen_count);
+        let cx = FilterCtx {
+            generator: &self.generator,
+            traits: &traits,
+        };
+        let selection = filter.apply(&msgs, &req.prompt, &cx)?;
+        let context_llm_ms: f64 = selection
+            .llm_calls
+            .iter()
+            .map(|c| c.latency.as_secs_f64() * 1e3)
+            .sum();
+        for c in &selection.llm_calls {
+            models_used.push((c.model.as_str().to_string(), "context-llm".into()));
+        }
+        calls.extend(selection.llm_calls.iter().cloned());
+        let ctx_messages = selection.messages(&msgs);
+        let sufficiency = selection.sufficiency(msgs.len());
+        let rendered_ctx: String = ctx_messages
+            .iter()
+            .map(|m| m.render())
+            .collect::<Vec<_>>()
+            .join("\n");
+        let input_text = if rendered_ctx.is_empty() {
+            req.prompt.clone()
+        } else {
+            format!("{rendered_ctx}\nuser: {}", req.prompt)
+        };
+
+        // ---- Stage ④: model adapter -----------------------------------
+        let cond = GenCondition {
+            context_sufficiency: sufficiency,
+            grounded,
+        };
+        let (text, latent, answer_model) = if let Some(resp_text) = smart_cache_response {
+            // Cache content already produced the response (cache-LLM calls
+            // are billed above).
+            let model = match &req.service_type {
+                ServiceType::SmartCache { model } => *model,
+                _ => unreachable!(),
+            };
+            let latent = latent_score(&traits, model.spec().capability, cond);
+            (resp_text, latent, model)
+        } else {
+            match &req.service_type {
+                ServiceType::ModelSelector {
+                    threshold,
+                    m1,
+                    m2,
+                    verifier,
+                } => {
+                    let (m1, m2, v) =
+                        cascade_models(self.config.generation, *m1, *m2, *verifier)?;
+                    let cascade = Cascade {
+                        m1,
+                        m2,
+                        verifier: v,
+                        threshold: *threshold,
+                    };
+                    let result =
+                        cascade.run(&self.generator, &input_text, &req.prompt, &traits, cond)?;
+                    models_used.push((m1.as_str().into(), "m1".into()));
+                    models_used.push((v.as_str().into(), "verifier".into()));
+                    if result.escalated {
+                        models_used.push((m2.as_str().into(), "m2".into()));
+                        self.telemetry.counters.incr("cascade_escalations");
+                    }
+                    verifier_score = Some(result.verifier_score);
+                    calls.extend(result.calls.iter().cloned());
+                    (
+                        result.completion.text.clone(),
+                        result.latent,
+                        result.completion.model,
+                    )
+                }
+                other => {
+                    let model = self.pick_model(other, req)?;
+                    let completion = self.generator.generate(model, &input_text, None)?;
+                    models_used.push((model.as_str().into(), "answer".into()));
+                    let latent = latent_score(&traits, model.spec().capability, cond);
+                    calls.push(completion.clone());
+                    (completion.text, latent, model)
+                }
+            }
+        };
+
+        // ---- Accounting -------------------------------------------------
+        let mut input_tokens = 0;
+        let mut output_tokens = 0;
+        let mut cost = 0.0;
+        let mut llm_ms = 0.0;
+        for c in &calls {
+            llm_ms += c.latency.as_secs_f64() * 1e3;
+            input_tokens += c.input_tokens;
+            output_tokens += c.output_tokens;
+            cost += c.cost_usd;
+            self.telemetry
+                .costs
+                .record(c.model.as_str(), c.input_tokens, c.output_tokens, c.cost_usd);
+            match c.model.spec().latency_class {
+                LatencyClass::Small => self.telemetry.llm_latency_small.record(c.latency),
+                LatencyClass::Large => self.telemetry.llm_latency_large.record(c.latency),
+            }
+        }
+        if let ServiceType::UsageBased { .. } = &req.service_type {
+            let mut q = self.quotas.lock().unwrap();
+            let st = q.entry(req.user.clone()).or_default();
+            st.requests += 1;
+            st.input_tokens += input_tokens;
+            st.output_tokens += output_tokens;
+        }
+        let latency_ms = start.elapsed().as_secs_f64() * 1e3;
+        self.telemetry.request_latency.record(start.elapsed());
+
+        let meta = Metadata {
+            request_id: exchange_id(req, regen_count),
+            service_type: req.service_type.name().to_string(),
+            models_used,
+            cache: cache_outcome,
+            context_messages: ctx_messages.len(),
+            input_tokens,
+            output_tokens,
+            cost_usd: cost,
+            latency_ms,
+            verifier_score,
+            context_llm_ms,
+            llm_ms,
+            latent_quality: latent,
+            grounded,
+            regen_count,
+        };
+        Ok(self.finish(
+            req,
+            regen_count,
+            text,
+            meta,
+            answer_model.as_str().to_string(),
+            answer_model.spec().grounded_citations,
+        ))
+    }
+
+    fn finish(
+        &self,
+        req: &Request,
+        regen_count: u32,
+        text: String,
+        meta: Metadata,
+        model: String,
+        grounded_citations: bool,
+    ) -> Response {
+        if req.update_context {
+            let history = HistoryStore::new(&self.kv);
+            let msg = Message {
+                prompt: req.prompt.clone(),
+                response: text.clone(),
+                model,
+                grounded_citations,
+                seq: 0,
+            };
+            if regen_count > 0 {
+                // §5.1: regeneration replaces the initial response in the
+                // context rather than appending a duplicate turn.
+                history.replace_last(&req.user, &req.conversation, msg);
+            } else {
+                history.append(&req.user, &req.conversation, msg);
+            }
+        }
+        if self.config.prefetch_followups && regen_count == 0 {
+            if let Err(e) = self.prefetch_followups(req) {
+                self.telemetry.counters.incr("prefetch_errors");
+                let _ = e;
+            }
+        }
+        Response {
+            text,
+            metadata: meta,
+        }
+    }
+
+    /// Anticipate follow-up queries and cache their answers (§5.1: shown
+    /// as WhatsApp buttons; exact-match retrieval on press).
+    fn prefetch_followups(&self, req: &Request) -> Result<()> {
+        let kws = crate::cache::chunker::keywords(&req.prompt, 2);
+        let Some(kw) = kws.first() else {
+            return Ok(());
+        };
+        // Anticipate both single-keyword and bigram-topic phrasings
+        // ("more about sleep" and "more about sleep hygiene").
+        let mut followups = vec![
+            format!("more about {kw}"),
+            format!("why is {kw} important"),
+            format!("history of {kw}"),
+        ];
+        if kws.len() >= 2 {
+            followups.push(format!("more about {} {}", kws[0], kws[1]));
+            followups.push(format!("more about {} {}", kws[1], kws[0]));
+        }
+        for followup in followups {
+            if self.cache.get_exact(&followup).is_none() {
+                let c = self
+                    .generator
+                    .generate(ModelId::Claude3Haiku, &followup, Some(16))?;
+                self.telemetry.counters.incr("prefetched_followups");
+                self.telemetry.costs.record(
+                    c.model.as_str(),
+                    c.input_tokens,
+                    c.output_tokens,
+                    c.cost_usd,
+                );
+                self.cache.put_exact(&followup, &c.text);
+            }
+        }
+        Ok(())
+    }
+
+    /// The context filter each service type implies (§3.2's list).
+    fn context_filter(&self, st: &ServiceType, regen_count: u32) -> Filter {
+        match st {
+            ServiceType::Fixed { context_k, .. } => Filter::LastK(*context_k),
+            ServiceType::Quality => Filter::All,
+            ServiceType::Cost => Filter::None,
+            // §3.2: model_selector "uses 5 previous messages as context".
+            ServiceType::ModelSelector { .. } => Filter::LastK(5),
+            ServiceType::SmartContext { k, model } => {
+                if regen_count > 0 {
+                    // Regeneration nudges toward quality: full last-k.
+                    Filter::LastK(*k)
+                } else {
+                    Filter::smart_last_k(*k, *model)
+                }
+            }
+            ServiceType::SmartCache { .. } => Filter::None,
+            ServiceType::UsageBased { .. } => Filter::LastK(3),
+            ServiceType::LatencyFirst => Filter::LastK(1),
+        }
+    }
+
+    /// Model choice for the non-cascade service types.
+    fn pick_model(&self, st: &ServiceType, req: &Request) -> Result<ModelId> {
+        Ok(match st {
+            ServiceType::Fixed { model, .. } => *model,
+            // §3.2 quality: "the most expensive model".
+            ServiceType::Quality => POOL
+                .iter()
+                .filter(|m| m.generation == self.config.generation)
+                .max_by(|a, b| a.usd_per_mtok_in.partial_cmp(&b.usd_per_mtok_in).unwrap())
+                .map(|m| m.id)
+                .unwrap(),
+            // §3.2 cost: "the cheapest model".
+            ServiceType::Cost => POOL
+                .iter()
+                .filter(|m| m.generation == self.config.generation)
+                .min_by(|a, b| a.usd_per_mtok_in.partial_cmp(&b.usd_per_mtok_in).unwrap())
+                .map(|m| m.id)
+                .unwrap(),
+            ServiceType::SmartContext { .. } => match self.config.generation {
+                Generation::Old => ModelId::Gpt4,
+                Generation::New => ModelId::Gpt4o,
+            },
+            ServiceType::SmartCache { model } => *model,
+            ServiceType::UsageBased { allowed, fallback } => {
+                // Quota gate.
+                {
+                    let q = self.quotas.lock().unwrap();
+                    if let Some(st) = q.get(&req.user) {
+                        let quota = &self.config.quota;
+                        if st.requests >= quota.max_requests
+                            || st.input_tokens >= quota.max_input_tokens
+                            || st.output_tokens >= quota.max_output_tokens
+                        {
+                            self.telemetry.counters.incr("quota_rejections");
+                            bail!("quota exceeded for user {}", req.user);
+                        }
+                    }
+                }
+                let wanted = req
+                    .params
+                    .get("model")
+                    .map(|m| ModelId::parse(m))
+                    .transpose()?;
+                match wanted {
+                    Some(m) if allowed.contains(&m) => m,
+                    Some(_) => {
+                        // Curated-list deny (the §5.2 "domain denylist"
+                        // analogy): fall back instead of failing.
+                        self.telemetry.counters.incr("model_denied");
+                        *fallback
+                    }
+                    None => *fallback,
+                }
+            }
+            ServiceType::LatencyFirst => ModelId::Claude3Haiku,
+            ServiceType::ModelSelector { .. } => unreachable!("handled by cascade"),
+        })
+    }
+
+    /// Quota usage for a user (classroom dashboards).
+    pub fn quota_usage(&self, user: &str) -> (u64, u64, u64) {
+        let q = self.quotas.lock().unwrap();
+        q.get(user)
+            .map(|s| (s.requests, s.input_tokens, s.output_tokens))
+            .unwrap_or((0, 0, 0))
+    }
+}
+
+fn exchange_id(req: &Request, regen_count: u32) -> u64 {
+    req.stable_id() ^ ((regen_count as u64) << 56)
+}
+
+/// Same-service-type regeneration: "nudge the proxy to prioritize quality
+/// over cost" (§3.2).
+fn escalate(st: &ServiceType, generation: Generation) -> ServiceType {
+    let big = match generation {
+        Generation::Old => ModelId::Gpt4,
+        Generation::New => ModelId::Gpt4o,
+    };
+    match st {
+        // §3.3: "regenerate will directly route the prompt to the more
+        // expensive LLM".
+        ServiceType::ModelSelector { m2, .. } => ServiceType::Fixed {
+            model: m2.unwrap_or(big),
+            cache: CachePolicy::Skip,
+            context_k: 5,
+        },
+        // §3.2: "for smart_context, regenerating entails using more
+        // context".
+        ServiceType::SmartContext { k, .. } => ServiceType::Fixed {
+            model: big,
+            cache: CachePolicy::Skip,
+            context_k: (*k).max(5),
+        },
+        ServiceType::SmartCache { .. } => ServiceType::ModelSelector {
+            threshold: 8.0,
+            m1: None,
+            m2: None,
+            verifier: None,
+        },
+        ServiceType::Cost => ServiceType::Quality,
+        ServiceType::LatencyFirst => ServiceType::Fixed {
+            model: big,
+            cache: CachePolicy::Skip,
+            context_k: 5,
+        },
+        other => other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escalate_model_selector_goes_direct_m2() {
+        let st = ServiceType::ModelSelector {
+            threshold: 8.0,
+            m1: None,
+            m2: Some(ModelId::Gpt4),
+            verifier: None,
+        };
+        match escalate(&st, Generation::Old) {
+            ServiceType::Fixed { model, .. } => assert_eq!(model, ModelId::Gpt4),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn escalate_smart_context_adds_context() {
+        let st = ServiceType::SmartContext {
+            k: 1,
+            model: ModelId::Claude3Haiku,
+        };
+        match escalate(&st, Generation::New) {
+            ServiceType::Fixed {
+                model, context_k, ..
+            } => {
+                assert_eq!(model, ModelId::Gpt4o);
+                assert_eq!(context_k, 5);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn escalate_cost_becomes_quality() {
+        assert_eq!(escalate(&ServiceType::Cost, Generation::New), ServiceType::Quality);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Batch mode (§5.2 future work): "users can submit a batch of prompts to
+// be processed by multiple models simultaneously ... lowering the
+// development overhead of benchmarking and compositional workflows."
+// ---------------------------------------------------------------------
+
+/// One batch entry result: the same prompt resolved under several models,
+/// side by side — the §5.2 benchmarking workflow as a first-class call.
+#[derive(Debug)]
+pub struct BatchComparison {
+    pub prompt: String,
+    /// (model, response) per requested model, in request order.
+    pub responses: Vec<(ModelId, Response)>,
+}
+
+impl Bridge {
+    /// Resolve every prompt under every model. Context and cache are
+    /// bypassed (benchmarking semantics: identical isolated inputs).
+    pub fn handle_batch(
+        &self,
+        user: &str,
+        prompts: &[String],
+        models: &[ModelId],
+    ) -> Result<Vec<BatchComparison>> {
+        let mut out = Vec::with_capacity(prompts.len());
+        for (i, prompt) in prompts.iter().enumerate() {
+            let mut responses = Vec::with_capacity(models.len());
+            for model in models {
+                let req = Request::new(user, &format!("batch-{i}-{model}"), prompt)
+                    .service_type(ServiceType::Fixed {
+                        model: *model,
+                        cache: CachePolicy::Skip,
+                        context_k: 0,
+                    })
+                    .no_context_update();
+                responses.push((*model, self.handle(req)?));
+            }
+            self.telemetry.counters.incr("batch_prompts");
+            out.push(BatchComparison {
+                prompt: prompt.clone(),
+                responses,
+            });
+        }
+        Ok(out)
+    }
+}

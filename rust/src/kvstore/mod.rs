@@ -1,0 +1,200 @@
+//! Key-value store substrate — stand-in for the paper's DynamoDB tables
+//! (conversation state, user profiles, leaderboards).
+//!
+//! Sharded `Mutex<BTreeMap>` segments keyed by FNV of the key, with
+//! optional JSON-lines snapshot persistence. Values are [`Json`] documents,
+//! mirroring DynamoDB's item model.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::util::fnv1a;
+use crate::util::json::Json;
+
+const SHARDS: usize = 16;
+
+pub struct KvStore {
+    shards: Vec<Mutex<BTreeMap<String, Json>>>,
+}
+
+impl Default for KvStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KvStore {
+    pub fn new() -> KvStore {
+        KvStore {
+            shards: (0..SHARDS).map(|_| Mutex::new(BTreeMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Mutex<BTreeMap<String, Json>> {
+        &self.shards[(fnv1a(key.as_bytes()) as usize) % SHARDS]
+    }
+
+    pub fn put(&self, key: &str, value: Json) {
+        self.shard(key).lock().unwrap().insert(key.to_string(), value);
+    }
+
+    pub fn get(&self, key: &str) -> Option<Json> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
+    pub fn delete(&self, key: &str) -> bool {
+        self.shard(key).lock().unwrap().remove(key).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read-modify-write under the shard lock (DynamoDB UpdateItem analog).
+    pub fn update(&self, key: &str, f: impl FnOnce(Option<Json>) -> Json) -> Json {
+        let mut shard = self.shard(key).lock().unwrap();
+        let old = shard.get(key).cloned();
+        let new = f(old);
+        shard.insert(key.to_string(), new.clone());
+        new
+    }
+
+    /// All keys with the given prefix (DynamoDB Query on a key prefix).
+    pub fn scan_prefix(&self, prefix: &str) -> Vec<(String, Json)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            let m = s.lock().unwrap();
+            for (k, v) in m.range(prefix.to_string()..) {
+                if !k.starts_with(prefix) {
+                    break;
+                }
+                out.push((k.clone(), v.clone()));
+            }
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Persist as JSON-lines: one `{"k":...,"v":...}` per line.
+    pub fn snapshot(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("snapshot create {path:?}"))?;
+        for s in &self.shards {
+            let m = s.lock().unwrap();
+            for (k, v) in m.iter() {
+                let line = Json::obj(vec![("k", Json::str(k.clone())), ("v", v.clone())]);
+                writeln!(f, "{}", line.to_string())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn restore(path: &Path) -> Result<KvStore> {
+        let store = KvStore::new();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("snapshot read {path:?}"))?;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let row = Json::parse(line)?;
+            let k = row.str_of("k")?;
+            let v = row.req("v")?.clone();
+            store.put(&k, v);
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen_text};
+
+    #[test]
+    fn put_get_delete() {
+        let kv = KvStore::new();
+        kv.put("user:1", Json::num(5.0));
+        assert_eq!(kv.get("user:1"), Some(Json::num(5.0)));
+        assert!(kv.delete("user:1"));
+        assert!(!kv.delete("user:1"));
+        assert_eq!(kv.get("user:1"), None);
+    }
+
+    #[test]
+    fn update_read_modify_write() {
+        let kv = KvStore::new();
+        for _ in 0..5 {
+            kv.update("ctr", |old| {
+                Json::num(old.and_then(|j| j.as_f64()).unwrap_or(0.0) + 1.0)
+            });
+        }
+        assert_eq!(kv.get("ctr"), Some(Json::num(5.0)));
+    }
+
+    #[test]
+    fn scan_prefix_sorted() {
+        let kv = KvStore::new();
+        kv.put("conv:b:2", Json::num(2.0));
+        kv.put("conv:a:1", Json::num(1.0));
+        kv.put("other:z", Json::num(9.0));
+        let rows = kv.scan_prefix("conv:");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "conv:a:1");
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let kv = KvStore::new();
+        kv.put("a", Json::str("x\ny"));
+        kv.put("b", Json::Arr(vec![Json::num(1.0), Json::Null]));
+        let dir = std::env::temp_dir().join("llmbridge_kv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.jsonl");
+        kv.snapshot(&path).unwrap();
+        let back = KvStore::restore(&path).unwrap();
+        assert_eq!(back.get("a"), Some(Json::str("x\ny")));
+        assert_eq!(back.len(), 2);
+    }
+
+    #[test]
+    fn prop_roundtrip_arbitrary_keys() {
+        let kv = KvStore::new();
+        forall(
+            11,
+            200,
+            |r| (gen_text(r, 4), gen_text(r, 8)),
+            |(k, v)| {
+                kv.put(k, Json::str(v.clone()));
+                kv.get(k).and_then(|j| j.as_str().map(|s| s.to_string()))
+                    == Some(v.clone())
+            },
+        );
+    }
+
+    #[test]
+    fn concurrent_updates_consistent() {
+        use std::sync::Arc;
+        let kv = Arc::new(KvStore::new());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let kv = kv.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    kv.update("ctr", |old| {
+                        Json::num(old.and_then(|j| j.as_f64()).unwrap_or(0.0) + 1.0)
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(kv.get("ctr"), Some(Json::num(800.0)));
+    }
+}

@@ -1,0 +1,66 @@
+//! # LLMBridge
+//!
+//! A cost-optimizing LLM **proxy** for a prompt-centric Internet — a
+//! production-shaped reproduction of *"LLMBridge: Reducing Costs to Access
+//! LLMs in a Prompt-Centric Internet"* (Martin et al., 2024).
+//!
+//! LLMBridge sits between applications and a pool of LLMs and applies three
+//! cost optimizations, each delegable to a low-cost model:
+//!
+//! * **Model selection** ([`adapter`]) — a verification-based cascade: a
+//!   cheap model answers, a verifier LLM scores the answer, and the
+//!   expensive model is consulted only when the score falls below a
+//!   threshold (§3.3 of the paper).
+//! * **Context management** ([`context`]) — a filter pipeline over the
+//!   conversation history (`LastK`, `SmartContext`, `Similar`, `Summarize`
+//!   per Table 3), including a small-model classifier that decides whether
+//!   context is needed at all (§3.4).
+//! * **Semantic caching** ([`cache`]) — a typed-key semantic cache over a
+//!   vector database, with *delegated* PUT (chunking + key generation via a
+//!   cache-LLM) and *delegated* GET ("SmartCache") that grounds a local
+//!   model's answer in cached facts (§3.5).
+//!
+//! Applications drive these through the high-level, **bidirectional** API
+//! ([`api`]): a `service_type` per request delegates decisions to the proxy,
+//! response metadata makes every decision transparent, and
+//! `regenerate` supports iterative refinement.
+//!
+//! ## Architecture (three layers, Python never on the request path)
+//!
+//! ```text
+//!  L3  this crate       the proxy: API, coordinator pipeline, adapter,
+//!                       context manager, semantic cache, FIFO queues,
+//!                       REST server, telemetry, workload generators
+//!  L2  python/compile/  JAX transformer pool + embedder (build time)
+//!  L1  python/.../kernels  Pallas attention + matmul (build time)
+//!  RT  [`runtime`]      PJRT CPU client executing artifacts/*.hlo.txt
+//! ```
+//!
+//! The "LLMs" are AOT-compiled JAX/Pallas transformer artifacts executed via
+//! PJRT on the request path; response *quality* is simulated by a calibrated
+//! latent model ([`models::quality`]) because tiny random-weight LMs have no
+//! meaningful quality ordering — see DESIGN.md §Substitutions.
+
+pub mod adapter;
+pub mod api;
+pub mod cache;
+pub mod context;
+pub mod coordinator;
+pub mod experiments;
+pub mod kvstore;
+pub mod models;
+pub mod queuing;
+pub mod runtime;
+pub mod server;
+pub mod telemetry;
+pub mod util;
+pub mod vecdb;
+pub mod workload;
+
+/// Convenient re-exports for applications.
+pub mod prelude {
+    pub use crate::api::{Metadata, Request, Response, ServiceType};
+    pub use crate::coordinator::Bridge;
+    pub use crate::models::pricing::{ModelId, POOL};
+    pub use crate::workload::whatsapp::WhatsAppWorkload;
+}

@@ -1,0 +1,143 @@
+//! LLMBridge CLI — the leader entrypoint.
+//!
+//! ```text
+//! llmbridge serve   [--bind 127.0.0.1:8080] [--workers 4] [--artifacts DIR]
+//!                   [--prefetch] [--generation old|new]
+//! llmbridge ask     --prompt "..." [--service TYPE] [--user u] [--artifacts DIR]
+//! llmbridge warm    [--artifacts DIR]        # load corpus into the cache
+//! llmbridge models                            # print the model pool
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use llmbridge::api::{Request, ServiceType};
+use llmbridge::coordinator::{Bridge, BridgeConfig};
+use llmbridge::models::pricing::{Generation, ModelId, POOL};
+use llmbridge::server::Server;
+use llmbridge::util::cli::Args;
+use llmbridge::util::json::Json;
+use llmbridge::workload::corpus;
+
+fn config_from(args: &Args) -> BridgeConfig {
+    BridgeConfig {
+        prefetch_followups: args.flag("prefetch"),
+        generation: if args.get_or("generation", "new") == "old" {
+            Generation::Old
+        } else {
+            Generation::New
+        },
+        memoize: !args.flag("no-memoize"),
+        quota: Default::default(),
+    }
+}
+
+fn service_type_from(args: &Args) -> Result<ServiceType> {
+    Ok(match args.get_or("service", "model_selector") {
+        "quality" => ServiceType::Quality,
+        "cost" => ServiceType::Cost,
+        "model_selector" => ServiceType::default(),
+        "smart_context" => ServiceType::SmartContext {
+            k: args.usize_or("k", 5),
+            model: ModelId::Claude3Haiku,
+        },
+        "smart_cache" => ServiceType::SmartCache {
+            model: ModelId::Phi3Mini,
+        },
+        "latency_first" => ServiceType::LatencyFirst,
+        "fixed" => ServiceType::Fixed {
+            model: ModelId::parse(args.get_or("model", "gpt-4o-mini"))?,
+            cache: llmbridge::api::CachePolicy::Auto,
+            context_k: args.usize_or("k", 0),
+        },
+        other => bail!("unknown --service '{other}'"),
+    })
+}
+
+fn warm_cache(bridge: &Bridge) -> Result<usize> {
+    let mut chunks = 0;
+    for article in corpus::full_corpus() {
+        let (ids, _calls) = bridge.cache().put_delegated(
+            bridge.generator(),
+            ModelId::Phi3Mini,
+            &article.title,
+            &article.text,
+        )?;
+        chunks += ids.len();
+    }
+    Ok(chunks)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => {
+            let bridge = Arc::new(Bridge::open_with(
+                args.get_or("artifacts", "artifacts"),
+                config_from(&args),
+            )?);
+            if args.flag("warm") {
+                let n = warm_cache(&bridge)?;
+                eprintln!("warmed cache with {n} corpus chunks");
+            }
+            let bind = args.get_or("bind", "127.0.0.1:8080");
+            let workers = args.usize_or("workers", 4);
+            let server = Server::start(bridge, bind, workers)?;
+            eprintln!("llmbridge serving on {} ({workers} workers); Ctrl-C to stop", server.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "ask" => {
+            let prompt = args
+                .get("prompt")
+                .ok_or_else(|| anyhow::anyhow!("--prompt required"))?;
+            let bridge = Bridge::open_with(
+                args.get_or("artifacts", "artifacts"),
+                config_from(&args),
+            )?;
+            if args.flag("warm") {
+                warm_cache(&bridge)?;
+            }
+            let req = Request::new(
+                args.get_or("user", "cli"),
+                args.get_or("conversation", "cli"),
+                prompt,
+            )
+            .service_type(service_type_from(&args)?);
+            let resp = bridge.handle(req)?;
+            println!("{}", resp.to_json().to_string());
+        }
+        "warm" => {
+            let bridge = Bridge::open(args.get_or("artifacts", "artifacts"))?;
+            let n = warm_cache(&bridge)?;
+            println!("cached {n} chunks from {} articles", corpus::full_corpus().len());
+        }
+        "models" => {
+            let rows: Vec<Json> = POOL
+                .iter()
+                .map(|m| {
+                    Json::obj(vec![
+                        ("id", Json::str(m.id.as_str())),
+                        ("family", Json::str(m.family)),
+                        ("artifact", Json::str(m.artifact)),
+                        ("capability", Json::Num(m.capability)),
+                        ("usd_per_mtok_in", Json::Num(m.usd_per_mtok_in)),
+                        ("usd_per_mtok_out", Json::Num(m.usd_per_mtok_out)),
+                    ])
+                })
+                .collect();
+            println!("{}", Json::Arr(rows).to_string());
+        }
+        _ => {
+            eprintln!(
+                "usage: llmbridge <serve|ask|warm|models> [--artifacts DIR] \
+                 [--service TYPE] [--prompt TEXT] [--bind ADDR] [--workers N] \
+                 [--generation old|new] [--prefetch] [--warm]"
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! The model layer: pool definitions and pricing, the PJRT-backed
+//! generator, the latent quality model (the documented simulation
+//! substitution), and the LLM-as-judge used by the §5.3 benchmarks.
+
+pub mod generator;
+pub mod judge;
+pub mod pricing;
+pub mod quality;
+
+pub use generator::{Completion, Generator};
+pub use judge::Judge;
+pub use pricing::{ModelId, ModelSpec, POOL};
+pub use quality::{GenCondition, QueryTraits};

@@ -1,0 +1,288 @@
+//! The model pool: identities, price table, capability scores and artifact
+//! bindings for every LLM LLMBridge proxies to.
+//!
+//! Prices mirror the public per-token price *ratios* the paper relies on
+//! (GPT-4 ≈ 60× GPT-3.5 input; output ≈ 2-5× input; GPT-4-class ≈ 200× a
+//! 4o-mini-class model), and capabilities are the calibrated latent scores
+//! the quality model consumes (DESIGN.md §Quality-model calibration).
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// Stable model identifier (the paper's pool, §4 + §5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelId {
+    Gpt35Turbo,
+    Gpt4,
+    Gpt4o,
+    Gpt4oMini,
+    Claude3Opus,
+    Claude3Haiku,
+    Phi3Mini,
+    Llama38b,
+    Gemini20Flash,
+    SonarHugeOnline,
+}
+
+impl ModelId {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelId::Gpt35Turbo => "gpt-3.5-turbo",
+            ModelId::Gpt4 => "gpt-4",
+            ModelId::Gpt4o => "gpt-4o",
+            ModelId::Gpt4oMini => "gpt-4o-mini",
+            ModelId::Claude3Opus => "claude-3-opus",
+            ModelId::Claude3Haiku => "claude-3-haiku",
+            ModelId::Phi3Mini => "phi-3-mini",
+            ModelId::Llama38b => "llama-3-8b",
+            ModelId::Gemini20Flash => "gemini-2.0-flash",
+            ModelId::SonarHugeOnline => "sonar-huge-online",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ModelId> {
+        for spec in POOL {
+            if spec.id.as_str() == s {
+                return Ok(spec.id);
+            }
+        }
+        bail!("unknown model id '{s}'")
+    }
+
+    pub fn spec(&self) -> &'static ModelSpec {
+        POOL.iter().find(|m| m.id == *self).expect("pool covers all ids")
+    }
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Model generation, used by the §5.3 "old vs new models" experiments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Generation {
+    Old,
+    New,
+}
+
+/// Latency class for telemetry bucketing (§5.1: large models mean 3.8s,
+/// small 1.2s).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LatencyClass {
+    Small,
+    Large,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub id: ModelId,
+    pub family: &'static str,
+    pub generation: Generation,
+    /// Which AOT artifact serves this pool entry.
+    pub artifact: &'static str,
+    /// Latent capability in [0,1] — input to the quality model.
+    pub capability: f64,
+    /// USD per 1M input tokens.
+    pub usd_per_mtok_in: f64,
+    /// USD per 1M output tokens.
+    pub usd_per_mtok_out: f64,
+    /// Nominal (billable) context window in tokens.
+    pub context_window: u64,
+    /// Default generation budget in tokens (bigger models answer longer).
+    pub default_max_new: usize,
+    pub latency_class: LatencyClass,
+    /// Produces grounded citations (the §5.1 Gemini anecdote).
+    pub grounded_citations: bool,
+}
+
+pub const POOL: &[ModelSpec] = &[
+    ModelSpec {
+        id: ModelId::Gpt35Turbo,
+        family: "openai",
+        generation: Generation::Old,
+        artifact: "mini",
+        capability: 0.55,
+        usd_per_mtok_in: 0.50,
+        usd_per_mtok_out: 1.50,
+        context_window: 16_385,
+        default_max_new: 10,
+        latency_class: LatencyClass::Large,
+        grounded_citations: false,
+    },
+    ModelSpec {
+        id: ModelId::Gpt4,
+        family: "openai",
+        generation: Generation::Old,
+        artifact: "large",
+        capability: 0.88,
+        usd_per_mtok_in: 30.0,
+        usd_per_mtok_out: 60.0,
+        context_window: 8_192,
+        default_max_new: 28,
+        latency_class: LatencyClass::Large,
+        grounded_citations: false,
+    },
+    ModelSpec {
+        id: ModelId::Gpt4o,
+        family: "openai",
+        generation: Generation::New,
+        artifact: "large",
+        capability: 0.92,
+        usd_per_mtok_in: 2.50,
+        usd_per_mtok_out: 10.0,
+        context_window: 128_000,
+        default_max_new: 20,
+        latency_class: LatencyClass::Large,
+        grounded_citations: false,
+    },
+    ModelSpec {
+        id: ModelId::Gpt4oMini,
+        family: "openai",
+        generation: Generation::New,
+        artifact: "mini",
+        capability: 0.78,
+        usd_per_mtok_in: 0.15,
+        usd_per_mtok_out: 0.60,
+        context_window: 128_000,
+        default_max_new: 14,
+        latency_class: LatencyClass::Small,
+        grounded_citations: false,
+    },
+    ModelSpec {
+        id: ModelId::Claude3Opus,
+        family: "anthropic",
+        generation: Generation::Old,
+        artifact: "large",
+        capability: 0.85,
+        usd_per_mtok_in: 15.0,
+        usd_per_mtok_out: 75.0,
+        context_window: 200_000,
+        default_max_new: 20,
+        latency_class: LatencyClass::Large,
+        grounded_citations: false,
+    },
+    ModelSpec {
+        id: ModelId::Claude3Haiku,
+        family: "anthropic",
+        generation: Generation::New,
+        artifact: "nano",
+        capability: 0.60,
+        usd_per_mtok_in: 0.25,
+        usd_per_mtok_out: 1.25,
+        context_window: 200_000,
+        default_max_new: 10,
+        latency_class: LatencyClass::Small,
+        grounded_citations: false,
+    },
+    ModelSpec {
+        id: ModelId::Phi3Mini,
+        family: "azure",
+        generation: Generation::New,
+        artifact: "nano",
+        capability: 0.45,
+        usd_per_mtok_in: 0.10,
+        usd_per_mtok_out: 0.30,
+        context_window: 4_096,
+        default_max_new: 10,
+        latency_class: LatencyClass::Small,
+        grounded_citations: false,
+    },
+    ModelSpec {
+        id: ModelId::Llama38b,
+        family: "meta",
+        generation: Generation::New,
+        artifact: "mini",
+        capability: 0.65,
+        usd_per_mtok_in: 0.20,
+        usd_per_mtok_out: 0.60,
+        context_window: 8_192,
+        default_max_new: 14,
+        latency_class: LatencyClass::Small,
+        grounded_citations: false,
+    },
+    ModelSpec {
+        id: ModelId::Gemini20Flash,
+        family: "google",
+        generation: Generation::New,
+        artifact: "mini",
+        capability: 0.80,
+        usd_per_mtok_in: 0.10,
+        usd_per_mtok_out: 0.40,
+        context_window: 1_000_000,
+        default_max_new: 14,
+        latency_class: LatencyClass::Small,
+        grounded_citations: true,
+    },
+    ModelSpec {
+        id: ModelId::SonarHugeOnline,
+        family: "perplexity",
+        generation: Generation::New,
+        artifact: "large",
+        capability: 0.97,
+        usd_per_mtok_in: 5.0,
+        usd_per_mtok_out: 5.0,
+        context_window: 128_000,
+        default_max_new: 24,
+        latency_class: LatencyClass::Large,
+        grounded_citations: true,
+    },
+];
+
+/// Cost in USD for a single call.
+pub fn call_cost(model: ModelId, input_tokens: u64, output_tokens: u64) -> f64 {
+    let spec = model.spec();
+    input_tokens as f64 * spec.usd_per_mtok_in / 1e6
+        + output_tokens as f64 * spec.usd_per_mtok_out / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_covers_all_ids_uniquely() {
+        let mut seen = std::collections::HashSet::new();
+        for spec in POOL {
+            assert!(seen.insert(spec.id), "duplicate {id}", id = spec.id);
+            assert!((0.0..=1.0).contains(&spec.capability));
+            assert!(spec.usd_per_mtok_out >= spec.usd_per_mtok_in);
+        }
+        assert_eq!(POOL.len(), 10);
+    }
+
+    #[test]
+    fn paper_price_ratios_hold() {
+        // GPT-4 input is 60x GPT-3.5 (paper: prices vary >300x across pool).
+        let r = ModelId::Gpt4.spec().usd_per_mtok_in
+            / ModelId::Gpt35Turbo.spec().usd_per_mtok_in;
+        assert!((r - 60.0).abs() < 1.0);
+        // GPT-4 is 200x GPT-4o-mini input (paper cites GPT-4.5 at 250x).
+        let r2 = ModelId::Gpt4.spec().usd_per_mtok_in
+            / ModelId::Gpt4oMini.spec().usd_per_mtok_in;
+        assert!(r2 >= 150.0, "ratio={r2}");
+        // Max/min across pool > 100x.
+        let max = POOL.iter().map(|m| m.usd_per_mtok_in).fold(0.0, f64::max);
+        let min = POOL
+            .iter()
+            .map(|m| m.usd_per_mtok_in)
+            .fold(f64::INFINITY, f64::min);
+        assert!(max / min >= 100.0);
+    }
+
+    #[test]
+    fn call_cost_math() {
+        // 1000 in + 100 out on gpt-4: 1000*30/1e6 + 100*60/1e6 = 0.036.
+        assert!((call_cost(ModelId::Gpt4, 1000, 100) - 0.036).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for spec in POOL {
+            assert_eq!(ModelId::parse(spec.id.as_str()).unwrap(), spec.id);
+        }
+        assert!(ModelId::parse("gpt-99").is_err());
+    }
+}

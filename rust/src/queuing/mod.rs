@@ -1,0 +1,259 @@
+//! Per-user FIFO queue substrate — stand-in for the paper's AWS SQS FIFO
+//! queues (§4): "To ensure requests are processed in the expected order we
+//! use a per-user FIFO queue. Every incoming request goes through this
+//! queue, and is only removed from the queue when a response has been sent."
+//!
+//! Semantics: each `group` (user) has an ordered queue; at most one message
+//! per group is in flight at a time. `pop` hands out the head of some group
+//! that has no in-flight message; `ack` completes it (removing it) and
+//! unblocks the group; `nack` returns it to the head for redelivery.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueuedMessage<T> {
+    pub id: u64,
+    pub group: String,
+    pub payload: T,
+}
+
+struct GroupQueue<T> {
+    messages: VecDeque<QueuedMessage<T>>,
+    in_flight: bool,
+}
+
+struct Inner<T> {
+    groups: BTreeMap<String, GroupQueue<T>>,
+    next_id: u64,
+    closed: bool,
+}
+
+/// Multi-group FIFO with per-group exclusive delivery.
+pub struct FifoQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cond: Condvar,
+}
+
+impl<T> Default for FifoQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> FifoQueue<T> {
+    pub fn new() -> Self {
+        FifoQueue {
+            inner: Mutex::new(Inner {
+                groups: BTreeMap::new(),
+                next_id: 1,
+                closed: false,
+            }),
+            cond: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a payload for a group; returns the message id.
+    pub fn push(&self, group: &str, payload: T) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner
+            .groups
+            .entry(group.to_string())
+            .or_insert_with(|| GroupQueue {
+                messages: VecDeque::new(),
+                in_flight: false,
+            })
+            .messages
+            .push_back(QueuedMessage {
+                id,
+                group: group.to_string(),
+                payload,
+            });
+        self.cond.notify_one();
+        id
+    }
+
+    /// Blocking pop: returns the next deliverable message, or None if the
+    /// queue is closed and fully drained.
+    pub fn pop(&self) -> Option<QueuedMessage<T>>
+    where
+        T: Clone,
+    {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            // Find a group with a ready head and nothing in flight.
+            let candidate = inner
+                .groups
+                .iter()
+                .find(|(_, g)| !g.in_flight && !g.messages.is_empty())
+                .map(|(k, _)| k.clone());
+            if let Some(group) = candidate {
+                let g = inner.groups.get_mut(&group).unwrap();
+                g.in_flight = true;
+                return g.messages.front().cloned();
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.cond.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<QueuedMessage<T>>
+    where
+        T: Clone,
+    {
+        let mut inner = self.inner.lock().unwrap();
+        let candidate = inner
+            .groups
+            .iter()
+            .find(|(_, g)| !g.in_flight && !g.messages.is_empty())
+            .map(|(k, _)| k.clone());
+        candidate.map(|group| {
+            let g = inner.groups.get_mut(&group).unwrap();
+            g.in_flight = true;
+            g.messages.front().cloned().unwrap()
+        })
+    }
+
+    /// Complete an in-flight message: remove it and unblock its group.
+    pub fn ack(&self, msg_id: u64, group: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(g) = inner.groups.get_mut(group) else {
+            return false;
+        };
+        if !g.in_flight || g.messages.front().map(|m| m.id) != Some(msg_id) {
+            return false;
+        }
+        g.messages.pop_front();
+        g.in_flight = false;
+        if g.messages.is_empty() {
+            inner.groups.remove(group);
+        }
+        self.cond.notify_all();
+        true
+    }
+
+    /// Return an in-flight message to the head of its group (redelivery).
+    pub fn nack(&self, msg_id: u64, group: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(g) = inner.groups.get_mut(group) else {
+            return false;
+        };
+        if !g.in_flight || g.messages.front().map(|m| m.id) != Some(msg_id) {
+            return false;
+        }
+        g.in_flight = false;
+        self.cond.notify_all();
+        true
+    }
+
+    /// Total queued (including in-flight) messages.
+    pub fn len(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.groups.values().map(|g| g.messages.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: blocked `pop`s return None once drained.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_within_group() {
+        let q = FifoQueue::new();
+        q.push("u1", 1);
+        q.push("u1", 2);
+        let m1 = q.try_pop().unwrap();
+        assert_eq!(m1.payload, 1);
+        // Second message of the same group must be blocked until ack.
+        assert!(q.try_pop().is_none());
+        assert!(q.ack(m1.id, "u1"));
+        let m2 = q.try_pop().unwrap();
+        assert_eq!(m2.payload, 2);
+    }
+
+    #[test]
+    fn groups_independent() {
+        let q = FifoQueue::new();
+        q.push("u1", 1);
+        q.push("u2", 2);
+        let a = q.try_pop().unwrap();
+        let b = q.try_pop().unwrap();
+        assert_ne!(a.group, b.group);
+    }
+
+    #[test]
+    fn nack_redelivers_same_message() {
+        let q = FifoQueue::new();
+        q.push("u1", 7);
+        let m = q.try_pop().unwrap();
+        assert!(q.nack(m.id, "u1"));
+        let again = q.try_pop().unwrap();
+        assert_eq!(again.id, m.id);
+    }
+
+    #[test]
+    fn ack_wrong_id_rejected() {
+        let q = FifoQueue::new();
+        q.push("u1", 7);
+        let m = q.try_pop().unwrap();
+        assert!(!q.ack(m.id + 999, "u1"));
+        assert!(!q.ack(m.id, "u2"));
+        assert!(q.ack(m.id, "u1"));
+    }
+
+    #[test]
+    fn close_drains_blocked_pops() {
+        let q: Arc<FifoQueue<u32>> = Arc::new(FifoQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn concurrent_consumers_preserve_group_order() {
+        let q: Arc<FifoQueue<u32>> = Arc::new(FifoQueue::new());
+        for i in 0..100 {
+            q.push("u1", i);
+            q.push("u2", 1000 + i);
+        }
+        q.close();
+        let seen = Arc::new(Mutex::new(Vec::<(String, u32)>::new()));
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let q = q.clone();
+            let seen = seen.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Some(m) = q.pop() {
+                    seen.lock().unwrap().push((m.group.clone(), m.payload));
+                    q.ack(m.id, &m.group);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let seen = seen.lock().unwrap();
+        let u1: Vec<u32> = seen.iter().filter(|(g, _)| g == "u1").map(|(_, p)| *p).collect();
+        let u2: Vec<u32> = seen.iter().filter(|(g, _)| g == "u2").map(|(_, p)| *p).collect();
+        assert_eq!(u1, (0..100).collect::<Vec<_>>());
+        assert_eq!(u2, (1000..1100).collect::<Vec<_>>());
+    }
+}

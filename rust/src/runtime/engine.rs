@@ -1,0 +1,281 @@
+//! PJRT inference engine — the runtime bridge between the rust coordinator
+//! and the AOT-compiled JAX/Pallas artifacts.
+//!
+//! [`Engine`] owns a `PjRtClient` plus one compiled executable per
+//! model-pool variant (weights pre-uploaded as device buffers, so the hot
+//! path transfers only the token window). PJRT wrapper types hold raw
+//! pointers and are `!Send`, so the engine runs on a dedicated thread and
+//! the rest of the proxy talks to it through the cloneable, thread-safe
+//! [`EngineHandle`] (mpsc RPC) — the same shape as handing requests to a
+//! GPU-serving process.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::registry::{load_weights, Registry};
+use super::tokenizer;
+
+/// A single compiled LM variant with resident weights.
+struct LoadedLm {
+    exe: xla::PjRtLoadedExecutable,
+    theta: xla::PjRtBuffer,
+    seq_len: usize,
+    vocab: usize,
+}
+
+/// The engine proper. Not `Send` — lives on the engine thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    lms: HashMap<String, LoadedLm>,
+    embed_exe: xla::PjRtLoadedExecutable,
+    embed_theta: xla::PjRtBuffer,
+    embed_dim: usize,
+    seq_len: usize,
+}
+
+fn compile(client: &xla::PjRtClient, hlo: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        hlo.to_str().context("non-utf8 path")?,
+    )
+    .map_err(|e| anyhow!("parse {hlo:?}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compile {hlo:?}: {e:?}"))
+}
+
+impl Engine {
+    pub fn load(registry: &Registry) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        let mut lms = HashMap::new();
+        for art in &registry.models {
+            let exe = compile(&client, art.serving_hlo())?;
+            let weights = load_weights(&art.weights_path, art.params)?;
+            let theta = client
+                .buffer_from_host_buffer::<f32>(&weights, &[weights.len()], None)
+                .map_err(|e| anyhow!("upload weights {}: {e:?}", art.variant))?;
+            lms.insert(
+                art.variant.clone(),
+                LoadedLm {
+                    exe,
+                    theta,
+                    seq_len: art.seq_len,
+                    vocab: art.vocab,
+                },
+            );
+        }
+        let embed_exe = compile(&client, &registry.embedder.hlo_path)?;
+        let ew = load_weights(&registry.embedder.weights_path, registry.embedder.params)?;
+        let embed_theta = client
+            .buffer_from_host_buffer::<f32>(&ew, &[ew.len()], None)
+            .map_err(|e| anyhow!("upload embedder weights: {e:?}"))?;
+        Ok(Engine {
+            client,
+            lms,
+            embed_exe,
+            embed_theta,
+            embed_dim: registry.embedder.dim,
+            seq_len: registry.seq_len(),
+        })
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// Next-token logits for `tokens[..length]` under `variant`.
+    pub fn lm_logits(&self, variant: &str, tokens: &[i32], length: i32) -> Result<Vec<f32>> {
+        let lm = self
+            .lms
+            .get(variant)
+            .with_context(|| format!("unknown variant '{variant}'"))?;
+        anyhow::ensure!(
+            tokens.len() == lm.seq_len,
+            "token window is {} but artifact expects {}",
+            tokens.len(),
+            lm.seq_len
+        );
+        let t = self
+            .client
+            .buffer_from_host_buffer::<i32>(tokens, &[lm.seq_len], None)
+            .map_err(|e| anyhow!("upload tokens: {e:?}"))?;
+        let l = self
+            .client
+            .buffer_from_host_buffer::<i32>(&[length], &[], None)
+            .map_err(|e| anyhow!("upload length: {e:?}"))?;
+        let out = lm
+            .exe
+            .execute_b(&[&t, &l, &lm.theta])
+            .map_err(|e| anyhow!("execute lm_{variant}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch logits: {e:?}"))?;
+        let tuple = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let logits = tuple
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits to_vec: {e:?}"))?;
+        anyhow::ensure!(logits.len() == lm.vocab, "logit size {}", logits.len());
+        Ok(logits)
+    }
+
+    /// Text embedding via the embedder artifact.
+    pub fn embed_tokens(&self, tokens: &[i32], length: i32) -> Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == self.seq_len, "embed window size");
+        let t = self
+            .client
+            .buffer_from_host_buffer::<i32>(tokens, &[self.seq_len], None)
+            .map_err(|e| anyhow!("upload tokens: {e:?}"))?;
+        let l = self
+            .client
+            .buffer_from_host_buffer::<i32>(&[length], &[], None)
+            .map_err(|e| anyhow!("upload length: {e:?}"))?;
+        let out = self
+            .embed_exe
+            .execute_b(&[&t, &l, &self.embed_theta])
+            .map_err(|e| anyhow!("execute embedder: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch embedding: {e:?}"))?;
+        let tuple = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let emb = tuple
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("embedding to_vec: {e:?}"))?;
+        anyhow::ensure!(emb.len() == self.embed_dim, "embed dim {}", emb.len());
+        Ok(emb)
+    }
+}
+
+// ---------------------------------------------------------------- handle
+
+enum Rpc {
+    Lm {
+        variant: String,
+        tokens: Vec<i32>,
+        length: i32,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Embed {
+        tokens: Vec<i32>,
+        length: i32,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send + Sync` handle to the engine thread. (`mpsc::Sender`
+/// is `!Sync`, so it sits behind a short-lived Mutex; the lock covers only
+/// the enqueue, never the execution.)
+pub struct EngineHandle {
+    tx: std::sync::Mutex<mpsc::Sender<Rpc>>,
+    seq_len: usize,
+    embed_dim: usize,
+}
+
+impl Clone for EngineHandle {
+    fn clone(&self) -> Self {
+        EngineHandle {
+            tx: std::sync::Mutex::new(self.tx.lock().unwrap().clone()),
+            seq_len: self.seq_len,
+            embed_dim: self.embed_dim,
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread and load all artifacts from `registry`.
+    pub fn spawn(registry: Registry) -> Result<EngineHandle> {
+        let (tx, rx) = mpsc::channel::<Rpc>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
+        std::thread::Builder::new()
+            .name("llmbridge-engine".into())
+            .spawn(move || {
+                let engine = match Engine::load(&registry) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok((e.seq_len(), e.embed_dim)));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Rpc::Lm {
+                            variant,
+                            tokens,
+                            length,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.lm_logits(&variant, &tokens, length));
+                        }
+                        Rpc::Embed {
+                            tokens,
+                            length,
+                            reply,
+                        } => {
+                            let _ = reply.send(engine.embed_tokens(&tokens, length));
+                        }
+                        Rpc::Shutdown => break,
+                    }
+                }
+            })
+            .context("spawn engine thread")?;
+        let (seq_len, embed_dim) = ready_rx
+            .recv()
+            .context("engine thread died during load")??;
+        Ok(EngineHandle {
+            tx: std::sync::Mutex::new(tx),
+            seq_len,
+            embed_dim,
+        })
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn embed_dim(&self) -> usize {
+        self.embed_dim
+    }
+
+    pub fn lm_logits(&self, variant: &str, tokens: Vec<i32>, length: i32) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Rpc::Lm {
+                variant: variant.to_string(),
+                tokens,
+                length,
+                reply,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv_timeout(Duration::from_secs(120))
+            .map_err(|_| anyhow!("engine rpc timeout"))?
+    }
+
+    /// Embed arbitrary text (tokenize + window + execute).
+    pub fn embed_text(&self, text: &str) -> Result<Vec<f32>> {
+        let (tokens, length) = tokenizer::window(text, self.seq_len);
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Rpc::Embed {
+                tokens,
+                length,
+                reply,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv_timeout(Duration::from_secs(120))
+            .map_err(|_| anyhow!("engine rpc timeout"))?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.lock().unwrap().send(Rpc::Shutdown);
+    }
+}

@@ -1,0 +1,14 @@
+//! Runtime layer: the only place the proxy touches XLA/PJRT.
+//!
+//! * [`tokenizer`] — word-hash tokenizer shared bit-for-bit with the python
+//!   build path.
+//! * [`registry`] — locates AOT artifacts via `artifacts/manifest.json`.
+//! * [`engine`] — PJRT CPU client; compiles each `*.hlo.txt` once at load
+//!   and executes them on the request path via a dedicated engine thread.
+
+pub mod engine;
+pub mod registry;
+pub mod tokenizer;
+
+pub use engine::{Engine, EngineHandle};
+pub use registry::Registry;

@@ -1,0 +1,187 @@
+//! Artifact registry: parses `artifacts/manifest.json` written by
+//! `python/compile/aot.py` and locates the HLO-text + weight blobs for each
+//! model-pool variant and the embedder.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct LmArtifact {
+    pub variant: String,
+    pub d_model: usize,
+    pub layers: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub params: usize,
+    /// The Pallas-kernel lowering (the TPU-shaped path).
+    pub hlo_path: PathBuf,
+    /// The fused pure-jnp lowering XLA:CPU prefers (2.3x faster on the CPU
+    /// PJRT plugin; EXPERIMENTS.md §Perf). Absent in older artifact dirs.
+    pub hlo_fused_path: Option<PathBuf>,
+    pub weights_path: PathBuf,
+}
+
+impl LmArtifact {
+    /// Which lowering the engine should compile for serving:
+    /// the fused twin when present, unless `LLMBRIDGE_KERNEL_PATH=pallas`
+    /// forces the kernel path (used by tests to pin numerics equality).
+    pub fn serving_hlo(&self) -> &PathBuf {
+        let force_pallas = std::env::var("LLMBRIDGE_KERNEL_PATH")
+            .map(|v| v == "pallas")
+            .unwrap_or(false);
+        match (&self.hlo_fused_path, force_pallas) {
+            (Some(fused), false) => fused,
+            _ => &self.hlo_path,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EmbedArtifact {
+    pub dim: usize,
+    pub seq_len: usize,
+    pub params: usize,
+    pub hlo_path: PathBuf,
+    pub weights_path: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub models: Vec<LmArtifact>,
+    pub embedder: EmbedArtifact,
+}
+
+impl Registry {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {manifest_path:?} — run `make artifacts` first to AOT-compile the model pool"
+            )
+        })?;
+        let manifest = Json::parse(&text)?;
+
+        let mut models = Vec::new();
+        for entry in manifest
+            .req("models")?
+            .as_arr()
+            .context("manifest 'models' not an array")?
+        {
+            let hlo_fused_path = entry
+                .get("hlo_fused")
+                .and_then(|v| v.as_str())
+                .map(|f| dir.join(f))
+                .filter(|p| p.exists());
+            let art = LmArtifact {
+                variant: entry.str_of("variant")?,
+                d_model: entry.usize_of("d_model")?,
+                layers: entry.usize_of("layers")?,
+                seq_len: entry.usize_of("seq_len")?,
+                vocab: entry.usize_of("vocab")?,
+                params: entry.usize_of("params")?,
+                hlo_path: dir.join(entry.str_of("hlo")?),
+                hlo_fused_path,
+                weights_path: dir.join(entry.str_of("weights")?),
+            };
+            if !art.hlo_path.exists() {
+                bail!("missing artifact {:?}", art.hlo_path);
+            }
+            if !art.weights_path.exists() {
+                bail!("missing weights {:?}", art.weights_path);
+            }
+            models.push(art);
+        }
+        if models.is_empty() {
+            bail!("manifest has no models");
+        }
+
+        let e = manifest.req("embedder")?;
+        let embedder = EmbedArtifact {
+            dim: e.usize_of("dim")?,
+            seq_len: e.usize_of("seq_len")?,
+            params: e.usize_of("params")?,
+            hlo_path: dir.join(e.str_of("hlo")?),
+            weights_path: dir.join(e.str_of("weights")?),
+        };
+
+        Ok(Registry {
+            dir,
+            models,
+            embedder,
+        })
+    }
+
+    pub fn lm(&self, variant: &str) -> Result<&LmArtifact> {
+        self.models
+            .iter()
+            .find(|m| m.variant == variant)
+            .with_context(|| format!("unknown model variant '{variant}'"))
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.models[0].seq_len
+    }
+}
+
+/// Load a little-endian f32 weight blob.
+pub fn load_weights(path: &Path, expect: usize) -> Result<Vec<f32>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading weights {path:?}"))?;
+    if bytes.len() != expect * 4 {
+        bail!(
+            "weight blob {path:?} has {} bytes, expected {}",
+            bytes.len(),
+            expect * 4
+        );
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root; artifacts are built by `make`.
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_manifest() {
+        let reg = Registry::load(artifacts_dir()).expect("run `make artifacts`");
+        assert_eq!(reg.models.len(), 3);
+        assert!(reg.lm("nano").is_ok());
+        assert!(reg.lm("large").is_ok());
+        assert!(reg.lm("gpt-7").is_err());
+        assert_eq!(reg.embedder.dim, 64);
+        assert_eq!(reg.seq_len(), 128);
+    }
+
+    #[test]
+    fn fused_twin_selected_for_serving() {
+        let reg = Registry::load(artifacts_dir()).expect("run `make artifacts`");
+        let large = reg.lm("large").unwrap();
+        assert!(large.hlo_fused_path.is_some(), "aot emits the fused twin");
+        // Default: fused; the env override is exercised by integration
+        // tests (env vars are process-global, avoid racing here).
+        if std::env::var("LLMBRIDGE_KERNEL_PATH").is_err() {
+            assert_eq!(large.serving_hlo(), large.hlo_fused_path.as_ref().unwrap());
+        }
+    }
+
+    #[test]
+    fn weights_size_checked() {
+        let reg = Registry::load(artifacts_dir()).expect("run `make artifacts`");
+        let nano = reg.lm("nano").unwrap();
+        assert!(load_weights(&nano.weights_path, nano.params).is_ok());
+        assert!(load_weights(&nano.weights_path, nano.params + 1).is_err());
+    }
+}

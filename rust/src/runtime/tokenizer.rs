@@ -1,0 +1,164 @@
+//! Word-hash tokenizer — bit-for-bit mirror of `python/compile/model.py`.
+//!
+//! Lowercased ASCII-alphanumeric words, FNV-1a 64 hashed into ids
+//! `FIRST_WORD_ID..VOCAB`. Specials: PAD=0, BOS=1, EOS=2, UNK=3.
+//! `python/tests/test_tokenizer.py` and `rust/tests/tokenizer_vectors.rs`
+//! pin shared vectors so the two implementations cannot drift.
+
+use crate::util::fnv1a;
+
+pub const VOCAB: i64 = 4096;
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const UNK: i32 = 3;
+pub const FIRST_WORD_ID: i64 = 16;
+
+/// Split into lowercase ascii-alphanumeric words (mirror of model.words).
+pub fn words(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars() {
+        let lower = ch.to_ascii_lowercase();
+        if lower.is_ascii_alphanumeric() {
+            cur.push(lower);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Hash one (already lowercased) word to its vocabulary id.
+pub fn word_id(word: &str) -> i32 {
+    (FIRST_WORD_ID + (fnv1a(word.as_bytes()) % (VOCAB - FIRST_WORD_ID) as u64) as i64) as i32
+}
+
+/// Unbounded encoding: `[BOS] words.. [EOS]` — used for token *counting*
+/// (billing) and as the source for window packing.
+pub fn encode(text: &str) -> Vec<i32> {
+    let mut ids = vec![BOS];
+    ids.extend(words(text).iter().map(|w| word_id(w)));
+    ids.push(EOS);
+    ids
+}
+
+/// Billable token count for a text (matches the paper's per-token pricing;
+/// the bridge bills pre-truncation counts — see DESIGN.md §Substitutions).
+pub fn count_tokens(text: &str) -> u64 {
+    // BOS/EOS excluded from billing: count words only.
+    words(text).len() as u64
+}
+
+/// Pack into a fixed window of `seq_len`: keeps the *most recent* tokens
+/// when the text overflows (left truncation — a sliding context window),
+/// pads with PAD on the right. Returns (tokens, live_length).
+pub fn window(text: &str, seq_len: usize) -> (Vec<i32>, i32) {
+    let mut ids = vec![BOS];
+    let ws = words(text);
+    let budget = seq_len - 2;
+    let start = ws.len().saturating_sub(budget);
+    ids.extend(ws[start..].iter().map(|w| word_id(w)));
+    ids.push(EOS);
+    let live = ids.len();
+    ids.resize(seq_len, PAD);
+    (ids, live as i32)
+}
+
+/// Same as [`window`] but without the trailing EOS — the shape used as a
+/// generation prefix (the model continues after the prompt).
+pub fn gen_prefix(text: &str, seq_len: usize, reserve: usize) -> (Vec<i32>, i32) {
+    let mut ids = vec![BOS];
+    let ws = words(text);
+    let budget = seq_len.saturating_sub(reserve + 1);
+    let start = ws.len().saturating_sub(budget);
+    ids.extend(ws[start..].iter().map(|w| word_id(w)));
+    let live = ids.len();
+    ids.resize(seq_len, PAD);
+    (ids, live as i32)
+}
+
+/// Inverse mapping for generated ids. Word ids are one-way hashes, so the
+/// surface form is the synthetic `t<id>`; specials render as empty.
+pub fn detokenize(ids: &[i32]) -> String {
+    let mut out = String::new();
+    for &id in ids {
+        if id >= FIRST_WORD_ID as i32 {
+            if !out.is_empty() {
+                out.push(' ');
+            }
+            out.push_str(&format!("t{id}"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen_text};
+
+    #[test]
+    fn words_split_and_lowercase() {
+        assert_eq!(words("Tell me about Sigcomm!"), vec!["tell", "me", "about", "sigcomm"]);
+        assert_eq!(words(""), Vec::<String>::new());
+        assert_eq!(words("a-b_c"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn encode_has_bos_eos() {
+        let ids = encode("hello world");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+        assert_eq!(ids.len(), 4);
+    }
+
+    #[test]
+    fn window_left_truncates() {
+        let long: String = (0..500).map(|i| format!("w{i} ")).collect();
+        let (ids, live) = window(&long, 160);
+        assert_eq!(ids.len(), 160);
+        assert_eq!(live, 160);
+        // Most recent word must be present.
+        assert_eq!(ids[158], word_id("w499"));
+        assert_eq!(ids[159], EOS);
+    }
+
+    #[test]
+    fn gen_prefix_reserves_room() {
+        let (ids, live) = gen_prefix("hello world", 160, 40);
+        assert_eq!(ids.len(), 160);
+        assert_eq!(live, 3); // BOS + 2 words
+        assert!(live as usize <= 160 - 40);
+        let long: String = (0..500).map(|i| format!("w{i} ")).collect();
+        let (_, live) = gen_prefix(&long, 160, 40);
+        assert_eq!(live as usize, 160 - 40);
+    }
+
+    #[test]
+    fn prop_window_invariants() {
+        forall(
+            23,
+            100,
+            |r| gen_text(r, 300),
+            |text| {
+                let (ids, live) = window(text, 160);
+                ids.len() == 160
+                    && (2..=160).contains(&(live as usize))
+                    && ids[0] == BOS
+                    && ids[live as usize - 1] == EOS
+                    && ids[live as usize..].iter().all(|&t| t == PAD)
+                    && ids.iter().all(|&t| (0..VOCAB as i32).contains(&t))
+            },
+        );
+    }
+
+    #[test]
+    fn count_matches_words() {
+        assert_eq!(count_tokens("one two three"), 3);
+        assert_eq!(count_tokens(""), 0);
+    }
+}

@@ -1,0 +1,258 @@
+//! REST server — the interface the classroom deployment used (§5.2):
+//! a hand-rolled HTTP/1.1 server on `std::net` with a worker pool fed by
+//! the per-user FIFO queue substrate (so the paper's SQS ordering guarantee
+//! holds end to end).
+//!
+//! Routes:
+//! * `POST /v1/request`     — body: [`crate::api::Request`] JSON.
+//! * `POST /v1/regenerate`  — body: `{"request_id": "<hex>", "service_type": {...}?}`.
+//! * `GET  /v1/metrics`     — telemetry snapshot.
+//! * `GET  /health`         — liveness.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::api::{Request, ServiceType};
+use crate::coordinator::Bridge;
+use crate::queuing::FifoQueue;
+use crate::util::json::Json;
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Read one HTTP/1.1 request from the stream.
+pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header)?;
+        let header = header.trim();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = header.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    if content_length > 4 * 1024 * 1024 {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(HttpRequest {
+        method,
+        path,
+        body: String::from_utf8(body)?,
+    })
+}
+
+pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        _ => "Internal Server Error",
+    };
+    let msg = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(msg.as_bytes())?;
+    Ok(())
+}
+
+fn err_body(e: &anyhow::Error) -> String {
+    Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string()
+}
+
+/// Dispatch one parsed request against the bridge (pure, testable).
+pub fn route(bridge: &Bridge, req: &HttpRequest) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => (200, r#"{"status":"ok"}"#.to_string()),
+        ("GET", "/v1/metrics") => (200, bridge.telemetry().to_json().to_string()),
+        ("POST", "/v1/request") => match handle_request(bridge, &req.body) {
+            Ok(body) => (200, body),
+            Err(e) => {
+                let status = if format!("{e:#}").contains("quota") { 429 } else { 400 };
+                (status, err_body(&e))
+            }
+        },
+        ("POST", "/v1/regenerate") => match handle_regenerate(bridge, &req.body) {
+            Ok(body) => (200, body),
+            Err(e) => (400, err_body(&e)),
+        },
+        _ => (404, r#"{"error":"not found"}"#.to_string()),
+    }
+}
+
+fn handle_request(bridge: &Bridge, body: &str) -> Result<String> {
+    let j = Json::parse(body)?;
+    let req = Request::from_json(&j)?;
+    let resp = bridge.handle(req)?;
+    Ok(resp.to_json().to_string())
+}
+
+fn handle_regenerate(bridge: &Bridge, body: &str) -> Result<String> {
+    let j = Json::parse(body)?;
+    let id_hex = j.str_of("request_id")?;
+    let id = u64::from_str_radix(&id_hex, 16)
+        .map_err(|_| anyhow!("bad request_id '{id_hex}'"))?;
+    let st = j
+        .get("service_type")
+        .map(ServiceType::from_json)
+        .transpose()?;
+    let resp = bridge.regenerate(id, st)?;
+    Ok(resp.to_json().to_string())
+}
+
+/// Serve until `stop` flips. Each accepted connection is enqueued on the
+/// per-user FIFO (user extracted from the body when present) and handled
+/// by `workers` threads.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn start(bridge: Arc<Bridge>, bind: &str, workers: usize) -> Result<Server> {
+        let listener = TcpListener::bind(bind)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue: Arc<FifoQueue<u64>> = Arc::new(FifoQueue::new());
+        // Connection registry: id -> stream.
+        let conns: Arc<std::sync::Mutex<std::collections::HashMap<u64, (TcpStream, HttpRequest)>>> =
+            Arc::new(std::sync::Mutex::new(std::collections::HashMap::new()));
+        let mut join = Vec::new();
+
+        // Acceptor.
+        {
+            let stop = stop.clone();
+            let queue = queue.clone();
+            let conns = conns.clone();
+            join.push(std::thread::spawn(move || {
+                let mut next_id = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((mut stream, _)) => {
+                            stream.set_nonblocking(false).ok();
+                            match read_request(&mut stream) {
+                                Ok(req) => {
+                                    // FIFO group = user when parseable, else
+                                    // connection-unique (no ordering need).
+                                    let group = Json::parse(&req.body)
+                                        .ok()
+                                        .and_then(|j| j.str_of("user").ok())
+                                        .unwrap_or_else(|| format!("anon-{next_id}"));
+                                    next_id += 1;
+                                    conns.lock().unwrap().insert(next_id, (stream, req));
+                                    queue.push(&group, next_id);
+                                }
+                                Err(_) => {
+                                    let _ = write_response(
+                                        &mut stream,
+                                        400,
+                                        r#"{"error":"bad request"}"#,
+                                    );
+                                }
+                            }
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                queue.close();
+            }));
+        }
+
+        // Workers.
+        for _ in 0..workers.max(1) {
+            let queue = queue.clone();
+            let conns = conns.clone();
+            let bridge = bridge.clone();
+            join.push(std::thread::spawn(move || {
+                while let Some(msg) = queue.pop() {
+                    let entry = conns.lock().unwrap().remove(&msg.payload);
+                    if let Some((mut stream, req)) = entry {
+                        let (status, body) = route(&bridge, &req);
+                        let _ = write_response(&mut stream, status, &body);
+                    }
+                    queue.ack(msg.id, &msg.group);
+                }
+            }));
+        }
+
+        Ok(Server { addr, stop, join })
+    }
+
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.join {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn http_parse_roundtrip() {
+        // Loopback pair to test the parser without the full server.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            read_request(&mut s).unwrap()
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(
+            b"POST /v1/request HTTP/1.1\r\nContent-Length: 13\r\n\r\n{\"user\":\"u1\"}",
+        )
+        .unwrap();
+        let req = h.join().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/request");
+        assert_eq!(req.body, "{\"user\":\"u1\"}");
+    }
+
+    #[test]
+    fn write_response_shape() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            write_response(&mut s, 200, r#"{"x":1}"#).unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let mut buf = String::new();
+        c.read_to_string(&mut buf).unwrap();
+        h.join().unwrap();
+        assert!(buf.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(buf.ends_with(r#"{"x":1}"#));
+        assert!(buf.contains("Content-Length: 7"));
+    }
+}

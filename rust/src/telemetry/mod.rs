@@ -1,0 +1,265 @@
+//! Telemetry substrate: counters, latency histograms (p50/p99/p99.9), and a
+//! per-model cost ledger. Everything is lock-light (atomics or short
+//! mutexes) so the request hot path never blocks on metrics.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Log-bucketed latency histogram: 1us .. ~137s in 5% geometric steps.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 384;
+const HIST_BASE_US: f64 = 1.0;
+const HIST_GROWTH: f64 = 1.05;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: f64) -> usize {
+        if us <= HIST_BASE_US {
+            return 0;
+        }
+        let b = (us / HIST_BASE_US).ln() / HIST_GROWTH.ln();
+        (b as usize).min(HIST_BUCKETS - 1)
+    }
+
+    fn bucket_upper_us(idx: usize) -> f64 {
+        HIST_BASE_US * HIST_GROWTH.powi(idx as i32 + 1)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.buckets[Self::bucket_of(us as f64)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Quantile in [0,1]; returns the upper edge of the containing bucket.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((n as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(Self::bucket_upper_us(i) as u64);
+            }
+        }
+        self.max()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count() as f64)),
+            ("mean_us", Json::num(self.mean().as_micros() as f64)),
+            ("p50_us", Json::num(self.quantile(0.50).as_micros() as f64)),
+            ("p99_us", Json::num(self.quantile(0.99).as_micros() as f64)),
+            ("p999_us", Json::num(self.quantile(0.999).as_micros() as f64)),
+            ("max_us", Json::num(self.max().as_micros() as f64)),
+        ])
+    }
+}
+
+/// Named monotonically-increasing counters.
+#[derive(Default)]
+pub struct Counters {
+    inner: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Counters {
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, by: u64) {
+        let mut m = self.inner.lock().unwrap();
+        *m.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let m = self.inner.lock().unwrap();
+        Json::Obj(
+            m.iter()
+                .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                .collect(),
+        )
+    }
+}
+
+/// Cost ledger: micro-dollars per model, split input/output tokens.
+#[derive(Default)]
+pub struct CostLedger {
+    inner: Mutex<BTreeMap<String, ModelCost>>,
+}
+
+#[derive(Default, Clone, Debug)]
+pub struct ModelCost {
+    pub calls: u64,
+    pub input_tokens: u64,
+    pub output_tokens: u64,
+    pub cost_usd: f64,
+}
+
+impl CostLedger {
+    pub fn record(&self, model: &str, input_tokens: u64, output_tokens: u64, cost_usd: f64) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(model.to_string()).or_default();
+        e.calls += 1;
+        e.input_tokens += input_tokens;
+        e.output_tokens += output_tokens;
+        e.cost_usd += cost_usd;
+    }
+
+    pub fn total_usd(&self) -> f64 {
+        self.inner.lock().unwrap().values().map(|e| e.cost_usd).sum()
+    }
+
+    pub fn total_tokens(&self) -> (u64, u64) {
+        let m = self.inner.lock().unwrap();
+        (
+            m.values().map(|e| e.input_tokens).sum(),
+            m.values().map(|e| e.output_tokens).sum(),
+        )
+    }
+
+    pub fn per_model(&self) -> BTreeMap<String, ModelCost> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let m = self.inner.lock().unwrap();
+        Json::Obj(
+            m.iter()
+                .map(|(k, v)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("calls", Json::num(v.calls as f64)),
+                            ("input_tokens", Json::num(v.input_tokens as f64)),
+                            ("output_tokens", Json::num(v.output_tokens as f64)),
+                            ("cost_usd", Json::Num(v.cost_usd)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Everything the proxy records, shared via Arc.
+#[derive(Default)]
+pub struct Telemetry {
+    pub counters: Counters,
+    pub request_latency: Histogram,
+    pub llm_latency_small: Histogram,
+    pub llm_latency_large: Histogram,
+    pub costs: CostLedger,
+}
+
+impl Telemetry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("counters", self.counters.to_json()),
+            ("request_latency", self.request_latency.to_json()),
+            ("llm_latency_small", self.llm_latency_small.to_json()),
+            ("llm_latency_large", self.llm_latency_large.to_json()),
+            ("costs", self.costs.to_json()),
+            ("total_cost_usd", Json::Num(self.costs.total_usd())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i * 10));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        let p999 = h.quantile(0.999);
+        assert!(p50 <= p99 && p99 <= p999);
+        // p50 of 10..10000us uniform should be near 5000us (log buckets: ±5%).
+        let p50us = p50.as_micros() as f64;
+        assert!((4500.0..5800.0).contains(&p50us), "p50={p50us}");
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn cost_ledger_accumulates() {
+        let c = CostLedger::default();
+        c.record("gpt-4", 1000, 100, 0.036);
+        c.record("gpt-4", 500, 50, 0.018);
+        c.record("gpt-3.5-turbo", 1000, 100, 0.00065);
+        let per = c.per_model();
+        assert_eq!(per["gpt-4"].calls, 2);
+        assert_eq!(per["gpt-4"].input_tokens, 1500);
+        assert!((c.total_usd() - 0.05465).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counters() {
+        let c = Counters::default();
+        c.incr("cache_hit");
+        c.add("cache_hit", 2);
+        assert_eq!(c.get("cache_hit"), 3);
+        assert_eq!(c.get("missing"), 0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Criterion-style micro-benchmark harness substrate.
+//!
+//! Used by the `rust/benches/*` targets (all `harness = false`): warmup,
+//! timed iterations, and a stats line with mean / p50 / p99. Honors
+//! `LLMBRIDGE_BENCH_FAST=1` to shrink iteration counts in CI.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} {:>8} iters  mean {:>12?}  p50 {:>12?}  p99 {:>12?}  min {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p99, self.min
+        );
+    }
+}
+
+pub fn fast_mode() -> bool {
+    std::env::var("LLMBRIDGE_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    let iters = if fast_mode() { iters.div_ceil(10).max(3) } else { iters };
+    let warmup = if fast_mode() { warmup.min(1) } else { warmup };
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[iters / 2],
+        p99: samples[(iters * 99 / 100).min(iters - 1)],
+        min: samples[0],
+        max: samples[iters - 1],
+    };
+    res.print();
+    res
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept here so benches read uniformly).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop", 1, 16, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(r.iters, if fast_mode() { 3.max(16_usize.div_ceil(10)) } else { 16 });
+        assert!(r.p50 <= r.p99);
+        assert!(r.min <= r.p50);
+    }
+}

@@ -1,0 +1,48 @@
+//! Utility substrates built from scratch (only `xla` + `anyhow` are
+//! available offline): JSON, deterministic PRNG, CLI parsing, a
+//! criterion-style bench harness, and a property-testing helper.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// FNV-1a 64-bit hash — the same function the tokenizer uses for word ids
+/// and the simulation layer uses for deterministic per-event seeds.
+pub fn fnv1a(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Combine several hashable items into one deterministic seed.
+pub fn seed_of(parts: &[&str]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for p in parts {
+        h ^= fnv1a(p.as_bytes());
+        h = h.wrapping_mul(0x0000_0100_0000_01B3).rotate_left(17);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_canonical_vectors() {
+        assert_eq!(fnv1a(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a(b"foobar"), 0x8594_4171_F739_67E8);
+    }
+
+    #[test]
+    fn seed_of_order_sensitive() {
+        assert_ne!(seed_of(&["a", "b"]), seed_of(&["b", "a"]));
+        assert_eq!(seed_of(&["a", "b"]), seed_of(&["a", "b"]));
+    }
+}

@@ -1,0 +1,77 @@
+//! Property-testing substrate (proptest is not available offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` for each; on failure it panics with the failing case's
+//! seed so the exact input is reproducible with `forall_one`.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` random inputs produced by `gen`.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed on case {case} (seed {case_seed:#x}): {input:?}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn forall_one<T: std::fmt::Debug>(
+    case_seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(case_seed);
+    let input = gen(&mut rng);
+    assert!(prop(&input), "property failed: {input:?}");
+}
+
+/// Random ASCII word of length 1..=max_len.
+pub fn gen_word(rng: &mut Rng, max_len: usize) -> String {
+    let len = 1 + rng.below(max_len.max(1));
+    (0..len)
+        .map(|_| (b'a' + rng.below(26) as u8) as char)
+        .collect()
+}
+
+/// Random sentence of 1..=max_words words.
+pub fn gen_text(rng: &mut Rng, max_words: usize) -> String {
+    let n = 1 + rng.below(max_words.max(1));
+    (0..n)
+        .map(|_| gen_word(rng, 9))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(1, 50, |r| r.below(100), |&n| n < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(2, 50, |r| r.below(100), |&n| n < 50);
+    }
+
+    #[test]
+    fn gen_text_nonempty() {
+        forall(3, 50, |r| gen_text(r, 12), |t| !t.is_empty());
+    }
+}

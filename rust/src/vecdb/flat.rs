@@ -1,0 +1,272 @@
+//! Exact brute-force vector index over contiguous storage.
+//!
+//! Vectors live in one `Vec<f32>` (id-parallel), so a full scan is a single
+//! sequential sweep — the fastest exact option at the corpus sizes the
+//! semantic cache sees (10³–10⁵ entries), and the baseline the IVF index is
+//! benchmarked against.
+
+use anyhow::{bail, Result};
+
+use super::{push_topk, Hit, Metric, VectorIndex};
+
+#[derive(Debug)]
+pub struct FlatIndex {
+    dim: usize,
+    metric: Metric,
+    ids: Vec<u64>,
+    data: Vec<f32>,
+    /// Cached inverse norms for cosine (recomputed on insert).
+    inv_norms: Vec<f32>,
+}
+
+impl FlatIndex {
+    pub fn new(dim: usize, metric: Metric) -> FlatIndex {
+        FlatIndex {
+            dim,
+            metric,
+            ids: Vec::new(),
+            data: Vec::new(),
+            inv_norms: Vec::new(),
+        }
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Binary snapshot: [dim u32][metric u8][count u64][ids..][data..].
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut out: Vec<u8> = Vec::with_capacity(16 + self.data.len() * 4);
+        out.extend((self.dim as u32).to_le_bytes());
+        out.push(match self.metric {
+            Metric::Cosine => 0,
+            Metric::Dot => 1,
+            Metric::L2 => 2,
+        });
+        out.extend((self.ids.len() as u64).to_le_bytes());
+        for id in &self.ids {
+            out.extend(id.to_le_bytes());
+        }
+        for v in &self.data {
+            out.extend(v.to_le_bytes());
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<FlatIndex> {
+        let bytes = std::fs::read(path)?;
+        if bytes.len() < 13 {
+            bail!("truncated vecdb snapshot");
+        }
+        let dim = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
+        let metric = match bytes[4] {
+            0 => Metric::Cosine,
+            1 => Metric::Dot,
+            2 => Metric::L2,
+            m => bail!("bad metric tag {m}"),
+        };
+        let count = u64::from_le_bytes(bytes[5..13].try_into()?) as usize;
+        let mut idx = FlatIndex::new(dim, metric);
+        let mut off = 13;
+        let mut ids = Vec::with_capacity(count);
+        for _ in 0..count {
+            ids.push(u64::from_le_bytes(bytes[off..off + 8].try_into()?));
+            off += 8;
+        }
+        for i in 0..count {
+            let mut v = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                v.push(f32::from_le_bytes(bytes[off..off + 4].try_into()?));
+                off += 4;
+            }
+            idx.insert(ids[i], &v)?;
+        }
+        Ok(idx)
+    }
+}
+
+impl VectorIndex for FlatIndex {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn insert(&mut self, id: u64, vector: &[f32]) -> Result<()> {
+        if vector.len() != self.dim {
+            bail!("dim mismatch: got {}, want {}", vector.len(), self.dim);
+        }
+        self.ids.push(id);
+        self.data.extend_from_slice(vector);
+        let n = super::dot(vector, vector).sqrt();
+        self.inv_norms.push(if n == 0.0 { 0.0 } else { 1.0 / n });
+        Ok(())
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        if let Some(i) = self.ids.iter().position(|&x| x == id) {
+            let last = self.ids.len() - 1;
+            self.ids.swap(i, last);
+            self.ids.pop();
+            self.inv_norms.swap(i, last);
+            self.inv_norms.pop();
+            // swap_remove the row.
+            if i != last {
+                let (head, tail) = self.data.split_at_mut(last * self.dim);
+                head[i * self.dim..(i + 1) * self.dim]
+                    .copy_from_slice(&tail[..self.dim]);
+            }
+            self.data.truncate(last * self.dim);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn search(&self, query: &[f32], k: usize, min_score: f32) -> Vec<Hit> {
+        if k == 0 || self.ids.is_empty() {
+            return Vec::new();
+        }
+        let mut top: Vec<Hit> = Vec::with_capacity(k + 1);
+        match self.metric {
+            Metric::Cosine => {
+                let qn = super::dot(query, query).sqrt();
+                let q_inv = if qn == 0.0 { 0.0 } else { 1.0 / qn };
+                for i in 0..self.ids.len() {
+                    let s = super::dot(query, self.row(i)) * q_inv * self.inv_norms[i];
+                    if s >= min_score {
+                        push_topk(&mut top, Hit { id: self.ids[i], score: s }, k);
+                    }
+                }
+            }
+            _ => {
+                for i in 0..self.ids.len() {
+                    let s = self.metric.score(query, self.row(i));
+                    if s >= min_score {
+                        push_topk(&mut top, Hit { id: self.ids[i], score: s }, k);
+                    }
+                }
+            }
+        }
+        top
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(r: &mut Rng, dim: usize) -> Vec<f32> {
+        (0..dim).map(|_| r.normal() as f32).collect()
+    }
+
+    #[test]
+    fn exact_nearest_neighbor() {
+        let mut idx = FlatIndex::new(4, Metric::Cosine);
+        idx.insert(1, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        idx.insert(2, &[0.0, 1.0, 0.0, 0.0]).unwrap();
+        idx.insert(3, &[0.7, 0.7, 0.0, 0.0]).unwrap();
+        let hits = idx.search(&[1.0, 0.1, 0.0, 0.0], 2, 0.0);
+        assert_eq!(hits[0].id, 1);
+        assert_eq!(hits[1].id, 3);
+    }
+
+    #[test]
+    fn threshold_filters() {
+        let mut idx = FlatIndex::new(2, Metric::Cosine);
+        idx.insert(1, &[1.0, 0.0]).unwrap();
+        idx.insert(2, &[0.0, 1.0]).unwrap();
+        let hits = idx.search(&[1.0, 0.0], 10, 0.9);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].id, 1);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let mut idx = FlatIndex::new(4, Metric::Dot);
+        assert!(idx.insert(1, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn remove_swaps_correctly() {
+        let mut idx = FlatIndex::new(2, Metric::Dot);
+        for i in 0..5u64 {
+            idx.insert(i, &[i as f32, 0.0]).unwrap();
+        }
+        assert!(idx.remove(2));
+        assert!(!idx.remove(2));
+        assert_eq!(idx.len(), 4);
+        let hits = idx.search(&[1.0, 0.0], 10, f32::MIN);
+        assert!(hits.iter().all(|h| h.id != 2));
+        assert_eq!(hits.len(), 4);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut r = Rng::new(1);
+        let mut idx = FlatIndex::new(8, Metric::Cosine);
+        for i in 0..50u64 {
+            idx.insert(i, &rand_vec(&mut r, 8)).unwrap();
+        }
+        let dir = std::env::temp_dir().join("llmbridge_vecdb_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flat.bin");
+        idx.save(&path).unwrap();
+        let back = FlatIndex::load(&path).unwrap();
+        assert_eq!(back.len(), 50);
+        let q = rand_vec(&mut r, 8);
+        let a = idx.search(&q, 5, f32::MIN);
+        let b = back.search(&q, 5, f32::MIN);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert!((x.score - y.score).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn prop_topk_matches_full_sort() {
+        forall(
+            17,
+            30,
+            |r| {
+                let n = 1 + r.below(200);
+                let mut idx = FlatIndex::new(8, Metric::Cosine);
+                let mut vecs = Vec::new();
+                for i in 0..n {
+                    let v = rand_vec(r, 8);
+                    idx.insert(i as u64, &v).unwrap();
+                    vecs.push(v);
+                }
+                let q = rand_vec(r, 8);
+                (idx, vecs, q)
+            },
+            |(idx, vecs, q)| {
+                let k = 5;
+                let hits = idx.search(q, k, f32::MIN);
+                // Oracle: full sort by score.
+                let mut all: Vec<(u64, f32)> = vecs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, v)| (i as u64, Metric::Cosine.score(q, v)))
+                    .collect();
+                all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                all.truncate(k);
+                hits.len() == all.len().min(k)
+                    && hits
+                        .iter()
+                        .zip(&all)
+                        .all(|(h, (id, s))| h.id == *id && (h.score - s).abs() < 1e-5)
+            },
+        );
+    }
+}

@@ -1,0 +1,250 @@
+//! IVF (inverted-file) approximate index: k-means coarse quantizer, each
+//! vector assigned to its nearest centroid's posting list; queries probe the
+//! `nprobe` nearest cells. Trades a small recall loss for sub-linear scans —
+//! used in the perf pass when the cache corpus grows large.
+
+use anyhow::{bail, Result};
+
+use super::{push_topk, Hit, Metric, VectorIndex};
+use crate::util::rng::Rng;
+
+pub struct IvfIndex {
+    dim: usize,
+    metric: Metric,
+    nlist: usize,
+    pub nprobe: usize,
+    centroids: Vec<f32>,          // nlist x dim, empty until trained
+    lists: Vec<Vec<(u64, Vec<f32>)>>,
+    pending: Vec<(u64, Vec<f32>)>, // inserted before training
+    trained: bool,
+}
+
+impl IvfIndex {
+    pub fn new(dim: usize, metric: Metric, nlist: usize, nprobe: usize) -> IvfIndex {
+        IvfIndex {
+            dim,
+            metric,
+            nlist: nlist.max(1),
+            nprobe: nprobe.max(1),
+            centroids: Vec::new(),
+            lists: Vec::new(),
+            pending: Vec::new(),
+            trained: false,
+        }
+    }
+
+    pub fn is_trained(&self) -> bool {
+        self.trained
+    }
+
+    fn centroid(&self, c: usize) -> &[f32] {
+        &self.centroids[c * self.dim..(c + 1) * self.dim]
+    }
+
+    fn nearest_cells(&self, v: &[f32], n: usize) -> Vec<usize> {
+        let mut scored: Vec<(usize, f32)> = (0..self.nlist)
+            .map(|c| (c, self.metric.score(v, self.centroid(c))))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.truncate(n);
+        scored.into_iter().map(|(c, _)| c).collect()
+    }
+
+    /// Train the coarse quantizer with Lloyd's k-means (fixed iterations)
+    /// over all pending vectors, then assign them to cells.
+    pub fn train(&mut self, seed: u64, iters: usize) -> Result<()> {
+        if self.pending.is_empty() {
+            bail!("no vectors to train on");
+        }
+        let n = self.pending.len();
+        let k = self.nlist.min(n);
+        self.nlist = k;
+        let mut rng = Rng::new(seed);
+        // k-means++ style seeding: random distinct picks.
+        let picks = rng.sample_indices(n, k);
+        self.centroids = picks
+            .iter()
+            .flat_map(|&i| self.pending[i].1.iter().copied())
+            .collect();
+        let mut assign = vec![0usize; n];
+        for _ in 0..iters {
+            for (i, (_, v)) in self.pending.iter().enumerate() {
+                assign[i] = self.nearest_cells(v, 1)[0];
+            }
+            let mut sums = vec![0.0f64; k * self.dim];
+            let mut counts = vec![0usize; k];
+            for (i, (_, v)) in self.pending.iter().enumerate() {
+                let c = assign[i];
+                counts[c] += 1;
+                for (j, x) in v.iter().enumerate() {
+                    sums[c * self.dim + j] += *x as f64;
+                }
+            }
+            for c in 0..k {
+                if counts[c] > 0 {
+                    for j in 0..self.dim {
+                        self.centroids[c * self.dim + j] =
+                            (sums[c * self.dim + j] / counts[c] as f64) as f32;
+                    }
+                }
+            }
+        }
+        self.lists = vec![Vec::new(); k];
+        let pending = std::mem::take(&mut self.pending);
+        self.trained = true;
+        for (id, v) in pending {
+            let c = self.nearest_cells(&v, 1)[0];
+            self.lists[c].push((id, v));
+        }
+        Ok(())
+    }
+}
+
+impl VectorIndex for IvfIndex {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.pending.len() + self.lists.iter().map(|l| l.len()).sum::<usize>()
+    }
+
+    fn insert(&mut self, id: u64, vector: &[f32]) -> Result<()> {
+        if vector.len() != self.dim {
+            bail!("dim mismatch: got {}, want {}", vector.len(), self.dim);
+        }
+        if self.trained {
+            let c = self.nearest_cells(vector, 1)[0];
+            self.lists[c].push((id, vector.to_vec()));
+        } else {
+            self.pending.push((id, vector.to_vec()));
+        }
+        Ok(())
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        if let Some(i) = self.pending.iter().position(|(x, _)| *x == id) {
+            self.pending.swap_remove(i);
+            return true;
+        }
+        for list in &mut self.lists {
+            if let Some(i) = list.iter().position(|(x, _)| *x == id) {
+                list.swap_remove(i);
+                return true;
+            }
+        }
+        false
+    }
+
+    fn search(&self, query: &[f32], k: usize, min_score: f32) -> Vec<Hit> {
+        let mut top: Vec<Hit> = Vec::with_capacity(k + 1);
+        if !self.trained {
+            // Fallback: exact scan over pending.
+            for (id, v) in &self.pending {
+                let s = self.metric.score(query, v);
+                if s >= min_score {
+                    push_topk(&mut top, Hit { id: *id, score: s }, k);
+                }
+            }
+            return top;
+        }
+        for c in self.nearest_cells(query, self.nprobe) {
+            for (id, v) in &self.lists[c] {
+                let s = self.metric.score(query, v);
+                if s >= min_score {
+                    push_topk(&mut top, Hit { id: *id, score: s }, k);
+                }
+            }
+        }
+        top
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vecdb::flat::FlatIndex;
+
+    fn clustered_data(seed: u64, n: usize, dim: usize) -> Vec<(u64, Vec<f32>)> {
+        // Points around 8 well-separated centers.
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32 * 10.0).collect())
+            .collect();
+        (0..n)
+            .map(|i| {
+                let c = rng.choice(&centers).clone();
+                let v = c
+                    .iter()
+                    .map(|x| x + rng.normal() as f32 * 0.5)
+                    .collect();
+                (i as u64, v)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn untrained_falls_back_to_exact() {
+        let mut ivf = IvfIndex::new(4, Metric::Cosine, 4, 1);
+        ivf.insert(1, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+        ivf.insert(2, &[0.0, 1.0, 0.0, 0.0]).unwrap();
+        let hits = ivf.search(&[1.0, 0.0, 0.0, 0.0], 1, 0.0);
+        assert_eq!(hits[0].id, 1);
+    }
+
+    #[test]
+    fn trained_recall_vs_flat() {
+        let data = clustered_data(3, 400, 16);
+        let mut ivf = IvfIndex::new(16, Metric::L2, 8, 3);
+        let mut flat = FlatIndex::new(16, Metric::L2);
+        for (id, v) in &data {
+            ivf.insert(*id, v).unwrap();
+            flat.insert(*id, v).unwrap();
+        }
+        ivf.train(7, 5).unwrap();
+        assert!(ivf.is_trained());
+        assert_eq!(ivf.len(), 400);
+        // Recall@5 over 20 queries should be high on clustered data.
+        let mut rng = Rng::new(11);
+        let mut hits_found = 0;
+        let mut total = 0;
+        for _ in 0..20 {
+            let (_, q) = rng.choice(&data).clone();
+            let truth: Vec<u64> =
+                flat.search(&q, 5, f32::MIN).iter().map(|h| h.id).collect();
+            let got: Vec<u64> =
+                ivf.search(&q, 5, f32::MIN).iter().map(|h| h.id).collect();
+            total += truth.len();
+            hits_found += truth.iter().filter(|t| got.contains(t)).count();
+        }
+        let recall = hits_found as f64 / total as f64;
+        assert!(recall > 0.8, "recall={recall}");
+    }
+
+    #[test]
+    fn insert_after_training_lands_in_cell() {
+        let data = clustered_data(5, 100, 8);
+        let mut ivf = IvfIndex::new(8, Metric::L2, 4, 4);
+        for (id, v) in &data {
+            ivf.insert(*id, v).unwrap();
+        }
+        ivf.train(1, 4).unwrap();
+        ivf.insert(9999, &data[0].1.clone()).unwrap();
+        let hits = ivf.search(&data[0].1, 2, f32::MIN);
+        assert!(hits.iter().any(|h| h.id == 9999));
+    }
+
+    #[test]
+    fn remove_works_pre_and_post_training() {
+        let data = clustered_data(9, 50, 8);
+        let mut ivf = IvfIndex::new(8, Metric::L2, 4, 4);
+        for (id, v) in &data {
+            ivf.insert(*id, v).unwrap();
+        }
+        assert!(ivf.remove(10));
+        ivf.train(1, 3).unwrap();
+        assert!(ivf.remove(20));
+        assert!(!ivf.remove(20));
+        assert_eq!(ivf.len(), 48);
+    }
+}

@@ -1,0 +1,138 @@
+//! Vector-database substrate — stand-in for the paper's RDS + vector-search
+//! extension (§4). Stores fixed-dimension f32 vectors with u64 ids and
+//! answers top-k similarity queries with an optional score threshold.
+//!
+//! Two index implementations behind [`VectorIndex`]:
+//! * [`flat::FlatIndex`] — contiguous brute-force scan (exact).
+//! * [`ivf::IvfIndex`] — inverted-file index (k-means coarse quantizer with
+//!   `nprobe` cell search), for the perf pass and the ablation bench.
+
+pub mod flat;
+pub mod ivf;
+
+use anyhow::Result;
+
+/// Similarity metric. Scores are "higher is better" for all metrics
+/// (L2 is negated distance).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Cosine,
+    Dot,
+    L2,
+}
+
+impl Metric {
+    #[inline]
+    pub fn score(&self, a: &[f32], b: &[f32]) -> f32 {
+        match self {
+            Metric::Dot => dot(a, b),
+            Metric::Cosine => {
+                let na = dot(a, a).sqrt();
+                let nb = dot(b, b).sqrt();
+                if na == 0.0 || nb == 0.0 {
+                    0.0
+                } else {
+                    dot(a, b) / (na * nb)
+                }
+            }
+            Metric::L2 => {
+                let mut s = 0.0;
+                for i in 0..a.len() {
+                    let d = a[i] - b[i];
+                    s += d * d;
+                }
+                -s.sqrt()
+            }
+        }
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // Unrolled by 8: the vecdb scan is an L3 hot path (see benches/hotpath).
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let i = c * 8;
+        for j in 0..8 {
+            acc[j] += a[i + j] * b[i + j];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// A search hit: id + similarity score (higher is better).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    pub id: u64,
+    pub score: f32,
+}
+
+pub trait VectorIndex: Send {
+    fn dim(&self) -> usize;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn insert(&mut self, id: u64, vector: &[f32]) -> Result<()>;
+    fn remove(&mut self, id: u64) -> bool;
+    /// Top-k by score, filtered to score >= min_score.
+    fn search(&self, query: &[f32], k: usize, min_score: f32) -> Vec<Hit>;
+}
+
+/// Maintain a bounded top-k set (small k: insertion into a sorted vec).
+pub(crate) fn push_topk(heap: &mut Vec<Hit>, hit: Hit, k: usize) {
+    if heap.len() < k {
+        let pos = heap.partition_point(|h| h.score > hit.score);
+        heap.insert(pos, hit);
+    } else if let Some(last) = heap.last() {
+        if hit.score > last.score {
+            heap.pop();
+            let pos = heap.partition_point(|h| h.score > hit.score);
+            heap.insert(pos, hit);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_scores() {
+        let a = [1.0, 0.0];
+        let b = [0.0, 1.0];
+        let c = [2.0, 0.0];
+        assert!((Metric::Cosine.score(&a, &c) - 1.0).abs() < 1e-6);
+        assert!(Metric::Cosine.score(&a, &b).abs() < 1e-6);
+        assert_eq!(Metric::Dot.score(&a, &c), 2.0);
+        assert!((Metric::L2.score(&a, &c) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(5);
+        for len in [0, 1, 7, 8, 9, 63, 64, 65] {
+            let a: Vec<f32> = (0..len).map(|_| r.normal() as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| r.normal() as f32).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-3, "len={len}");
+        }
+    }
+
+    #[test]
+    fn topk_maintains_order_and_bound() {
+        let mut heap = Vec::new();
+        for (i, s) in [0.1f32, 0.9, 0.5, 0.7, 0.3].iter().enumerate() {
+            push_topk(&mut heap, Hit { id: i as u64, score: *s }, 3);
+        }
+        let scores: Vec<f32> = heap.iter().map(|h| h.score).collect();
+        assert_eq!(scores, vec![0.9, 0.7, 0.5]);
+    }
+}

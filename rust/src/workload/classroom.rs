@@ -1,0 +1,187 @@
+//! Classroom workload generator (§5.2): ~60 students across three courses,
+//! 75K requests over 145 days (~500/day), model mix 73% GPT-4o-mini, 13%
+//! Claude Haiku, 13% Llama-3, 1% Phi-3, with per-student token quotas.
+//!
+//! Also reproduces the §5.2 observation that prompts sent to Phi-3 are
+//! structured/imperative while 4o-mini/Haiku prompts are conversational
+//! (the chi-squared prompt-style association).
+
+use crate::models::pricing::ModelId;
+use crate::models::quality::QueryTraits;
+use crate::util::rng::Rng;
+use crate::util::seed_of;
+
+#[derive(Clone, Debug)]
+pub struct ClassroomRequest {
+    pub student: String,
+    pub course: &'static str,
+    pub day: u32,
+    pub model: ModelId,
+    pub prompt: String,
+    pub traits: QueryTraits,
+    /// Style tag for the prompt-style association analysis.
+    pub style: PromptStyle,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PromptStyle {
+    /// Rule-based, imperative, command grammar (Phi-3-bound prompts).
+    Imperative,
+    /// Softer, collaborative phrasing (4o-mini / Haiku-bound prompts).
+    Conversational,
+}
+
+pub const COURSES: &[&str] = &["web-accessibility", "multi-agent-systems", "social-good-chatbots"];
+
+const IMPERATIVE_TEMPLATES: &[&str] = &[
+    "extract all dates from the following text and return json",
+    "classify this message as positive or negative only",
+    "list exactly three bullet points about {t}",
+    "output the parsed schema for the form fields",
+    "return yes or no is this page accessible",
+];
+
+const CONVERSATIONAL_TEMPLATES: &[&str] = &[
+    "could you help me make this paragraph about {t} friendlier",
+    "i am building a chatbot for {t} what would you suggest",
+    "can we brainstorm ideas to improve {t} together",
+    "please review my plan for the {t} project when you can",
+    "what do you think would make {t} more useful for users",
+];
+
+const PROJECT_TOPICS: &[&str] = &[
+    "screen readers",
+    "campus navigation",
+    "food bank matching",
+    "reasoning agents",
+    "course faq bots",
+    "volunteer scheduling",
+];
+
+/// Sample the §5.2 model mix: 73/13/13/1.
+pub fn sample_model(rng: &mut Rng) -> ModelId {
+    let x = rng.f64();
+    if x < 0.73 {
+        ModelId::Gpt4oMini
+    } else if x < 0.86 {
+        ModelId::Claude3Haiku
+    } else if x < 0.99 {
+        ModelId::Llama38b
+    } else {
+        ModelId::Phi3Mini
+    }
+}
+
+/// Generate `n` classroom requests across `students` students and `days`
+/// days. Deterministic in seed.
+pub fn generate(seed: u64, students: usize, days: u32, n: usize) -> Vec<ClassroomRequest> {
+    let mut rng = Rng::new(seed ^ seed_of(&["classroom"]));
+    (0..n)
+        .map(|i| {
+            let s = rng.below(students);
+            let course = *rng.choice(COURSES);
+            let model = sample_model(&mut rng);
+            // Prompt style correlates with the target model (§5.2): Phi-3
+            // gets imperative prompts; larger models conversational ones,
+            // with some mixing.
+            let imperative = match model {
+                ModelId::Phi3Mini => rng.chance(0.85),
+                ModelId::Llama38b => rng.chance(0.45),
+                _ => rng.chance(0.20),
+            };
+            let topic = *rng.choice(PROJECT_TOPICS);
+            let (style, template) = if imperative {
+                (PromptStyle::Imperative, *rng.choice(IMPERATIVE_TEMPLATES))
+            } else {
+                (
+                    PromptStyle::Conversational,
+                    *rng.choice(CONVERSATIONAL_TEMPLATES),
+                )
+            };
+            let prompt = template.replace("{t}", topic);
+            ClassroomRequest {
+                student: format!("student-{s:02}"),
+                course,
+                day: rng.below(days as usize) as u32,
+                model,
+                traits: QueryTraits {
+                    id: format!("class-{i:05}"),
+                    difficulty: rng.normal_ms(0.4, 0.15).clamp(0.05, 0.9),
+                    factual: rng.chance(0.2),
+                    requires_context: false,
+                },
+                prompt,
+                style,
+            }
+        })
+        .collect()
+}
+
+/// Per-student quota (§5.2 usage-based service type).
+#[derive(Clone, Copy, Debug)]
+pub struct Quota {
+    pub max_requests: u64,
+    pub max_input_tokens: u64,
+    pub max_output_tokens: u64,
+}
+
+impl Default for Quota {
+    fn default() -> Self {
+        Quota {
+            max_requests: 2_000,
+            max_input_tokens: 400_000,
+            max_output_tokens: 100_000,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_mix_matches_paper() {
+        let reqs = generate(1, 60, 145, 8000);
+        let frac = |m: ModelId| {
+            reqs.iter().filter(|r| r.model == m).count() as f64 / reqs.len() as f64
+        };
+        assert!((0.70..=0.76).contains(&frac(ModelId::Gpt4oMini)));
+        assert!((0.10..=0.16).contains(&frac(ModelId::Claude3Haiku)));
+        assert!((0.10..=0.16).contains(&frac(ModelId::Llama38b)));
+        assert!(frac(ModelId::Phi3Mini) <= 0.03);
+    }
+
+    #[test]
+    fn prompt_style_association() {
+        // The §5.2 chi-squared association: Phi-3 prompts skew imperative.
+        let reqs = generate(2, 60, 145, 20000);
+        let imp_frac = |m: ModelId| {
+            let of_model: Vec<_> = reqs.iter().filter(|r| r.model == m).collect();
+            of_model
+                .iter()
+                .filter(|r| r.style == PromptStyle::Imperative)
+                .count() as f64
+                / of_model.len().max(1) as f64
+        };
+        assert!(imp_frac(ModelId::Phi3Mini) > 0.7);
+        assert!(imp_frac(ModelId::Gpt4oMini) < 0.3);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(3, 10, 30, 100);
+        let b = generate(3, 10, 30, 100);
+        assert_eq!(a[50].prompt, b[50].prompt);
+        assert_eq!(a[50].model, b[50].model);
+    }
+
+    #[test]
+    fn covers_courses_and_days() {
+        let reqs = generate(4, 60, 145, 5000);
+        for c in COURSES {
+            assert!(reqs.iter().any(|r| r.course == *c));
+        }
+        let max_day = reqs.iter().map(|r| r.day).max().unwrap();
+        assert!(max_day >= 140);
+    }
+}

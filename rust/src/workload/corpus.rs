@@ -1,0 +1,204 @@
+//! Synthetic encyclopedia — the Wikipedia stand-in (§5.3 cache experiment:
+//! "The cache is populated with Wikipedia articles on topics gathered from
+//! our WhatsApp service usage, using the delegated PUT").
+//!
+//! Topics and entities mirror the deployment's reported query themes
+//! (health and well-being, cultural themes, politics, sports, ...). Every
+//! article is deterministic in (topic, entity) and carries numbered facts
+//! so the chunker's fact extraction has real material.
+
+use crate::util::rng::Rng;
+use crate::util::seed_of;
+
+/// The query topics §5.1 reports.
+pub const TOPICS: &[&str] = &[
+    "health",
+    "culture",
+    "politics",
+    "sports",
+    "technology",
+    "education",
+    "food",
+    "travel",
+];
+
+/// Entities per topic (shared vocabulary with the WhatsApp templates so
+/// cache lookups have genuine lexical overlap).
+pub fn entities(topic: &str) -> &'static [&'static str] {
+    match topic {
+        "health" => &[
+            "malaria", "diabetes", "hypertension", "vaccination", "nutrition",
+            "sleep hygiene", "dehydration", "anemia",
+        ],
+        "culture" => &[
+            "eid traditions", "henna art", "sufi music", "nubian heritage",
+            "wedding customs", "calligraphy", "ramadan", "storytelling",
+        ],
+        "politics" => &[
+            "elections", "parliament", "constitution", "local government",
+            "trade policy", "census", "diplomacy", "federalism",
+        ],
+        "sports" => &[
+            "cricket", "football", "hockey", "athletics", "squash",
+            "kabaddi", "wrestling", "badminton",
+        ],
+        "technology" => &[
+            "mobile banking", "solar power", "internet access", "smartphones",
+            "artificial intelligence", "satellite internet", "e commerce",
+            "digital identity",
+        ],
+        "education" => &[
+            "literacy programs", "scholarships", "exam systems",
+            "vocational training", "universities", "online courses",
+            "school meals", "teacher training",
+        ],
+        "food" => &[
+            "biryani", "ful medames", "kisra bread", "chai", "mangoes",
+            "dates", "lentils", "street food",
+        ],
+        "travel" => &[
+            "khartoum", "karachi", "lahore", "port sudan", "dubai",
+            "islamabad", "meroe pyramids", "nile river",
+        ],
+        _ => &["general knowledge"],
+    }
+}
+
+/// One synthetic article.
+#[derive(Clone, Debug)]
+pub struct Article {
+    pub topic: String,
+    pub entity: String,
+    pub title: String,
+    pub text: String,
+}
+
+/// Deterministic article for (topic, entity).
+pub fn article(topic: &str, entity: &str) -> Article {
+    let mut rng = Rng::new(seed_of(&["article", topic, entity]));
+    let adjectives = [
+        "notable", "important", "widely discussed", "historic", "popular",
+        "well documented", "significant", "growing",
+    ];
+    let mut s = Vec::new();
+    s.push(format!(
+        "{entity} is a {adj} subject within {topic}.",
+        adj = rng.choice(&adjectives)
+    ));
+    s.push(format!(
+        "Experts estimate that {entity} affects about {n} million people every year.",
+        n = 1 + rng.below(90)
+    ));
+    s.push(format!(
+        "The earliest records of {entity} date back to {year}.",
+        year = 1850 + rng.below(160)
+    ));
+    s.push(format!(
+        "Studies show {entity} is closely linked to {other} in {topic}.",
+        other = rng.choice(entities(topic))
+    ));
+    s.push(format!(
+        "In recent surveys {pct} percent of respondents said {entity} matters to their daily life.",
+        pct = 20 + rng.below(75)
+    ));
+    s.push(format!(
+        "Community programs about {entity} reached {n} districts last year.",
+        n = 3 + rng.below(40)
+    ));
+    s.push(format!(
+        "The main challenge around {entity} is access in rural regions."
+    ));
+    s.push(format!(
+        "Local experts recommend learning about {entity} from trusted sources."
+    ));
+    Article {
+        topic: topic.to_string(),
+        entity: entity.to_string(),
+        title: format!("{entity} ({topic})"),
+        text: s.join(" "),
+    }
+}
+
+/// The whole corpus: one article per (topic, entity).
+pub fn full_corpus() -> Vec<Article> {
+    TOPICS
+        .iter()
+        .flat_map(|t| entities(t).iter().map(move |e| article(t, e)))
+        .collect()
+}
+
+/// An FAQ-style document (exercises the chunker's QA segmentation, §5.2).
+pub fn faq_document(topic: &str) -> String {
+    let ents = entities(topic);
+    let mut rng = Rng::new(seed_of(&["faq", topic]));
+    let mut out = String::new();
+    for e in ents.iter().take(4) {
+        out.push_str(&format!(
+            "Q: What should I know about {e}?\nA: {e} is covered in our {topic} \
+             guide; about {n} percent of questions we receive concern it.\n",
+            n = 5 + rng.below(40)
+        ));
+    }
+    out
+}
+
+/// A sectioned policy-style document (header segmentation, §5.2).
+pub fn policy_document(topic: &str) -> String {
+    let ents = entities(topic);
+    format!(
+        "## Scope\nThis policy covers {topic} services including {a} and {b}.\n\
+         ## Eligibility\nResidents may enroll if they are over 18 years old.\n\
+         ## Review\nThe policy is reviewed every 2 years by the committee.\n",
+        a = ents[0],
+        b = ents[1.min(ents.len() - 1)],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn articles_deterministic() {
+        let a = article("health", "malaria");
+        let b = article("health", "malaria");
+        assert_eq!(a.text, b.text);
+        assert!(a.text.contains("malaria"));
+    }
+
+    #[test]
+    fn articles_differ_across_entities() {
+        assert_ne!(
+            article("health", "malaria").text,
+            article("health", "diabetes").text
+        );
+    }
+
+    #[test]
+    fn corpus_covers_all_topics() {
+        let corpus = full_corpus();
+        assert_eq!(corpus.len(), 64);
+        for t in TOPICS {
+            assert!(corpus.iter().any(|a| a.topic == *t));
+        }
+    }
+
+    #[test]
+    fn articles_contain_facts() {
+        // Fact extraction needs digits/copulas; every article has both.
+        for a in full_corpus().iter().take(10) {
+            let facts = crate::cache::chunker::facts(&a.text);
+            assert!(facts.len() >= 3, "{}: {:?}", a.title, facts.len());
+        }
+    }
+
+    #[test]
+    fn structured_documents_detected() {
+        use crate::cache::chunker::{detect_structure, DocStructure};
+        assert_eq!(detect_structure(&faq_document("health")), DocStructure::Faq);
+        assert_eq!(
+            detect_structure(&policy_document("education")),
+            DocStructure::Sectioned
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Workload generators — the substitution for the paper's production
+//! traces (DESIGN.md §Substitutions). All seeded and deterministic:
+//!
+//! * [`corpus`] — synthetic encyclopedia articles (the Wikipedia stand-in
+//!   that populates the cache in §5.3's smart_cache experiment).
+//! * [`whatsapp`] — multi-turn Q&A conversations shaped like the WhatsApp
+//!   deployment (§5.1): topical templates, 30% factual queries, anaphoric
+//!   follow-ups that require context, follow-up-button and regenerate
+//!   events.
+//! * [`classroom`] — the §5.2 REST workload: request mix 73/13/13/1 across
+//!   model classes, quota-constrained.
+
+pub mod classroom;
+pub mod corpus;
+pub mod whatsapp;
+
+pub use whatsapp::{Conversation, Query, WhatsAppWorkload};

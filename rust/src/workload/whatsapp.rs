@@ -1,0 +1,269 @@
+//! WhatsApp Q&A workload generator — the substitution for the paper's
+//! production trace (§5.1: 100+ users, 14.7K requests; §5.3's dataset D:
+//! "10 conversations ... with > 10 messages in each conversation. In total
+//! there are 244 queries").
+//!
+//! Conversations mix standalone topical questions with anaphoric follow-ups
+//! that genuinely require context; ~30% of queries are factual (the
+//! fraction §5.3 reports). Every query carries its latent
+//! [`QueryTraits`] so the quality model can score any strategy's responses.
+
+use crate::models::quality::QueryTraits;
+use crate::util::rng::Rng;
+use crate::util::seed_of;
+
+use super::corpus::{entities, TOPICS};
+
+/// One user query within a conversation.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub text: String,
+    pub traits: QueryTraits,
+    pub topic: String,
+    pub entity: String,
+    /// True when the surface form is an anaphoric follow-up.
+    pub is_followup: bool,
+}
+
+/// A multi-turn conversation of one user.
+#[derive(Clone, Debug)]
+pub struct Conversation {
+    pub user: String,
+    pub id: String,
+    pub queries: Vec<Query>,
+}
+
+const STANDALONE_TEMPLATES: &[&str] = &[
+    "tell me about {e} and why people in my community talk about it so much",
+    "what is {e} exactly and what should an ordinary person understand about it",
+    "give me practical advice on {e} that i can actually use this week",
+    "what are the main benefits of {e} for a family like mine back home",
+    "how common is {e} these days and is it becoming more or less popular",
+    "what should i know about {e} before discussing it with my relatives",
+    "please explain {e} in simple words that someone without schooling can follow",
+    "is {e} important for families with young children and elderly parents at home",
+    "what do doctors and experts usually say about {e} in recent years",
+    "can you share some useful tips about {e} for people on a budget",
+];
+
+const FACTUAL_TEMPLATES: &[&str] = &[
+    "how many people are affected by {e} every year according to recent estimates",
+    "when did {e} start and what year do the earliest records come from",
+    "what percent of people say {e} matters to their daily life in surveys",
+    "how many districts were reached by community programs about {e} last year",
+    "what are the documented numbers and facts about {e} that i can trust",
+];
+
+const FOLLOWUP_TEMPLATES: &[&str] = &[
+    "tell me more about that please it sounds interesting and important to me",
+    "what about for children and older people does the same advice apply there",
+    "why is that the case and who decided it should work that way",
+    "and what about in rural areas far from the big cities and hospitals",
+    "can you explain that part again more slowly with a simple example please",
+    "what about the history behind it how did things get to this point",
+    "how does that compare with other countries in the region or elsewhere abroad",
+    "is that still true today or have things changed in the last years",
+];
+
+/// Generate one conversation with `n` queries, deterministic in
+/// (seed, user index).
+pub fn conversation(seed: u64, user_idx: usize, n: usize) -> Conversation {
+    let mut rng = Rng::new(seed ^ seed_of(&["conv", &user_idx.to_string()]));
+    let user = format!("user-{user_idx:03}");
+    let conv_id = format!("conv-{user_idx:03}");
+    let mut queries = Vec::with_capacity(n);
+    let mut topic = rng.choice(TOPICS).to_string();
+    let mut entity = rng.choice(entities(&topic)).to_string();
+    for i in 0..n {
+        // Topic drift: occasionally switch subject entirely.
+        let follow_up = i > 0 && rng.chance(0.30);
+        if !follow_up {
+            if rng.chance(0.4) {
+                topic = rng.choice(TOPICS).to_string();
+            }
+            entity = rng.choice(entities(&topic)).to_string();
+        }
+        let factual = rng.chance(0.30);
+        let text = if follow_up {
+            rng.choice(FOLLOWUP_TEMPLATES).to_string()
+        } else if factual {
+            rng.choice(FACTUAL_TEMPLATES).replace("{e}", &entity)
+        } else {
+            rng.choice(STANDALONE_TEMPLATES).replace("{e}", &entity)
+        };
+        let difficulty = rng.normal_ms(0.45, 0.18).clamp(0.05, 0.95);
+        queries.push(Query {
+            traits: QueryTraits {
+                id: format!("{conv_id}-q{i:03}"),
+                difficulty,
+                factual,
+                requires_context: follow_up,
+            },
+            text,
+            topic: topic.clone(),
+            entity: entity.clone(),
+            is_followup: follow_up,
+        });
+    }
+    Conversation {
+        user,
+        id: conv_id,
+        queries,
+    }
+}
+
+/// The §5.3 evaluation dataset D: 10 conversations, >10 messages each,
+/// 244 queries total.
+pub fn dataset_d(seed: u64) -> Vec<Conversation> {
+    let sizes = [25, 25, 25, 25, 24, 24, 24, 24, 24, 24];
+    sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| conversation(seed, i, n))
+        .collect()
+}
+
+/// The §5.3 cache-experiment set: "170 queries across 17 user
+/// conversations ... the last 10 requests per user".
+pub fn cache_dataset(seed: u64) -> Vec<Conversation> {
+    (0..17).map(|i| conversation(seed ^ 0xCAFE, 100 + i, 10)).collect()
+}
+
+/// A long single conversation (Fig 1: "a 50 query conversation").
+pub fn fig1_conversation(seed: u64) -> Conversation {
+    conversation(seed ^ 0xF161, 500, 50)
+}
+
+/// Full-deployment event stream for the e2e example.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// Free-form user query.
+    Ask { conv: usize, query: Query },
+    /// User pressed a prefetched follow-up button (13% of interactions).
+    Button { conv: usize, prompt: String },
+    /// User pressed "Get Better Answer" (regenerate).
+    Regenerate { conv: usize },
+}
+
+pub struct WhatsAppWorkload {
+    pub conversations: Vec<Conversation>,
+    pub events: Vec<Event>,
+}
+
+impl WhatsAppWorkload {
+    /// An event mix matching the §5.1 interaction shares: ~13% cached
+    /// button presses, a few percent regenerations, rest free-form asks.
+    pub fn generate(seed: u64, users: usize, events_per_user: usize) -> WhatsAppWorkload {
+        let mut rng = Rng::new(seed);
+        let conversations: Vec<Conversation> = (0..users)
+            .map(|u| conversation(seed, u, events_per_user))
+            .collect();
+        let mut events = Vec::new();
+        for (ci, conv) in conversations.iter().enumerate() {
+            for q in conv.queries.iter() {
+                events.push(Event::Ask {
+                    conv: ci,
+                    query: q.clone(),
+                });
+                if rng.chance(0.13) {
+                    events.push(Event::Button {
+                        conv: ci,
+                        prompt: format!("more about {}", q.entity),
+                    });
+                }
+                if rng.chance(0.05) {
+                    events.push(Event::Regenerate { conv: ci });
+                }
+            }
+        }
+        WhatsAppWorkload {
+            conversations,
+            events,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_d_has_244_queries() {
+        let d = dataset_d(1);
+        assert_eq!(d.len(), 10);
+        let total: usize = d.iter().map(|c| c.queries.len()).sum();
+        assert_eq!(total, 244);
+        assert!(d.iter().all(|c| c.queries.len() > 10));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = dataset_d(7);
+        let b = dataset_d(7);
+        assert_eq!(a[3].queries[5].text, b[3].queries[5].text);
+        assert_eq!(
+            a[3].queries[5].traits.difficulty,
+            b[3].queries[5].traits.difficulty
+        );
+        let c = dataset_d(8);
+        assert_ne!(a[3].queries[5].traits.difficulty, c[3].queries[5].traits.difficulty);
+    }
+
+    #[test]
+    fn factual_fraction_near_30pct() {
+        let d = dataset_d(2);
+        let all: Vec<&Query> = d.iter().flat_map(|c| c.queries.iter()).collect();
+        let f = all.iter().filter(|q| q.traits.factual).count() as f64 / all.len() as f64;
+        assert!((0.2..=0.4).contains(&f), "factual fraction {f}");
+    }
+
+    #[test]
+    fn followups_require_context() {
+        let d = dataset_d(3);
+        for c in &d {
+            assert!(!c.queries[0].is_followup, "first query can't follow up");
+            for q in &c.queries {
+                assert_eq!(q.is_followup, q.traits.requires_context);
+                if q.is_followup {
+                    assert!(!q.text.contains("{e}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn templates_fill_entity() {
+        let d = dataset_d(4);
+        for c in &d {
+            for q in &c.queries {
+                assert!(!q.text.contains("{e}"), "unfilled template: {}", q.text);
+            }
+        }
+    }
+
+    #[test]
+    fn event_mix_shares() {
+        let w = WhatsAppWorkload::generate(5, 20, 20);
+        let total = w.events.len() as f64;
+        let buttons = w
+            .events
+            .iter()
+            .filter(|e| matches!(e, Event::Button { .. }))
+            .count() as f64;
+        assert!((0.06..=0.18).contains(&(buttons / total)), "button share");
+    }
+
+    #[test]
+    fn fig1_conversation_is_50_queries() {
+        assert_eq!(fig1_conversation(1).queries.len(), 50);
+    }
+
+    #[test]
+    fn cache_dataset_shape() {
+        let cd = cache_dataset(1);
+        assert_eq!(cd.len(), 17);
+        assert!(cd.iter().all(|c| c.queries.len() == 10));
+        let total: usize = cd.iter().map(|c| c.queries.len()).sum();
+        assert_eq!(total, 170);
+    }
+}

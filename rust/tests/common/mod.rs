@@ -1,0 +1,38 @@
+//! Shared integration-test harness: one engine + bridge per test binary.
+
+use std::sync::{Arc, OnceLock};
+
+use llmbridge::coordinator::{Bridge, BridgeConfig};
+use llmbridge::models::pricing::Generation;
+
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+static BRIDGE: OnceLock<Arc<Bridge>> = OnceLock::new();
+
+/// A shared bridge (new-generation pool, memoized, no prefetch).
+pub fn bridge() -> Arc<Bridge> {
+    BRIDGE
+        .get_or_init(|| {
+            Arc::new(
+                Bridge::open_with(artifacts_dir(), BridgeConfig::default())
+                    .expect("run `make artifacts` before cargo test"),
+            )
+        })
+        .clone()
+}
+
+/// A private bridge with custom config, sharing the same engine.
+pub fn private_bridge(config: BridgeConfig) -> Bridge {
+    let shared = bridge();
+    Bridge::from_engine(shared.engine().clone(), config).unwrap()
+}
+
+#[allow(dead_code)]
+pub fn old_gen_config() -> BridgeConfig {
+    BridgeConfig {
+        generation: Generation::Old,
+        ..Default::default()
+    }
+}

@@ -1,0 +1,172 @@
+//! Paper-shape assertions: the qualitative claims of §2.2 + §5.3 must hold
+//! on subsampled replays — who wins, by roughly what factor, where the
+//! crossovers fall. The `figures` binary regenerates the full-dataset
+//! numbers recorded in EXPERIMENTS.md.
+
+mod common;
+
+use llmbridge::experiments as exp;
+use llmbridge::models::pricing::Generation;
+
+const LIMIT: Option<usize> = Some(40);
+
+#[test]
+fn fig1_context_cost_grows_superlinearly_and_k1_is_cheap() {
+    let bridge = common::private_bridge(Default::default());
+    let rows = exp::fig1(&bridge, exp::DEFAULT_SEED, Some(25)).unwrap();
+    let tokens: Vec<u64> = rows.iter().map(|r| r.input_tokens).collect();
+    // Monotone in k.
+    assert!(tokens.windows(2).all(|w| w[0] < w[1]), "{tokens:?}");
+    let base = tokens[0] as f64;
+    // k=1 is a small constant factor (paper: ~3x)...
+    assert!(
+        (2.0..6.0).contains(&(tokens[1] as f64 / base)),
+        "k=1 ratio {}",
+        tokens[1] as f64 / base
+    );
+    // ...while the full-context conversation blows up (paper: ~55x at 50
+    // queries; sublinear to that at 25 queries but still >12x).
+    assert!(
+        tokens.last().unwrap() / tokens[0] > 12,
+        "k=max ratio {}",
+        tokens.last().unwrap() / tokens[0]
+    );
+    // Quality: no-context is worst in the tail; k>=1 close to reference.
+    let q0 = exp::percentiles(rows[0].quality_scores.clone(), &[0.2])[0].1;
+    let q1 = exp::percentiles(rows[1].quality_scores.clone(), &[0.2])[0].1;
+    assert!(q1 > q0 + 1.0, "tail-20% gap: k0={q0:.2} k1={q1:.2}");
+}
+
+#[test]
+fn fig45_verification_cascade_beats_m1_and_undercuts_m2() {
+    for generation in [Generation::Old, Generation::New] {
+        let bridge = common::private_bridge(llmbridge::coordinator::BridgeConfig {
+            generation,
+            ..Default::default()
+        });
+        let out = exp::fig45(&bridge, exp::DEFAULT_SEED, generation, LIMIT).unwrap();
+        let q = |prefix: &str| -> f64 {
+            let (_, scores) = out
+                .quality
+                .iter()
+                .find(|(l, _)| l.starts_with(prefix))
+                .unwrap();
+            exp::mean(scores)
+        };
+        // Quality: verification > M1-only. The margin is generation-
+        // dependent — the paper's own finding is that new-generation cheap
+        // models nearly close the gap (Fig 4b), so only the old pool gets
+        // a hard margin.
+        let margin = if generation == Generation::Old { 0.5 } else { 0.0 };
+        assert!(
+            q("verification") > q("gpt-") + margin,
+            "{generation:?}: verify {} vs m1 {}",
+            q("verification"),
+            q("gpt-")
+        );
+        // Cost: M1-only < verification < M2-only.
+        let cost = |prefix: &str| {
+            out.cost.iter().find(|(l, _)| l.starts_with(prefix)).unwrap().1
+        };
+        let verify_cost = cost("verification");
+        let m2_cost = out.cost.last().unwrap().1;
+        assert!(verify_cost > 1.0 && verify_cost < m2_cost);
+        // Paper Fig 5a: a substantial reduction vs M2-only (~40%; accept >=20%).
+        if generation == Generation::Old {
+            let reduction = 1.0 - verify_cost / m2_cost;
+            assert!(
+                reduction >= 0.20,
+                "cost reduction vs M2-only {reduction:.2}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fig4_new_generation_routes_less_to_m2() {
+    let old_bridge = common::private_bridge(llmbridge::coordinator::BridgeConfig {
+        generation: Generation::Old,
+        ..Default::default()
+    });
+    let new_bridge = common::private_bridge(Default::default());
+    let old = exp::fig45(&old_bridge, exp::DEFAULT_SEED, Generation::Old, Some(80)).unwrap();
+    let new = exp::fig45(&new_bridge, exp::DEFAULT_SEED, Generation::New, Some(80)).unwrap();
+    // Paper: >60% with old models, ~25% with new — newer cheap models
+    // close the gap.
+    assert!(
+        old.escalation_fraction > new.escalation_fraction + 0.15,
+        "old {:.2} vs new {:.2}",
+        old.escalation_fraction,
+        new.escalation_fraction
+    );
+    assert!((0.45..=0.85).contains(&old.escalation_fraction));
+    assert!((0.10..=0.45).contains(&new.escalation_fraction));
+}
+
+#[test]
+fn fig6_smart_context_saves_cost_with_bounded_quality_loss() {
+    let bridge = common::private_bridge(Default::default());
+    let out = exp::fig6(&bridge, exp::DEFAULT_SEED, LIMIT).unwrap();
+    let cost = |prefix: &str| {
+        out.cost.iter().find(|(l, _)| l.starts_with(prefix)).unwrap().1
+    };
+    // smart(k=5) is cheaper than last-5; smart(k=1) cheaper than last-1
+    // is not guaranteed (two extra nano calls), but must be well under k5.
+    assert!(
+        cost("smart_context(k=5)") < cost("gpt-4o(k=5)") * 0.85,
+        "smart5 {} vs k5 {}",
+        cost("smart_context(k=5)"),
+        cost("gpt-4o(k=5)")
+    );
+    // Quality ordering: k0 worst in tail-20%; smart strategies above it.
+    let tail = |prefix: &str| {
+        let (_, scores) = out
+            .quality
+            .iter()
+            .find(|(l, _)| l.starts_with(prefix))
+            .unwrap();
+        exp::percentiles(scores.clone(), &[0.2])[0].1
+    };
+    assert!(
+        tail("smart_context(k=5)") > tail("gpt-4o(k=0)"),
+        "smart5 tail {} vs k0 tail {}",
+        tail("smart_context(k=5)"),
+        tail("gpt-4o(k=0)")
+    );
+    // Fig 6c: decision time is a minority share for most messages.
+    for (label, fracs) in &out.decision_time_fraction {
+        let p80 = exp::percentiles(fracs.clone(), &[0.8])[0].1;
+        assert!(p80 < 0.55, "{label}: p80 decision share {p80:.2}");
+    }
+}
+
+#[test]
+fn fig7_smart_cache_lifts_worst_case_on_factual_queries() {
+    let bridge = common::private_bridge(Default::default());
+    let out = exp::fig7(&bridge, exp::DEFAULT_SEED, Some(30)).unwrap();
+    assert!(out.n_factual >= 10, "need factual queries, got {}", out.n_factual);
+    assert!(out.n_cache_used >= 3, "cache used {}", out.n_cache_used);
+    let min_of = |set: &[(String, Vec<f64>)], prefix: &str| {
+        let (_, scores) = set.iter().find(|(l, _)| l.starts_with(prefix)).unwrap();
+        scores.iter().cloned().fold(f64::INFINITY, f64::min)
+    };
+    // 7a ordering: gpt-4o >> phi-3 on factual queries.
+    let mean_of = |prefix: &str| {
+        let (_, scores) = out.quality.iter().find(|(l, _)| l.starts_with(prefix)).unwrap();
+        exp::mean(scores)
+    };
+    assert!(
+        mean_of("gpt-4o") > mean_of("phi-3-mini") + 1.0,
+        "gpt4o {} vs phi {}",
+        mean_of("gpt-4o"),
+        mean_of("phi-3-mini")
+    );
+    // 7b: on the cache-used subset the grounded floor beats phi-3 alone
+    // by a wide margin (paper: min 4 vs 1 — a 4x lift).
+    let smart_min = min_of(&out.cache_used_quality, "smart_cache");
+    let phi_min = min_of(&out.cache_used_quality, "phi-3-mini");
+    assert!(
+        smart_min > phi_min + 1.5,
+        "smart min {smart_min:.2} vs phi min {phi_min:.2}"
+    );
+}

@@ -1,0 +1,555 @@
+//! End-to-end proxy pipeline tests: every service type, transparency
+//! metadata, regeneration, history semantics, caching, and quotas.
+
+mod common;
+
+use llmbridge::api::{CacheOutcome, CachePolicy, Request, ServiceType};
+use llmbridge::models::pricing::ModelId;
+use llmbridge::models::quality::QueryTraits;
+
+fn traits(id: &str, difficulty: f64, factual: bool, requires_context: bool) -> QueryTraits {
+    QueryTraits {
+        id: id.into(),
+        difficulty,
+        factual,
+        requires_context,
+    }
+}
+
+#[test]
+fn fixed_service_type_uses_requested_model() {
+    let b = common::bridge();
+    let req = Request::new("t-fixed", "c1", "tell me about mangoes").service_type(
+        ServiceType::Fixed {
+            model: ModelId::Llama38b,
+            cache: CachePolicy::Skip,
+            context_k: 0,
+        },
+    );
+    let resp = b.handle(req).unwrap();
+    assert_eq!(resp.metadata.models_used, vec![("llama-3-8b".to_string(), "answer".to_string())]);
+    assert_eq!(resp.metadata.cache, CacheOutcome::Skipped);
+    assert!(resp.metadata.cost_usd > 0.0);
+    assert!(!resp.text.is_empty());
+}
+
+#[test]
+fn cost_and_quality_pick_price_extremes() {
+    let b = common::bridge();
+    let cheap = b
+        .handle(Request::new("t-cost", "c1", "short answer please").service_type(ServiceType::Cost))
+        .unwrap();
+    let dear = b
+        .handle(
+            Request::new("t-qual", "c1", "short answer please two").service_type(ServiceType::Quality),
+        )
+        .unwrap();
+    let cheap_model = &cheap.metadata.models_used[0].0;
+    let dear_model = &dear.metadata.models_used[0].0;
+    let price = |m: &str| ModelId::parse(m).unwrap().spec().usd_per_mtok_in;
+    assert!(price(dear_model) > price(cheap_model) * 10.0);
+}
+
+#[test]
+fn model_selector_exposes_verifier_score() {
+    let b = common::bridge();
+    let req = Request::new("t-ms", "c1", "how common is diabetes these days")
+        .service_type(ServiceType::default())
+        .with_traits(traits("ms-q1", 0.5, false, false));
+    let resp = b.handle(req).unwrap();
+    let roles: Vec<&str> = resp.metadata.models_used.iter().map(|(_, r)| r.as_str()).collect();
+    assert!(roles.contains(&"m1"));
+    assert!(roles.contains(&"verifier"));
+    let v = resp.metadata.verifier_score.expect("verifier score surfaced");
+    assert!((0.0..=10.0).contains(&v));
+    // Escalation implies m2 in the role list and higher cost.
+    if roles.contains(&"m2") {
+        assert!(resp.metadata.cost_usd > 0.0);
+    }
+}
+
+#[test]
+fn hard_queries_escalate_more_than_easy() {
+    let b = common::bridge();
+    let mut esc_hard = 0;
+    let mut esc_easy = 0;
+    for i in 0..30 {
+        let hard = Request::new("t-esc", &format!("ch{i}"), &format!("difficult question {i}"))
+            .service_type(ServiceType::default())
+            .with_traits(traits(&format!("hard-{i}"), 0.9, false, false));
+        let easy = Request::new("t-esc", &format!("ce{i}"), &format!("easy question {i}"))
+            .service_type(ServiceType::default())
+            .with_traits(traits(&format!("easy-{i}"), 0.1, false, false));
+        if b.handle(hard).unwrap().metadata.models_used.iter().any(|(_, r)| r == "m2") {
+            esc_hard += 1;
+        }
+        if b.handle(easy).unwrap().metadata.models_used.iter().any(|(_, r)| r == "m2") {
+            esc_easy += 1;
+        }
+    }
+    assert!(
+        esc_hard > esc_easy + 5,
+        "hard {esc_hard} vs easy {esc_easy}: verifier must route difficulty"
+    );
+}
+
+#[test]
+fn history_grows_and_context_counts() {
+    let b = common::bridge();
+    b.clear_history("t-hist", "c1");
+    for i in 0..3 {
+        let req = Request::new("t-hist", "c1", &format!("question number {i}")).service_type(
+            ServiceType::Fixed {
+                model: ModelId::Gpt4oMini,
+                cache: CachePolicy::Skip,
+                context_k: 5,
+            },
+        );
+        let resp = b.handle(req).unwrap();
+        assert_eq!(resp.metadata.context_messages, i, "turn {i}");
+    }
+    assert_eq!(b.history("t-hist", "c1").len(), 3);
+}
+
+#[test]
+fn update_context_false_reads_but_does_not_write() {
+    let b = common::bridge();
+    b.clear_history("t-ro", "c1");
+    b.handle(Request::new("t-ro", "c1", "first question").service_type(ServiceType::Cost))
+        .unwrap();
+    let ro = Request::new("t-ro", "c1", "what mood is the user in")
+        .service_type(ServiceType::Fixed {
+            model: ModelId::Gpt4oMini,
+            cache: CachePolicy::Skip,
+            context_k: 5,
+        })
+        .no_context_update();
+    let resp = b.handle(ro).unwrap();
+    assert_eq!(resp.metadata.context_messages, 1);
+    assert_eq!(b.history("t-ro", "c1").len(), 1, "read-only prompt must not append");
+}
+
+#[test]
+fn smart_context_standalone_drops_context() {
+    let b = common::bridge();
+    b.clear_history("t-sc", "c1");
+    // Seed history.
+    b.handle(Request::new("t-sc", "c1", "tell me about cricket").service_type(ServiceType::Cost))
+        .unwrap();
+    // A standalone query with traits the classifier reads.
+    let req = Request::new("t-sc", "c1", "what is the tallest mountain in africa")
+        .service_type(ServiceType::SmartContext {
+            k: 5,
+            model: ModelId::Claude3Haiku,
+        })
+        .with_traits(traits("sc-standalone-1", 0.3, false, false));
+    let resp = b.handle(req).unwrap();
+    // Context-LLM charged: two short calls by the §3.4 double-check.
+    let ctx_calls = resp
+        .metadata
+        .models_used
+        .iter()
+        .filter(|(_, r)| r == "context-llm")
+        .count();
+    assert_eq!(ctx_calls, 2);
+}
+
+#[test]
+fn smart_context_followup_keeps_context() {
+    let b = common::bridge();
+    b.clear_history("t-sc2", "c1");
+    b.handle(Request::new("t-sc2", "c1", "tell me about malaria").service_type(ServiceType::Cost))
+        .unwrap();
+    let req = Request::new("t-sc2", "c1", "tell me more about that")
+        .service_type(ServiceType::SmartContext {
+            k: 5,
+            model: ModelId::Claude3Haiku,
+        })
+        .with_traits(traits("sc-follow-1", 0.3, false, true));
+    let resp = b.handle(req).unwrap();
+    assert!(
+        resp.metadata.context_messages >= 1,
+        "dependent query should keep context (classifier is right w.h.p.)"
+    );
+}
+
+#[test]
+fn exact_cache_hit_is_free() {
+    let b = common::bridge();
+    b.cache().put_exact("more about henna art", "henna art is beautiful");
+    let resp = b
+        .handle(Request::new("t-exact", "c1", "More about HENNA art?").service_type(ServiceType::Cost))
+        .unwrap();
+    assert_eq!(resp.metadata.cache, CacheOutcome::ExactHit);
+    assert_eq!(resp.metadata.cost_usd, 0.0);
+    assert_eq!(resp.text, "henna art is beautiful");
+    assert!(resp.metadata.models_used.is_empty());
+}
+
+#[test]
+fn smart_cache_grounds_factual_queries() {
+    let b = common::bridge();
+    // Populate with the malaria article via delegated PUT.
+    let article = llmbridge::workload::corpus::article("health", "malaria");
+    let (ids, calls) = b
+        .cache()
+        .put_delegated(b.generator(), ModelId::Phi3Mini, &article.title, &article.text)
+        .unwrap();
+    assert!(!ids.is_empty());
+    assert!(!calls.is_empty());
+    let req = Request::new("t-scache", "c1", "how many people are affected by malaria")
+        .service_type(ServiceType::SmartCache {
+            model: ModelId::Phi3Mini,
+        })
+        .with_traits(traits("scache-q1", 0.4, true, false));
+    let resp = b.handle(req).unwrap();
+    match resp.metadata.cache {
+        CacheOutcome::SemanticHit { score } => {
+            assert!(score > 0.2, "score={score}");
+            assert!(resp.metadata.grounded);
+            assert!(resp.text.contains("malaria"), "grounded text carries facts");
+        }
+        ref other => {
+            // The small model can (rarely, seeded) decline the hit; then it
+            // must have answered directly, ungrounded.
+            assert_eq!(*other, CacheOutcome::Miss);
+            assert!(!resp.metadata.grounded);
+        }
+    }
+}
+
+#[test]
+fn regenerate_escalates_and_replaces_history() {
+    let b = common::bridge();
+    b.clear_history("t-regen", "c1");
+    let req = Request::new("t-regen", "c1", "give me advice on nutrition")
+        .service_type(ServiceType::default())
+        .with_traits(traits("regen-q1", 0.5, false, false));
+    let first = b.handle(req).unwrap();
+    let second = b.regenerate(first.metadata.request_id, None).unwrap();
+    assert_eq!(second.metadata.regen_count, 1);
+    assert_eq!(second.metadata.service_type, "fixed");
+    // §5.1: history keeps one turn whose response is the regenerated one.
+    let hist = b.history("t-regen", "c1");
+    assert_eq!(hist.len(), 1);
+    assert_eq!(hist[0].response, second.text);
+    // Regeneration goes straight to the big model.
+    assert!(second
+        .metadata
+        .models_used
+        .iter()
+        .any(|(m, _)| m == "gpt-4o" || m == "gpt-4"));
+}
+
+#[test]
+fn regenerate_with_explicit_service_type() {
+    let b = common::bridge();
+    let req = Request::new("t-regen2", "c1", "what should i know about chai")
+        .service_type(ServiceType::Cost);
+    let first = b.handle(req).unwrap();
+    let second = b
+        .regenerate(first.metadata.request_id, Some(ServiceType::Quality))
+        .unwrap();
+    assert_eq!(second.metadata.service_type, "quality");
+    assert!(second.metadata.cost_usd > first.metadata.cost_usd);
+}
+
+#[test]
+fn unknown_regenerate_id_errors() {
+    let b = common::bridge();
+    assert!(b.regenerate(0xDEAD_BEEF, None).is_err());
+}
+
+#[test]
+fn usage_based_denies_off_list_models_and_enforces_quota() {
+    let mut cfg = llmbridge::coordinator::BridgeConfig::default();
+    cfg.quota.max_requests = 3;
+    let b = common::private_bridge(cfg);
+    let st = ServiceType::UsageBased {
+        allowed: vec![ModelId::Gpt4oMini, ModelId::Phi3Mini],
+        fallback: ModelId::Gpt4oMini,
+    };
+    // Request gpt-4 (not allowed) -> falls back.
+    let mut req = Request::new("student-1", "c1", "classify this message").service_type(st.clone());
+    req.params.insert("model".into(), "gpt-4".into());
+    let resp = b.handle(req).unwrap();
+    assert_eq!(resp.metadata.models_used[0].0, "gpt-4o-mini");
+    assert_eq!(b.telemetry().counters.get("model_denied"), 1);
+    // Quota: 3 requests max.
+    for i in 0..2 {
+        b.handle(
+            Request::new("student-1", "c1", &format!("another question {i}"))
+                .service_type(st.clone()),
+        )
+        .unwrap();
+    }
+    let over = b.handle(
+        Request::new("student-1", "c1", "one too many").service_type(st.clone()),
+    );
+    assert!(over.is_err(), "4th request must hit the quota");
+    assert_eq!(b.telemetry().counters.get("quota_rejections"), 1);
+    // Other students unaffected.
+    assert!(b
+        .handle(Request::new("student-2", "c1", "fresh user").service_type(st))
+        .is_ok());
+}
+
+#[test]
+fn latency_first_uses_fast_model() {
+    let b = common::bridge();
+    let resp = b
+        .handle(
+            Request::new("t-lat", "c1", "quick question about squash")
+                .service_type(ServiceType::LatencyFirst),
+        )
+        .unwrap();
+    assert_eq!(resp.metadata.models_used[0].0, "claude-3-haiku");
+}
+
+#[test]
+fn telemetry_accumulates() {
+    let b = common::bridge();
+    let before = b.telemetry().counters.get("requests");
+    b.handle(Request::new("t-tel", "c1", "telemetry probe").service_type(ServiceType::Cost))
+        .unwrap();
+    assert_eq!(b.telemetry().counters.get("requests"), before + 1);
+    assert!(b.telemetry().costs.total_usd() > 0.0);
+}
+
+#[test]
+fn metadata_json_is_parseable() {
+    let b = common::bridge();
+    let resp = b
+        .handle(Request::new("t-json", "c1", "serialize me").service_type(ServiceType::Cost))
+        .unwrap();
+    let j = resp.to_json().to_string();
+    let back = llmbridge::util::json::Json::parse(&j).unwrap();
+    assert!(back.req("metadata").unwrap().get("cost_usd").is_some());
+}
+
+// ---------------------------------------------------------------------
+// Cache GET-path semantics with real embeddings (§3.5 low-level API).
+// ---------------------------------------------------------------------
+
+#[test]
+fn cache_get_type_filters_and_thresholds() {
+    use llmbridge::cache::{CachedType, GetFilter};
+    let b = common::bridge();
+    let g = b.generator();
+    // The §3.5 B-tree example: response-keyed entries match future prompts
+    // that the prompt key would miss.
+    let cache = llmbridge::cache::SemanticCache::new(b.engine().embed_dim());
+    cache
+        .put(
+            g,
+            "use data structures like b trees and tries",
+            "how do i speed up my cache",
+            false,
+            &[
+                (CachedType::Prompt, "how do i speed up my cache".into()),
+                (
+                    CachedType::Response,
+                    "use data structures like b trees and tries".into(),
+                ),
+            ],
+        )
+        .unwrap();
+    // Prompt-similar query hits via the Prompt key.
+    let hits = cache
+        .get(
+            g,
+            "how can i speed up my cache please",
+            &GetFilter {
+                types: Some(vec![CachedType::Prompt]),
+                min_score: 0.3,
+                k: 4,
+            },
+        )
+        .unwrap();
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0].matched_type, CachedType::Prompt);
+
+    // Response-similar query misses under a Prompt-only filter...
+    let hits = cache
+        .get(
+            g,
+            "give me examples of popular data structures like tries",
+            &GetFilter {
+                types: Some(vec![CachedType::Prompt]),
+                min_score: 0.35,
+                k: 4,
+            },
+        )
+        .unwrap();
+    assert!(hits.is_empty(), "{hits:?}");
+    // ...but hits when Response keys are allowed (the paper's point; our
+    // JL-sketch embedder scores the pair lower than OpenAI's 0.64, so the
+    // threshold is calibrated to our similarity distribution).
+    let hits = cache
+        .get(
+            g,
+            "give me examples of popular data structures like tries",
+            &GetFilter {
+                types: Some(vec![CachedType::Response]),
+                min_score: 0.2,
+                k: 4,
+            },
+        )
+        .unwrap();
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0].matched_type, CachedType::Response);
+
+    // An unsatisfiable threshold filters everything (the stored prompt is
+    // *identical* to this query, so cosine = 1.0 exactly; only > 1 fails).
+    let hits = cache
+        .get(
+            g,
+            "how do i speed up my cache",
+            &GetFilter {
+                types: None,
+                min_score: 1.01,
+                k: 4,
+            },
+        )
+        .unwrap();
+    assert!(hits.is_empty());
+}
+
+#[test]
+fn delegated_put_generates_typed_keys() {
+    use llmbridge::cache::{CachedType, GetFilter};
+    use llmbridge::models::pricing::ModelId;
+    let b = common::bridge();
+    let g = b.generator();
+    let cache = llmbridge::cache::SemanticCache::new(b.engine().embed_dim());
+    let article = llmbridge::workload::corpus::article("sports", "cricket");
+    let (ids, calls) = cache
+        .put_delegated(g, ModelId::Phi3Mini, &article.title, &article.text)
+        .unwrap();
+    assert!(!ids.is_empty());
+    assert!(!calls.is_empty(), "delegated PUT bills a cache-LLM call");
+    assert!(cache.len_keys() > cache.len_objects(), "multiple keys per chunk");
+    // A hypothetical-question style query lands on the article.
+    let hits = cache
+        .get(g, "tell me about cricket", &GetFilter::default())
+        .unwrap();
+    assert!(!hits.is_empty());
+    assert!(hits[0].object.text.contains("cricket"));
+    // Fact keys exist.
+    let fact_hits = cache
+        .get(
+            g,
+            "how many people play cricket every year",
+            &GetFilter {
+                types: Some(vec![CachedType::Fact]),
+                min_score: 0.1,
+                k: 3,
+            },
+        )
+        .unwrap();
+    assert!(!fact_hits.is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Similar / Summarize filters over real embeddings and generations.
+// ---------------------------------------------------------------------
+
+#[test]
+fn similar_filter_ranks_by_embedding() {
+    use llmbridge::context::{Filter, FilterCtx, Message};
+    let b = common::bridge();
+    let msgs: Vec<Message> = [
+        "tell me about cricket matches in lahore",
+        "recipe for chicken biryani with rice",
+        "cricket rules for beginners explained",
+    ]
+    .iter()
+    .enumerate()
+    .map(|(i, p)| Message {
+        prompt: p.to_string(),
+        response: format!("answer {i}"),
+        model: "m".into(),
+        grounded_citations: false,
+        seq: i as u64,
+    })
+    .collect();
+    let traits = llmbridge::models::quality::QueryTraits {
+        id: "sim-test".into(),
+        difficulty: 0.3,
+        factual: false,
+        requires_context: false,
+    };
+    let cx = FilterCtx {
+        generator: b.generator(),
+        traits: &traits,
+    };
+    let f = Filter::Similar {
+        threshold: 0.15,
+        max: 2,
+    };
+    let sel = f
+        .apply(&msgs, "what are the cricket rules in a match", &cx)
+        .unwrap();
+    // The two cricket messages, not the biryani one.
+    assert!(sel.indices.contains(&0) || sel.indices.contains(&2), "{sel:?}");
+    assert!(!sel.indices.contains(&1), "{sel:?}");
+}
+
+#[test]
+fn summarize_filter_produces_synthetic_message() {
+    use llmbridge::context::{Filter, FilterCtx, Message};
+    use llmbridge::models::pricing::ModelId;
+    let b = common::bridge();
+    let msgs: Vec<Message> = (0..4)
+        .map(|i| Message {
+            prompt: format!("question about malaria number {i}"),
+            response: format!("answer {i}"),
+            model: "m".into(),
+            grounded_citations: false,
+            seq: i,
+        })
+        .collect();
+    let traits = llmbridge::models::quality::QueryTraits {
+        id: "sum-test".into(),
+        difficulty: 0.3,
+        factual: false,
+        requires_context: true,
+    };
+    let cx = FilterCtx {
+        generator: b.generator(),
+        traits: &traits,
+    };
+    let f = Filter::Summarize {
+        model: ModelId::Claude3Haiku,
+    };
+    let sel = f.apply(&msgs, "and what should i do next", &cx).unwrap();
+    let materialized = sel.messages(&msgs);
+    assert_eq!(materialized.len(), 1, "summary replaces the history");
+    assert!(materialized[0].response.contains("malaria"), "lexical gist kept");
+    assert_eq!(sel.llm_calls.len(), 1, "one summarize call billed");
+    assert!((sel.sufficiency(4) - 0.8).abs() < 1e-9);
+}
+
+#[test]
+fn batch_mode_compares_models_side_by_side() {
+    // §5.2 future work: batch prompts across several models at once.
+    let b = common::bridge();
+    let prompts = vec![
+        "classify this sentence as positive or negative".to_string(),
+        "what are the benefits of lentils".to_string(),
+    ];
+    let models = vec![ModelId::Gpt4oMini, ModelId::Phi3Mini];
+    let out = b.handle_batch("batch-user", &prompts, &models).unwrap();
+    assert_eq!(out.len(), 2);
+    for cmp in &out {
+        assert_eq!(cmp.responses.len(), 2);
+        let (m0, r0) = &cmp.responses[0];
+        let (m1, r1) = &cmp.responses[1];
+        assert_eq!(*m0, ModelId::Gpt4oMini);
+        assert_eq!(*m1, ModelId::Phi3Mini);
+        assert_ne!(r0.text, r1.text, "different models answer differently");
+        // Benchmarking semantics: no context, no history pollution.
+        assert_eq!(r0.metadata.context_messages, 0);
+    }
+    assert!(b.history("batch-user", "batch-0-gpt-4o-mini").is_empty());
+}

@@ -1,0 +1,118 @@
+//! Runtime integration: the PJRT engine executes real artifacts and the
+//! generator drives the decode loop deterministically.
+
+mod common;
+
+use llmbridge::models::pricing::ModelId;
+use llmbridge::runtime::tokenizer;
+use llmbridge::vecdb::Metric;
+
+#[test]
+fn lm_logits_deterministic_and_padding_inert() {
+    let b = common::bridge();
+    let engine = b.engine();
+    let (tokens, live) =
+        tokenizer::window("what is the capital of sudan", engine.seq_len());
+    let a = engine.lm_logits("nano", tokens.clone(), live).unwrap();
+    let c = engine.lm_logits("nano", tokens.clone(), live).unwrap();
+    assert_eq!(a, c);
+    assert_eq!(a.len(), 4096);
+    // Garbage beyond `live` must not change logits (mask correctness).
+    let mut dirty = tokens.clone();
+    for t in dirty.iter_mut().skip(live as usize) {
+        *t = 1234;
+    }
+    let d = engine.lm_logits("nano", dirty, live).unwrap();
+    for (x, y) in a.iter().zip(&d) {
+        assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn variants_disagree() {
+    let b = common::bridge();
+    let engine = b.engine();
+    let (tokens, live) = tokenizer::window("tell me about cricket", engine.seq_len());
+    let nano = engine.lm_logits("nano", tokens.clone(), live).unwrap();
+    let large = engine.lm_logits("large", tokens, live).unwrap();
+    let diff: f32 = nano.iter().zip(&large).map(|(a, b)| (a - b).abs()).sum();
+    assert!(diff > 1.0, "different weights must give different logits");
+}
+
+#[test]
+fn embedder_similarity_structure() {
+    let b = common::bridge();
+    let engine = b.engine();
+    let a = engine.embed_text("tell me about the socc conference").unwrap();
+    let bb = engine
+        .embed_text("talk to me about socc conference please")
+        .unwrap();
+    let c = engine.embed_text("recipe for chicken biryani with rice").unwrap();
+    let sim_ab = Metric::Cosine.score(&a, &bb);
+    let sim_ac = Metric::Cosine.score(&a, &c);
+    assert!(sim_ab > sim_ac + 0.2, "ab={sim_ab} ac={sim_ac}");
+    // Normalized.
+    let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+    assert!((norm - 1.0).abs() < 1e-3);
+}
+
+#[test]
+fn generator_deterministic_and_memoized() {
+    let b = common::bridge();
+    let g = b.generator();
+    let c1 = g
+        .generate(ModelId::Gpt4oMini, "what are the benefits of dates", None)
+        .unwrap();
+    let c2 = g
+        .generate(ModelId::Gpt4oMini, "what are the benefits of dates", None)
+        .unwrap();
+    assert_eq!(c1.text, c2.text);
+    assert!(!c1.from_memo);
+    assert!(c2.from_memo, "second identical call must hit the memo");
+    assert_eq!(c1.latency, c2.latency, "memo preserves measured latency");
+    assert!(c1.output_tokens >= 1);
+    assert_eq!(c1.input_tokens, 6);
+    assert!(c1.cost_usd > 0.0);
+}
+
+#[test]
+fn models_give_different_texts() {
+    let b = common::bridge();
+    let g = b.generator();
+    let prompt = "explain vaccination in simple words";
+    let mini = g.generate(ModelId::Gpt4oMini, prompt, None).unwrap();
+    let large = g.generate(ModelId::Gpt4o, prompt, None).unwrap();
+    assert_ne!(mini.text, large.text);
+    // Bigger models produce longer (more detailed) answers by budget.
+    assert!(
+        ModelId::Gpt4o.spec().default_max_new > ModelId::Gpt4oMini.spec().default_max_new
+    );
+}
+
+#[test]
+fn larger_model_slower() {
+    let b = common::bridge();
+    let g = b.generator();
+    // Fresh prompts (avoid memo), fixed output length for a fair compare.
+    let nano = g
+        .generate(ModelId::Phi3Mini, "latency probe alpha", Some(8))
+        .unwrap();
+    let large = g
+        .generate(ModelId::Gpt4o, "latency probe alpha", Some(8))
+        .unwrap();
+    assert!(
+        large.latency > nano.latency,
+        "large {:?} must exceed nano {:?}",
+        large.latency,
+        nano.latency
+    );
+}
+
+#[test]
+fn long_input_billed_untruncated() {
+    let b = common::bridge();
+    let g = b.generator();
+    let long: String = (0..600).map(|i| format!("w{i} ")).collect();
+    let c = g.generate(ModelId::Gpt4oMini, &long, Some(4)).unwrap();
+    assert_eq!(c.input_tokens, 600, "billing uses pre-truncation counts");
+}

@@ -1,0 +1,112 @@
+//! REST server integration: real TCP round-trips against the bridge.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use llmbridge::server::Server;
+use llmbridge::util::json::Json;
+
+fn http_post(addr: std::net::SocketAddr, path: &str, body: &str) -> (u16, Json) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let msg = format!(
+        "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(msg.as_bytes()).unwrap();
+    read_response(s)
+}
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (u16, Json) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+        .unwrap();
+    read_response(s)
+}
+
+fn read_response(mut s: TcpStream) -> (u16, Json) {
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let status: u16 = buf.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("{}");
+    (status, Json::parse(body).unwrap())
+}
+
+#[test]
+fn full_rest_round_trip() {
+    let bridge = common::bridge();
+    let server = Server::start(bridge, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr;
+
+    // Health.
+    let (code, j) = http_get(addr, "/health");
+    assert_eq!(code, 200);
+    assert_eq!(j.str_of("status").unwrap(), "ok");
+
+    // A cost-type request.
+    let (code, j) = http_post(
+        addr,
+        "/v1/request",
+        r#"{"user":"rest-u1","conversation":"c1","prompt":"hello from http",
+            "service_type":{"name":"cost"}}"#,
+    );
+    assert_eq!(code, 200, "{}", j.to_string());
+    assert!(!j.str_of("text").unwrap().is_empty());
+    let meta = j.req("metadata").unwrap();
+    assert_eq!(meta.str_of("service_type").unwrap(), "cost");
+    let rid = meta.str_of("request_id").unwrap();
+
+    // Regenerate it with an explicit better service type.
+    let (code, j2) = http_post(
+        addr,
+        "/v1/regenerate",
+        &format!(r#"{{"request_id":"{rid}","service_type":{{"name":"quality"}}}}"#),
+    );
+    assert_eq!(code, 200, "{}", j2.to_string());
+    assert_eq!(
+        j2.req("metadata").unwrap().str_of("service_type").unwrap(),
+        "quality"
+    );
+
+    // Metrics include our request counters.
+    let (code, m) = http_get(addr, "/v1/metrics");
+    assert_eq!(code, 200);
+    assert!(m.req("counters").unwrap().get("requests").is_some());
+
+    // Malformed body -> 400.
+    let (code, _) = http_post(addr, "/v1/request", "{not json");
+    assert_eq!(code, 400);
+
+    // Unknown route -> 404.
+    let (code, _) = http_get(addr, "/nope");
+    assert_eq!(code, 404);
+
+    server.stop();
+}
+
+#[test]
+fn concurrent_clients_same_user_are_serialized() {
+    let bridge = common::bridge();
+    let server = Server::start(bridge, "127.0.0.1:0", 4).unwrap();
+    let addr = server.addr;
+    let mut handles = vec![];
+    for i in 0..6 {
+        handles.push(std::thread::spawn(move || {
+            http_post(
+                addr,
+                "/v1/request",
+                &format!(
+                    r#"{{"user":"fifo-u","conversation":"c1",
+                        "prompt":"concurrent question {i}",
+                        "service_type":{{"name":"cost"}}}}"#
+                ),
+            )
+        }));
+    }
+    for h in handles {
+        let (code, _) = h.join().unwrap();
+        assert_eq!(code, 200);
+    }
+    server.stop();
+}

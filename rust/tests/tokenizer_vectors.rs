@@ -1,0 +1,56 @@
+//! Tokenizer vectors pinned against python/tests/test_tokenizer.py —
+//! the two implementations must agree bit-for-bit or artifacts and proxy
+//! disagree about token ids.
+
+use llmbridge::runtime::tokenizer::{self, BOS, EOS, PAD};
+
+#[test]
+fn pinned_vectors_match_python() {
+    // ("", [BOS, EOS])
+    let (ids, live) = tokenizer::window("", 160);
+    assert_eq!(&ids[..live as usize], &[BOS, EOS]);
+
+    // "hello world"
+    let (ids, live) = tokenizer::window("hello world", 160);
+    assert_eq!(
+        &ids[..live as usize],
+        &[
+            BOS,
+            tokenizer::word_id("hello"),
+            tokenizer::word_id("world"),
+            EOS
+        ]
+    );
+
+    // "Tell me about Sigcomm!"
+    let (ids, live) = tokenizer::window("Tell me about Sigcomm!", 160);
+    assert_eq!(
+        &ids[..live as usize],
+        &[
+            BOS,
+            tokenizer::word_id("tell"),
+            tokenizer::word_id("me"),
+            tokenizer::word_id("about"),
+            tokenizer::word_id("sigcomm"),
+            EOS
+        ]
+    );
+    assert!(ids[live as usize..].iter().all(|&t| t == PAD));
+}
+
+#[test]
+fn word_ids_match_fnv_definition() {
+    // Mirrors python: FIRST_WORD_ID + fnv1a(word) % (VOCAB - FIRST_WORD_ID).
+    for w in ["hello", "sigcomm", "a", "x1y2"] {
+        let h = llmbridge::util::fnv1a(w.as_bytes());
+        let expect = 16 + (h % (4096 - 16)) as i32;
+        assert_eq!(tokenizer::word_id(w), expect);
+    }
+}
+
+#[test]
+fn case_and_punctuation_insensitive() {
+    let (a, _) = tokenizer::window("Hello, WORLD!", 160);
+    let (b, _) = tokenizer::window("hello world", 160);
+    assert_eq!(a, b);
+}
