@@ -1,13 +1,15 @@
 //! Hot-path micro-benchmarks — the L3 profile the perf pass iterates on
-//! (EXPERIMENTS.md §Perf): tokenizer, embedding, vecdb scan (flat vs IVF),
-//! JSON, per-execute PJRT latency per variant, and end-to-end dispatch.
+//! (EXPERIMENTS.md §Perf): tokenizer, embedding, vecdb scan (flat vs IVF,
+//! 20k and 100k rows), JSON, per-execute PJRT latency per variant, batched
+//! embeds, and end-to-end dispatch. Writes the results as JSON to the path
+//! in `LLMBRIDGE_BENCH_JSON` (see scripts/bench.sh).
 
 mod bench_common;
 
 use llmbridge::api::{CachePolicy, Request, ServiceType};
 use llmbridge::models::pricing::{Generation, ModelId};
 use llmbridge::runtime::tokenizer;
-use llmbridge::util::bench::{bench, black_box};
+use llmbridge::util::bench::{bench, black_box, BenchReport};
 use llmbridge::util::json::Json;
 use llmbridge::util::rng::Rng;
 use llmbridge::vecdb::flat::FlatIndex;
@@ -15,14 +17,15 @@ use llmbridge::vecdb::ivf::IvfIndex;
 use llmbridge::vecdb::{Metric, VectorIndex};
 
 fn main() {
+    let mut report = BenchReport::new();
     let text = "tell me about vaccination and why people in my community talk about it so much";
 
-    bench("tokenizer/window", 100, 5_000, || {
+    report.record(&bench("tokenizer/window", 100, 5_000, || {
         black_box(tokenizer::window(text, 128));
-    });
-    bench("tokenizer/count_tokens", 100, 5_000, || {
+    }));
+    report.record(&bench("tokenizer/count_tokens", 100, 5_000, || {
         black_box(tokenizer::count_tokens(text));
-    });
+    }));
 
     // --- vecdb: flat vs IVF at cache-sized corpora -----------------------
     let mut rng = Rng::new(3);
@@ -35,40 +38,57 @@ fn main() {
     }
     ivf.train(7, 4).unwrap();
     let q: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
-    bench("vecdb/flat_top4_20k", 10, 300, || {
+    report.record(&bench("vecdb/flat_top4_20k", 10, 300, || {
         black_box(flat.search(&q, 4, 0.0));
-    });
-    bench("vecdb/ivf_top4_20k_nprobe4", 10, 300, || {
+    }));
+    report.record(&bench("vecdb/ivf_top4_20k_nprobe4", 10, 300, || {
         black_box(ivf.search(&q, 4, 0.0));
-    });
+    }));
+    // 100k rows: the blocked normalized scan's headroom case.
+    let mut flat100 = FlatIndex::new(64, Metric::Cosine);
+    for i in 0..100_000u64 {
+        let v: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        flat100.insert(i, &v).unwrap();
+    }
+    report.record(&bench("vecdb/flat_top4_100k", 5, 100, || {
+        black_box(flat100.search(&q, 4, 0.0));
+    }));
 
     // --- JSON substrate ---------------------------------------------------
     let body = r#"{"user":"u1","conversation":"c1","prompt":"tell me about dates and mangoes",
         "service_type":{"name":"model_selector","threshold":8},"update_context":true}"#;
-    bench("json/parse_request", 100, 5_000, || {
+    report.record(&bench("json/parse_request", 100, 5_000, || {
         black_box(Json::parse(body).unwrap());
-    });
+    }));
 
     // --- PJRT engine: per-execute latency by variant ----------------------
     let engine = bench_common::engine();
     let (tokens, live) = tokenizer::window(text, engine.seq_len());
     for variant in ["nano", "mini", "large"] {
         let t = tokens.clone();
-        bench(&format!("engine/lm_step_{variant}"), 3, 40, || {
+        report.record(&bench(&format!("engine/lm_step_{variant}"), 3, 40, || {
             black_box(engine.lm_logits(variant, t.clone(), live).unwrap());
-        });
+        }));
     }
-    bench("engine/embed_text", 3, 100, || {
+    report.record(&bench("engine/embed_text", 3, 100, || {
         black_box(engine.embed_text(text).unwrap());
-    });
+    }));
+    // 8 distinct texts in one RPC round-trip (the multi-key PUT shape).
+    let batch_texts: Vec<String> = (0..8)
+        .map(|i| format!("{text} angle number {i}"))
+        .collect();
+    let batch_refs: Vec<&str> = batch_texts.iter().map(|s| s.as_str()).collect();
+    report.record(&bench("engine/embed_batch8", 3, 100, || {
+        black_box(engine.embed_batch(&batch_refs).unwrap());
+    }));
 
     // --- end-to-end dispatch (cache hit path = pure L3 overhead) ----------
     let bridge = bench_common::bridge(Generation::New);
     bridge.cache().put_exact("hotpath probe", "cached answer");
-    bench("pipeline/exact_cache_hit", 10, 500, || {
+    report.record(&bench("pipeline/exact_cache_hit", 10, 500, || {
         let req = Request::new("hp", "c", "hotpath probe").service_type(ServiceType::Cost);
         black_box(bridge.handle(req).unwrap());
-    });
+    }));
     // Full request (memoized generation: measures proxy overhead + memo).
     let req0 = Request::new("hp", "c2", "one fixed question for dispatch timing")
         .service_type(ServiceType::Fixed {
@@ -77,7 +97,9 @@ fn main() {
             context_k: 0,
         });
     bridge.handle(req0.clone()).unwrap();
-    bench("pipeline/full_request_memoized", 5, 200, || {
+    report.record(&bench("pipeline/full_request_memoized", 5, 200, || {
         black_box(bridge.handle(req0.clone()).unwrap());
-    });
+    }));
+
+    report.write_env("LLMBRIDGE_BENCH_JSON");
 }

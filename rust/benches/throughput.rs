@@ -1,0 +1,185 @@
+//! Multi-threaded closed-loop throughput bench: N worker threads × M
+//! requests against one `Bridge`, mixing exact-hit, semantic-hit
+//! (SmartCache), and memoized-generation traffic — the scaling probe for
+//! the sharded cache + batched engine hot path. Reports requests/sec and
+//! p50/p99 latency at 1, 4, and 8 threads, and writes JSON to the path in
+//! `LLMBRIDGE_BENCH_JSON` so the BENCH trajectory can track scaling
+//! across PRs (ROADMAP.md §Perf trajectory).
+//!
+//! Traffic mix per 8 requests: 5 exact hits (the WhatsApp prefetch-button
+//! path), 2 memoized fixed-model generations (proxy overhead + memo), and
+//! 1 SmartCache request (embed + cache-LLM relevance + grounded reply).
+
+mod bench_common;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use llmbridge::api::{CachePolicy, Request, ServiceType};
+use llmbridge::coordinator::Bridge;
+use llmbridge::models::pricing::{Generation, ModelId};
+use llmbridge::util::bench::{fast_mode, BenchReport};
+use llmbridge::util::json::Json;
+
+const EXACT_PROMPTS: usize = 64;
+const TOPICS: usize = 16;
+const MEMO_PROMPTS: usize = 16;
+
+fn exact_prompt(n: usize) -> String {
+    format!("prefetched answer number {}", n % EXACT_PROMPTS)
+}
+
+fn memo_prompt(n: usize) -> String {
+    format!("one fixed dispatch question number {}", n % MEMO_PROMPTS)
+}
+
+fn topic_prompt(n: usize) -> String {
+    format!("tell me about topic number {}", n % TOPICS)
+}
+
+fn request_for(thread: usize, i: usize) -> Request {
+    let user = format!("worker{thread}");
+    // Stride by a thread-dependent odd step so threads don't hit the same
+    // entry in lockstep (that would hide shard contention).
+    let n = thread * 31 + i;
+    match i % 8 {
+        5 | 6 => Request::new(&user, "memo", &memo_prompt(n))
+            .service_type(ServiceType::Fixed {
+                model: ModelId::Gpt4oMini,
+                cache: CachePolicy::Skip,
+                context_k: 0,
+            })
+            .no_context_update(),
+        7 => Request::new(&user, "smart", &topic_prompt(n))
+            .service_type(ServiceType::SmartCache {
+                model: ModelId::Claude3Haiku,
+            })
+            .no_context_update(),
+        _ => Request::new(&user, "exact", &exact_prompt(n))
+            .service_type(ServiceType::Cost)
+            .no_context_update(),
+    }
+}
+
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run the closed loop; returns (requests/sec, p50 us, p99 us).
+fn run_closed_loop(bridge: &Arc<Bridge>, threads: usize, per_thread: usize) -> (f64, u64, u64) {
+    let start = Instant::now();
+    let mut all: Vec<u64> = Vec::with_capacity(threads * per_thread);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let bridge = Arc::clone(bridge);
+                s.spawn(move || {
+                    let mut samples = Vec::with_capacity(per_thread);
+                    for i in 0..per_thread {
+                        let req = request_for(t, i);
+                        let t0 = Instant::now();
+                        bridge.handle(req).expect("throughput request failed");
+                        samples.push(t0.elapsed().as_micros() as u64);
+                    }
+                    samples
+                })
+            })
+            .collect();
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+    });
+    let wall = start.elapsed().as_secs_f64();
+    all.sort_unstable();
+    (
+        all.len() as f64 / wall.max(1e-9),
+        percentile(&all, 0.50),
+        percentile(&all, 0.99),
+    )
+}
+
+fn main() {
+    let bridge = bench_common::bridge(Generation::New);
+
+    // ---- seed the cache and memo tables (untimed) -----------------------
+    for n in 0..EXACT_PROMPTS {
+        bridge
+            .cache()
+            .put_exact(&exact_prompt(n), &format!("cached reply {n}"));
+    }
+    for n in 0..TOPICS {
+        bridge
+            .cache()
+            .put_interaction(
+                bridge.generator(),
+                &topic_prompt(n),
+                &format!("topic number {n} matters because of reasons {n}"),
+            )
+            .unwrap();
+    }
+    // Warm the generation memo for both delayed paths so the timed loop
+    // measures proxy overhead, not first-touch PJRT decoding. Every memo
+    // prompt and topic is touched once, from every worker user id (the
+    // SmartCache classify call is seeded per query, not per user, but the
+    // warmup is cheap and keeps the timed loop fully memoized).
+    for t in 0..8 {
+        let user = format!("worker{t}");
+        for n in 0..MEMO_PROMPTS {
+            let req = Request::new(&user, "memo", &memo_prompt(n))
+                .service_type(ServiceType::Fixed {
+                    model: ModelId::Gpt4oMini,
+                    cache: CachePolicy::Skip,
+                    context_k: 0,
+                })
+                .no_context_update();
+            bridge.handle(req).unwrap();
+        }
+        for n in 0..TOPICS {
+            let req = Request::new(&user, "smart", &topic_prompt(n))
+                .service_type(ServiceType::SmartCache {
+                    model: ModelId::Claude3Haiku,
+                })
+                .no_context_update();
+            bridge.handle(req).unwrap();
+        }
+    }
+
+    let per_thread = if fast_mode() { 40 } else { 400 };
+    let mut report = BenchReport::new();
+    let mut rps_by_threads: Vec<(usize, f64)> = Vec::new();
+    for &threads in &[1usize, 4, 8] {
+        let (rps, p50, p99) = run_closed_loop(&bridge, threads, per_thread);
+        println!(
+            "throughput {threads:>2} threads  {:>9.0} req/s  p50 {p50:>7} us  p99 {p99:>7} us  ({} reqs)",
+            rps,
+            threads * per_thread
+        );
+        rps_by_threads.push((threads, rps));
+        report.push(
+            &format!("throughput/{threads}_threads"),
+            Json::obj(vec![
+                ("threads", Json::num(threads as f64)),
+                ("requests", Json::num((threads * per_thread) as f64)),
+                ("rps", Json::num(rps)),
+                ("p50_us", Json::num(p50 as f64)),
+                ("p99_us", Json::num(p99 as f64)),
+            ]),
+        );
+    }
+    if let (Some((_, r1)), Some((_, r8))) = (
+        rps_by_threads.iter().find(|(t, _)| *t == 1),
+        rps_by_threads.iter().find(|(t, _)| *t == 8),
+    ) {
+        let scaling = r8 / r1.max(1e-9);
+        println!("throughput scaling 8t/1t: {scaling:.2}x");
+        report.push(
+            "throughput/scaling_8v1",
+            Json::obj(vec![("ratio", Json::num(scaling))]),
+        );
+    }
+    report.write_env("LLMBRIDGE_BENCH_JSON");
+}

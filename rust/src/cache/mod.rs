@@ -12,12 +12,31 @@
 //!   relevance, and ground its reply in the cached content.
 //! * **Exact path** — the WhatsApp deployment's prefetch buttons (§5.1) use
 //!   exact-match entries to mask latency.
+//!
+//! ## Concurrency model
+//!
+//! The cache is read-mostly and designed so concurrent GETs never
+//! serialize on each other:
+//!
+//! * The vector index sits behind one `RwLock`; `search` takes a read
+//!   lock, only key insertion takes the write lock (briefly, for the whole
+//!   key batch of a PUT).
+//! * The `keys`, `objects`, and `exact` maps are split into
+//!   [`SHARD_COUNT`] hash shards, each behind its own `RwLock`. Lookups
+//!   take the touched shard's read lock; PUTs write-lock only the shard
+//!   the id/key hashes to.
+//! * Lock order is always index → keys → objects, one guard held at a
+//!   time (no nesting), so there is no deadlock shape.
+//! * PUT embeds all typed keys with one [`EngineHandle::embed_batch`]
+//!   round-trip instead of a serial `embed_text` per key.
+//!
+//! [`EngineHandle::embed_batch`]: crate::runtime::EngineHandle::embed_batch
 
 pub mod chunker;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::RwLock;
 
 use anyhow::Result;
 
@@ -26,6 +45,17 @@ use crate::models::pricing::ModelId;
 use crate::models::quality::{classify, QueryTraits};
 use crate::vecdb::flat::FlatIndex;
 use crate::vecdb::{Metric, VectorIndex};
+
+/// Number of hash shards for the key/object/exact maps. Power of two so
+/// shard selection is a mask; 16 is comfortably above the core counts the
+/// proxy targets, keeping write collisions rare.
+const SHARD_COUNT: usize = 16;
+
+/// GET over-fetches the index beyond `filter.k`, because type filtering
+/// and per-object dedup both shrink the raw hit list.
+const OVERFETCH_PER_K: usize = 8;
+/// Constant floor added on top of the per-k over-fetch.
+const OVERFETCH_BASE: usize = 16;
 
 /// What a key embedding was derived from (§3.5's "cached types").
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -110,10 +140,10 @@ pub struct SmartCacheOutcome {
 }
 
 pub struct SemanticCache {
-    index: Mutex<FlatIndex>,
-    keys: Mutex<HashMap<u64, KeyEntry>>,
-    objects: Mutex<HashMap<u64, CacheObject>>,
-    exact: Mutex<HashMap<String, String>>,
+    index: RwLock<FlatIndex>,
+    keys: Vec<RwLock<HashMap<u64, KeyEntry>>>,
+    objects: Vec<RwLock<HashMap<u64, CacheObject>>>,
+    exact: Vec<RwLock<HashMap<String, String>>>,
     next_id: AtomicU64,
     /// Relevance threshold the SmartCache ground truth uses.
     pub relevance_threshold: f64,
@@ -122,10 +152,10 @@ pub struct SemanticCache {
 impl SemanticCache {
     pub fn new(embed_dim: usize) -> SemanticCache {
         SemanticCache {
-            index: Mutex::new(FlatIndex::new(embed_dim, Metric::Cosine)),
-            keys: Mutex::new(HashMap::new()),
-            objects: Mutex::new(HashMap::new()),
-            exact: Mutex::new(HashMap::new()),
+            index: RwLock::new(FlatIndex::new(embed_dim, Metric::Cosine)),
+            keys: (0..SHARD_COUNT).map(|_| RwLock::new(HashMap::new())).collect(),
+            objects: (0..SHARD_COUNT).map(|_| RwLock::new(HashMap::new())).collect(),
+            exact: (0..SHARD_COUNT).map(|_| RwLock::new(HashMap::new())).collect(),
             next_id: AtomicU64::new(1),
             relevance_threshold: 0.40,
         }
@@ -135,12 +165,23 @@ impl SemanticCache {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
+    #[inline]
+    fn shard_of(id: u64) -> usize {
+        // Ids are sequential, so the low bits alone stripe evenly.
+        (id as usize) & (SHARD_COUNT - 1)
+    }
+
+    #[inline]
+    fn shard_of_str(s: &str) -> usize {
+        (crate::util::fnv1a(s.as_bytes()) as usize) & (SHARD_COUNT - 1)
+    }
+
     pub fn len_objects(&self) -> usize {
-        self.objects.lock().unwrap().len()
+        self.objects.iter().map(|s| s.read().unwrap().len()).sum()
     }
 
     pub fn len_keys(&self) -> usize {
-        self.keys.lock().unwrap().len()
+        self.keys.iter().map(|s| s.read().unwrap().len()).sum()
     }
 
     // ------------------------------------------------------------- exact
@@ -151,20 +192,26 @@ impl SemanticCache {
     }
 
     pub fn put_exact(&self, prompt: &str, response: &str) {
-        self.exact
-            .lock()
+        let key = Self::exact_key(prompt);
+        self.exact[Self::shard_of_str(&key)]
+            .write()
             .unwrap()
-            .insert(Self::exact_key(prompt), response.to_string());
+            .insert(key, response.to_string());
     }
 
     pub fn get_exact(&self, prompt: &str) -> Option<String> {
-        self.exact.lock().unwrap().get(&Self::exact_key(prompt)).cloned()
+        let key = Self::exact_key(prompt);
+        self.exact[Self::shard_of_str(&key)]
+            .read()
+            .unwrap()
+            .get(&key)
+            .cloned()
     }
 
     // --------------------------------------------------------------- PUT
 
     /// Explicit PUT (§3.5): store `text` under the supplied typed keys.
-    /// Keys are embedded via the engine behind `generator`.
+    /// All keys are embedded via one batched engine round-trip.
     pub fn put(
         &self,
         generator: &Generator,
@@ -174,7 +221,7 @@ impl SemanticCache {
         keys: &[(CachedType, String)],
     ) -> Result<u64> {
         let object_id = self.fresh_id();
-        self.objects.lock().unwrap().insert(
+        self.objects[Self::shard_of(object_id)].write().unwrap().insert(
             object_id,
             CacheObject {
                 id: object_id,
@@ -183,20 +230,27 @@ impl SemanticCache {
                 is_document,
             },
         );
-        for (ctype, key_text) in keys {
-            if key_text.trim().is_empty() {
-                continue;
+        let live: Vec<&(CachedType, String)> = keys
+            .iter()
+            .filter(|(_, key_text)| !key_text.trim().is_empty())
+            .collect();
+        let texts: Vec<&str> = live.iter().map(|pair| pair.1.as_str()).collect();
+        let embs = generator.engine().embed_batch(&texts)?;
+        let mut entries: Vec<(u64, CachedType)> = Vec::with_capacity(live.len());
+        {
+            // One write-lock acquisition for the whole key batch.
+            let mut index = self.index.write().unwrap();
+            for (pair, emb) in live.iter().zip(embs.iter()) {
+                let key_id = self.fresh_id();
+                index.insert(key_id, emb)?;
+                entries.push((key_id, pair.0));
             }
-            let emb = generator.engine().embed_text(key_text)?;
-            let key_id = self.fresh_id();
-            self.index.lock().unwrap().insert(key_id, &emb)?;
-            self.keys.lock().unwrap().insert(
-                key_id,
-                KeyEntry {
-                    object_id,
-                    ctype: *ctype,
-                },
-            );
+        }
+        for (key_id, ctype) in entries {
+            self.keys[Self::shard_of(key_id)]
+                .write()
+                .unwrap()
+                .insert(key_id, KeyEntry { object_id, ctype });
         }
         Ok(object_id)
     }
@@ -270,6 +324,10 @@ impl SemanticCache {
     // --------------------------------------------------------------- GET
 
     /// Low-level GET: top-k typed-key similarity search.
+    ///
+    /// Over-fetches `k * OVERFETCH_PER_K + OVERFETCH_BASE` raw keys, then
+    /// widens (doubling) if type filtering and per-object dedup starved the
+    /// result set below `k` while unseen keys remain.
     pub fn get(
         &self,
         generator: &Generator,
@@ -277,43 +335,67 @@ impl SemanticCache {
         filter: &GetFilter,
     ) -> Result<Vec<CacheHit>> {
         let emb = generator.engine().embed_text(query)?;
-        // Over-fetch then post-filter by type, keeping best score per object.
-        let raw = self
-            .index
-            .lock()
-            .unwrap()
-            .search(&emb, filter.k * 8 + 16, filter.min_score as f32);
-        let keys = self.keys.lock().unwrap();
-        let objects = self.objects.lock().unwrap();
+        let mut fetch = filter.k * OVERFETCH_PER_K + OVERFETCH_BASE;
+        loop {
+            let (raw, total) = {
+                let index = self.index.read().unwrap();
+                (
+                    index.search(&emb, fetch, filter.min_score as f32),
+                    index.len(),
+                )
+            };
+            // Fewer raw hits than asked for means everything above
+            // min_score has been seen; fetch >= total means the whole
+            // index was scanned.
+            let exhausted = raw.len() < fetch || fetch >= total;
+            let hits = self.resolve_hits(raw, filter);
+            if hits.len() >= filter.k || exhausted {
+                return Ok(hits);
+            }
+            fetch *= 2;
+        }
+    }
+
+    /// Post-filter raw index hits: map key → object, apply the type
+    /// filter, keep the best score per object, sort, truncate to `k`.
+    fn resolve_hits(&self, raw: Vec<crate::vecdb::Hit>, filter: &GetFilter) -> Vec<CacheHit> {
         let mut best: HashMap<u64, CacheHit> = HashMap::new();
         for hit in raw {
-            let Some(entry) = keys.get(&hit.id) else {
+            let entry = {
+                let shard = self.keys[Self::shard_of(hit.id)].read().unwrap();
+                shard.get(&hit.id).map(|e| (e.object_id, e.ctype))
+            };
+            let Some((object_id, ctype)) = entry else {
                 continue;
             };
             if let Some(types) = &filter.types {
-                if !types.contains(&entry.ctype) {
+                if !types.contains(&ctype) {
                     continue;
                 }
             }
-            let Some(obj) = objects.get(&entry.object_id) else {
+            let obj = {
+                let shard = self.objects[Self::shard_of(object_id)].read().unwrap();
+                shard.get(&object_id).cloned()
+            };
+            let Some(obj) = obj else {
                 continue;
             };
             let candidate = CacheHit {
-                object: obj.clone(),
-                matched_type: entry.ctype,
+                object: obj,
+                matched_type: ctype,
                 score: hit.score as f64,
             };
-            match best.get(&entry.object_id) {
+            match best.get(&object_id) {
                 Some(prev) if prev.score >= candidate.score => {}
                 _ => {
-                    best.insert(entry.object_id, candidate);
+                    best.insert(object_id, candidate);
                 }
             }
         }
         let mut hits: Vec<CacheHit> = best.into_values().collect();
         hits.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
         hits.truncate(filter.k);
-        Ok(hits)
+        hits
     }
 
     /// Delegated GET — "SmartCache" (§3.5): retrieve top-k across all
@@ -381,17 +463,30 @@ impl SemanticCache {
 
     /// Drop everything (tests / benchmarks).
     pub fn clear(&self) {
-        let dim = self.index.lock().unwrap().dim();
-        *self.index.lock().unwrap() = FlatIndex::new(dim, Metric::Cosine);
-        self.keys.lock().unwrap().clear();
-        self.objects.lock().unwrap().clear();
-        self.exact.lock().unwrap().clear();
+        {
+            // Single guarded scope: read dim and swap in the fresh index
+            // under one write lock (the seed locked the index twice in one
+            // statement — a latent deadlock shape).
+            let mut index = self.index.write().unwrap();
+            let dim = index.dim();
+            *index = FlatIndex::new(dim, Metric::Cosine);
+        }
+        for shard in &self.keys {
+            shard.write().unwrap().clear();
+        }
+        for shard in &self.objects {
+            shard.write().unwrap().clear();
+        }
+        for shard in &self.exact {
+            shard.write().unwrap().clear();
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn exact_path_normalizes() {
@@ -425,5 +520,46 @@ mod tests {
         let f = GetFilter::default();
         assert_eq!(f.k, 4);
         assert!(f.types.is_none());
+    }
+
+    /// Engine-free concurrency smoke over the sharded exact path: mixed
+    /// readers/writers across every shard, no deadlock, consistent counts.
+    #[test]
+    fn exact_path_concurrent_smoke() {
+        let c = Arc::new(SemanticCache::new(8));
+        let threads = 8;
+        let per_thread = 200;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for i in 0..per_thread {
+                        let prompt = format!("thread {t} prompt number {i}");
+                        c.put_exact(&prompt, "resp");
+                        assert_eq!(c.get_exact(&prompt).as_deref(), Some("resp"));
+                        // Cross-shard reads of other threads' keys.
+                        let _ = c.get_exact(&format!("thread {} prompt number {i}", (t + 1) % threads));
+                    }
+                });
+            }
+        });
+        let total: usize = c.exact.iter().map(|s| s.read().unwrap().len()).sum();
+        assert_eq!(total, threads * per_thread);
+        // Clear under the new guarded scopes empties every shard.
+        c.clear();
+        assert_eq!(c.get_exact("thread 0 prompt number 0"), None);
+        assert_eq!(c.len_keys(), 0);
+        assert_eq!(c.len_objects(), 0);
+    }
+
+    #[test]
+    fn exact_shards_stripe() {
+        // Distinct normalized prompts should not all land in one shard.
+        let c = SemanticCache::new(8);
+        for i in 0..64 {
+            c.put_exact(&format!("prompt variant {i}"), "r");
+        }
+        let populated = c.exact.iter().filter(|s| !s.read().unwrap().is_empty()).count();
+        assert!(populated > SHARD_COUNT / 2, "populated={populated}");
     }
 }

@@ -5,7 +5,7 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -61,14 +61,19 @@ struct StoredExchange {
 }
 
 /// The LLMBridge proxy.
+///
+/// Request-scoped state is read-mostly: `exchanges` (regeneration lookups)
+/// and `quotas` (gate checks) sit behind `RwLock`s so concurrent requests
+/// only serialize on the brief writes that record an exchange or charge a
+/// quota.
 pub struct Bridge {
     engine: EngineHandle,
     generator: Arc<Generator>,
     kv: KvStore,
     cache: SemanticCache,
     telemetry: Arc<Telemetry>,
-    exchanges: Mutex<HashMap<u64, StoredExchange>>,
-    quotas: Mutex<HashMap<String, QuotaState>>,
+    exchanges: RwLock<HashMap<u64, StoredExchange>>,
+    quotas: RwLock<HashMap<String, QuotaState>>,
     pub config: BridgeConfig,
 }
 
@@ -95,8 +100,8 @@ impl Bridge {
             kv: KvStore::new(),
             cache: SemanticCache::new(embed_dim),
             telemetry: Arc::new(Telemetry::default()),
-            exchanges: Mutex::new(HashMap::new()),
-            quotas: Mutex::new(HashMap::new()),
+            exchanges: RwLock::new(HashMap::new()),
+            quotas: RwLock::new(HashMap::new()),
             config,
         })
     }
@@ -134,7 +139,7 @@ impl Bridge {
     /// `proxy.request` (Table 2).
     pub fn handle(&self, req: Request) -> Result<Response> {
         let resp = self.resolve(&req, 0)?;
-        self.exchanges.lock().unwrap().insert(
+        self.exchanges.write().unwrap().insert(
             resp.metadata.request_id,
             StoredExchange {
                 request: req,
@@ -153,7 +158,7 @@ impl Bridge {
         new_service_type: Option<ServiceType>,
     ) -> Result<Response> {
         let (mut req, count) = {
-            let ex = self.exchanges.lock().unwrap();
+            let ex = self.exchanges.read().unwrap();
             let e = ex
                 .get(&request_id)
                 .ok_or_else(|| anyhow::anyhow!("unknown request id {request_id:x}"))?;
@@ -165,7 +170,7 @@ impl Bridge {
         };
         self.telemetry.counters.incr("regenerations");
         let resp = self.resolve(&req, count)?;
-        self.exchanges.lock().unwrap().insert(
+        self.exchanges.write().unwrap().insert(
             resp.metadata.request_id,
             StoredExchange {
                 request: req,
@@ -367,7 +372,7 @@ impl Bridge {
             }
         }
         if let ServiceType::UsageBased { .. } = &req.service_type {
-            let mut q = self.quotas.lock().unwrap();
+            let mut q = self.quotas.write().unwrap();
             let st = q.entry(req.user.clone()).or_default();
             st.requests += 1;
             st.input_tokens += input_tokens;
@@ -525,7 +530,7 @@ impl Bridge {
             ServiceType::UsageBased { allowed, fallback } => {
                 // Quota gate.
                 {
-                    let q = self.quotas.lock().unwrap();
+                    let q = self.quotas.read().unwrap();
                     if let Some(st) = q.get(&req.user) {
                         let quota = &self.config.quota;
                         if st.requests >= quota.max_requests
@@ -560,7 +565,7 @@ impl Bridge {
 
     /// Quota usage for a user (classroom dashboards).
     pub fn quota_usage(&self, user: &str) -> (u64, u64, u64) {
-        let q = self.quotas.lock().unwrap();
+        let q = self.quotas.read().unwrap();
         q.get(user)
             .map(|s| (s.requests, s.input_tokens, s.output_tokens))
             .unwrap_or((0, 0, 0))

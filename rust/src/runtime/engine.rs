@@ -8,6 +8,25 @@
 //! the rest of the proxy talks to it through the cloneable, thread-safe
 //! [`EngineHandle`] (mpsc RPC) — the same shape as handing requests to a
 //! GPU-serving process.
+//!
+//! ## Batching semantics
+//!
+//! The engine thread batches opportunistically: after each blocking
+//! `recv` it drains the queue with `try_recv` (up to [`MAX_DRAIN`]
+//! messages) and serves the whole wave in one wake-up. Within a wave,
+//! embed requests are **coalesced single-flight**: identical token
+//! windows — whether they arrive as separate [`EngineHandle::embed_text`]
+//! calls from concurrent request threads or inside one
+//! [`EngineHandle::embed_batch`] — execute the embedder exactly once and
+//! fan the result out to every waiter. `embed_batch` additionally turns
+//! N embeds into a single RPC round-trip (one channel send + recv), which
+//! is what the semantic cache's multi-key PUT rides on. Within a wave,
+//! arrival order is respected at batch granularity: LM steps ahead of the
+//! first embed run first, the coalesced embed batch executes at the first
+//! embed's position, then the remaining LM steps. No reply ever waits on
+//! an LM step that arrived after it; embeds arriving later in the wave
+//! ride the earlier batch (that is the coalescing win), and an LM step
+//! waits on the batch only when an embed genuinely arrived ahead of it.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -162,7 +181,144 @@ enum Rpc {
         length: i32,
         reply: mpsc::Sender<Result<Vec<f32>>>,
     },
+    /// N token windows embedded in one round-trip; replies in order.
+    EmbedBatch {
+        items: Vec<(Vec<i32>, i32)>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
     Shutdown,
+}
+
+/// Cap on how many queued messages one wake-up drains: bounds the latency
+/// a wave can add ahead of a newly arrived request.
+const MAX_DRAIN: usize = 64;
+
+/// Who is waiting for embed results from the current wave.
+enum EmbedWaiter {
+    One {
+        slot: usize,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Many {
+        slots: Vec<usize>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+}
+
+/// Intern a token window into the wave's single-flight job list: identical
+/// windows share one slot, so the embedder runs once per unique window.
+fn intern_embed(
+    jobs: &mut Vec<(Vec<i32>, i32)>,
+    slot_of: &mut HashMap<(Vec<i32>, i32), usize>,
+    tokens: Vec<i32>,
+    length: i32,
+) -> usize {
+    let key = (tokens, length);
+    if let Some(&s) = slot_of.get(&key) {
+        return s;
+    }
+    let s = jobs.len();
+    jobs.push(key.clone());
+    slot_of.insert(key, s);
+    s
+}
+
+/// Execute each unique embed job once (micro-batch loop) and fan the
+/// results out to every waiter. Errors are carried as strings internally
+/// because `anyhow::Error` is not `Clone`.
+fn flush_embeds(engine: &Engine, jobs: &[(Vec<i32>, i32)], waiters: Vec<EmbedWaiter>) {
+    let results: Vec<std::result::Result<Vec<f32>, String>> = jobs
+        .iter()
+        .map(|(t, l)| engine.embed_tokens(t, *l).map_err(|e| format!("{e:#}")))
+        .collect();
+    let result_at = |slot: usize| -> Result<Vec<f32>> {
+        match &results[slot] {
+            Ok(v) => Ok(v.clone()),
+            Err(e) => Err(anyhow!("{e}")),
+        }
+    };
+    for w in waiters {
+        match w {
+            EmbedWaiter::One { slot, reply } => {
+                let _ = reply.send(result_at(slot));
+            }
+            EmbedWaiter::Many { slots, reply } => {
+                let mut out = Vec::with_capacity(slots.len());
+                let mut err = None;
+                for s in slots {
+                    match result_at(s) {
+                        Ok(v) => out.push(v),
+                        Err(e) => {
+                            err = Some(e);
+                            break;
+                        }
+                    }
+                }
+                let _ = reply.send(match err {
+                    None => Ok(out),
+                    Some(e) => Err(e),
+                });
+            }
+        }
+    }
+}
+
+/// Serve one drained wave of messages. Returns true if a shutdown was seen.
+///
+/// Arrival order is respected at batch granularity: LM steps that arrived
+/// before the wave's first embed run first, the coalesced embed batch
+/// executes at the first embed's position, and LM steps that arrived after
+/// it run last. No reply ever waits on an LM step that arrived later; an
+/// LM step only waits on embeds when one arrived ahead of it.
+fn serve_wave(engine: &Engine, wave: Vec<Rpc>) -> bool {
+    let mut shutdown = false;
+    let mut jobs: Vec<(Vec<i32>, i32)> = Vec::new();
+    let mut slot_of: HashMap<(Vec<i32>, i32), usize> = HashMap::new();
+    let mut waiters: Vec<EmbedWaiter> = Vec::new();
+    let mut first_embed_pos: Option<usize> = None;
+    let mut lms: Vec<(usize, String, Vec<i32>, i32, mpsc::Sender<Result<Vec<f32>>>)> =
+        Vec::new();
+    for (pos, msg) in wave.into_iter().enumerate() {
+        match msg {
+            Rpc::Lm {
+                variant,
+                tokens,
+                length,
+                reply,
+            } => lms.push((pos, variant, tokens, length, reply)),
+            Rpc::Embed {
+                tokens,
+                length,
+                reply,
+            } => {
+                first_embed_pos.get_or_insert(pos);
+                let slot = intern_embed(&mut jobs, &mut slot_of, tokens, length);
+                waiters.push(EmbedWaiter::One { slot, reply });
+            }
+            Rpc::EmbedBatch { items, reply } => {
+                first_embed_pos.get_or_insert(pos);
+                let slots = items
+                    .into_iter()
+                    .map(|(t, l)| intern_embed(&mut jobs, &mut slot_of, t, l))
+                    .collect();
+                waiters.push(EmbedWaiter::Many { slots, reply });
+            }
+            Rpc::Shutdown => shutdown = true,
+        }
+    }
+    let mut pending = if waiters.is_empty() { None } else { Some(waiters) };
+    for (pos, variant, tokens, length, reply) in lms {
+        if first_embed_pos.is_some_and(|fp| pos > fp) {
+            if let Some(w) = pending.take() {
+                flush_embeds(engine, &jobs, w);
+            }
+        }
+        let _ = reply.send(engine.lm_logits(&variant, &tokens, length));
+    }
+    if let Some(w) = pending.take() {
+        flush_embeds(engine, &jobs, w);
+    }
+    shutdown
 }
 
 /// Cloneable, `Send + Sync` handle to the engine thread. (`mpsc::Sender`
@@ -202,24 +358,20 @@ impl EngineHandle {
                         return;
                     }
                 };
-                while let Ok(msg) = rx.recv() {
-                    match msg {
-                        Rpc::Lm {
-                            variant,
-                            tokens,
-                            length,
-                            reply,
-                        } => {
-                            let _ = reply.send(engine.lm_logits(&variant, &tokens, length));
+                // Blocking recv, then opportunistically drain the queue so
+                // a wave of concurrent requests is served in one wake-up
+                // (with single-flight coalescing of identical embeds).
+                while let Ok(first) = rx.recv() {
+                    let mut wave = Vec::with_capacity(8);
+                    wave.push(first);
+                    while wave.len() < MAX_DRAIN {
+                        match rx.try_recv() {
+                            Ok(m) => wave.push(m),
+                            Err(_) => break,
                         }
-                        Rpc::Embed {
-                            tokens,
-                            length,
-                            reply,
-                        } => {
-                            let _ = reply.send(engine.embed_tokens(&tokens, length));
-                        }
-                        Rpc::Shutdown => break,
+                    }
+                    if serve_wave(&engine, wave) {
+                        break;
                     }
                 }
             })
@@ -270,6 +422,27 @@ impl EngineHandle {
                 length,
                 reply,
             })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv_timeout(Duration::from_secs(120))
+            .map_err(|_| anyhow!("engine rpc timeout"))?
+    }
+
+    /// Embed many texts in one RPC round-trip. Results are in input order;
+    /// duplicate texts are computed once on the engine thread (single
+    /// flight) and fanned back out.
+    pub fn embed_batch(&self, texts: &[&str]) -> Result<Vec<Vec<f32>>> {
+        if texts.is_empty() {
+            return Ok(Vec::new());
+        }
+        let items: Vec<(Vec<i32>, i32)> = texts
+            .iter()
+            .map(|t| tokenizer::window(t, self.seq_len))
+            .collect();
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Rpc::EmbedBatch { items, reply })
             .map_err(|_| anyhow!("engine thread gone"))?;
         rx.recv_timeout(Duration::from_secs(120))
             .map_err(|_| anyhow!("engine rpc timeout"))?

@@ -1,10 +1,13 @@
 //! Telemetry substrate: counters, latency histograms (p50/p99/p99.9), and a
-//! per-model cost ledger. Everything is lock-light (atomics or short
-//! mutexes) so the request hot path never blocks on metrics.
+//! per-model cost ledger. Everything is lock-light so the request hot path
+//! never blocks on metrics: histograms are pure atomics, counters are
+//! atomics behind a read-mostly `RwLock` name map (the write lock is taken
+//! only the first time a counter name appears), and the cost ledger keeps a
+//! short mutex (multi-field updates).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::util::json::Json;
@@ -102,10 +105,13 @@ impl Histogram {
     }
 }
 
-/// Named monotonically-increasing counters.
+/// Named monotonically-increasing counters. Increments on an existing
+/// counter are a shared read lock + one atomic add, so concurrent requests
+/// bumping the same hot counter (`requests`, `cache_exact_hits`, …) never
+/// serialize; the write lock is only taken to register a new name.
 #[derive(Default)]
 pub struct Counters {
-    inner: Mutex<BTreeMap<String, u64>>,
+    inner: RwLock<HashMap<String, Arc<AtomicU64>>>,
 }
 
 impl Counters {
@@ -114,19 +120,38 @@ impl Counters {
     }
 
     pub fn add(&self, name: &str, by: u64) {
-        let mut m = self.inner.lock().unwrap();
-        *m.entry(name.to_string()).or_insert(0) += by;
+        if let Some(c) = self.inner.read().unwrap().get(name) {
+            c.fetch_add(by, Ordering::Relaxed);
+            return;
+        }
+        self.inner
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(AtomicU64::new(0)))
+            .fetch_add(by, Ordering::Relaxed);
     }
 
     pub fn get(&self, name: &str) -> u64 {
-        self.inner.lock().unwrap().get(name).copied().unwrap_or(0)
+        self.inner
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     pub fn to_json(&self) -> Json {
-        let m = self.inner.lock().unwrap();
+        let m = self.inner.read().unwrap();
+        // BTreeMap intermediate keeps the output deterministically sorted.
+        let sorted: BTreeMap<String, u64> = m
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
         Json::Obj(
-            m.iter()
-                .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+            sorted
+                .into_iter()
+                .map(|(k, v)| (k, Json::num(v as f64)))
                 .collect(),
         )
     }
@@ -261,5 +286,26 @@ mod tests {
         c.add("cache_hit", 2);
         assert_eq!(c.get("cache_hit"), 3);
         assert_eq!(c.get("missing"), 0);
+    }
+
+    #[test]
+    fn counters_concurrent_increments_are_lossless() {
+        let c = Counters::default();
+        let threads = 8;
+        let per_thread = 1000u64;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    for i in 0..per_thread {
+                        c.incr("requests");
+                        if i % 4 == 0 {
+                            c.add("cache_exact_hits", 1);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get("requests"), threads * per_thread);
+        assert_eq!(c.get("cache_exact_hits"), threads * per_thread / 4);
     }
 }

@@ -6,6 +6,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,
@@ -22,6 +24,61 @@ impl BenchResult {
             "bench {:<44} {:>8} iters  mean {:>12?}  p50 {:>12?}  p99 {:>12?}  min {:>12?}",
             self.name, self.iters, self.mean, self.p50, self.p99, self.min
         );
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_us", Json::num(self.mean.as_micros() as f64)),
+            ("p50_us", Json::num(self.p50.as_micros() as f64)),
+            ("p99_us", Json::num(self.p99.as_micros() as f64)),
+            ("min_us", Json::num(self.min.as_micros() as f64)),
+            ("max_us", Json::num(self.max.as_micros() as f64)),
+        ])
+    }
+}
+
+/// Collects a bench binary's results and writes them as one JSON object —
+/// the machine-readable side of the perf trajectory (`BENCH_*.json` at the
+/// repo root; see `scripts/bench.sh` and ROADMAP.md §Perf trajectory).
+#[derive(Default)]
+pub struct BenchReport {
+    entries: Vec<(String, Json)>,
+}
+
+impl BenchReport {
+    pub fn new() -> BenchReport {
+        BenchReport::default()
+    }
+
+    /// Record a completed [`BenchResult`] under its bench name.
+    pub fn record(&mut self, r: &BenchResult) {
+        self.entries.push((r.name.clone(), r.to_json()));
+    }
+
+    /// Record an arbitrary named JSON value (e.g. throughput summaries).
+    pub fn push(&mut self, name: &str, value: Json) {
+        self.entries.push((name.to_string(), value));
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.entries.iter().cloned().collect())
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    /// Write to the path named by env var `var`, if set and non-empty
+    /// (how `scripts/bench.sh` routes each bench's JSON to the repo root).
+    pub fn write_env(&self, var: &str) {
+        if let Ok(path) = std::env::var(var) {
+            if !path.is_empty() {
+                if let Err(e) = self.write(std::path::Path::new(&path)) {
+                    eprintln!("bench report write {path}: {e}");
+                }
+            }
+        }
     }
 }
 
@@ -75,5 +132,22 @@ mod tests {
         assert_eq!(r.iters, if fast_mode() { 3.max(16_usize.div_ceil(10)) } else { 16 });
         assert!(r.p50 <= r.p99);
         assert!(r.min <= r.p50);
+    }
+
+    #[test]
+    fn bench_report_roundtrips_as_json() {
+        let r = bench("report_probe", 0, 4, || {
+            black_box(2 + 2);
+        });
+        let mut report = BenchReport::new();
+        report.record(&r);
+        report.push("custom", Json::obj(vec![("rps", Json::num(123.0))]));
+        let parsed = Json::parse(&report.to_json().to_string()).unwrap();
+        assert!(parsed.get("report_probe").is_some());
+        assert_eq!(
+            parsed.get("custom").unwrap().f64_of("rps").unwrap(),
+            123.0
+        );
+        assert!(parsed.get("report_probe").unwrap().f64_of("iters").unwrap() >= 1.0);
     }
 }

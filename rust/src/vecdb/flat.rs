@@ -4,19 +4,40 @@
 //! sequential sweep — the fastest exact option at the corpus sizes the
 //! semantic cache sees (10³–10⁵ entries), and the baseline the IVF index is
 //! benchmarked against.
+//!
+//! Scan layout (the L3 hot path, see `benches/hotpath`):
+//! * Cosine rows are stored **pre-normalized** at insert, so the scan is a
+//!   pure dot product scaled once by the query's inverse norm.
+//! * The scan is **blocked four rows at a time** ([`super::dot4`]) so the
+//!   query stays in registers while rows stream from memory.
+//! * An id→slot [`HashMap`] makes [`FlatIndex::remove`] O(1) instead of the
+//!   former O(n) `position` scan.
+//! * [`FlatIndex::save`]/[`FlatIndex::load`] snapshot the raw id and row
+//!   bytes in bulk — load rebuilds the index without re-inserting (and,
+//!   because cosine rows are already normalized, without re-computing
+//!   norms) and validates the byte length against the declared header.
+
+use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use super::{push_topk, Hit, Metric, VectorIndex};
+use super::{dot4, normalize_in_place, push_topk, Hit, Metric, VectorIndex};
+
+/// Snapshot magic + format version. Bumped from the seed's headerless v1
+/// when rows became pre-normalized (a v1 reader would mis-score them).
+const SNAPSHOT_MAGIC: &[u8; 4] = b"LBV2";
+/// magic(4) + dim(u32) + metric(u8) + count(u64)
+const SNAPSHOT_HEADER: usize = 4 + 4 + 1 + 8;
 
 #[derive(Debug)]
 pub struct FlatIndex {
     dim: usize,
     metric: Metric,
     ids: Vec<u64>,
+    /// Row-major vectors; cosine rows are unit-normalized at insert.
     data: Vec<f32>,
-    /// Cached inverse norms for cosine (recomputed on insert).
-    inv_norms: Vec<f32>,
+    /// id → row slot, kept in sync by insert/remove.
+    slots: HashMap<u64, usize>,
 }
 
 impl FlatIndex {
@@ -26,7 +47,7 @@ impl FlatIndex {
             metric,
             ids: Vec::new(),
             data: Vec::new(),
-            inv_norms: Vec::new(),
+            slots: HashMap::new(),
         }
     }
 
@@ -38,9 +59,12 @@ impl FlatIndex {
         &self.data[i * self.dim..(i + 1) * self.dim]
     }
 
-    /// Binary snapshot: [dim u32][metric u8][count u64][ids..][data..].
+    /// Binary snapshot: `LBV2 [dim u32][metric u8][count u64][ids..][rows..]`
+    /// with ids and rows written as contiguous little-endian byte runs.
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
-        let mut out: Vec<u8> = Vec::with_capacity(16 + self.data.len() * 4);
+        let mut out: Vec<u8> =
+            Vec::with_capacity(SNAPSHOT_HEADER + self.ids.len() * 8 + self.data.len() * 4);
+        out.extend_from_slice(SNAPSHOT_MAGIC);
         out.extend((self.dim as u32).to_le_bytes());
         out.push(match self.metric {
             Metric::Cosine => 0,
@@ -49,10 +73,10 @@ impl FlatIndex {
         });
         out.extend((self.ids.len() as u64).to_le_bytes());
         for id in &self.ids {
-            out.extend(id.to_le_bytes());
+            out.extend_from_slice(&id.to_le_bytes());
         }
         for v in &self.data {
-            out.extend(v.to_le_bytes());
+            out.extend_from_slice(&v.to_le_bytes());
         }
         std::fs::write(path, out)?;
         Ok(())
@@ -60,33 +84,59 @@ impl FlatIndex {
 
     pub fn load(path: &std::path::Path) -> Result<FlatIndex> {
         let bytes = std::fs::read(path)?;
-        if bytes.len() < 13 {
-            bail!("truncated vecdb snapshot");
+        Self::from_snapshot_bytes(&bytes)
+    }
+
+    fn from_snapshot_bytes(bytes: &[u8]) -> Result<FlatIndex> {
+        if bytes.len() < SNAPSHOT_HEADER {
+            bail!(
+                "truncated vecdb snapshot: {} bytes, header is {SNAPSHOT_HEADER}",
+                bytes.len()
+            );
         }
-        let dim = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
-        let metric = match bytes[4] {
+        if &bytes[0..4] != SNAPSHOT_MAGIC {
+            bail!("unsupported vecdb snapshot (bad magic; expected LBV2)");
+        }
+        let dim = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+        let metric = match bytes[8] {
             0 => Metric::Cosine,
             1 => Metric::Dot,
             2 => Metric::L2,
             m => bail!("bad metric tag {m}"),
         };
-        let count = u64::from_le_bytes(bytes[5..13].try_into()?) as usize;
-        let mut idx = FlatIndex::new(dim, metric);
-        let mut off = 13;
+        let count = u64::from_le_bytes(bytes[9..17].try_into()?) as usize;
+        // Validate the declared geometry against the actual byte length
+        // before slicing: reject both short data and trailing garbage.
+        let want = count
+            .checked_mul(8)
+            .and_then(|ids| count.checked_mul(dim)?.checked_mul(4).map(|d| (ids, d)))
+            .and_then(|(ids, d)| SNAPSHOT_HEADER.checked_add(ids)?.checked_add(d))
+            .ok_or_else(|| {
+                anyhow::anyhow!("vecdb snapshot header overflows: count={count} dim={dim}")
+            })?;
+        if bytes.len() != want {
+            bail!(
+                "corrupt vecdb snapshot: {} bytes for count={count} dim={dim} (expected {want})",
+                bytes.len()
+            );
+        }
+        let ids_end = SNAPSHOT_HEADER + count * 8;
         let mut ids = Vec::with_capacity(count);
-        for _ in 0..count {
-            ids.push(u64::from_le_bytes(bytes[off..off + 8].try_into()?));
-            off += 8;
+        for c in bytes[SNAPSHOT_HEADER..ids_end].chunks_exact(8) {
+            ids.push(u64::from_le_bytes(c.try_into().unwrap()));
         }
-        for i in 0..count {
-            let mut v = Vec::with_capacity(dim);
-            for _ in 0..dim {
-                v.push(f32::from_le_bytes(bytes[off..off + 4].try_into()?));
-                off += 4;
-            }
-            idx.insert(ids[i], &v)?;
+        let mut data = Vec::with_capacity(count * dim);
+        for c in bytes[ids_end..].chunks_exact(4) {
+            data.push(f32::from_le_bytes(c.try_into().unwrap()));
         }
-        Ok(idx)
+        let slots = ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        Ok(FlatIndex {
+            dim,
+            metric,
+            ids,
+            data,
+            slots,
+        })
     }
 }
 
@@ -103,31 +153,33 @@ impl VectorIndex for FlatIndex {
         if vector.len() != self.dim {
             bail!("dim mismatch: got {}, want {}", vector.len(), self.dim);
         }
+        let slot = self.ids.len();
         self.ids.push(id);
         self.data.extend_from_slice(vector);
-        let n = super::dot(vector, vector).sqrt();
-        self.inv_norms.push(if n == 0.0 { 0.0 } else { 1.0 / n });
+        if self.metric == Metric::Cosine {
+            // Pre-normalize so the scan is a pure dot product.
+            let start = slot * self.dim;
+            normalize_in_place(&mut self.data[start..start + self.dim]);
+        }
+        self.slots.insert(id, slot);
         Ok(())
     }
 
     fn remove(&mut self, id: u64) -> bool {
-        if let Some(i) = self.ids.iter().position(|&x| x == id) {
-            let last = self.ids.len() - 1;
-            self.ids.swap(i, last);
-            self.ids.pop();
-            self.inv_norms.swap(i, last);
-            self.inv_norms.pop();
-            // swap_remove the row.
-            if i != last {
-                let (head, tail) = self.data.split_at_mut(last * self.dim);
-                head[i * self.dim..(i + 1) * self.dim]
-                    .copy_from_slice(&tail[..self.dim]);
-            }
-            self.data.truncate(last * self.dim);
-            true
-        } else {
-            false
+        let Some(i) = self.slots.remove(&id) else {
+            return false;
+        };
+        let last = self.ids.len() - 1;
+        self.ids.swap(i, last);
+        self.ids.pop();
+        // swap_remove the row.
+        if i != last {
+            let (head, tail) = self.data.split_at_mut(last * self.dim);
+            head[i * self.dim..(i + 1) * self.dim].copy_from_slice(&tail[..self.dim]);
+            self.slots.insert(self.ids[i], i);
         }
+        self.data.truncate(last * self.dim);
+        true
     }
 
     fn search(&self, query: &[f32], k: usize, min_score: f32) -> Vec<Hit> {
@@ -137,12 +189,41 @@ impl VectorIndex for FlatIndex {
         let mut top: Vec<Hit> = Vec::with_capacity(k + 1);
         match self.metric {
             Metric::Cosine => {
+                // Rows are unit-normalized, so score = dot(q, row) / |q|.
                 let qn = super::dot(query, query).sqrt();
                 let q_inv = if qn == 0.0 { 0.0 } else { 1.0 / qn };
-                for i in 0..self.ids.len() {
-                    let s = super::dot(query, self.row(i)) * q_inv * self.inv_norms[i];
+                let n = self.ids.len();
+                let blocks = n / 4;
+                for b in 0..blocks {
+                    let i = b * 4;
+                    let base = i * self.dim;
+                    let scores =
+                        dot4(query, &self.data[base..base + 4 * self.dim], self.dim);
+                    for (j, raw) in scores.iter().enumerate() {
+                        let s = raw * q_inv;
+                        if s >= min_score {
+                            push_topk(
+                                &mut top,
+                                Hit {
+                                    id: self.ids[i + j],
+                                    score: s,
+                                },
+                                k,
+                            );
+                        }
+                    }
+                }
+                for i in blocks * 4..n {
+                    let s = super::dot(query, self.row(i)) * q_inv;
                     if s >= min_score {
-                        push_topk(&mut top, Hit { id: self.ids[i], score: s }, k);
+                        push_topk(
+                            &mut top,
+                            Hit {
+                                id: self.ids[i],
+                                score: s,
+                            },
+                            k,
+                        );
                     }
                 }
             }
@@ -150,7 +231,14 @@ impl VectorIndex for FlatIndex {
                 for i in 0..self.ids.len() {
                     let s = self.metric.score(query, self.row(i));
                     if s >= min_score {
-                        push_topk(&mut top, Hit { id: self.ids[i], score: s }, k);
+                        push_topk(
+                            &mut top,
+                            Hit {
+                                id: self.ids[i],
+                                score: s,
+                            },
+                            k,
+                        );
                     }
                 }
             }
@@ -211,6 +299,29 @@ mod tests {
     }
 
     #[test]
+    fn remove_then_insert_keeps_slots_consistent() {
+        let mut r = Rng::new(21);
+        let mut idx = FlatIndex::new(4, Metric::Cosine);
+        for i in 0..40u64 {
+            idx.insert(i, &rand_vec(&mut r, 4)).unwrap();
+        }
+        for i in (0..40u64).step_by(3) {
+            assert!(idx.remove(i));
+        }
+        for i in 100..110u64 {
+            idx.insert(i, &rand_vec(&mut r, 4)).unwrap();
+        }
+        // Every surviving id is findable and removable exactly once.
+        let q = rand_vec(&mut r, 4);
+        let hits = idx.search(&q, idx.len(), f32::MIN);
+        assert_eq!(hits.len(), idx.len());
+        for h in &hits {
+            assert!(idx.remove(h.id));
+        }
+        assert_eq!(idx.len(), 0);
+    }
+
+    #[test]
     fn save_load_roundtrip() {
         let mut r = Rng::new(1);
         let mut idx = FlatIndex::new(8, Metric::Cosine);
@@ -231,6 +342,46 @@ mod tests {
             assert_eq!(x.id, y.id);
             assert!((x.score - y.score).abs() < 1e-6);
         }
+        // Loaded index stays mutable: remove works off the rebuilt slot map.
+        let mut back = back;
+        assert!(back.remove(a[0].id));
+        assert!(!back.remove(a[0].id));
+        assert_eq!(back.len(), 49);
+    }
+
+    #[test]
+    fn load_rejects_corrupt_snapshots() {
+        let mut r = Rng::new(2);
+        let mut idx = FlatIndex::new(8, Metric::Cosine);
+        for i in 0..10u64 {
+            idx.insert(i, &rand_vec(&mut r, 8)).unwrap();
+        }
+        let dir = std::env::temp_dir().join("llmbridge_vecdb_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flat_corrupt.bin");
+        idx.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // Short data: truncated mid-row.
+        let truncated = &good[..good.len() - 5];
+        let err = FlatIndex::from_snapshot_bytes(truncated).unwrap_err();
+        assert!(err.to_string().contains("corrupt vecdb snapshot"), "{err}");
+
+        // Trailing garbage after the declared payload.
+        let mut trailing = good.clone();
+        trailing.extend_from_slice(&[0xAB, 0xCD]);
+        let err = FlatIndex::from_snapshot_bytes(&trailing).unwrap_err();
+        assert!(err.to_string().contains("corrupt vecdb snapshot"), "{err}");
+
+        // Wrong magic (e.g. a pre-normalization v1 snapshot).
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        let err = FlatIndex::from_snapshot_bytes(&bad_magic).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+
+        // Shorter than the header.
+        let err = FlatIndex::from_snapshot_bytes(&good[..6]).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
     }
 
     #[test]
@@ -262,6 +413,47 @@ mod tests {
                 all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
                 all.truncate(k);
                 hits.len() == all.len().min(k)
+                    && hits
+                        .iter()
+                        .zip(&all)
+                        .all(|(h, (id, s))| h.id == *id && (h.score - s).abs() < 1e-5)
+            },
+        );
+    }
+
+    /// The normalized blocked scan must agree with the seed's scalar path
+    /// (cosine recomputed from raw vectors per row) on ids and scores.
+    #[test]
+    fn prop_normalized_scan_matches_scalar_seed_path() {
+        forall(
+            31,
+            20,
+            |r| {
+                let n = 4 + r.below(300);
+                let dim = 64;
+                let mut idx = FlatIndex::new(dim, Metric::Cosine);
+                let mut vecs = Vec::new();
+                for i in 0..n {
+                    let v = rand_vec(r, dim);
+                    idx.insert(i as u64, &v).unwrap();
+                    vecs.push(v);
+                }
+                let q = rand_vec(r, dim);
+                (idx, vecs, q)
+            },
+            |(idx, vecs, q)| {
+                let k = 4;
+                let hits = idx.search(q, k, f32::MIN);
+                // Seed scalar path: per-row Metric::Cosine.score over the
+                // raw (un-normalized) vectors, full sort, truncate.
+                let mut all: Vec<(u64, f32)> = vecs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, v)| (i as u64, Metric::Cosine.score(q, v)))
+                    .collect();
+                all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                all.truncate(k);
+                hits.len() == all.len()
                     && hits
                         .iter()
                         .zip(&all)

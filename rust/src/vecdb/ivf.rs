@@ -5,7 +5,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{push_topk, Hit, Metric, VectorIndex};
+use super::{dot, normalize_in_place, push_topk, Hit, Metric, VectorIndex};
 use crate::util::rng::Rng;
 
 pub struct IvfIndex {
@@ -113,11 +113,18 @@ impl VectorIndex for IvfIndex {
         if vector.len() != self.dim {
             bail!("dim mismatch: got {}, want {}", vector.len(), self.dim);
         }
+        let mut v = vector.to_vec();
+        if self.metric == Metric::Cosine {
+            // Stored pre-normalized (same as FlatIndex) so the posting-list
+            // scan is a pure dot; cosine is normalization-invariant, so
+            // cell assignment and scores are unchanged.
+            normalize_in_place(&mut v);
+        }
         if self.trained {
-            let c = self.nearest_cells(vector, 1)[0];
-            self.lists[c].push((id, vector.to_vec()));
+            let c = self.nearest_cells(&v, 1)[0];
+            self.lists[c].push((id, v));
         } else {
-            self.pending.push((id, vector.to_vec()));
+            self.pending.push((id, v));
         }
         Ok(())
     }
@@ -138,10 +145,29 @@ impl VectorIndex for IvfIndex {
 
     fn search(&self, query: &[f32], k: usize, min_score: f32) -> Vec<Hit> {
         let mut top: Vec<Hit> = Vec::with_capacity(k + 1);
+        // Stored cosine vectors are unit-normalized: score = dot / |q|,
+        // computed without re-deriving the row norm per query.
+        let q_inv = if self.metric == Metric::Cosine {
+            let n = dot(query, query).sqrt();
+            if n == 0.0 {
+                0.0
+            } else {
+                1.0 / n
+            }
+        } else {
+            0.0
+        };
+        let score_of = |v: &[f32]| -> f32 {
+            if self.metric == Metric::Cosine {
+                dot(query, v) * q_inv
+            } else {
+                self.metric.score(query, v)
+            }
+        };
         if !self.trained {
             // Fallback: exact scan over pending.
             for (id, v) in &self.pending {
-                let s = self.metric.score(query, v);
+                let s = score_of(v);
                 if s >= min_score {
                     push_topk(&mut top, Hit { id: *id, score: s }, k);
                 }
@@ -150,7 +176,7 @@ impl VectorIndex for IvfIndex {
         }
         for c in self.nearest_cells(query, self.nprobe) {
             for (id, v) in &self.lists[c] {
-                let s = self.metric.score(query, v);
+                let s = score_of(v);
                 if s >= min_score {
                     push_topk(&mut top, Hit { id: *id, score: s }, k);
                 }

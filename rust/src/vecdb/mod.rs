@@ -50,20 +50,58 @@ impl Metric {
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    // Unrolled by 8: the vecdb scan is an L3 hot path (see benches/hotpath).
+    // Chunked multi-accumulator kernel: `chunks_exact` removes the bounds
+    // checks that block auto-vectorization, and the 8 independent
+    // accumulators break the fp-add dependency chain so the compiler can
+    // keep one SIMD lane per accumulator (verified via benches/hotpath).
     let mut acc = [0.0f32; 8];
-    let chunks = a.len() / 8;
-    for c in 0..chunks {
-        let i = c * 8;
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
         for j in 0..8 {
-            acc[j] += a[i + j] * b[i + j];
+            acc[j] += xa[j] * xb[j];
         }
     }
     let mut s: f32 = acc.iter().sum();
-    for i in chunks * 8..a.len() {
-        s += a[i] * b[i];
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
     }
     s
+}
+
+/// Dot of one query against four consecutive rows of a row-major block.
+/// Iterating the query once with four accumulators keeps the query lane in
+/// registers across rows — the blocked form of the flat-scan hot loop.
+#[inline]
+pub(crate) fn dot4(q: &[f32], rows: &[f32], dim: usize) -> [f32; 4] {
+    debug_assert_eq!(q.len(), dim);
+    debug_assert_eq!(rows.len(), 4 * dim);
+    let (r0, rest) = rows.split_at(dim);
+    let (r1, rest) = rest.split_at(dim);
+    let (r2, r3) = rest.split_at(dim);
+    let q = &q[..dim];
+    let mut acc = [0.0f32; 4];
+    for i in 0..dim {
+        let x = q[i];
+        acc[0] += x * r0[i];
+        acc[1] += x * r1[i];
+        acc[2] += x * r2[i];
+        acc[3] += x * r3[i];
+    }
+    acc
+}
+
+/// Scale `v` to unit L2 norm in place (zero vectors are left untouched).
+/// Cosine indexes store rows pre-normalized so the scan is a pure dot.
+#[inline]
+pub(crate) fn normalize_in_place(v: &mut [f32]) {
+    let n = dot(v, v).sqrt();
+    if n > 0.0 {
+        let inv = 1.0 / n;
+        for x in v {
+            *x *= inv;
+        }
+    }
 }
 
 /// A search hit: id + similarity score (higher is better).
@@ -124,6 +162,31 @@ mod tests {
             let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
             assert!((dot(&a, &b) - naive).abs() < 1e-3, "len={len}");
         }
+    }
+
+    #[test]
+    fn dot4_matches_per_row_dot() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(9);
+        for dim in [1, 7, 8, 16, 64] {
+            let q: Vec<f32> = (0..dim).map(|_| r.normal() as f32).collect();
+            let rows: Vec<f32> = (0..4 * dim).map(|_| r.normal() as f32).collect();
+            let block = dot4(&q, &rows, dim);
+            for j in 0..4 {
+                let row = &rows[j * dim..(j + 1) * dim];
+                assert!((block[j] - dot(&q, row)).abs() < 1e-3, "dim={dim} row={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_unit_norm_and_zero_safe() {
+        let mut v = vec![3.0f32, 4.0];
+        normalize_in_place(&mut v);
+        assert!((dot(&v, &v).sqrt() - 1.0).abs() < 1e-6);
+        let mut z = vec![0.0f32; 4];
+        normalize_in_place(&mut z);
+        assert!(z.iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -1,0 +1,99 @@
+//! Concurrency and batching coverage for the sharded cache and the
+//! batched engine RPC path: mixed multi-threaded cache traffic must not
+//! deadlock and must land consistent counts, and `embed_batch` must be
+//! bit-identical to serial `embed_text`.
+
+mod common;
+
+use llmbridge::cache::GetFilter;
+
+/// N threads doing mixed put_interaction / get / get_exact against one
+/// cache: no deadlock, no lost writes, retrievable results.
+#[test]
+fn cache_concurrent_mixed_ops_no_deadlock() {
+    let bridge = common::bridge();
+    let objects_before = bridge.cache().len_objects();
+    let keys_before = bridge.cache().len_keys();
+    let threads = 4;
+    let per_thread = 10;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let bridge = bridge.clone();
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    let prompt =
+                        format!("concurrency thread {t} question {i} about subject {}", i % 3);
+                    let response = format!("concurrency answer {t} {i}");
+                    bridge
+                        .cache()
+                        .put_interaction(bridge.generator(), &prompt, &response)
+                        .unwrap();
+                    bridge.cache().put_exact(&prompt, &response);
+                    assert_eq!(
+                        bridge.cache().get_exact(&prompt).as_deref(),
+                        Some(response.as_str())
+                    );
+                    let hits = bridge
+                        .cache()
+                        .get(bridge.generator(), &prompt, &GetFilter::default())
+                        .unwrap();
+                    assert!(!hits.is_empty(), "semantic lookup starved for {prompt:?}");
+                }
+            });
+        }
+    });
+    // Each put_interaction adds one object and two keys (prompt+response).
+    assert_eq!(
+        bridge.cache().len_objects(),
+        objects_before + threads * per_thread
+    );
+    assert_eq!(
+        bridge.cache().len_keys(),
+        keys_before + 2 * threads * per_thread
+    );
+}
+
+/// Batched embeds return in input order, coalesce duplicates, and match
+/// the single-text path exactly (same executable, same window).
+#[test]
+fn embed_batch_matches_single_and_coalesces() {
+    let bridge = common::bridge();
+    let engine = bridge.engine();
+    let texts = [
+        "alpha beta gamma",
+        "delta epsilon zeta",
+        "alpha beta gamma", // duplicate of [0]: single-flight slot
+    ];
+    let batch = engine.embed_batch(&texts).unwrap();
+    assert_eq!(batch.len(), 3);
+    let single = engine.embed_text("alpha beta gamma").unwrap();
+    assert_eq!(batch[0], single);
+    assert_eq!(batch[0], batch[2]);
+    assert_ne!(batch[0], batch[1]);
+    assert_eq!(engine.embed_batch(&[]).unwrap().len(), 0);
+}
+
+/// Concurrent embed_text callers exercise the engine's drain-and-coalesce
+/// wave loop; identical texts from different threads must agree.
+#[test]
+fn concurrent_embeds_consistent() {
+    let bridge = common::bridge();
+    let baseline = bridge.engine().embed_text("shared probe text").unwrap();
+    std::thread::scope(|s| {
+        for t in 0..8 {
+            let bridge = bridge.clone();
+            let baseline = baseline.clone();
+            s.spawn(move || {
+                for i in 0..5 {
+                    let shared = bridge.engine().embed_text("shared probe text").unwrap();
+                    assert_eq!(shared, baseline);
+                    let own = bridge
+                        .engine()
+                        .embed_text(&format!("private probe {t} {i}"))
+                        .unwrap();
+                    assert_eq!(own.len(), bridge.engine().embed_dim());
+                }
+            });
+        }
+    });
+}

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Perf-trajectory runner: build release, run the hotpath and throughput
+# benches, and write BENCH_hotpath.json / BENCH_throughput.json at the
+# repo root so successive PRs have a comparable baseline.
+#
+# Usage: scripts/bench.sh [--fast]
+#   --fast   shrink iteration counts (LLMBRIDGE_BENCH_FAST=1) for CI.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+
+if [[ "${1:-}" == "--fast" ]]; then
+  export LLMBRIDGE_BENCH_FAST=1
+fi
+
+# The cargo workspace may sit at the repo root or under rust/.
+if [[ -f "$ROOT/Cargo.toml" ]]; then
+  WORKSPACE="$ROOT"
+elif [[ -f "$ROOT/rust/Cargo.toml" ]]; then
+  WORKSPACE="$ROOT/rust"
+else
+  echo "bench.sh: no Cargo.toml at $ROOT or $ROOT/rust — set up the workspace first" >&2
+  exit 1
+fi
+
+cd "$WORKSPACE"
+cargo build --release
+
+LLMBRIDGE_BENCH_JSON="$ROOT/BENCH_hotpath.json" \
+  cargo bench --bench hotpath
+
+LLMBRIDGE_BENCH_JSON="$ROOT/BENCH_throughput.json" \
+  cargo bench --bench throughput
+
+echo "wrote $ROOT/BENCH_hotpath.json and $ROOT/BENCH_throughput.json"
