@@ -1,216 +1,14 @@
-//! Model adapter (paper §3.3): a unified interface over the model pool,
-//! attribute-based model selection filters, and the delegation strategies —
-//! the verification cascade, the random-routing baseline it is evaluated
-//! against, and the latency-first combiner from the WhatsApp deployment.
+//! Model adapter (paper §3.3): a unified *execution* interface over the
+//! model pool — the verification cascade and the random-routing baseline
+//! it is evaluated against, plus the latency-first combiner from the
+//! WhatsApp deployment.
+//!
+//! Model *choice* — which model(s) a request should run on — lives in
+//! [`crate::router`]: the attribute filter ([`PoolFilter`]) and the
+//! cascade-role resolver ([`cascade_models`]) are re-exported here for
+//! continuity with the paper's adapter framing.
 
 pub mod cascade;
 
-use anyhow::{bail, Result};
-
-use crate::models::pricing::{Generation, LatencyClass, ModelId, ModelSpec, POOL};
-
+pub use crate::router::{cascade_models, PoolFilter};
 pub use cascade::{random_route, Cascade, CascadeResult};
-
-/// Attribute filter over the model pool (§3.3's "filter based interface").
-#[derive(Clone, Debug, Default)]
-pub struct PoolFilter {
-    pub family: Option<&'static str>,
-    pub generation: Option<Generation>,
-    pub max_usd_per_mtok_in: Option<f64>,
-    pub min_capability: Option<f64>,
-    pub min_context_window: Option<u64>,
-    pub latency_class: Option<LatencyClass>,
-    pub allowed: Option<Vec<ModelId>>,
-}
-
-impl PoolFilter {
-    pub fn matches(&self, spec: &ModelSpec) -> bool {
-        if let Some(f) = self.family {
-            if spec.family != f {
-                return false;
-            }
-        }
-        if let Some(g) = self.generation {
-            if spec.generation != g {
-                return false;
-            }
-        }
-        if let Some(p) = self.max_usd_per_mtok_in {
-            if spec.usd_per_mtok_in > p {
-                return false;
-            }
-        }
-        if let Some(c) = self.min_capability {
-            if spec.capability < c {
-                return false;
-            }
-        }
-        if let Some(w) = self.min_context_window {
-            if spec.context_window < w {
-                return false;
-            }
-        }
-        if let Some(l) = self.latency_class {
-            if spec.latency_class != l {
-                return false;
-            }
-        }
-        if let Some(allowed) = &self.allowed {
-            if !allowed.contains(&spec.id) {
-                return false;
-            }
-        }
-        true
-    }
-
-    pub fn select(&self) -> Vec<&'static ModelSpec> {
-        POOL.iter().filter(|m| self.matches(m)).collect()
-    }
-
-    /// Cheapest (by input price) matching model.
-    pub fn cheapest(&self) -> Result<ModelId> {
-        self.select()
-            .into_iter()
-            .min_by(|a, b| {
-                a.usd_per_mtok_in
-                    .partial_cmp(&b.usd_per_mtok_in)
-                    .unwrap()
-            })
-            .map(|m| m.id)
-            .ok_or_else(|| anyhow::anyhow!("no model matches filter"))
-    }
-
-    /// Highest-capability matching model.
-    pub fn best(&self) -> Result<ModelId> {
-        self.select()
-            .into_iter()
-            .max_by(|a, b| a.capability.partial_cmp(&b.capability).unwrap())
-            .map(|m| m.id)
-            .ok_or_else(|| anyhow::anyhow!("no model matches filter"))
-    }
-}
-
-/// Pick (m1, m2, verifier) for the cascade under the §3.3 heuristic:
-/// `cost(verifier) <= cost(m1) <= cost(m2)` by per-token price — unless
-/// the application pinned specific models.
-pub fn cascade_models(
-    generation: Generation,
-    m1: Option<ModelId>,
-    m2: Option<ModelId>,
-    verifier: Option<ModelId>,
-) -> Result<(ModelId, ModelId, ModelId)> {
-    let gen_filter = PoolFilter {
-        generation: Some(generation),
-        ..Default::default()
-    };
-    let candidates = gen_filter.select();
-    if candidates.is_empty() {
-        bail!("empty pool for generation {generation:?}");
-    }
-    let m2 = match m2 {
-        Some(m) => m,
-        None => gen_filter.best()?,
-    };
-    let m1 = match m1 {
-        Some(m) => m,
-        None => {
-            // Cheapest model that is still reasonably capable.
-            PoolFilter {
-                generation: Some(generation),
-                min_capability: Some(0.5),
-                ..Default::default()
-            }
-            .cheapest()?
-        }
-    };
-    let verifier = match verifier {
-        Some(m) => m,
-        None => {
-            // Verifier must not cost more than m1 (blended price heuristic);
-            // fall back to m1 itself when nothing cheaper qualifies.
-            let limit = m1.spec().usd_per_mtok_in;
-            PoolFilter {
-                generation: Some(generation),
-                max_usd_per_mtok_in: Some(limit),
-                min_capability: Some(0.55),
-                ..Default::default()
-            }
-            .best()
-            .unwrap_or(m1)
-        }
-    };
-    Ok((m1, m2, verifier))
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn filter_by_price() {
-        let cheap = PoolFilter {
-            max_usd_per_mtok_in: Some(0.3),
-            ..Default::default()
-        }
-        .select();
-        assert!(!cheap.is_empty());
-        assert!(cheap.iter().all(|m| m.usd_per_mtok_in <= 0.3));
-        assert!(!cheap.iter().any(|m| m.id == ModelId::Gpt4));
-    }
-
-    #[test]
-    fn cheapest_and_best() {
-        let all = PoolFilter::default();
-        let cheapest = all.cheapest().unwrap();
-        assert!(matches!(
-            cheapest,
-            ModelId::Phi3Mini | ModelId::Gemini20Flash
-        ));
-        assert_eq!(all.best().unwrap(), ModelId::SonarHugeOnline);
-    }
-
-    #[test]
-    fn empty_filter_errors() {
-        let none = PoolFilter {
-            min_capability: Some(2.0),
-            ..Default::default()
-        };
-        assert!(none.cheapest().is_err());
-    }
-
-    #[test]
-    fn default_cascade_old_generation() {
-        let (m1, m2, v) =
-            cascade_models(Generation::Old, None, None, None).unwrap();
-        assert_eq!(m1, ModelId::Gpt35Turbo);
-        assert_eq!(m2, ModelId::Gpt4);
-        // Verifier at most as expensive as m1 (or m1 itself).
-        assert!(v.spec().usd_per_mtok_in <= m1.spec().usd_per_mtok_in);
-    }
-
-    #[test]
-    fn paper_configs_respected_when_pinned() {
-        // §5.3 old setup: M1=GPT-3.5, M2=GPT-4, verifier=Claude Opus.
-        let (m1, m2, v) = cascade_models(
-            Generation::Old,
-            Some(ModelId::Gpt35Turbo),
-            Some(ModelId::Gpt4),
-            Some(ModelId::Claude3Opus),
-        )
-        .unwrap();
-        assert_eq!(
-            (m1, m2, v),
-            (ModelId::Gpt35Turbo, ModelId::Gpt4, ModelId::Claude3Opus)
-        );
-    }
-
-    #[test]
-    fn allowed_list_restricts() {
-        let f = PoolFilter {
-            allowed: Some(vec![ModelId::Phi3Mini, ModelId::Gpt4oMini]),
-            ..Default::default()
-        };
-        let picks = f.select();
-        assert_eq!(picks.len(), 2);
-    }
-}

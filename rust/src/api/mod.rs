@@ -45,6 +45,9 @@ pub enum ServiceType {
     Quality,
     /// Cheapest model, no context.
     Cost,
+    /// Best model under a price ceiling: the most capable model whose
+    /// input price is at or under this many USD per 1M input tokens.
+    Budget { max_usd_per_mtok_in: f64 },
     /// Verification-based model selection (§3.3): cheap M1 answers, a
     /// verifier scores it, expensive M2 is consulted below `threshold`.
     /// Uses last-5 context per the paper.
@@ -86,6 +89,7 @@ impl ServiceType {
             ServiceType::Fixed { .. } => "fixed",
             ServiceType::Quality => "quality",
             ServiceType::Cost => "cost",
+            ServiceType::Budget { .. } => "budget",
             ServiceType::ModelSelector { .. } => "model_selector",
             ServiceType::SmartContext { .. } => "smart_context",
             ServiceType::SmartCache { .. } => "smart_cache",
@@ -109,6 +113,12 @@ impl ServiceType {
             },
             "quality" => ServiceType::Quality,
             "cost" => ServiceType::Cost,
+            "budget" => ServiceType::Budget {
+                max_usd_per_mtok_in: j
+                    .get("max_usd_per_mtok_in")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(1.0),
+            },
             "model_selector" => ServiceType::ModelSelector {
                 threshold: j.get("threshold").and_then(|v| v.as_f64()).unwrap_or(8.0),
                 m1: j
@@ -213,6 +223,9 @@ impl ServiceType {
             }
             ServiceType::SmartCache { model } => {
                 pairs.push(("model", Json::str(model.as_str())));
+            }
+            ServiceType::Budget { max_usd_per_mtok_in } => {
+                pairs.push(("max_usd_per_mtok_in", Json::Num(*max_usd_per_mtok_in)));
             }
             ServiceType::UsageBased { allowed, fallback } => {
                 pairs.push((
@@ -450,6 +463,9 @@ mod tests {
         let cases = vec![
             ServiceType::Quality,
             ServiceType::Cost,
+            ServiceType::Budget {
+                max_usd_per_mtok_in: 2.5,
+            },
             ServiceType::Fixed {
                 model: ModelId::Gpt4oMini,
                 cache: CachePolicy::Skip,

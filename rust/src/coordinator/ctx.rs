@@ -1,0 +1,82 @@
+//! The per-request context threaded through the pipeline stages.
+
+use std::time::Instant;
+
+use crate::api::{CacheOutcome, Metadata, Request};
+use crate::models::generator::Completion;
+use crate::models::pricing::ModelId;
+use crate::models::quality::QueryTraits;
+use crate::router::ServicePolicy;
+
+/// Everything one request accumulates on its way through
+/// `CacheStage → ContextStage → RouteStage → AccountStage`.
+///
+/// Stages only read requests and write results here; the Bridge owns all
+/// shared state (cache, history, quotas, telemetry).
+pub struct RequestCtx<'a> {
+    pub req: &'a Request,
+    pub regen_count: u32,
+    pub start: Instant,
+    /// The lowered service policy driving every stage.
+    pub policy: ServicePolicy,
+    pub traits: QueryTraits,
+
+    // -- accumulated along the way -------------------------------------
+    /// (model, role) pairs for the transparency metadata.
+    pub models_used: Vec<(String, String)>,
+    /// Every real pool call made on behalf of this request (billing).
+    pub calls: Vec<Completion>,
+    pub cache_outcome: CacheOutcome,
+    /// A semantic-cache hit grounded the response (§3.5).
+    pub grounded: bool,
+    pub verifier_score: Option<f64>,
+    /// Response text produced by the smart-cache GET, consumed by the
+    /// route stage instead of a fresh generation.
+    pub smart_cache_response: Option<String>,
+    /// Milliseconds spent in delegated context-LLM calls (Fig 6c).
+    pub context_llm_ms: f64,
+    /// History messages that rode along as context.
+    pub context_messages: usize,
+    /// Context sufficiency for the quality model.
+    pub sufficiency: f64,
+    /// Fully-rendered model input (context + prompt).
+    pub input_text: String,
+
+    // -- outputs --------------------------------------------------------
+    pub text: Option<String>,
+    /// Latent quality of the served response (simulation-only).
+    pub latent: f64,
+    /// The model credited with the answer; `None` means the exact cache
+    /// served it.
+    pub answer_model: Option<ModelId>,
+    /// The route stage ran (quota is only charged for routed requests).
+    pub routed: bool,
+    pub meta: Option<Metadata>,
+}
+
+impl<'a> RequestCtx<'a> {
+    pub fn new(req: &'a Request, regen_count: u32, policy: ServicePolicy) -> RequestCtx<'a> {
+        RequestCtx {
+            req,
+            regen_count,
+            start: Instant::now(),
+            policy,
+            traits: req.effective_traits(),
+            models_used: Vec::new(),
+            calls: Vec::new(),
+            cache_outcome: CacheOutcome::Skipped,
+            grounded: false,
+            verifier_score: None,
+            smart_cache_response: None,
+            context_llm_ms: 0.0,
+            context_messages: 0,
+            sufficiency: 1.0,
+            input_text: String::new(),
+            text: None,
+            latent: 0.0,
+            answer_model: None,
+            routed: false,
+            meta: None,
+        }
+    }
+}

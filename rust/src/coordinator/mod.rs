@@ -1,7 +1,11 @@
 //! The coordinator: LLMBridge's request pipeline (paper Fig 2, order
-//! ②-④: cache → context manager → model adapter), regeneration,
-//! per-user FIFO dispatch, quotas, and follow-up prefetching.
+//! ②-④: cache → context manager → model adapter) as explicit stages
+//! threaded over a [`ctx::RequestCtx`], plus regeneration, per-user FIFO
+//! dispatch, quotas, and follow-up prefetching. Model choice is delegated
+//! to [`crate::router`].
 
+pub mod ctx;
 pub mod pipeline;
+pub mod stages;
 
-pub use pipeline::{Bridge, BridgeConfig};
+pub use pipeline::{BatchComparison, Bridge, BridgeConfig};

@@ -1,23 +1,29 @@
-//! The Bridge: everything a request touches, in the paper's order —
-//! cache (§3.5) → context manager (§3.4) → model adapter (§3.3) — plus
-//! transparency metadata, history updates, regeneration, quotas, and
-//! prefetch of anticipated follow-ups (§5.1).
+//! The Bridge: owns the shared proxy state (engine, cache, history,
+//! quotas, telemetry) and orchestrates the staged request pipeline in the
+//! paper's order — cache (§3.5) → context manager (§3.4) → model adapter
+//! (§3.3) → accounting — plus regeneration, follow-up prefetch (§5.1),
+//! and the §5.2 batch mode.
+//!
+//! Stage logic lives in [`super::stages`]; model choice lives in
+//! [`crate::router`]. `resolve` only threads a [`RequestCtx`] through the
+//! stages.
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::{Arc, RwLock};
-use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::adapter::{cascade_models, Cascade};
-use crate::api::{CacheOutcome, CachePolicy, Metadata, Request, Response, ServiceType};
+use crate::api::{CachePolicy, Request, Response, ServiceType};
 use crate::cache::SemanticCache;
-use crate::context::{Filter, FilterCtx, HistoryStore, Message};
+use crate::context::{HistoryStore, Message};
+use crate::coordinator::ctx::RequestCtx;
+use crate::coordinator::stages::{AccountStage, CacheStage, ContextStage, Flow, RouteStage, Stage};
+use crate::error::BridgeError;
 use crate::kvstore::KvStore;
-use crate::models::generator::{Completion, Generator};
-use crate::models::pricing::{Generation, LatencyClass, ModelId, POOL};
-use crate::models::quality::{latent_score, GenCondition};
+use crate::models::generator::Generator;
+use crate::models::pricing::{Generation, ModelId};
+use crate::router;
 use crate::runtime::{EngineHandle, Registry};
 use crate::telemetry::Telemetry;
 use crate::workload::classroom::Quota;
@@ -49,7 +55,7 @@ impl Default for BridgeConfig {
 }
 
 #[derive(Default, Clone, Debug)]
-struct QuotaState {
+pub(crate) struct QuotaState {
     requests: u64,
     input_tokens: u64,
     output_tokens: u64,
@@ -67,11 +73,11 @@ struct StoredExchange {
 /// only serialize on the brief writes that record an exchange or charge a
 /// quota.
 pub struct Bridge {
-    engine: EngineHandle,
-    generator: Arc<Generator>,
-    kv: KvStore,
-    cache: SemanticCache,
-    telemetry: Arc<Telemetry>,
+    pub(crate) engine: EngineHandle,
+    pub(crate) generator: Arc<Generator>,
+    pub(crate) kv: KvStore,
+    pub(crate) cache: SemanticCache,
+    pub(crate) telemetry: Arc<Telemetry>,
     exchanges: RwLock<HashMap<u64, StoredExchange>>,
     quotas: RwLock<HashMap<String, QuotaState>>,
     pub config: BridgeConfig,
@@ -137,7 +143,7 @@ impl Bridge {
     // ------------------------------------------------------------ handle
 
     /// `proxy.request` (Table 2).
-    pub fn handle(&self, req: Request) -> Result<Response> {
+    pub fn handle(&self, req: Request) -> Result<Response, BridgeError> {
         let resp = self.resolve(&req, 0)?;
         self.exchanges.write().unwrap().insert(
             resp.metadata.request_id,
@@ -156,17 +162,17 @@ impl Bridge {
         &self,
         request_id: u64,
         new_service_type: Option<ServiceType>,
-    ) -> Result<Response> {
+    ) -> Result<Response, BridgeError> {
         let (mut req, count) = {
             let ex = self.exchanges.read().unwrap();
             let e = ex
                 .get(&request_id)
-                .ok_or_else(|| anyhow::anyhow!("unknown request id {request_id:x}"))?;
+                .ok_or(BridgeError::UnknownRequest(request_id))?;
             (e.request.clone(), e.regen_count + 1)
         };
         req.service_type = match new_service_type {
             Some(st) => st,
-            None => escalate(&req.service_type, self.config.generation),
+            None => router::escalate(&req.service_type, self.config.generation),
         };
         self.telemetry.counters.incr("regenerations");
         let resp = self.resolve(&req, count)?;
@@ -182,230 +188,29 @@ impl Bridge {
 
     // ---------------------------------------------------------- pipeline
 
-    fn resolve(&self, req: &Request, regen_count: u32) -> Result<Response> {
-        let start = Instant::now();
+    /// Thread one request through the staged pipeline. All service-type
+    /// semantics live in the lowered [`router::ServicePolicy`]; all model
+    /// choice in the routing policy it carries.
+    fn resolve(&self, req: &Request, regen_count: u32) -> Result<Response, BridgeError> {
         self.telemetry.counters.incr("requests");
+        let policy = router::lower(&req.service_type, self.config.generation, regen_count);
+        let mut cx = RequestCtx::new(req, regen_count, policy);
 
-        let mut models_used: Vec<(String, String)> = Vec::new();
-        let mut calls: Vec<Completion> = Vec::new();
-        let mut cache_outcome = CacheOutcome::Skipped;
-        let mut grounded = false;
-        let mut verifier_score = None;
-
-        // ---- Stage ②: cache -------------------------------------------
-        // Exact-match lookup runs before history/traits are materialized:
-        // the prefetched-button path (§5.1) is the latency-critical one
-        // (EXPERIMENTS.md §Perf).
-        let skip_cache = matches!(
-            req.service_type,
-            ServiceType::Fixed {
-                cache: CachePolicy::Skip,
-                ..
-            }
-        );
-        if !skip_cache && regen_count == 0 {
-            if let Some(text) = self.cache.get_exact(&req.prompt) {
-                // Prefetched exact hit (WhatsApp buttons): zero LLM cost.
-                self.telemetry.counters.incr("cache_exact_hits");
-                let traits = req.effective_traits();
-                let latent = latent_score(&traits, 0.9, GenCondition::default());
-                let latency_ms = start.elapsed().as_secs_f64() * 1e3;
-                self.telemetry.request_latency.record(start.elapsed());
-                return Ok(self.finish(
-                    req,
-                    regen_count,
-                    text,
-                    Metadata {
-                        request_id: exchange_id(req, regen_count),
-                        service_type: req.service_type.name().to_string(),
-                        models_used: vec![],
-                        cache: CacheOutcome::ExactHit,
-                        context_messages: 0,
-                        input_tokens: 0,
-                        output_tokens: 0,
-                        cost_usd: 0.0,
-                        latency_ms,
-                        verifier_score: None,
-                        context_llm_ms: 0.0,
-                        llm_ms: 0.0,
-                        latent_quality: latent,
-                        grounded: false,
-                        regen_count,
-                    },
-                    "cache".to_string(),
-                    false,
-                ));
+        let stages: [&dyn Stage; 3] = [&CacheStage, &ContextStage, &RouteStage];
+        for stage in stages {
+            if let Flow::Done = stage.run(self, &mut cx)? {
+                break;
             }
         }
-        let traits = req.effective_traits();
-        let history = HistoryStore::new(&self.kv);
-        let msgs = history.get(&req.user, &req.conversation);
-        let mut smart_cache_response: Option<String> = None;
-        if let ServiceType::SmartCache { model } = &req.service_type {
-            if regen_count == 0 {
-                let out =
-                    self.cache
-                        .smart_get(&self.generator, *model, &req.prompt, &traits)?;
-                calls.extend(out.llm_calls.iter().cloned());
-                for c in &out.llm_calls {
-                    models_used.push((c.model.as_str().to_string(), "cache-llm".into()));
-                }
-                match (&out.hit, out.used) {
-                    (Some(h), true) => {
-                        cache_outcome = CacheOutcome::SemanticHit { score: h.score };
-                        grounded = true;
-                        smart_cache_response = out.response.clone();
-                        self.telemetry.counters.incr("cache_semantic_hits");
-                    }
-                    (Some(_), false) | (None, _) => {
-                        cache_outcome = CacheOutcome::Miss;
-                        self.telemetry.counters.incr("cache_misses");
-                    }
-                }
-            } else {
-                cache_outcome = CacheOutcome::Skipped;
-            }
-        }
+        AccountStage.run(self, &mut cx)?;
 
-        // ---- Stage ③: context manager ---------------------------------
-        let filter = self.context_filter(&req.service_type, regen_count);
-        let cx = FilterCtx {
-            generator: &self.generator,
-            traits: &traits,
+        let meta = cx.meta.take().expect("account stage builds metadata");
+        let text = cx.text.take().expect("pipeline produced a response");
+        let (model, grounded_citations) = match cx.answer_model {
+            Some(m) => (m.as_str().to_string(), m.spec().grounded_citations),
+            None => ("cache".to_string(), false),
         };
-        let selection = filter.apply(&msgs, &req.prompt, &cx)?;
-        let context_llm_ms: f64 = selection
-            .llm_calls
-            .iter()
-            .map(|c| c.latency.as_secs_f64() * 1e3)
-            .sum();
-        for c in &selection.llm_calls {
-            models_used.push((c.model.as_str().to_string(), "context-llm".into()));
-        }
-        calls.extend(selection.llm_calls.iter().cloned());
-        let ctx_messages = selection.messages(&msgs);
-        let sufficiency = selection.sufficiency(msgs.len());
-        let rendered_ctx: String = ctx_messages
-            .iter()
-            .map(|m| m.render())
-            .collect::<Vec<_>>()
-            .join("\n");
-        let input_text = if rendered_ctx.is_empty() {
-            req.prompt.clone()
-        } else {
-            format!("{rendered_ctx}\nuser: {}", req.prompt)
-        };
-
-        // ---- Stage ④: model adapter -----------------------------------
-        let cond = GenCondition {
-            context_sufficiency: sufficiency,
-            grounded,
-        };
-        let (text, latent, answer_model) = if let Some(resp_text) = smart_cache_response {
-            // Cache content already produced the response (cache-LLM calls
-            // are billed above).
-            let model = match &req.service_type {
-                ServiceType::SmartCache { model } => *model,
-                _ => unreachable!(),
-            };
-            let latent = latent_score(&traits, model.spec().capability, cond);
-            (resp_text, latent, model)
-        } else {
-            match &req.service_type {
-                ServiceType::ModelSelector {
-                    threshold,
-                    m1,
-                    m2,
-                    verifier,
-                } => {
-                    let (m1, m2, v) =
-                        cascade_models(self.config.generation, *m1, *m2, *verifier)?;
-                    let cascade = Cascade {
-                        m1,
-                        m2,
-                        verifier: v,
-                        threshold: *threshold,
-                    };
-                    let result =
-                        cascade.run(&self.generator, &input_text, &req.prompt, &traits, cond)?;
-                    models_used.push((m1.as_str().into(), "m1".into()));
-                    models_used.push((v.as_str().into(), "verifier".into()));
-                    if result.escalated {
-                        models_used.push((m2.as_str().into(), "m2".into()));
-                        self.telemetry.counters.incr("cascade_escalations");
-                    }
-                    verifier_score = Some(result.verifier_score);
-                    calls.extend(result.calls.iter().cloned());
-                    (
-                        result.completion.text.clone(),
-                        result.latent,
-                        result.completion.model,
-                    )
-                }
-                other => {
-                    let model = self.pick_model(other, req)?;
-                    let completion = self.generator.generate(model, &input_text, None)?;
-                    models_used.push((model.as_str().into(), "answer".into()));
-                    let latent = latent_score(&traits, model.spec().capability, cond);
-                    calls.push(completion.clone());
-                    (completion.text, latent, model)
-                }
-            }
-        };
-
-        // ---- Accounting -------------------------------------------------
-        let mut input_tokens = 0;
-        let mut output_tokens = 0;
-        let mut cost = 0.0;
-        let mut llm_ms = 0.0;
-        for c in &calls {
-            llm_ms += c.latency.as_secs_f64() * 1e3;
-            input_tokens += c.input_tokens;
-            output_tokens += c.output_tokens;
-            cost += c.cost_usd;
-            self.telemetry
-                .costs
-                .record(c.model.as_str(), c.input_tokens, c.output_tokens, c.cost_usd);
-            match c.model.spec().latency_class {
-                LatencyClass::Small => self.telemetry.llm_latency_small.record(c.latency),
-                LatencyClass::Large => self.telemetry.llm_latency_large.record(c.latency),
-            }
-        }
-        if let ServiceType::UsageBased { .. } = &req.service_type {
-            let mut q = self.quotas.write().unwrap();
-            let st = q.entry(req.user.clone()).or_default();
-            st.requests += 1;
-            st.input_tokens += input_tokens;
-            st.output_tokens += output_tokens;
-        }
-        let latency_ms = start.elapsed().as_secs_f64() * 1e3;
-        self.telemetry.request_latency.record(start.elapsed());
-
-        let meta = Metadata {
-            request_id: exchange_id(req, regen_count),
-            service_type: req.service_type.name().to_string(),
-            models_used,
-            cache: cache_outcome,
-            context_messages: ctx_messages.len(),
-            input_tokens,
-            output_tokens,
-            cost_usd: cost,
-            latency_ms,
-            verifier_score,
-            context_llm_ms,
-            llm_ms,
-            latent_quality: latent,
-            grounded,
-            regen_count,
-        };
-        Ok(self.finish(
-            req,
-            regen_count,
-            text,
-            meta,
-            answer_model.as_str().to_string(),
-            answer_model.spec().grounded_citations,
-        ))
+        Ok(self.finish(req, regen_count, text, meta, model, grounded_citations))
     }
 
     fn finish(
@@ -413,7 +218,7 @@ impl Bridge {
         req: &Request,
         regen_count: u32,
         text: String,
-        meta: Metadata,
+        meta: crate::api::Metadata,
         model: String,
         grounded_citations: bool,
     ) -> Response {
@@ -482,85 +287,44 @@ impl Bridge {
         Ok(())
     }
 
-    /// The context filter each service type implies (§3.2's list).
-    fn context_filter(&self, st: &ServiceType, regen_count: u32) -> Filter {
-        match st {
-            ServiceType::Fixed { context_k, .. } => Filter::LastK(*context_k),
-            ServiceType::Quality => Filter::All,
-            ServiceType::Cost => Filter::None,
-            // §3.2: model_selector "uses 5 previous messages as context".
-            ServiceType::ModelSelector { .. } => Filter::LastK(5),
-            ServiceType::SmartContext { k, model } => {
-                if regen_count > 0 {
-                    // Regeneration nudges toward quality: full last-k.
-                    Filter::LastK(*k)
-                } else {
-                    Filter::smart_last_k(*k, *model)
-                }
-            }
-            ServiceType::SmartCache { .. } => Filter::None,
-            ServiceType::UsageBased { .. } => Filter::LastK(3),
-            ServiceType::LatencyFirst => Filter::LastK(1),
+    // ------------------------------------------------------------- quota
+
+    /// Atomically gate one request against the user's quota: under a
+    /// single write lock, reject if any cap is already met, else reserve
+    /// the request slot. Check-and-reserve in one critical section means
+    /// concurrent requests from one user cannot all slip past the cap
+    /// between a read-side check and a later charge. Returns whether the
+    /// slot was reserved.
+    pub(crate) fn reserve_quota_slot(&self, user: &str) -> bool {
+        let mut q = self.quotas.write().unwrap();
+        let quota = &self.config.quota;
+        let st = q.entry(user.to_string()).or_default();
+        if st.requests >= quota.max_requests
+            || st.input_tokens >= quota.max_input_tokens
+            || st.output_tokens >= quota.max_output_tokens
+        {
+            return false;
+        }
+        st.requests += 1;
+        true
+    }
+
+    /// Roll back a reservation whose request failed after the gate — a
+    /// request that served nothing must not consume quota.
+    pub(crate) fn release_quota_slot(&self, user: &str) {
+        let mut q = self.quotas.write().unwrap();
+        if let Some(st) = q.get_mut(user) {
+            st.requests = st.requests.saturating_sub(1);
         }
     }
 
-    /// Model choice for the non-cascade service types.
-    fn pick_model(&self, st: &ServiceType, req: &Request) -> Result<ModelId> {
-        Ok(match st {
-            ServiceType::Fixed { model, .. } => *model,
-            // §3.2 quality: "the most expensive model".
-            ServiceType::Quality => POOL
-                .iter()
-                .filter(|m| m.generation == self.config.generation)
-                .max_by(|a, b| a.usd_per_mtok_in.partial_cmp(&b.usd_per_mtok_in).unwrap())
-                .map(|m| m.id)
-                .unwrap(),
-            // §3.2 cost: "the cheapest model".
-            ServiceType::Cost => POOL
-                .iter()
-                .filter(|m| m.generation == self.config.generation)
-                .min_by(|a, b| a.usd_per_mtok_in.partial_cmp(&b.usd_per_mtok_in).unwrap())
-                .map(|m| m.id)
-                .unwrap(),
-            ServiceType::SmartContext { .. } => match self.config.generation {
-                Generation::Old => ModelId::Gpt4,
-                Generation::New => ModelId::Gpt4o,
-            },
-            ServiceType::SmartCache { model } => *model,
-            ServiceType::UsageBased { allowed, fallback } => {
-                // Quota gate.
-                {
-                    let q = self.quotas.read().unwrap();
-                    if let Some(st) = q.get(&req.user) {
-                        let quota = &self.config.quota;
-                        if st.requests >= quota.max_requests
-                            || st.input_tokens >= quota.max_input_tokens
-                            || st.output_tokens >= quota.max_output_tokens
-                        {
-                            self.telemetry.counters.incr("quota_rejections");
-                            bail!("quota exceeded for user {}", req.user);
-                        }
-                    }
-                }
-                let wanted = req
-                    .params
-                    .get("model")
-                    .map(|m| ModelId::parse(m))
-                    .transpose()?;
-                match wanted {
-                    Some(m) if allowed.contains(&m) => m,
-                    Some(_) => {
-                        // Curated-list deny (the §5.2 "domain denylist"
-                        // analogy): fall back instead of failing.
-                        self.telemetry.counters.incr("model_denied");
-                        *fallback
-                    }
-                    None => *fallback,
-                }
-            }
-            ServiceType::LatencyFirst => ModelId::Claude3Haiku,
-            ServiceType::ModelSelector { .. } => unreachable!("handled by cascade"),
-        })
+    /// Charge a resolved request's token usage (its request slot was
+    /// reserved at the route gate).
+    pub(crate) fn charge_quota_tokens(&self, user: &str, input_tokens: u64, output_tokens: u64) {
+        let mut q = self.quotas.write().unwrap();
+        let st = q.entry(user.to_string()).or_default();
+        st.input_tokens += input_tokens;
+        st.output_tokens += output_tokens;
     }
 
     /// Quota usage for a user (classroom dashboards).
@@ -572,87 +336,8 @@ impl Bridge {
     }
 }
 
-fn exchange_id(req: &Request, regen_count: u32) -> u64 {
+pub(crate) fn exchange_id(req: &Request, regen_count: u32) -> u64 {
     req.stable_id() ^ ((regen_count as u64) << 56)
-}
-
-/// Same-service-type regeneration: "nudge the proxy to prioritize quality
-/// over cost" (§3.2).
-fn escalate(st: &ServiceType, generation: Generation) -> ServiceType {
-    let big = match generation {
-        Generation::Old => ModelId::Gpt4,
-        Generation::New => ModelId::Gpt4o,
-    };
-    match st {
-        // §3.3: "regenerate will directly route the prompt to the more
-        // expensive LLM".
-        ServiceType::ModelSelector { m2, .. } => ServiceType::Fixed {
-            model: m2.unwrap_or(big),
-            cache: CachePolicy::Skip,
-            context_k: 5,
-        },
-        // §3.2: "for smart_context, regenerating entails using more
-        // context".
-        ServiceType::SmartContext { k, .. } => ServiceType::Fixed {
-            model: big,
-            cache: CachePolicy::Skip,
-            context_k: (*k).max(5),
-        },
-        ServiceType::SmartCache { .. } => ServiceType::ModelSelector {
-            threshold: 8.0,
-            m1: None,
-            m2: None,
-            verifier: None,
-        },
-        ServiceType::Cost => ServiceType::Quality,
-        ServiceType::LatencyFirst => ServiceType::Fixed {
-            model: big,
-            cache: CachePolicy::Skip,
-            context_k: 5,
-        },
-        other => other.clone(),
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn escalate_model_selector_goes_direct_m2() {
-        let st = ServiceType::ModelSelector {
-            threshold: 8.0,
-            m1: None,
-            m2: Some(ModelId::Gpt4),
-            verifier: None,
-        };
-        match escalate(&st, Generation::Old) {
-            ServiceType::Fixed { model, .. } => assert_eq!(model, ModelId::Gpt4),
-            other => panic!("unexpected {other:?}"),
-        }
-    }
-
-    #[test]
-    fn escalate_smart_context_adds_context() {
-        let st = ServiceType::SmartContext {
-            k: 1,
-            model: ModelId::Claude3Haiku,
-        };
-        match escalate(&st, Generation::New) {
-            ServiceType::Fixed {
-                model, context_k, ..
-            } => {
-                assert_eq!(model, ModelId::Gpt4o);
-                assert_eq!(context_k, 5);
-            }
-            other => panic!("unexpected {other:?}"),
-        }
-    }
-
-    #[test]
-    fn escalate_cost_becomes_quality() {
-        assert_eq!(escalate(&ServiceType::Cost, Generation::New), ServiceType::Quality);
-    }
 }
 
 // ---------------------------------------------------------------------
@@ -672,25 +357,73 @@ pub struct BatchComparison {
 
 impl Bridge {
     /// Resolve every prompt under every model. Context and cache are
-    /// bypassed (benchmarking semantics: identical isolated inputs).
+    /// bypassed (benchmarking semantics: identical isolated inputs), so
+    /// every (prompt, model) cell is independent — a bounded pool of
+    /// scoped threads pulls cells off a shared counter and fans out
+    /// across the concurrent hot path.
     pub fn handle_batch(
         &self,
         user: &str,
         prompts: &[String],
         models: &[ModelId],
-    ) -> Result<Vec<BatchComparison>> {
+    ) -> Result<Vec<BatchComparison>, BridgeError> {
+        let n_cells = prompts.len() * models.len();
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(n_cells)
+            .max(1);
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let failed = std::sync::atomic::AtomicBool::new(false);
+        let cells: std::sync::Mutex<Vec<Option<Result<Response, BridgeError>>>> =
+            std::sync::Mutex::new((0..n_cells).map(|_| None).collect());
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    // Stop pulling fresh cells once any cell errored:
+                    // don't bill the rest of a batch that will be thrown
+                    // away (in-flight cells still finish).
+                    if failed.load(std::sync::atomic::Ordering::Relaxed) {
+                        break;
+                    }
+                    let cell = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if cell >= n_cells {
+                        break;
+                    }
+                    let (i, j) = (cell / models.len(), cell % models.len());
+                    let model = models[j];
+                    let req = Request::new(user, &format!("batch-{i}-{model}"), &prompts[i])
+                        .service_type(ServiceType::Fixed {
+                            model,
+                            cache: CachePolicy::Skip,
+                            context_k: 0,
+                        })
+                        .no_context_update();
+                    let result = self.handle(req);
+                    if result.is_err() {
+                        failed.store(true, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    cells.lock().unwrap()[cell] = Some(result);
+                });
+            }
+        });
+        let mut flat = cells.into_inner().unwrap();
+        // An error leaves later cells unfilled; surface the first one
+        // recorded (row-major) rather than an incomplete comparison.
+        if let Some(pos) = flat.iter().position(|c| matches!(c, Some(Err(_)))) {
+            if let Some(Err(e)) = flat.remove(pos) {
+                return Err(e);
+            }
+        }
+        let mut flat = flat.into_iter();
         let mut out = Vec::with_capacity(prompts.len());
-        for (i, prompt) in prompts.iter().enumerate() {
+        for prompt in prompts {
             let mut responses = Vec::with_capacity(models.len());
             for model in models {
-                let req = Request::new(user, &format!("batch-{i}-{model}"), prompt)
-                    .service_type(ServiceType::Fixed {
-                        model: *model,
-                        cache: CachePolicy::Skip,
-                        context_k: 0,
-                    })
-                    .no_context_update();
-                responses.push((*model, self.handle(req)?));
+                match flat.next() {
+                    Some(Some(Ok(resp))) => responses.push((*model, resp)),
+                    _ => unreachable!("error scan above returned early"),
+                }
             }
             self.telemetry.counters.incr("batch_prompts");
             out.push(BatchComparison {
@@ -699,5 +432,19 @@ impl Bridge {
             });
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exchange_id_varies_with_regen_count() {
+        let req = Request::new("u", "c", "prompt");
+        let a = exchange_id(&req, 0);
+        let b = exchange_id(&req, 1);
+        assert_ne!(a, b);
+        assert_eq!(a, exchange_id(&req, 0));
     }
 }

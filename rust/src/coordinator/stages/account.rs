@@ -1,0 +1,64 @@
+//! Final stage: accounting and transparency metadata.
+//!
+//! Folds every pool call the request made into tokens/cost/latency
+//! telemetry, charges quota-metered requests, and builds the [`Metadata`]
+//! the application sees (§3.2 transparency). Always runs — including for
+//! short-circuited exact hits, whose empty call list yields the zero-cost
+//! metadata the paper's buttons path promises.
+
+use crate::api::Metadata;
+use crate::coordinator::ctx::RequestCtx;
+use crate::coordinator::pipeline::{exchange_id, Bridge};
+use crate::error::BridgeError;
+use crate::models::pricing::LatencyClass;
+
+use super::{Flow, Stage};
+
+pub struct AccountStage;
+
+impl Stage for AccountStage {
+    fn run(&self, bridge: &Bridge, cx: &mut RequestCtx) -> Result<Flow, BridgeError> {
+        let mut input_tokens = 0;
+        let mut output_tokens = 0;
+        let mut cost = 0.0;
+        let mut llm_ms = 0.0;
+        for c in &cx.calls {
+            llm_ms += c.latency.as_secs_f64() * 1e3;
+            input_tokens += c.input_tokens;
+            output_tokens += c.output_tokens;
+            cost += c.cost_usd;
+            bridge
+                .telemetry
+                .costs
+                .record(c.model.as_str(), c.input_tokens, c.output_tokens, c.cost_usd);
+            match c.model.spec().latency_class {
+                LatencyClass::Small => bridge.telemetry.llm_latency_small.record(c.latency),
+                LatencyClass::Large => bridge.telemetry.llm_latency_large.record(c.latency),
+            }
+        }
+        if cx.policy.quota && cx.routed {
+            bridge.charge_quota_tokens(&cx.req.user, input_tokens, output_tokens);
+        }
+        let latency_ms = cx.start.elapsed().as_secs_f64() * 1e3;
+        bridge.telemetry.request_latency.record(cx.start.elapsed());
+
+        cx.meta = Some(Metadata {
+            request_id: exchange_id(cx.req, cx.regen_count),
+            service_type: cx.req.service_type.name().to_string(),
+            models_used: std::mem::take(&mut cx.models_used),
+            cache: cx.cache_outcome.clone(),
+            context_messages: cx.context_messages,
+            input_tokens,
+            output_tokens,
+            cost_usd: cost,
+            latency_ms,
+            verifier_score: cx.verifier_score,
+            context_llm_ms: cx.context_llm_ms,
+            llm_ms,
+            latent_quality: cx.latent,
+            grounded: cx.grounded,
+            regen_count: cx.regen_count,
+        });
+        Ok(Flow::Continue)
+    }
+}

@@ -1,0 +1,59 @@
+//! Stage ②: the semantic cache (§3.5).
+//!
+//! Exact-match lookup runs before history/traits are materialized: the
+//! prefetched-button path (§5.1) is the latency-critical one
+//! (EXPERIMENTS.md §Perf). The delegated semantic GET ("SmartCache") runs
+//! second and, on a used hit, carries its grounded response forward for
+//! the route stage to serve. Regeneration bypasses both lookups.
+
+use crate::api::CacheOutcome;
+use crate::coordinator::ctx::RequestCtx;
+use crate::coordinator::pipeline::Bridge;
+use crate::error::BridgeError;
+use crate::models::quality::{latent_score, GenCondition};
+
+use super::{Flow, Stage};
+
+pub struct CacheStage;
+
+impl Stage for CacheStage {
+    fn run(&self, bridge: &Bridge, cx: &mut RequestCtx) -> Result<Flow, BridgeError> {
+        if cx.regen_count > 0 {
+            return Ok(Flow::Continue);
+        }
+        if cx.policy.cache.exact {
+            if let Some(text) = bridge.cache.get_exact(&cx.req.prompt) {
+                // Prefetched exact hit (WhatsApp buttons): zero LLM cost.
+                bridge.telemetry.counters.incr("cache_exact_hits");
+                cx.cache_outcome = CacheOutcome::ExactHit;
+                cx.latent = latent_score(&cx.traits, 0.9, GenCondition::default());
+                cx.text = Some(text);
+                return Ok(Flow::Done);
+            }
+        }
+        if let Some(model) = cx.policy.cache.smart {
+            let out =
+                bridge
+                    .cache
+                    .smart_get(&bridge.generator, model, &cx.req.prompt, &cx.traits)?;
+            cx.calls.extend(out.llm_calls.iter().cloned());
+            for c in &out.llm_calls {
+                cx.models_used
+                    .push((c.model.as_str().to_string(), "cache-llm".into()));
+            }
+            match (&out.hit, out.used) {
+                (Some(h), true) => {
+                    cx.cache_outcome = CacheOutcome::SemanticHit { score: h.score };
+                    cx.grounded = true;
+                    cx.smart_cache_response = out.response.clone();
+                    bridge.telemetry.counters.incr("cache_semantic_hits");
+                }
+                (Some(_), false) | (None, _) => {
+                    cx.cache_outcome = CacheOutcome::Miss;
+                    bridge.telemetry.counters.incr("cache_misses");
+                }
+            }
+        }
+        Ok(Flow::Continue)
+    }
+}

@@ -1,0 +1,52 @@
+//! Stage ③: the context manager (§3.4).
+//!
+//! Loads the conversation history and runs the policy's filter tree over
+//! it; delegated context-LLM calls (SmartContext, Summarize) are billed
+//! to the request. Produces the fully-rendered model input.
+
+use crate::context::{FilterCtx, HistoryStore};
+use crate::coordinator::ctx::RequestCtx;
+use crate::coordinator::pipeline::Bridge;
+use crate::error::BridgeError;
+
+use super::{Flow, Stage};
+
+pub struct ContextStage;
+
+impl Stage for ContextStage {
+    fn run(&self, bridge: &Bridge, cx: &mut RequestCtx) -> Result<Flow, BridgeError> {
+        let msgs = HistoryStore::new(&bridge.kv).get(&cx.req.user, &cx.req.conversation);
+        let selection = cx.policy.context.apply(
+            &msgs,
+            &cx.req.prompt,
+            &FilterCtx {
+                generator: &bridge.generator,
+                traits: &cx.traits,
+            },
+        )?;
+        cx.context_llm_ms = selection
+            .llm_calls
+            .iter()
+            .map(|c| c.latency.as_secs_f64() * 1e3)
+            .sum();
+        for c in &selection.llm_calls {
+            cx.models_used
+                .push((c.model.as_str().to_string(), "context-llm".into()));
+        }
+        cx.calls.extend(selection.llm_calls.iter().cloned());
+        let ctx_messages = selection.messages(&msgs);
+        cx.sufficiency = selection.sufficiency(msgs.len());
+        cx.context_messages = ctx_messages.len();
+        let rendered: String = ctx_messages
+            .iter()
+            .map(|m| m.render())
+            .collect::<Vec<_>>()
+            .join("\n");
+        cx.input_text = if rendered.is_empty() {
+            cx.req.prompt.clone()
+        } else {
+            format!("{rendered}\nuser: {}", cx.req.prompt)
+        };
+        Ok(Flow::Continue)
+    }
+}

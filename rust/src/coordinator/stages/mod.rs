@@ -1,0 +1,35 @@
+//! The staged request pipeline (paper Fig 2, order ②-④).
+//!
+//! Each stage is a small, order-independent unit that reads the request's
+//! [`ServicePolicy`](crate::router::ServicePolicy) and mutates the
+//! [`RequestCtx`](super::ctx::RequestCtx); `Bridge::resolve` threads the
+//! context through `CacheStage → ContextStage → RouteStage` and always
+//! finishes with `AccountStage`. A stage returning [`Flow::Done`]
+//! short-circuits the remaining pre-accounting stages (the exact-hit fast
+//! path).
+
+pub mod account;
+pub mod cache;
+pub mod context;
+pub mod route;
+
+pub use account::AccountStage;
+pub use cache::CacheStage;
+pub use context::ContextStage;
+pub use route::RouteStage;
+
+use super::ctx::RequestCtx;
+use super::pipeline::Bridge;
+use crate::error::BridgeError;
+
+/// Whether the pipeline keeps running after a stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flow {
+    Continue,
+    /// The response is already in the context; skip to accounting.
+    Done,
+}
+
+pub trait Stage {
+    fn run(&self, bridge: &Bridge, cx: &mut RequestCtx) -> Result<Flow, BridgeError>;
+}

@@ -1,0 +1,126 @@
+//! Stage ④: the model adapter (§3.3), driven by the routing policy.
+//!
+//! Asks the request's [`RoutingPolicy`](crate::router::RoutingPolicy) for
+//! a [`RoutePlan`](crate::router::RoutePlan) and executes it: one
+//! generation, or the verification cascade. A smart-cache hit from stage
+//! ② short-circuits generation — the grounded response is served under
+//! the cache-LLM's name. The per-user quota gates allowlist requests
+//! before any model runs.
+
+use crate::adapter::Cascade;
+use crate::coordinator::ctx::RequestCtx;
+use crate::coordinator::pipeline::Bridge;
+use crate::error::BridgeError;
+use crate::models::quality::{latent_score, GenCondition, QueryTraits};
+use crate::router::{RouteError, RoutePlan};
+
+use super::{Flow, Stage};
+
+pub struct RouteStage;
+
+impl Stage for RouteStage {
+    fn run(&self, bridge: &Bridge, cx: &mut RequestCtx) -> Result<Flow, BridgeError> {
+        let cond = GenCondition {
+            context_sufficiency: cx.sufficiency,
+            grounded: cx.grounded,
+        };
+        let traits = cx.traits.clone();
+
+        if let Some(text) = cx.smart_cache_response.take() {
+            // Cache content already produced the response (cache-LLM calls
+            // were billed by the cache stage).
+            let model = cx
+                .policy
+                .cache
+                .smart
+                .expect("smart-cache hit implies a smart cache plan");
+            cx.latent = latent_score(&traits, model.spec().capability, cond);
+            cx.text = Some(text);
+            cx.answer_model = Some(model);
+            cx.routed = true;
+            return Ok(Flow::Continue);
+        }
+
+        let gated = cx.policy.quota;
+        if gated && !bridge.reserve_quota_slot(&cx.req.user) {
+            bridge.telemetry.counters.incr("quota_rejections");
+            return Err(BridgeError::QuotaExceeded {
+                user: cx.req.user.clone(),
+            });
+        }
+        if let Err(e) = execute_plan(bridge, cx, cond, &traits) {
+            // A request that served nothing must not burn quota — client
+            // typos or engine failures would otherwise drain the cap.
+            if gated {
+                bridge.release_quota_slot(&cx.req.user);
+            }
+            return Err(e);
+        }
+        cx.routed = true;
+        Ok(Flow::Continue)
+    }
+}
+
+/// Resolve the routing policy to a plan and execute it.
+fn execute_plan(
+    bridge: &Bridge,
+    cx: &mut RequestCtx,
+    cond: GenCondition,
+    traits: &QueryTraits,
+) -> Result<(), BridgeError> {
+    let requested = cx.req.params.get("model").map(|s| s.as_str());
+    let plan = cx.policy.routing.route(requested).map_err(|e| match e {
+        // The caller's own parameters made routing impossible.
+        RouteError::UnknownModel(_) | RouteError::NoModelUnderBudget { .. } => {
+            BridgeError::bad_request(e.to_string())
+        }
+        // A policy the pool can't satisfy is a configuration bug.
+        RouteError::EmptyPool(_) => BridgeError::Internal(anyhow::anyhow!("{e}")),
+    })?;
+
+    match plan {
+        RoutePlan::Single {
+            model,
+            denied_requested,
+        } => {
+            if denied_requested {
+                // Curated-list deny (the §5.2 "domain denylist" analogy):
+                // fall back instead of failing.
+                bridge.telemetry.counters.incr("model_denied");
+            }
+            let completion = bridge.generator.generate(model, &cx.input_text, None)?;
+            cx.models_used.push((model.as_str().into(), "answer".into()));
+            cx.latent = latent_score(traits, model.spec().capability, cond);
+            cx.text = Some(completion.text.clone());
+            cx.calls.push(completion);
+            cx.answer_model = Some(model);
+        }
+        RoutePlan::Cascade {
+            m1,
+            m2,
+            verifier,
+            threshold,
+        } => {
+            let cascade = Cascade {
+                m1,
+                m2,
+                verifier,
+                threshold,
+            };
+            let result =
+                cascade.run(&bridge.generator, &cx.input_text, &cx.req.prompt, traits, cond)?;
+            cx.models_used.push((m1.as_str().into(), "m1".into()));
+            cx.models_used.push((verifier.as_str().into(), "verifier".into()));
+            if result.escalated {
+                cx.models_used.push((m2.as_str().into(), "m2".into()));
+                bridge.telemetry.counters.incr("cascade_escalations");
+            }
+            cx.verifier_score = Some(result.verifier_score);
+            cx.calls.extend(result.calls.iter().cloned());
+            cx.latent = result.latent;
+            cx.text = Some(result.completion.text.clone());
+            cx.answer_model = Some(result.completion.model);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Typed request-path errors.
+//!
+//! The proxy used to surface every failure as a stringly `anyhow::Error`,
+//! and the REST layer guessed HTTP status codes by substring-matching the
+//! message ("quota" → 429). `BridgeError` replaces that: each variant
+//! carries exactly what the caller needs and maps to one status code, so
+//! new failure modes get a status by construction, not by grep.
+
+use std::fmt;
+
+/// Everything `Bridge::handle` / `Bridge::regenerate` can fail with.
+#[derive(Debug)]
+pub enum BridgeError {
+    /// The per-user quota gate rejected the request (§5.2 classroom caps).
+    QuotaExceeded { user: String },
+    /// `regenerate` was asked about an exchange the proxy never served.
+    UnknownRequest(u64),
+    /// The caller sent something unparseable or unknown (bad JSON, unknown
+    /// model id, unknown service type).
+    BadRequest(String),
+    /// Engine / runtime failure — nothing the caller did wrong.
+    Internal(anyhow::Error),
+}
+
+impl BridgeError {
+    /// The HTTP status the REST layer serves for this error.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            BridgeError::QuotaExceeded { .. } => 429,
+            BridgeError::UnknownRequest(_) => 404,
+            BridgeError::BadRequest(_) => 400,
+            BridgeError::Internal(_) => 500,
+        }
+    }
+
+    pub fn bad_request(msg: impl Into<String>) -> BridgeError {
+        BridgeError::BadRequest(msg.into())
+    }
+}
+
+impl fmt::Display for BridgeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BridgeError::QuotaExceeded { user } => {
+                write!(f, "quota exceeded for user {user}")
+            }
+            BridgeError::UnknownRequest(id) => write!(f, "unknown request id {id:x}"),
+            BridgeError::BadRequest(msg) => write!(f, "{msg}"),
+            // `{:#}` keeps the anyhow context chain in one line.
+            BridgeError::Internal(e) => write!(f, "{e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for BridgeError {}
+
+impl From<anyhow::Error> for BridgeError {
+    fn from(e: anyhow::Error) -> BridgeError {
+        BridgeError::Internal(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_mapping() {
+        assert_eq!(BridgeError::QuotaExceeded { user: "u".into() }.http_status(), 429);
+        assert_eq!(BridgeError::UnknownRequest(7).http_status(), 404);
+        assert_eq!(BridgeError::bad_request("nope").http_status(), 400);
+        assert_eq!(
+            BridgeError::Internal(anyhow::anyhow!("boom")).http_status(),
+            500
+        );
+    }
+
+    #[test]
+    fn display_preserves_quota_message() {
+        // The CLI and logs still read like the old anyhow messages.
+        let e = BridgeError::QuotaExceeded { user: "student-1".into() };
+        assert_eq!(e.to_string(), "quota exceeded for user student-1");
+    }
+
+    #[test]
+    fn anyhow_interop_both_ways() {
+        // Stages `?` anyhow errors into BridgeError...
+        let be: BridgeError = anyhow::anyhow!("engine died").into();
+        assert!(matches!(be, BridgeError::Internal(_)));
+        // ...and application code `?`s BridgeError back into anyhow.
+        let ae: anyhow::Error = BridgeError::UnknownRequest(0xAB).into();
+        assert!(ae.to_string().contains("ab"));
+    }
+}

@@ -28,9 +28,10 @@
 //! ## Architecture (three layers, Python never on the request path)
 //!
 //! ```text
-//!  L3  this crate       the proxy: API, coordinator pipeline, adapter,
-//!                       context manager, semantic cache, FIFO queues,
-//!                       REST server, telemetry, workload generators
+//!  L3  this crate       the proxy: API, staged coordinator pipeline,
+//!                       policy router, adapter, context manager, semantic
+//!                       cache, FIFO queues, REST server, telemetry,
+//!                       workload generators
 //!  L2  python/compile/  JAX transformer pool + embedder (build time)
 //!  L1  python/.../kernels  Pallas attention + matmul (build time)
 //!  RT  [`runtime`]      PJRT CPU client executing artifacts/*.hlo.txt
@@ -46,10 +47,12 @@ pub mod api;
 pub mod cache;
 pub mod context;
 pub mod coordinator;
+pub mod error;
 pub mod experiments;
 pub mod kvstore;
 pub mod models;
 pub mod queuing;
+pub mod router;
 pub mod runtime;
 pub mod server;
 pub mod telemetry;
@@ -61,6 +64,8 @@ pub mod workload;
 pub mod prelude {
     pub use crate::api::{Metadata, Request, Response, ServiceType};
     pub use crate::coordinator::Bridge;
+    pub use crate::error::BridgeError;
     pub use crate::models::pricing::{ModelId, POOL};
+    pub use crate::router::{RoutingPolicy, ServicePolicy};
     pub use crate::workload::whatsapp::WhatsAppWorkload;
 }

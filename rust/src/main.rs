@@ -37,6 +37,9 @@ fn service_type_from(args: &Args) -> Result<ServiceType> {
     Ok(match args.get_or("service", "model_selector") {
         "quality" => ServiceType::Quality,
         "cost" => ServiceType::Cost,
+        "budget" => ServiceType::Budget {
+            max_usd_per_mtok_in: args.f64_or("max-usd-per-mtok", 1.0),
+        },
         "model_selector" => ServiceType::default(),
         "smart_context" => ServiceType::SmartContext {
             k: args.usize_or("k", 5),

@@ -238,6 +238,55 @@ pub fn call_cost(model: ModelId, input_tokens: u64, output_tokens: u64) -> f64 {
         + output_tokens as f64 * spec.usd_per_mtok_out / 1e6
 }
 
+// ------------------------------------------------------- scoring helpers
+// Used by the routing policies (`crate::router`): pool scans scored by the
+// price/capability columns above. Tie-breaking is part of the contract —
+// `min_by` keeps the *first* of equal entries, `max_by` the *last* — so
+// policies inherit a deterministic pick from the POOL ordering.
+
+/// Pool entries belonging to one model generation.
+pub fn pool_in(generation: Generation) -> impl Iterator<Item = &'static ModelSpec> {
+    POOL.iter().filter(move |m| m.generation == generation)
+}
+
+/// Cheapest entry by input price (ties keep the first). The single
+/// price-scan implementation every selection path shares.
+pub fn min_price_of<'a>(specs: impl IntoIterator<Item = &'a ModelSpec>) -> Option<ModelId> {
+    specs
+        .into_iter()
+        .min_by(|a, b| a.usd_per_mtok_in.partial_cmp(&b.usd_per_mtok_in).unwrap())
+        .map(|m| m.id)
+}
+
+/// Most expensive entry by input price (ties keep the last).
+pub fn max_price_of<'a>(specs: impl IntoIterator<Item = &'a ModelSpec>) -> Option<ModelId> {
+    specs
+        .into_iter()
+        .max_by(|a, b| a.usd_per_mtok_in.partial_cmp(&b.usd_per_mtok_in).unwrap())
+        .map(|m| m.id)
+}
+
+/// Cheapest model by input price within a generation (§3.2 "cost").
+pub fn cheapest_in(generation: Generation) -> Option<ModelId> {
+    min_price_of(pool_in(generation))
+}
+
+/// Most expensive model by input price within a generation (§3.2
+/// "quality": "the most expensive model").
+pub fn priciest_in(generation: Generation) -> Option<ModelId> {
+    max_price_of(pool_in(generation))
+}
+
+/// The generation's default "big" model — the escalation target §3.2/§3.3
+/// route regenerations to ("directly route the prompt to the more
+/// expensive LLM").
+pub fn flagship(generation: Generation) -> ModelId {
+    match generation {
+        Generation::Old => ModelId::Gpt4,
+        Generation::New => ModelId::Gpt4o,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -276,6 +325,18 @@ mod tests {
     fn call_cost_math() {
         // 1000 in + 100 out on gpt-4: 1000*30/1e6 + 100*60/1e6 = 0.036.
         assert!((call_cost(ModelId::Gpt4, 1000, 100) - 0.036).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scoring_helpers_pick_price_extremes() {
+        assert_eq!(cheapest_in(Generation::Old), Some(ModelId::Gpt35Turbo));
+        assert_eq!(priciest_in(Generation::Old), Some(ModelId::Gpt4));
+        // New generation has a 0.10 price tie (Phi-3 vs Gemini Flash);
+        // min_by keeps the first POOL entry.
+        assert_eq!(cheapest_in(Generation::New), Some(ModelId::Phi3Mini));
+        assert_eq!(priciest_in(Generation::New), Some(ModelId::SonarHugeOnline));
+        assert_eq!(flagship(Generation::Old), ModelId::Gpt4);
+        assert_eq!(flagship(Generation::New), ModelId::Gpt4o);
     }
 
     #[test]

@@ -1,0 +1,498 @@
+//! The model router: every model-choice decision in the proxy, as data.
+//!
+//! The coordinator used to make model choices in four places — a
+//! `pick_model` match, an `escalate` match, the cascade arm of `resolve`,
+//! and the context-filter match — so adding a service type meant touching
+//! all of them. Here a [`ServiceType`](crate::api::ServiceType) *lowers*
+//! to a declarative [`ServicePolicy`]:
+//!
+//! * which caches to consult ([`CachePlan`]),
+//! * which context filter to run ([`Filter`]),
+//! * how to choose the answering model(s) ([`RoutingPolicy`]),
+//! * whether the per-user quota gates/charges the request.
+//!
+//! The pipeline stages execute whatever the policy says; they never
+//! inspect the service type. Adding a service type is one lowering entry
+//! (plus, optionally, an [`escalate`] nudge) — see ROADMAP.md
+//! §Architecture.
+//!
+//! Routing policies are *scored over the pool*: each strategy is a
+//! deterministic argmin/argmax over [`POOL`](crate::models::pricing::POOL)
+//! columns (price, capability, latency class, decode budget), using the
+//! scoring helpers in [`crate::models::pricing`].
+
+pub mod filter;
+
+pub use filter::{cascade_models, PoolFilter};
+
+use std::fmt;
+
+use crate::api::{CachePolicy, ServiceType};
+use crate::context::Filter;
+use crate::models::pricing::{
+    cheapest_in, flagship, priciest_in, Generation, LatencyClass, ModelId, POOL,
+};
+
+/// Cache participation for one request (regeneration always bypasses both
+/// lookups; that rule lives in the cache stage, not the plan).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CachePlan {
+    /// Consult the exact-match prefetch store (§5.1 buttons).
+    pub exact: bool,
+    /// Delegated semantic GET grounded by this cache-LLM (§3.5).
+    pub smart: Option<ModelId>,
+}
+
+/// How the answering model(s) are chosen. Every variant is a pure
+/// function of the pool table plus the request's `model` param.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RoutingPolicy {
+    /// Always this model.
+    Fixed(ModelId),
+    /// Cheapest model by input price within a generation (§3.2 "cost").
+    CostMin(Generation),
+    /// Most expensive model by input price within a generation (§3.2
+    /// "quality" — the paper's proxy for best).
+    QualityMax(Generation),
+    /// Most capable model whose input price is at or under a USD/Mtok
+    /// ceiling; a ceiling no pool model satisfies rejects the request
+    /// (a cost-control policy must never silently overspend).
+    BudgetCap {
+        generation: Generation,
+        max_usd_per_mtok_in: f64,
+    },
+    /// Fastest model in a latency class: smallest decode budget
+    /// (`default_max_new`), ties broken by capability.
+    LatencyClass(LatencyClass),
+    /// Curated model list (§5.2): the requested model if allowed, else the
+    /// fallback. Pairs with `ServicePolicy::quota`.
+    Allowlist {
+        allowed: Vec<ModelId>,
+        fallback: ModelId,
+    },
+    /// Verification cascade (§3.3): unpinned roles resolved over the pool
+    /// at route time by [`cascade_models`].
+    CascadeVerify {
+        generation: Generation,
+        threshold: f64,
+        m1: Option<ModelId>,
+        m2: Option<ModelId>,
+        verifier: Option<ModelId>,
+    },
+}
+
+/// A routed request: either one model answers, or the cascade runs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RoutePlan {
+    Single {
+        model: ModelId,
+        /// The caller asked for an off-list model and was re-routed to the
+        /// fallback (the §5.2 "curated list" deny).
+        denied_requested: bool,
+    },
+    Cascade {
+        m1: ModelId,
+        m2: ModelId,
+        verifier: ModelId,
+        threshold: f64,
+    },
+}
+
+impl RoutePlan {
+    fn single(model: ModelId) -> RoutePlan {
+        RoutePlan::Single {
+            model,
+            denied_requested: false,
+        }
+    }
+}
+
+/// Why a policy could not produce a plan.
+#[derive(Debug)]
+pub enum RouteError {
+    /// The request named a model the pool does not know.
+    UnknownModel(String),
+    /// The caller's price ceiling is below every pool model.
+    NoModelUnderBudget { max_usd_per_mtok_in: f64 },
+    /// No pool entry satisfies the policy (named for diagnostics).
+    EmptyPool(&'static str),
+}
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteError::UnknownModel(m) => write!(f, "unknown model id '{m}'"),
+            RouteError::NoModelUnderBudget { max_usd_per_mtok_in } => write!(
+                f,
+                "no pool model costs <= ${max_usd_per_mtok_in}/Mtok input"
+            ),
+            RouteError::EmptyPool(policy) => {
+                write!(f, "no pool model satisfies the {policy} policy")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+impl RoutingPolicy {
+    /// Score the policy over the pool. `requested_model` is the request's
+    /// `model` param (only the allowlist policy reads it).
+    pub fn route(&self, requested_model: Option<&str>) -> Result<RoutePlan, RouteError> {
+        Ok(match self {
+            RoutingPolicy::Fixed(m) => RoutePlan::single(*m),
+            RoutingPolicy::CostMin(g) => RoutePlan::single(
+                cheapest_in(*g).ok_or(RouteError::EmptyPool("cost-min"))?,
+            ),
+            RoutingPolicy::QualityMax(g) => RoutePlan::single(
+                priciest_in(*g).ok_or(RouteError::EmptyPool("quality-max"))?,
+            ),
+            RoutingPolicy::BudgetCap {
+                generation,
+                max_usd_per_mtok_in,
+            } => RoutePlan::single(
+                PoolFilter {
+                    generation: Some(*generation),
+                    max_usd_per_mtok_in: Some(*max_usd_per_mtok_in),
+                    ..Default::default()
+                }
+                .best()
+                .ok()
+                .ok_or(RouteError::NoModelUnderBudget {
+                    max_usd_per_mtok_in: *max_usd_per_mtok_in,
+                })?,
+            ),
+            RoutingPolicy::LatencyClass(class) => {
+                let in_class = || POOL.iter().filter(|m| m.latency_class == *class);
+                let floor = in_class()
+                    .map(|m| m.default_max_new)
+                    .min()
+                    .ok_or(RouteError::EmptyPool("latency-class"))?;
+                RoutePlan::single(
+                    in_class()
+                        .filter(|m| m.default_max_new == floor)
+                        .max_by(|a, b| a.capability.partial_cmp(&b.capability).unwrap())
+                        .map(|m| m.id)
+                        .expect("floor came from a non-empty class"),
+                )
+            }
+            RoutingPolicy::Allowlist { allowed, fallback } => match requested_model {
+                Some(name) => {
+                    let wanted = ModelId::parse(name)
+                        .map_err(|_| RouteError::UnknownModel(name.to_string()))?;
+                    if allowed.contains(&wanted) {
+                        RoutePlan::single(wanted)
+                    } else {
+                        RoutePlan::Single {
+                            model: *fallback,
+                            denied_requested: true,
+                        }
+                    }
+                }
+                None => RoutePlan::single(*fallback),
+            },
+            RoutingPolicy::CascadeVerify {
+                generation,
+                threshold,
+                m1,
+                m2,
+                verifier,
+            } => {
+                let (m1, m2, verifier) = cascade_models(*generation, *m1, *m2, *verifier)
+                    .map_err(|_| RouteError::EmptyPool("cascade-with-verifier"))?;
+                RoutePlan::Cascade {
+                    m1,
+                    m2,
+                    verifier,
+                    threshold: *threshold,
+                }
+            }
+        })
+    }
+}
+
+/// Everything the pipeline needs to serve one service type: the lowered,
+/// declarative form of [`ServiceType`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServicePolicy {
+    pub cache: CachePlan,
+    pub context: Filter,
+    pub routing: RoutingPolicy,
+    /// Gate the request on (and charge it against) the per-user quota.
+    pub quota: bool,
+}
+
+impl ServicePolicy {
+    fn new(cache: CachePlan, context: Filter, routing: RoutingPolicy) -> ServicePolicy {
+        ServicePolicy {
+            cache,
+            context,
+            routing,
+            quota: false,
+        }
+    }
+}
+
+const EXACT_ONLY: CachePlan = CachePlan {
+    exact: true,
+    smart: None,
+};
+
+/// Lower a service type to its policy. This is the single place a service
+/// type's semantics are defined; the coordinator stages execute the
+/// policy blindly.
+pub fn lower(st: &ServiceType, generation: Generation, regen_count: u32) -> ServicePolicy {
+    match st {
+        ServiceType::Fixed {
+            model,
+            cache,
+            context_k,
+        } => ServicePolicy::new(
+            CachePlan {
+                exact: *cache != CachePolicy::Skip,
+                smart: None,
+            },
+            Filter::LastK(*context_k),
+            RoutingPolicy::Fixed(*model),
+        ),
+        ServiceType::Quality => ServicePolicy::new(
+            EXACT_ONLY,
+            Filter::All,
+            RoutingPolicy::QualityMax(generation),
+        ),
+        ServiceType::Cost => ServicePolicy::new(
+            EXACT_ONLY,
+            Filter::None,
+            RoutingPolicy::CostMin(generation),
+        ),
+        ServiceType::Budget { max_usd_per_mtok_in } => ServicePolicy::new(
+            EXACT_ONLY,
+            Filter::None,
+            RoutingPolicy::BudgetCap {
+                generation,
+                max_usd_per_mtok_in: *max_usd_per_mtok_in,
+            },
+        ),
+        ServiceType::ModelSelector {
+            threshold,
+            m1,
+            m2,
+            verifier,
+        } => ServicePolicy::new(
+            EXACT_ONLY,
+            // §3.2: model_selector "uses 5 previous messages as context".
+            Filter::LastK(5),
+            RoutingPolicy::CascadeVerify {
+                generation,
+                threshold: *threshold,
+                m1: *m1,
+                m2: *m2,
+                verifier: *verifier,
+            },
+        ),
+        ServiceType::SmartContext { k, model } => ServicePolicy::new(
+            EXACT_ONLY,
+            if regen_count > 0 {
+                // Regeneration nudges toward quality: full last-k.
+                Filter::LastK(*k)
+            } else {
+                Filter::smart_last_k(*k, *model)
+            },
+            RoutingPolicy::Fixed(flagship(generation)),
+        ),
+        ServiceType::SmartCache { model } => ServicePolicy::new(
+            CachePlan {
+                exact: true,
+                smart: Some(*model),
+            },
+            Filter::None,
+            RoutingPolicy::Fixed(*model),
+        ),
+        ServiceType::UsageBased { allowed, fallback } => {
+            let mut p = ServicePolicy::new(
+                EXACT_ONLY,
+                Filter::LastK(3),
+                RoutingPolicy::Allowlist {
+                    allowed: allowed.clone(),
+                    fallback: *fallback,
+                },
+            );
+            p.quota = true;
+            p
+        }
+        ServiceType::LatencyFirst => ServicePolicy::new(
+            EXACT_ONLY,
+            Filter::LastK(1),
+            RoutingPolicy::LatencyClass(LatencyClass::Small),
+        ),
+    }
+}
+
+/// Same-service-type regeneration: "nudge the proxy to prioritize quality
+/// over cost" (§3.2).
+pub fn escalate(st: &ServiceType, generation: Generation) -> ServiceType {
+    let big = flagship(generation);
+    match st {
+        // §3.3: "regenerate will directly route the prompt to the more
+        // expensive LLM".
+        ServiceType::ModelSelector { m2, .. } => ServiceType::Fixed {
+            model: m2.unwrap_or(big),
+            cache: CachePolicy::Skip,
+            context_k: 5,
+        },
+        // §3.2: "for smart_context, regenerating entails using more
+        // context".
+        ServiceType::SmartContext { k, .. } => ServiceType::Fixed {
+            model: big,
+            cache: CachePolicy::Skip,
+            context_k: (*k).max(5),
+        },
+        ServiceType::SmartCache { .. } => ServiceType::ModelSelector {
+            threshold: 8.0,
+            m1: None,
+            m2: None,
+            verifier: None,
+        },
+        ServiceType::Cost => ServiceType::Quality,
+        // A budget request regenerates without the price ceiling.
+        ServiceType::Budget { .. } => ServiceType::Quality,
+        ServiceType::LatencyFirst => ServiceType::Fixed {
+            model: big,
+            cache: CachePolicy::Skip,
+            context_k: 5,
+        },
+        other => other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escalate_model_selector_goes_direct_m2() {
+        let st = ServiceType::ModelSelector {
+            threshold: 8.0,
+            m1: None,
+            m2: Some(ModelId::Gpt4),
+            verifier: None,
+        };
+        match escalate(&st, Generation::Old) {
+            ServiceType::Fixed { model, .. } => assert_eq!(model, ModelId::Gpt4),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn escalate_smart_context_adds_context() {
+        let st = ServiceType::SmartContext {
+            k: 1,
+            model: ModelId::Claude3Haiku,
+        };
+        match escalate(&st, Generation::New) {
+            ServiceType::Fixed {
+                model, context_k, ..
+            } => {
+                assert_eq!(model, ModelId::Gpt4o);
+                assert_eq!(context_k, 5);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn escalate_cost_and_budget_become_quality() {
+        assert_eq!(escalate(&ServiceType::Cost, Generation::New), ServiceType::Quality);
+        assert_eq!(
+            escalate(&ServiceType::Budget { max_usd_per_mtok_in: 1.0 }, Generation::New),
+            ServiceType::Quality
+        );
+    }
+
+    #[test]
+    fn latency_class_scores_decode_budget_then_capability() {
+        // Small class decode-budget floor is 10 tokens (Haiku, Phi-3);
+        // Haiku wins the capability tie-break — matching the §5.1
+        // deployment's hardcoded latency-first model.
+        let plan = RoutingPolicy::LatencyClass(LatencyClass::Small)
+            .route(None)
+            .unwrap();
+        assert_eq!(plan, RoutePlan::single(ModelId::Claude3Haiku));
+    }
+
+    #[test]
+    fn budget_cap_picks_best_under_ceiling() {
+        let plan = |cap: f64| {
+            RoutingPolicy::BudgetCap {
+                generation: Generation::New,
+                max_usd_per_mtok_in: cap,
+            }
+            .route(None)
+        };
+        // Under $1/Mtok the most capable new-gen model is Gemini Flash.
+        assert_eq!(plan(1.0).unwrap(), RoutePlan::single(ModelId::Gemini20Flash));
+        // Under $3 the flagship 4o fits.
+        assert_eq!(plan(3.0).unwrap(), RoutePlan::single(ModelId::Gpt4o));
+        // An impossible budget is rejected, never silently overspent.
+        assert!(matches!(
+            plan(0.01),
+            Err(RouteError::NoModelUnderBudget { .. })
+        ));
+    }
+
+    #[test]
+    fn allowlist_denies_and_falls_back() {
+        let policy = RoutingPolicy::Allowlist {
+            allowed: vec![ModelId::Gpt4oMini, ModelId::Phi3Mini],
+            fallback: ModelId::Gpt4oMini,
+        };
+        assert_eq!(
+            policy.route(Some("phi-3-mini")).unwrap(),
+            RoutePlan::single(ModelId::Phi3Mini)
+        );
+        assert_eq!(
+            policy.route(Some("gpt-4")).unwrap(),
+            RoutePlan::Single {
+                model: ModelId::Gpt4oMini,
+                denied_requested: true
+            }
+        );
+        assert_eq!(
+            policy.route(None).unwrap(),
+            RoutePlan::single(ModelId::Gpt4oMini)
+        );
+        assert!(matches!(
+            policy.route(Some("gpt-99")),
+            Err(RouteError::UnknownModel(_))
+        ));
+    }
+
+    #[test]
+    fn smart_cache_plan_is_regen_independent() {
+        // The universal regen cache bypass lives in the cache stage; the
+        // plan itself does not change with regen_count.
+        let st = ServiceType::SmartCache {
+            model: ModelId::Phi3Mini,
+        };
+        for regen in [0, 1] {
+            assert_eq!(
+                lower(&st, Generation::New, regen).cache.smart,
+                Some(ModelId::Phi3Mini)
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_skip_bypasses_exact_cache() {
+        let st = ServiceType::Fixed {
+            model: ModelId::Gpt4oMini,
+            cache: CachePolicy::Skip,
+            context_k: 2,
+        };
+        let p = lower(&st, Generation::New, 0);
+        assert!(!p.cache.exact);
+        assert_eq!(p.context, Filter::LastK(2));
+        assert_eq!(p.routing, RoutingPolicy::Fixed(ModelId::Gpt4oMini));
+        assert!(!p.quota);
+    }
+}

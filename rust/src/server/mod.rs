@@ -1,7 +1,18 @@
 //! REST server — the interface the classroom deployment used (§5.2):
 //! a hand-rolled HTTP/1.1 server on `std::net` with a worker pool fed by
-//! the per-user FIFO queue substrate (so the paper's SQS ordering guarantee
-//! holds end to end).
+//! the per-user FIFO queue substrate (the paper's SQS per-user
+//! exclusive-delivery guarantee, end to end).
+//!
+//! The acceptor thread only accepts: request parsing happens on the
+//! workers, so one slow-writing client can never stall accepts
+//! (head-of-line blocking). Each connection flows through two queue hops
+//! on the same FIFO substrate — a connection-unique "raw" group while
+//! unparsed, then the per-user group once the body names a user. The
+//! per-user guarantee is *serialization* (at most one in-flight request
+//! per user, queue order thereafter); a user's requests enter their
+//! queue in parse-completion order, which across separate connections
+//! can differ from accept order — same as concurrent clients racing the
+//! paper's SQS enqueue.
 //!
 //! Routes:
 //! * `POST /v1/request`     — body: [`crate::api::Request`] JSON.
@@ -9,15 +20,16 @@
 //! * `GET  /v1/metrics`     — telemetry snapshot.
 //! * `GET  /health`         — liveness.
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::api::{Request, ServiceType};
 use crate::coordinator::Bridge;
+use crate::error::BridgeError;
 use crate::queuing::FifoQueue;
 use crate::util::json::Json;
 
@@ -29,22 +41,67 @@ pub struct HttpRequest {
     pub body: String,
 }
 
-/// Read one HTTP/1.1 request from the stream.
+/// Read one HTTP/1.1 request from the stream (no deadline; see
+/// [`read_request_deadline`]).
 pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
+    read_request_deadline(stream, None)
+}
+
+/// Re-arm the socket timeout with the remaining budget before a read.
+fn arm_deadline(stream: &TcpStream, deadline: Option<std::time::Instant>) -> Result<()> {
+    if let Some(d) = deadline {
+        match d.checked_duration_since(std::time::Instant::now()) {
+            Some(left) if !left.is_zero() => stream.set_read_timeout(Some(left))?,
+            _ => bail!("request read deadline exceeded"),
+        }
+    }
+    Ok(())
+}
+
+fn find_bytes(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Read one HTTP/1.1 request. `deadline` bounds the TOTAL wall time
+/// across every read (the socket timeout is re-armed with the remaining
+/// budget before each one), so a byte-dribbling client cannot hold a
+/// worker beyond it.
+pub fn read_request_deadline(
+    stream: &mut TcpStream,
+    deadline: Option<std::time::Instant>,
+) -> Result<HttpRequest> {
+    const MAX_HEAD: usize = 64 * 1024;
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 4096];
+    // Accumulate until the blank line ending the headers (CRLF per spec,
+    // bare LF tolerated like the old line-based parser).
+    let (head_end, sep_len) = loop {
+        let crlf = find_bytes(&buf, b"\r\n\r\n").map(|p| (p, 4));
+        let lf = find_bytes(&buf, b"\n\n").map(|p| (p, 2));
+        match (crlf, lf) {
+            (Some(a), Some(b)) => break if a.0 <= b.0 { a } else { b },
+            (Some(a), None) => break a,
+            (None, Some(b)) => break b,
+            (None, None) => {}
+        }
+        if buf.len() > MAX_HEAD {
+            bail!("headers too large");
+        }
+        arm_deadline(stream, deadline)?;
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            bail!("connection closed mid-headers");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).context("non-utf8 headers")?;
+    let mut lines = head.split('\n').map(|l| l.trim_end_matches('\r'));
+    let request_line = lines.next().context("missing request line")?;
+    let mut parts = request_line.split_whitespace();
     let method = parts.next().context("missing method")?.to_string();
     let path = parts.next().context("missing path")?.to_string();
     let mut content_length = 0usize;
-    loop {
-        let mut header = String::new();
-        reader.read_line(&mut header)?;
-        let header = header.trim();
-        if header.is_empty() {
-            break;
-        }
+    for header in lines {
         if let Some((k, v)) = header.split_once(':') {
             if k.eq_ignore_ascii_case("content-length") {
                 content_length = v.trim().parse().unwrap_or(0);
@@ -54,8 +111,16 @@ pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
     if content_length > 4 * 1024 * 1024 {
         bail!("body too large");
     }
-    let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
+    let mut body = buf[head_end + sep_len..].to_vec();
+    while body.len() < content_length {
+        arm_deadline(stream, deadline)?;
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_length);
     Ok(HttpRequest {
         method,
         path,
@@ -80,53 +145,64 @@ pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result
     Ok(())
 }
 
-fn err_body(e: &anyhow::Error) -> String {
-    Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string()
+fn err_body(e: &BridgeError) -> String {
+    Json::obj(vec![("error", Json::str(e.to_string()))]).to_string()
+}
+
+fn respond(result: Result<String, BridgeError>) -> (u16, String) {
+    match result {
+        Ok(body) => (200, body),
+        Err(e) => (e.http_status(), err_body(&e)),
+    }
 }
 
 /// Dispatch one parsed request against the bridge (pure, testable).
+/// Status codes come from [`BridgeError::http_status`] — no string
+/// matching on error messages.
 pub fn route(bridge: &Bridge, req: &HttpRequest) -> (u16, String) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => (200, r#"{"status":"ok"}"#.to_string()),
         ("GET", "/v1/metrics") => (200, bridge.telemetry().to_json().to_string()),
-        ("POST", "/v1/request") => match handle_request(bridge, &req.body) {
-            Ok(body) => (200, body),
-            Err(e) => {
-                let status = if format!("{e:#}").contains("quota") { 429 } else { 400 };
-                (status, err_body(&e))
-            }
-        },
-        ("POST", "/v1/regenerate") => match handle_regenerate(bridge, &req.body) {
-            Ok(body) => (200, body),
-            Err(e) => (400, err_body(&e)),
-        },
+        ("POST", "/v1/request") => respond(handle_request(bridge, &req.body)),
+        ("POST", "/v1/regenerate") => respond(handle_regenerate(bridge, &req.body)),
         _ => (404, r#"{"error":"not found"}"#.to_string()),
     }
 }
 
-fn handle_request(bridge: &Bridge, body: &str) -> Result<String> {
-    let j = Json::parse(body)?;
-    let req = Request::from_json(&j)?;
+fn handle_request(bridge: &Bridge, body: &str) -> Result<String, BridgeError> {
+    let j = Json::parse(body).map_err(|e| BridgeError::bad_request(format!("{e:#}")))?;
+    let req = Request::from_json(&j).map_err(|e| BridgeError::bad_request(format!("{e:#}")))?;
     let resp = bridge.handle(req)?;
     Ok(resp.to_json().to_string())
 }
 
-fn handle_regenerate(bridge: &Bridge, body: &str) -> Result<String> {
-    let j = Json::parse(body)?;
-    let id_hex = j.str_of("request_id")?;
+fn handle_regenerate(bridge: &Bridge, body: &str) -> Result<String, BridgeError> {
+    let j = Json::parse(body).map_err(|e| BridgeError::bad_request(format!("{e:#}")))?;
+    let id_hex = j
+        .str_of("request_id")
+        .map_err(|e| BridgeError::bad_request(format!("{e:#}")))?;
     let id = u64::from_str_radix(&id_hex, 16)
-        .map_err(|_| anyhow!("bad request_id '{id_hex}'"))?;
+        .map_err(|_| BridgeError::bad_request(format!("bad request_id '{id_hex}'")))?;
     let st = j
         .get("service_type")
         .map(ServiceType::from_json)
-        .transpose()?;
+        .transpose()
+        .map_err(|e| BridgeError::bad_request(format!("{e:#}")))?;
     let resp = bridge.regenerate(id, st)?;
     Ok(resp.to_json().to_string())
 }
 
-/// Serve until `stop` flips. Each accepted connection is enqueued on the
-/// per-user FIFO (user extracted from the body when present) and handled
-/// by `workers` threads.
+/// A connection's place in the two-hop worker flow.
+enum Conn {
+    /// Accepted, not yet parsed (queued under a connection-unique group).
+    Raw(TcpStream),
+    /// Parsed, awaiting dispatch (queued under the per-user group).
+    Ready(TcpStream, HttpRequest),
+}
+
+/// Serve until `stop` flips. The acceptor enqueues raw connections; the
+/// `workers` threads parse them, re-enqueue under the per-user FIFO group
+/// (user extracted from the body when present), and handle them.
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
@@ -140,12 +216,13 @@ impl Server {
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let queue: Arc<FifoQueue<u64>> = Arc::new(FifoQueue::new());
-        // Connection registry: id -> stream.
-        let conns: Arc<std::sync::Mutex<std::collections::HashMap<u64, (TcpStream, HttpRequest)>>> =
+        // Connection registry: id -> state.
+        let conns: Arc<std::sync::Mutex<std::collections::HashMap<u64, Conn>>> =
             Arc::new(std::sync::Mutex::new(std::collections::HashMap::new()));
         let mut join = Vec::new();
 
-        // Acceptor.
+        // Acceptor: accept, register, enqueue — never reads the socket, so
+        // a client that dribbles its request bytes can't block accepts.
         {
             let stop = stop.clone();
             let queue = queue.clone();
@@ -154,28 +231,22 @@ impl Server {
                 let mut next_id = 0u64;
                 while !stop.load(Ordering::Relaxed) {
                     match listener.accept() {
-                        Ok((mut stream, _)) => {
+                        Ok((stream, _)) => {
                             stream.set_nonblocking(false).ok();
-                            match read_request(&mut stream) {
-                                Ok(req) => {
-                                    // FIFO group = user when parseable, else
-                                    // connection-unique (no ordering need).
-                                    let group = Json::parse(&req.body)
-                                        .ok()
-                                        .and_then(|j| j.str_of("user").ok())
-                                        .unwrap_or_else(|| format!("anon-{next_id}"));
-                                    next_id += 1;
-                                    conns.lock().unwrap().insert(next_id, (stream, req));
-                                    queue.push(&group, next_id);
-                                }
-                                Err(_) => {
-                                    let _ = write_response(
-                                        &mut stream,
-                                        400,
-                                        r#"{"error":"bad request"}"#,
-                                    );
-                                }
-                            }
+                            // Bound response writes to unresponsive clients.
+                            stream
+                                .set_write_timeout(Some(std::time::Duration::from_secs(10)))
+                                .ok();
+                            next_id += 1;
+                            conns.lock().unwrap().insert(next_id, Conn::Raw(stream));
+                            // Group naming doubles as scheduling policy:
+                            // FifoQueue::pop scans groups in key order, so
+                            // dispatch groups ("d:...") always win over
+                            // parse groups ("p:...") — a flood of new
+                            // connections can't starve parsed requests —
+                            // and prefixing keeps client-chosen user names
+                            // out of the internal namespace.
+                            queue.push(&format!("p:raw-{next_id}"), next_id);
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(std::time::Duration::from_millis(5));
@@ -187,7 +258,10 @@ impl Server {
             }));
         }
 
-        // Workers.
+        // Workers: a raw pop parses and re-enqueues under the user group;
+        // a ready pop dispatches. Raw groups are connection-unique, so
+        // parsing parallelizes; ready groups serialize per user (the SQS
+        // per-user exclusive-delivery guarantee).
         for _ in 0..workers.max(1) {
             let queue = queue.clone();
             let conns = conns.clone();
@@ -195,9 +269,38 @@ impl Server {
             join.push(std::thread::spawn(move || {
                 while let Some(msg) = queue.pop() {
                     let entry = conns.lock().unwrap().remove(&msg.payload);
-                    if let Some((mut stream, req)) = entry {
-                        let (status, body) = route(&bridge, &req);
-                        let _ = write_response(&mut stream, status, &body);
+                    match entry {
+                        Some(Conn::Raw(mut stream)) => match read_request_deadline(
+                            &mut stream,
+                            Some(std::time::Instant::now() + std::time::Duration::from_secs(10)),
+                        ) {
+                            Ok(req) => {
+                                // FIFO group = user when parseable, else
+                                // connection-unique (no ordering need).
+                                let group = Json::parse(&req.body)
+                                    .ok()
+                                    .and_then(|j| j.str_of("user").ok())
+                                    .map(|user| format!("d:u:{user}"))
+                                    .unwrap_or_else(|| format!("d:a:{}", msg.payload));
+                                conns
+                                    .lock()
+                                    .unwrap()
+                                    .insert(msg.payload, Conn::Ready(stream, req));
+                                queue.push(&group, msg.payload);
+                            }
+                            Err(_) => {
+                                let _ = write_response(
+                                    &mut stream,
+                                    400,
+                                    r#"{"error":"bad request"}"#,
+                                );
+                            }
+                        },
+                        Some(Conn::Ready(mut stream, req)) => {
+                            let (status, body) = route(&bridge, &req);
+                            let _ = write_response(&mut stream, status, &body);
+                        }
+                        None => {}
                     }
                     queue.ack(msg.id, &msg.group);
                 }
@@ -254,5 +357,22 @@ mod tests {
         assert!(buf.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(buf.ends_with(r#"{"x":1}"#));
         assert!(buf.contains("Content-Length: 7"));
+    }
+
+    #[test]
+    fn error_statuses_are_typed() {
+        assert_eq!(
+            respond(Err(BridgeError::QuotaExceeded { user: "u".into() })).0,
+            429
+        );
+        assert_eq!(respond(Err(BridgeError::UnknownRequest(1))).0, 404);
+        assert_eq!(respond(Err(BridgeError::bad_request("x"))).0, 400);
+        assert_eq!(
+            respond(Err(BridgeError::Internal(anyhow::anyhow!("x")))).0,
+            500
+        );
+        // Error bodies carry the message, not a guessed substring.
+        let (_, body) = respond(Err(BridgeError::QuotaExceeded { user: "s1".into() }));
+        assert!(body.contains("quota exceeded for user s1"));
     }
 }

@@ -1,0 +1,303 @@
+//! Router parity tests: every `ServiceType` lowers to the expected policy
+//! and routes to the same model the pre-refactor `pick_model` /
+//! `cascade_models` / `escalate` code chose, across both generations and
+//! the regeneration-escalation path. Pure pool math — no engine needed.
+
+use llmbridge::api::{CachePolicy, ServiceType};
+use llmbridge::context::Filter;
+use llmbridge::models::pricing::{Generation, ModelId};
+use llmbridge::router::{
+    cascade_models, escalate, lower, RoutePlan, RoutingPolicy,
+};
+
+fn single_pick(st: &ServiceType, generation: Generation, requested: Option<&str>) -> ModelId {
+    let policy = lower(st, generation, 0);
+    match policy.routing.route(requested).unwrap() {
+        RoutePlan::Single { model, .. } => model,
+        other => panic!("{st:?} routed to {other:?}, expected a single model"),
+    }
+}
+
+#[test]
+fn every_service_type_routes_like_the_monolith() {
+    use Generation::{New, Old};
+    // (service type, generation, requested model param, pre-refactor pick)
+    let table: Vec<(ServiceType, Generation, Option<&str>, ModelId)> = vec![
+        (
+            ServiceType::Fixed {
+                model: ModelId::Llama38b,
+                cache: CachePolicy::Skip,
+                context_k: 0,
+            },
+            New,
+            None,
+            ModelId::Llama38b,
+        ),
+        // §3.2 quality: "the most expensive model".
+        (ServiceType::Quality, Old, None, ModelId::Gpt4),
+        (ServiceType::Quality, New, None, ModelId::SonarHugeOnline),
+        // §3.2 cost: "the cheapest model" (first of the 0.10 price tie).
+        (ServiceType::Cost, Old, None, ModelId::Gpt35Turbo),
+        (ServiceType::Cost, New, None, ModelId::Phi3Mini),
+        // smart_context answers with the generation's flagship.
+        (
+            ServiceType::SmartContext {
+                k: 5,
+                model: ModelId::Claude3Haiku,
+            },
+            Old,
+            None,
+            ModelId::Gpt4,
+        ),
+        (
+            ServiceType::SmartContext {
+                k: 5,
+                model: ModelId::Claude3Haiku,
+            },
+            New,
+            None,
+            ModelId::Gpt4o,
+        ),
+        (
+            ServiceType::SmartCache {
+                model: ModelId::Phi3Mini,
+            },
+            New,
+            None,
+            ModelId::Phi3Mini,
+        ),
+        // §5.1 latency-first hardcoded Claude Haiku; the latency-class
+        // policy re-derives it from the pool (decode-budget floor, then
+        // capability).
+        (ServiceType::LatencyFirst, New, None, ModelId::Claude3Haiku),
+        (ServiceType::LatencyFirst, Old, None, ModelId::Claude3Haiku),
+        // §5.2 usage_based: requested-if-allowed, else fallback.
+        (
+            ServiceType::UsageBased {
+                allowed: vec![ModelId::Gpt4oMini, ModelId::Phi3Mini],
+                fallback: ModelId::Gpt4oMini,
+            },
+            New,
+            Some("phi-3-mini"),
+            ModelId::Phi3Mini,
+        ),
+        (
+            ServiceType::UsageBased {
+                allowed: vec![ModelId::Gpt4oMini, ModelId::Phi3Mini],
+                fallback: ModelId::Gpt4oMini,
+            },
+            New,
+            Some("gpt-4"),
+            ModelId::Gpt4oMini,
+        ),
+        (
+            ServiceType::UsageBased {
+                allowed: vec![ModelId::Gpt4oMini, ModelId::Phi3Mini],
+                fallback: ModelId::Gpt4oMini,
+            },
+            New,
+            None,
+            ModelId::Gpt4oMini,
+        ),
+    ];
+    for (st, generation, requested, expected) in &table {
+        assert_eq!(
+            single_pick(st, *generation, *requested),
+            *expected,
+            "{st:?} / {generation:?} / requested={requested:?}"
+        );
+    }
+}
+
+#[test]
+fn model_selector_lowers_to_the_cascade_models_resolution() {
+    for generation in [Generation::Old, Generation::New] {
+        let st = ServiceType::ModelSelector {
+            threshold: 8.0,
+            m1: None,
+            m2: None,
+            verifier: None,
+        };
+        let plan = lower(&st, generation, 0).routing.route(None).unwrap();
+        let (m1, m2, verifier) = cascade_models(generation, None, None, None).unwrap();
+        assert_eq!(
+            plan,
+            RoutePlan::Cascade {
+                m1,
+                m2,
+                verifier,
+                threshold: 8.0
+            },
+            "{generation:?}"
+        );
+    }
+    // §5.3 pinned config passes through untouched.
+    let st = ServiceType::ModelSelector {
+        threshold: 7.5,
+        m1: Some(ModelId::Gpt35Turbo),
+        m2: Some(ModelId::Gpt4),
+        verifier: Some(ModelId::Claude3Opus),
+    };
+    match lower(&st, Generation::Old, 0).routing.route(None).unwrap() {
+        RoutePlan::Cascade {
+            m1, m2, verifier, threshold,
+        } => {
+            assert_eq!(
+                (m1, m2, verifier, threshold),
+                (ModelId::Gpt35Turbo, ModelId::Gpt4, ModelId::Claude3Opus, 7.5)
+            );
+        }
+        other => panic!("expected cascade, got {other:?}"),
+    }
+}
+
+#[test]
+fn lowering_shapes_match_the_monolith_contract() {
+    let g = Generation::New;
+    // quality: all context; cost: none; model_selector: last-5 (§3.2);
+    // usage_based: last-3 + quota; latency_first: last-1.
+    assert_eq!(lower(&ServiceType::Quality, g, 0).context, Filter::All);
+    assert_eq!(lower(&ServiceType::Cost, g, 0).context, Filter::None);
+    let ms = lower(&ServiceType::default(), g, 0);
+    assert_eq!(ms.context, Filter::LastK(5));
+    assert!(!ms.quota);
+    let ub = lower(
+        &ServiceType::UsageBased {
+            allowed: vec![ModelId::Phi3Mini],
+            fallback: ModelId::Phi3Mini,
+        },
+        g,
+        0,
+    );
+    assert_eq!(ub.context, Filter::LastK(3));
+    assert!(ub.quota);
+    assert_eq!(lower(&ServiceType::LatencyFirst, g, 0).context, Filter::LastK(1));
+    // smart_context: delegated filter normally, plain last-k on regen.
+    let sc = ServiceType::SmartContext {
+        k: 4,
+        model: ModelId::Claude3Haiku,
+    };
+    assert_eq!(
+        lower(&sc, g, 0).context,
+        Filter::smart_last_k(4, ModelId::Claude3Haiku)
+    );
+    assert_eq!(lower(&sc, g, 1).context, Filter::LastK(4));
+    // Every type except Fixed{cache: Skip} consults the exact cache.
+    assert!(lower(&ServiceType::Quality, g, 0).cache.exact);
+    assert!(lower(&ServiceType::LatencyFirst, g, 0).cache.exact);
+}
+
+#[test]
+fn regen_escalation_matches_the_monolith() {
+    use Generation::{New, Old};
+    // Same-type regeneration nudges (§3.2/§3.3), old and new generations.
+    let cases: Vec<(ServiceType, Generation, ServiceType)> = vec![
+        (
+            ServiceType::ModelSelector {
+                threshold: 8.0,
+                m1: None,
+                m2: Some(ModelId::Gpt4),
+                verifier: None,
+            },
+            Old,
+            ServiceType::Fixed {
+                model: ModelId::Gpt4,
+                cache: CachePolicy::Skip,
+                context_k: 5,
+            },
+        ),
+        (
+            ServiceType::ModelSelector {
+                threshold: 8.0,
+                m1: None,
+                m2: None,
+                verifier: None,
+            },
+            New,
+            ServiceType::Fixed {
+                model: ModelId::Gpt4o,
+                cache: CachePolicy::Skip,
+                context_k: 5,
+            },
+        ),
+        (
+            ServiceType::SmartContext {
+                k: 1,
+                model: ModelId::Claude3Haiku,
+            },
+            New,
+            ServiceType::Fixed {
+                model: ModelId::Gpt4o,
+                cache: CachePolicy::Skip,
+                context_k: 5,
+            },
+        ),
+        (
+            ServiceType::SmartContext {
+                k: 7,
+                model: ModelId::Claude3Haiku,
+            },
+            Old,
+            ServiceType::Fixed {
+                model: ModelId::Gpt4,
+                cache: CachePolicy::Skip,
+                context_k: 7,
+            },
+        ),
+        (
+            ServiceType::SmartCache {
+                model: ModelId::Phi3Mini,
+            },
+            New,
+            ServiceType::default(),
+        ),
+        (ServiceType::Cost, New, ServiceType::Quality),
+        (ServiceType::Cost, Old, ServiceType::Quality),
+        (
+            ServiceType::LatencyFirst,
+            New,
+            ServiceType::Fixed {
+                model: ModelId::Gpt4o,
+                cache: CachePolicy::Skip,
+                context_k: 5,
+            },
+        ),
+        // Types with no escalation rule pass through unchanged.
+        (ServiceType::Quality, New, ServiceType::Quality),
+        (
+            ServiceType::UsageBased {
+                allowed: vec![ModelId::Phi3Mini],
+                fallback: ModelId::Phi3Mini,
+            },
+            New,
+            ServiceType::UsageBased {
+                allowed: vec![ModelId::Phi3Mini],
+                fallback: ModelId::Phi3Mini,
+            },
+        ),
+    ];
+    for (st, generation, expected) in &cases {
+        assert_eq!(
+            escalate(st, *generation),
+            *expected,
+            "{st:?} / {generation:?}"
+        );
+    }
+}
+
+#[test]
+fn new_service_type_is_one_lowering_entry() {
+    // The Budget type exists only in api + router — the coordinator never
+    // names it. Its policy must still route sensibly.
+    let st = ServiceType::Budget {
+        max_usd_per_mtok_in: 1.0,
+    };
+    let p = lower(&st, Generation::New, 0);
+    assert!(matches!(p.routing, RoutingPolicy::BudgetCap { .. }));
+    assert_eq!(
+        single_pick(&st, Generation::New, None),
+        ModelId::Gemini20Flash
+    );
+    // Its regen nudge relaxes the ceiling entirely.
+    assert_eq!(escalate(&st, Generation::New), ServiceType::Quality);
+}
