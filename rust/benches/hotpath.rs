@@ -7,7 +7,9 @@
 mod bench_common;
 
 use llmbridge::api::{CachePolicy, Request, ServiceType};
+use llmbridge::cache::{CacheObject, CachedType, SemanticCache};
 use llmbridge::models::pricing::{Generation, ModelId};
+use llmbridge::persist::wal::{WalOp, WalWriter};
 use llmbridge::runtime::tokenizer;
 use llmbridge::util::bench::{bench, black_box, BenchReport};
 use llmbridge::util::json::Json;
@@ -59,6 +61,65 @@ fn main() {
         "service_type":{"name":"model_selector","threshold":8},"update_context":true}"#;
     report.record(&bench("json/parse_request", 100, 5_000, || {
         black_box(Json::parse(body).unwrap());
+    }));
+
+    // --- persist: WAL append throughput + cold restore --------------------
+    // Engine-free: WAL records carry their vectors, and the bulk restore
+    // path replays them without re-embedding.
+    let pdir = std::env::temp_dir().join("llmbridge_bench_persist");
+    let _ = std::fs::remove_dir_all(&pdir);
+    std::fs::create_dir_all(&pdir).unwrap();
+    let wal = WalWriter::create(&pdir.join("bench.wal")).unwrap();
+    let vec64: Vec<f32> = (0..64).map(|i| (i as f32) * 0.013 + 0.1).collect();
+    let mut next = 0u64;
+    // The put_interaction shape: one object + prompt/response keys with
+    // their 64-dim embeddings, one checksummed record.
+    report.record(&bench("persist/wal_append_interaction", 10, 2_000, || {
+        next += 3;
+        black_box(
+            wal.append(&WalOp::PutObject {
+                object: CacheObject {
+                    id: next,
+                    text: "a cached answer about vaccination campaigns".into(),
+                    origin: "why do people discuss vaccination".into(),
+                    is_document: false,
+                },
+                keys: vec![
+                    (next + 1, CachedType::Prompt, vec64.clone()),
+                    (next + 2, CachedType::Response, vec64.clone()),
+                ],
+            })
+            .unwrap(),
+        );
+    }));
+    // Cold restore: 20k entries (10k objects x 2 typed keys) through the
+    // validated bulk-load path (vecdb LBV2 + cache.jsonl).
+    let big = SemanticCache::new(64);
+    for i in 0..10_000u64 {
+        let base = i * 3 + 1;
+        let jitter = |k: u64| {
+            let mut v = vec64.clone();
+            v[(k % 64) as usize] += (k as f32) * 1e-4;
+            v
+        };
+        big.apply_logged_put(
+            CacheObject {
+                id: base,
+                text: format!("cold restore object {i}"),
+                origin: format!("origin {i}"),
+                is_document: false,
+            },
+            &[
+                (base + 1, CachedType::Prompt, jitter(base + 1)),
+                (base + 2, CachedType::Response, jitter(base + 2)),
+            ],
+        )
+        .unwrap();
+    }
+    big.snapshot_into(&pdir).unwrap();
+    report.record(&bench("persist/cold_restore_20k", 1, 10, || {
+        let back = SemanticCache::restore_from_dir(&pdir, 64).unwrap();
+        black_box(back.len_keys());
     }));
 
     // --- PJRT engine: per-execute latency by variant ----------------------

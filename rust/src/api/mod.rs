@@ -322,17 +322,72 @@ impl Request {
         if let Some(u) = j.get("update_context").and_then(|v| v.as_bool()) {
             req.update_context = u;
         }
+        // Params and traits roundtrip so a journaled exchange regenerates
+        // identically after a restart (params carry the explicit model
+        // pin the route stage honors; traits drive the quality sim).
+        if let Some(Json::Obj(map)) = j.get("params") {
+            for (k, v) in map {
+                if let Some(s) = v.as_str() {
+                    req.params.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        if let Some(t) = j.get("traits") {
+            // Lenient like the rest of this parser: a fully-formed traits
+            // object (what Request::to_json emits — the WAL/snapshot
+            // replay path) is adopted; anything partial or mistyped is
+            // ignored rather than failing an external REST request that
+            // was previously accepted.
+            if let (Some(id), Some(difficulty), Some(factual), Some(requires_context)) = (
+                t.get("id").and_then(|v| v.as_str()),
+                t.get("difficulty").and_then(|v| v.as_f64()),
+                t.get("factual").and_then(|v| v.as_bool()),
+                t.get("requires_context").and_then(|v| v.as_bool()),
+            ) {
+                req.traits = Some(QueryTraits {
+                    id: id.to_string(),
+                    difficulty,
+                    factual,
+                    requires_context,
+                });
+            }
+        }
         Ok(req)
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("user", Json::str(self.user.clone())),
             ("conversation", Json::str(self.conversation.clone())),
             ("prompt", Json::str(self.prompt.clone())),
             ("service_type", self.service_type.to_json()),
             ("update_context", Json::Bool(self.update_context)),
-        ])
+        ];
+        // Emitted only when present, so minimal requests serialize as
+        // before.
+        if !self.params.is_empty() {
+            pairs.push((
+                "params",
+                Json::Obj(
+                    self.params
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+                        .collect(),
+                ),
+            ));
+        }
+        if let Some(t) = &self.traits {
+            pairs.push((
+                "traits",
+                Json::obj(vec![
+                    ("id", Json::str(t.id.clone())),
+                    ("difficulty", Json::Num(t.difficulty)),
+                    ("factual", Json::Bool(t.factual)),
+                    ("requires_context", Json::Bool(t.requires_context)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -510,6 +565,37 @@ mod tests {
         assert_eq!(r.user, "u1");
         assert_eq!(r.service_type, ServiceType::Cost);
         assert!(!r.update_context);
+    }
+
+    #[test]
+    fn request_params_and_traits_roundtrip() {
+        let mut req = Request::new("u1", "c1", "pin me to a model").with_traits(QueryTraits {
+            id: "wl-7".into(),
+            difficulty: 0.6,
+            factual: true,
+            requires_context: false,
+        });
+        req.params.insert("model".into(), "gpt-4o-mini".into());
+        let back = Request::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.params.get("model").map(|s| s.as_str()), Some("gpt-4o-mini"));
+        let t = back.traits.expect("traits survive the roundtrip");
+        assert_eq!(t.id, "wl-7");
+        assert_eq!(t.difficulty, 0.6);
+        assert!(t.factual);
+        // A minimal request serializes without the optional keys.
+        let plain = Request::new("u", "c", "p").to_json().to_string();
+        assert!(!plain.contains("params"));
+        assert!(!plain.contains("traits"));
+        // Partial or mistyped traits from external REST callers are
+        // ignored, never a parse failure.
+        for body in [
+            r#"{"user":"u","prompt":"p","traits":{}}"#,
+            r#"{"user":"u","prompt":"p","traits":null}"#,
+            r#"{"user":"u","prompt":"p","traits":{"id":"x"}}"#,
+        ] {
+            let r = Request::from_json(&Json::parse(body).unwrap()).unwrap();
+            assert!(r.traits.is_none(), "{body}");
+        }
     }
 
     #[test]

@@ -25,8 +25,18 @@
 //!   [`SHARD_COUNT`] hash shards, each behind its own `RwLock`. Lookups
 //!   take the touched shard's read lock; PUTs write-lock only the shard
 //!   the id/key hashes to.
-//! * Lock order is always index → keys → objects, one guard held at a
-//!   time (no nesting), so there is no deadlock shape.
+//! * Lock order is always **journal gate → index → keys → objects →
+//!   WAL file mutex**, acquired strictly in that direction, so there is
+//!   no deadlock shape. When a [`Journal`] is wired (durable
+//!   deployments): embeds run *before* the gate (never hold it across an
+//!   engine round-trip); `put`/`put_exact` take the gate in *shared*
+//!   mode, apply, then append (`put_exact` appends while still holding
+//!   its shard lock so same-key races land in the WAL in apply order);
+//!   `clear` takes the gate *exclusively* (it spans every shard);
+//!   snapshot compaction also takes the gate exclusively, then the state
+//!   locks read-side. The 16-way shard locks are never held across a
+//!   gate acquisition, and the WAL mutex is always the last lock anyone
+//!   takes, so WAL appends cannot deadlock with the shard locks.
 //! * PUT embeds all typed keys with one [`EngineHandle::embed_batch`]
 //!   round-trip instead of a serial `embed_text` per key.
 //!
@@ -34,11 +44,13 @@
 
 pub mod chunker;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::io::Write as _;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{OnceLock, RwLock};
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::models::generator::{Completion, Generator};
 use crate::models::pricing::ModelId;
@@ -81,10 +93,50 @@ impl CachedType {
             CachedType::Fact => "fact",
         }
     }
+
+    /// Stable one-byte tag for binary WAL records.
+    pub fn tag(&self) -> u8 {
+        match self {
+            CachedType::Prompt => 0,
+            CachedType::Response => 1,
+            CachedType::Chunk => 2,
+            CachedType::HypotheticalQuestion => 3,
+            CachedType::Keyword => 4,
+            CachedType::Summary => 5,
+            CachedType::Fact => 6,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<CachedType> {
+        Some(match tag {
+            0 => CachedType::Prompt,
+            1 => CachedType::Response,
+            2 => CachedType::Chunk,
+            3 => CachedType::HypotheticalQuestion,
+            4 => CachedType::Keyword,
+            5 => CachedType::Summary,
+            6 => CachedType::Fact,
+            _ => return None,
+        })
+    }
+
+    /// Inverse of [`CachedType::as_str`] (snapshot rows).
+    pub fn parse(s: &str) -> Option<CachedType> {
+        Some(match s {
+            "prompt" => CachedType::Prompt,
+            "response" => CachedType::Response,
+            "chunk" => CachedType::Chunk,
+            "hypothetical_question" => CachedType::HypotheticalQuestion,
+            "keyword" => CachedType::Keyword,
+            "summary" => CachedType::Summary,
+            "fact" => CachedType::Fact,
+            _ => return None,
+        })
+    }
 }
 
 /// A cached object: either a past LLM interaction or external content.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CacheObject {
     pub id: u64,
     /// The content served on a hit (response text / chunk text).
@@ -139,12 +191,39 @@ pub struct SmartCacheOutcome {
     pub llm_calls: Vec<Completion>,
 }
 
+/// Compaction-gate guard handed out by [`Journal::enter`] /
+/// [`Journal::enter_exclusive`]; held across one mutation's apply+append.
+pub enum JournalGuard<'a> {
+    /// Normal mutations: many may proceed concurrently, none while a
+    /// compaction (or an exclusive mutation) holds the gate.
+    Shared(std::sync::RwLockReadGuard<'a, ()>),
+    /// Whole-cache mutations (`clear`): serialized against *everything*,
+    /// so the WAL records a clean happens-before edge around them.
+    Exclusive(std::sync::RwLockWriteGuard<'a, ()>),
+}
+
+/// Sink for durable cache mutations, implemented by the persist layer's
+/// WAL (`crate::persist::Persistence`). Mutation paths call `enter` (or
+/// `enter_exclusive`) first, apply in memory, then log — see the
+/// module-level lock-order notes. `log_put` records the embedding vectors
+/// alongside the typed keys so restore never re-embeds.
+pub trait Journal: Send + Sync {
+    fn enter(&self) -> JournalGuard<'_>;
+    fn enter_exclusive(&self) -> JournalGuard<'_>;
+    fn log_put_exact(&self, prompt: &str, response: &str);
+    fn log_put(&self, object: CacheObject, keys: Vec<(u64, CachedType, Vec<f32>)>)
+        -> Result<()>;
+    fn log_clear(&self);
+}
+
 pub struct SemanticCache {
     index: RwLock<FlatIndex>,
     keys: Vec<RwLock<HashMap<u64, KeyEntry>>>,
     objects: Vec<RwLock<HashMap<u64, CacheObject>>>,
     exact: Vec<RwLock<HashMap<String, String>>>,
     next_id: AtomicU64,
+    /// Durable-mutation sink; unset (zero-cost) for in-memory deployments.
+    journal: OnceLock<std::sync::Arc<dyn Journal>>,
     /// Relevance threshold the SmartCache ground truth uses.
     pub relevance_threshold: f64,
 }
@@ -157,8 +236,15 @@ impl SemanticCache {
             objects: (0..SHARD_COUNT).map(|_| RwLock::new(HashMap::new())).collect(),
             exact: (0..SHARD_COUNT).map(|_| RwLock::new(HashMap::new())).collect(),
             next_id: AtomicU64::new(1),
+            journal: OnceLock::new(),
             relevance_threshold: 0.40,
         }
+    }
+
+    /// Wire the durable-mutation sink (once, at boot, *after* any
+    /// snapshot restore / WAL replay so recovery is not re-journaled).
+    pub fn set_journal(&self, journal: std::sync::Arc<dyn Journal>) {
+        let _ = self.journal.set(journal);
     }
 
     fn fresh_id(&self) -> u64 {
@@ -184,6 +270,15 @@ impl SemanticCache {
         self.keys.iter().map(|s| s.read().unwrap().len()).sum()
     }
 
+    pub fn len_exact(&self) -> usize {
+        self.exact.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    /// The next id the allocator would hand out (snapshot metadata).
+    pub fn next_id_hint(&self) -> u64 {
+        self.next_id.load(Ordering::Relaxed)
+    }
+
     // ------------------------------------------------------------- exact
 
     /// Normalized exact-match key (prefetch buttons).
@@ -192,11 +287,17 @@ impl SemanticCache {
     }
 
     pub fn put_exact(&self, prompt: &str, response: &str) {
+        let journal = self.journal.get();
+        let _gate = journal.map(|j| j.enter());
         let key = Self::exact_key(prompt);
-        self.exact[Self::shard_of_str(&key)]
-            .write()
-            .unwrap()
-            .insert(key, response.to_string());
+        let mut shard = self.exact[Self::shard_of_str(&key)].write().unwrap();
+        shard.insert(key, response.to_string());
+        if let Some(j) = journal {
+            // Append while still holding the shard lock: same-key races
+            // then land in the WAL in apply order, so last-record-wins
+            // replay reconstructs exactly the pre-crash winner.
+            j.log_put_exact(prompt, response);
+        }
     }
 
     pub fn get_exact(&self, prompt: &str) -> Option<String> {
@@ -220,6 +321,20 @@ impl SemanticCache {
         is_document: bool,
         keys: &[(CachedType, String)],
     ) -> Result<u64> {
+        // Embed before touching any cache state (and before the journal
+        // gate): the engine round-trip is the slow part, and holding the
+        // compaction gate across it would stall every other journaled
+        // mutation whenever a compaction queues for exclusive access.
+        // Bonus: a failed embed no longer leaves a keyless orphan object.
+        let live: Vec<&(CachedType, String)> = keys
+            .iter()
+            .filter(|(_, key_text)| !key_text.trim().is_empty())
+            .collect();
+        let texts: Vec<&str> = live.iter().map(|pair| pair.1.as_str()).collect();
+        let embs = generator.engine().embed_batch(&texts)?;
+
+        let journal = self.journal.get();
+        let _gate = journal.map(|j| j.enter());
         let object_id = self.fresh_id();
         self.objects[Self::shard_of(object_id)].write().unwrap().insert(
             object_id,
@@ -230,12 +345,6 @@ impl SemanticCache {
                 is_document,
             },
         );
-        let live: Vec<&(CachedType, String)> = keys
-            .iter()
-            .filter(|(_, key_text)| !key_text.trim().is_empty())
-            .collect();
-        let texts: Vec<&str> = live.iter().map(|pair| pair.1.as_str()).collect();
-        let embs = generator.engine().embed_batch(&texts)?;
         let mut entries: Vec<(u64, CachedType)> = Vec::with_capacity(live.len());
         {
             // One write-lock acquisition for the whole key batch.
@@ -246,13 +355,85 @@ impl SemanticCache {
                 entries.push((key_id, pair.0));
             }
         }
-        for (key_id, ctype) in entries {
-            self.keys[Self::shard_of(key_id)]
+        for (key_id, ctype) in &entries {
+            self.keys[Self::shard_of(*key_id)]
                 .write()
                 .unwrap()
-                .insert(key_id, KeyEntry { object_id, ctype });
+                .insert(*key_id, KeyEntry { object_id, ctype: *ctype });
+        }
+        if let Some(j) = journal {
+            // Log the raw embeddings alongside the assigned ids: replay
+            // re-inserts them without an engine round-trip and reaches the
+            // same pre-normalized rows.
+            let logged: Vec<(u64, CachedType, Vec<f32>)> = entries
+                .iter()
+                .zip(embs.iter())
+                .map(|(&(key_id, ctype), emb)| (key_id, ctype, emb.clone()))
+                .collect();
+            let log_result = j.log_put(
+                CacheObject {
+                    id: object_id,
+                    text: text.to_string(),
+                    origin: origin.to_string(),
+                    is_document,
+                },
+                logged,
+            );
+            if let Err(e) = log_result {
+                // Roll back the in-memory apply so an Err means "this PUT
+                // did not happen" — memory and WAL stay in agreement, and
+                // a caller's retry can't strand duplicate objects.
+                {
+                    let mut index = self.index.write().unwrap();
+                    for (key_id, _) in &entries {
+                        index.remove(*key_id);
+                    }
+                }
+                for (key_id, _) in &entries {
+                    self.keys[Self::shard_of(*key_id)].write().unwrap().remove(key_id);
+                }
+                self.objects[Self::shard_of(object_id)]
+                    .write()
+                    .unwrap()
+                    .remove(&object_id);
+                return Err(e);
+            }
         }
         Ok(object_id)
+    }
+
+    /// Re-apply a WAL-logged PUT: the object plus its typed keys with
+    /// their original ids and snapshotted embeddings (no engine call).
+    /// Idempotent per key id, so an op captured by both a snapshot and a
+    /// trailing WAL replays cleanly.
+    pub fn apply_logged_put(
+        &self,
+        object: CacheObject,
+        keys: &[(u64, CachedType, Vec<f32>)],
+    ) -> Result<()> {
+        let object_id = object.id;
+        let mut max_id = object_id;
+        {
+            let mut index = self.index.write().unwrap();
+            for (key_id, _, vector) in keys {
+                max_id = max_id.max(*key_id);
+                if !index.contains(*key_id) {
+                    index.insert(*key_id, vector)?;
+                }
+            }
+        }
+        for (key_id, ctype, _) in keys {
+            self.keys[Self::shard_of(*key_id)]
+                .write()
+                .unwrap()
+                .insert(*key_id, KeyEntry { object_id, ctype: *ctype });
+        }
+        self.objects[Self::shard_of(object_id)]
+            .write()
+            .unwrap()
+            .insert(object_id, object);
+        self.next_id.fetch_max(max_id + 1, Ordering::Relaxed);
+        Ok(())
     }
 
     /// Cache a full interaction under prompt + response keys (the §3.5
@@ -463,6 +644,11 @@ impl SemanticCache {
 
     /// Drop everything (tests / benchmarks).
     pub fn clear(&self) {
+        let journal = self.journal.get();
+        // Exclusive gate: a clear spans every shard, so it must not
+        // interleave with concurrent puts — in memory or in the WAL.
+        // Exclusivity gives its record a clean happens-before position.
+        let _gate = journal.map(|j| j.enter_exclusive());
         {
             // Single guarded scope: read dim and swap in the fresh index
             // under one write lock (the seed locked the index twice in one
@@ -480,6 +666,206 @@ impl SemanticCache {
         for shard in &self.exact {
             shard.write().unwrap().clear();
         }
+        if let Some(j) = journal {
+            j.log_clear();
+        }
+    }
+
+    // ---------------------------------------------------------- snapshot
+
+    /// Write this cache's durable image into `dir`: `vecdb.bin` (bulk
+    /// LBV2 rows, pre-normalized) plus `cache.jsonl` (meta, object, key,
+    /// and exact rows). The caller must have quiesced writers — the
+    /// persist layer holds its compaction gate exclusively around this.
+    pub fn snapshot_into(&self, dir: &Path) -> Result<()> {
+        {
+            let index = self.index.read().unwrap();
+            index.save(&dir.join("vecdb.bin"))?;
+        }
+        use crate::util::json::Json;
+        // Stream rows through a BufWriter: a months-old cache must not be
+        // duplicated wholesale in RAM while the compaction gate is held.
+        let mut w =
+            std::io::BufWriter::new(std::fs::File::create(dir.join("cache.jsonl"))?);
+        // Ids are small sequential allocations (f64-exact), unlike the
+        // hashed request ids elsewhere — safe as JSON numbers.
+        let meta = Json::obj(vec![
+            ("t", Json::str("meta")),
+            (
+                "next_id",
+                Json::num(self.next_id.load(Ordering::Relaxed) as f64),
+            ),
+            ("relevance_threshold", Json::Num(self.relevance_threshold)),
+        ]);
+        writeln!(w, "{}", meta.to_string())?;
+        for shard in &self.objects {
+            for obj in shard.read().unwrap().values() {
+                let row = Json::obj(vec![
+                    ("t", Json::str("obj")),
+                    ("id", Json::num(obj.id as f64)),
+                    ("text", Json::str(obj.text.clone())),
+                    ("origin", Json::str(obj.origin.clone())),
+                    ("doc", Json::Bool(obj.is_document)),
+                ]);
+                writeln!(w, "{}", row.to_string())?;
+            }
+        }
+        for shard in &self.keys {
+            for (key_id, entry) in shard.read().unwrap().iter() {
+                let row = Json::obj(vec![
+                    ("t", Json::str("key")),
+                    ("id", Json::num(*key_id as f64)),
+                    ("obj", Json::num(entry.object_id as f64)),
+                    ("ctype", Json::str(entry.ctype.as_str())),
+                ]);
+                writeln!(w, "{}", row.to_string())?;
+            }
+        }
+        for shard in &self.exact {
+            for (k, v) in shard.read().unwrap().iter() {
+                // Keys are stored normalized; restore re-inserts them
+                // verbatim (normalization is idempotent).
+                let row = Json::obj(vec![
+                    ("t", Json::str("exact")),
+                    ("k", Json::str(k.clone())),
+                    ("v", Json::str(v.clone())),
+                ]);
+                writeln!(w, "{}", row.to_string())?;
+            }
+        }
+        let f = w
+            .into_inner()
+            .map_err(|e| anyhow!("cache snapshot flush: {e}"))?;
+        f.sync_all()?;
+        Ok(())
+    }
+
+    /// Load a snapshot written by [`SemanticCache::snapshot_into`] back
+    /// into a fresh cache via the validated bulk path.
+    pub fn restore_from_dir(dir: &Path, embed_dim: usize) -> Result<SemanticCache> {
+        use std::io::BufRead as _;
+        let index = FlatIndex::load(&dir.join("vecdb.bin"))?;
+        // Stream line-by-line, mirroring the writer: boot must not hold
+        // the whole cache.jsonl text alongside the parsed rows.
+        let reader = std::io::BufReader::new(std::fs::File::open(dir.join("cache.jsonl"))?);
+        let mut objects = Vec::new();
+        let mut keys = Vec::new();
+        let mut exact = Vec::new();
+        let mut meta: Option<(u64, f64)> = None;
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let row = crate::util::json::Json::parse(&line)?;
+            match row.str_of("t")?.as_str() {
+                "meta" => {
+                    meta = Some((
+                        row.f64_of("next_id")? as u64,
+                        row.f64_of("relevance_threshold")?,
+                    ));
+                }
+                "obj" => objects.push(CacheObject {
+                    id: row.f64_of("id")? as u64,
+                    text: row.str_of("text")?,
+                    origin: row.str_of("origin")?,
+                    is_document: row
+                        .req("doc")?
+                        .as_bool()
+                        .ok_or_else(|| anyhow!("object row 'doc' not a bool"))?,
+                }),
+                "key" => keys.push((
+                    row.f64_of("id")? as u64,
+                    row.f64_of("obj")? as u64,
+                    CachedType::parse(&row.str_of("ctype")?)
+                        .ok_or_else(|| anyhow!("bad ctype in key row"))?,
+                )),
+                "exact" => exact.push((row.str_of("k")?, row.str_of("v")?)),
+                other => bail!("unknown cache snapshot row type '{other}'"),
+            }
+        }
+        let (next_id, relevance_threshold) =
+            meta.ok_or_else(|| anyhow!("cache snapshot missing meta row"))?;
+        Self::restore_bulk(
+            embed_dim,
+            index,
+            objects,
+            keys,
+            exact,
+            next_id,
+            relevance_threshold,
+        )
+    }
+
+    /// Validated bulk load: rebuild the sharded maps and adopt a loaded
+    /// index wholesale (its id→slot map was rebuilt by
+    /// [`FlatIndex::load`]; shard placement is re-derived here from the
+    /// same id/key hashing the live path uses). Rejects dangling key→
+    /// object references, keys without vectors, orphan vectors, duplicate
+    /// ids, and a stale id allocator — a snapshot failing any of these is
+    /// corrupt, and loading it would silently lose recall.
+    #[allow(clippy::too_many_arguments)]
+    pub fn restore_bulk(
+        embed_dim: usize,
+        index: FlatIndex,
+        objects: Vec<CacheObject>,
+        keys: Vec<(u64, u64, CachedType)>,
+        exact: Vec<(String, String)>,
+        next_id: u64,
+        relevance_threshold: f64,
+    ) -> Result<SemanticCache> {
+        if index.dim() != embed_dim {
+            bail!(
+                "snapshot vector dim {} does not match embed dim {embed_dim}",
+                index.dim()
+            );
+        }
+        if index.len() != keys.len() {
+            bail!(
+                "snapshot has {} vectors but {} key rows",
+                index.len(),
+                keys.len()
+            );
+        }
+        let mut cache = SemanticCache::new(embed_dim);
+        let object_ids: HashSet<u64> = objects.iter().map(|o| o.id).collect();
+        if object_ids.len() != objects.len() {
+            bail!("duplicate object id in snapshot");
+        }
+        let mut max_id = 0u64;
+        for obj in objects {
+            max_id = max_id.max(obj.id);
+            cache.objects[Self::shard_of(obj.id)]
+                .write()
+                .unwrap()
+                .insert(obj.id, obj);
+        }
+        for (key_id, object_id, ctype) in keys {
+            if !index.contains(key_id) {
+                bail!("key {key_id} has no vector in the snapshot index");
+            }
+            if !object_ids.contains(&object_id) {
+                bail!("key {key_id} references unknown object {object_id}");
+            }
+            max_id = max_id.max(key_id);
+            let prev = cache.keys[Self::shard_of(key_id)]
+                .write()
+                .unwrap()
+                .insert(key_id, KeyEntry { object_id, ctype });
+            if prev.is_some() {
+                bail!("duplicate key id {key_id} in snapshot");
+            }
+        }
+        if next_id <= max_id {
+            bail!("snapshot next_id {next_id} not past max id {max_id}");
+        }
+        for (k, v) in exact {
+            cache.exact[Self::shard_of_str(&k)].write().unwrap().insert(k, v);
+        }
+        *cache.index.write().unwrap() = index;
+        cache.next_id.store(next_id, Ordering::Relaxed);
+        cache.relevance_threshold = relevance_threshold;
+        Ok(cache)
     }
 }
 
@@ -550,6 +936,146 @@ mod tests {
         assert_eq!(c.get_exact("thread 0 prompt number 0"), None);
         assert_eq!(c.len_keys(), 0);
         assert_eq!(c.len_objects(), 0);
+    }
+
+    /// Engine-free snapshot roundtrip: populate via the WAL-replay path
+    /// (synthetic embeddings), snapshot, bulk-restore, and compare maps.
+    #[test]
+    fn snapshot_roundtrip_via_bulk_load() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(77);
+        let cache = SemanticCache::new(8);
+        for i in 0..40u64 {
+            let object = CacheObject {
+                id: i * 3 + 1,
+                text: format!("text {i}"),
+                origin: format!("origin {i}"),
+                is_document: i % 2 == 0,
+            };
+            let keys: Vec<(u64, CachedType, Vec<f32>)> = vec![
+                (
+                    i * 3 + 2,
+                    CachedType::Prompt,
+                    (0..8).map(|_| r.normal() as f32).collect(),
+                ),
+                (
+                    i * 3 + 3,
+                    CachedType::Response,
+                    (0..8).map(|_| r.normal() as f32).collect(),
+                ),
+            ];
+            cache.apply_logged_put(object, &keys).unwrap();
+        }
+        cache.put_exact("What is the  Capital of Sudan?", "Khartoum");
+        let dir = std::env::temp_dir().join("llmbridge_cache_snap_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        cache.snapshot_into(&dir).unwrap();
+        let back = SemanticCache::restore_from_dir(&dir, 8).unwrap();
+        assert_eq!(back.len_objects(), cache.len_objects());
+        assert_eq!(back.len_keys(), cache.len_keys());
+        assert_eq!(back.len_exact(), 1);
+        assert_eq!(back.next_id_hint(), cache.next_id_hint());
+        assert_eq!(
+            back.get_exact("what is the capital of sudan"),
+            Some("Khartoum".to_string())
+        );
+        // Fresh ids allocate past everything restored.
+        assert!(back.fresh_id() > 40 * 3);
+        // Wrong engine dim is rejected before any partial load.
+        assert!(SemanticCache::restore_from_dir(&dir, 16).is_err());
+    }
+
+    #[test]
+    fn restore_bulk_rejects_inconsistent_snapshots() {
+        let mk_index = || {
+            let mut idx = FlatIndex::new(4, Metric::Cosine);
+            idx.insert(2, &[1.0, 0.0, 0.0, 0.0]).unwrap();
+            idx
+        };
+        let obj = CacheObject {
+            id: 1,
+            text: "t".into(),
+            origin: "o".into(),
+            is_document: false,
+        };
+        // Valid baseline.
+        assert!(SemanticCache::restore_bulk(
+            4,
+            mk_index(),
+            vec![obj.clone()],
+            vec![(2, 1, CachedType::Prompt)],
+            vec![],
+            3,
+            0.4,
+        )
+        .is_ok());
+        // Key references a missing object.
+        assert!(SemanticCache::restore_bulk(
+            4,
+            mk_index(),
+            vec![obj.clone()],
+            vec![(2, 9, CachedType::Prompt)],
+            vec![],
+            3,
+            0.4,
+        )
+        .is_err());
+        // Key row without a vector in the index.
+        let mut idx = mk_index();
+        idx.insert(5, &[0.0, 1.0, 0.0, 0.0]).unwrap();
+        assert!(SemanticCache::restore_bulk(
+            4,
+            idx,
+            vec![obj.clone()],
+            vec![(2, 1, CachedType::Prompt), (7, 1, CachedType::Response)],
+            vec![],
+            8,
+            0.4,
+        )
+        .is_err());
+        // Orphan vector (index larger than the key rows).
+        let mut idx = mk_index();
+        idx.insert(5, &[0.0, 1.0, 0.0, 0.0]).unwrap();
+        assert!(SemanticCache::restore_bulk(
+            4,
+            idx,
+            vec![obj.clone()],
+            vec![(2, 1, CachedType::Prompt)],
+            vec![],
+            6,
+            0.4,
+        )
+        .is_err());
+        // Stale id allocator.
+        assert!(SemanticCache::restore_bulk(
+            4,
+            mk_index(),
+            vec![obj],
+            vec![(2, 1, CachedType::Prompt)],
+            vec![],
+            2,
+            0.4,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn cached_type_tags_roundtrip() {
+        for t in [
+            CachedType::Prompt,
+            CachedType::Response,
+            CachedType::Chunk,
+            CachedType::HypotheticalQuestion,
+            CachedType::Keyword,
+            CachedType::Summary,
+            CachedType::Fact,
+        ] {
+            assert_eq!(CachedType::from_tag(t.tag()), Some(t));
+            assert_eq!(CachedType::parse(t.as_str()), Some(t));
+        }
+        assert_eq!(CachedType::from_tag(9), None);
+        assert_eq!(CachedType::parse("nope"), None);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! stages.
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
@@ -23,9 +23,13 @@ use crate::error::BridgeError;
 use crate::kvstore::KvStore;
 use crate::models::generator::Generator;
 use crate::models::pricing::{Generation, ModelId};
+use crate::persist::snapshot::{CaptureCounts, ExchangeRow, QuotaRow};
+use crate::persist::wal::WalOp;
+use crate::persist::Persistence;
 use crate::router;
 use crate::runtime::{EngineHandle, Registry};
 use crate::telemetry::Telemetry;
+use crate::util::json::Json;
 use crate::workload::classroom::Quota;
 
 /// Proxy configuration.
@@ -41,6 +45,14 @@ pub struct BridgeConfig {
     pub memoize: bool,
     /// Per-user quota for the usage-based service type.
     pub quota: Quota,
+    /// Durable-state directory (snapshot + WAL; see [`crate::persist`]).
+    /// `None` (the default) keeps the proxy fully in-memory — the hot
+    /// path, tier-1 tests, and benches are untouched.
+    pub data_dir: Option<PathBuf>,
+    /// Compact the WAL into a snapshot once it exceeds this many bytes
+    /// (checked by [`Bridge::maybe_compact`], which the server polls from
+    /// a background janitor thread).
+    pub compact_wal_bytes: u64,
 }
 
 impl Default for BridgeConfig {
@@ -50,6 +62,8 @@ impl Default for BridgeConfig {
             generation: Generation::New,
             memoize: true,
             quota: Quota::default(),
+            data_dir: None,
+            compact_wal_bytes: 8 * 1024 * 1024,
         }
     }
 }
@@ -66,6 +80,35 @@ struct StoredExchange {
     regen_count: u32,
 }
 
+/// How many served exchanges stay regenerable. The map used to be
+/// unbounded but reset on every restart; durable restarts would otherwise
+/// grow it (and every snapshot capture) with the deployment's lifetime
+/// request count, so it is now explicitly a window of the most recent
+/// exchanges — regenerate targets recent responses by design (§3.2).
+const MAX_EXCHANGES: usize = 4096;
+
+/// Insertion-ordered, bounded exchange map: oldest entries are evicted
+/// once the window fills, in memory and (via snapshot capture order) on
+/// disk.
+#[derive(Default)]
+struct ExchangeStore {
+    map: HashMap<u64, StoredExchange>,
+    order: std::collections::VecDeque<u64>,
+}
+
+impl ExchangeStore {
+    fn insert(&mut self, request_id: u64, exchange: StoredExchange) {
+        if self.map.insert(request_id, exchange).is_none() {
+            self.order.push_back(request_id);
+            while self.order.len() > MAX_EXCHANGES {
+                if let Some(evicted) = self.order.pop_front() {
+                    self.map.remove(&evicted);
+                }
+            }
+        }
+    }
+}
+
 /// The LLMBridge proxy.
 ///
 /// Request-scoped state is read-mostly: `exchanges` (regeneration lookups)
@@ -78,8 +121,10 @@ pub struct Bridge {
     pub(crate) kv: KvStore,
     pub(crate) cache: SemanticCache,
     pub(crate) telemetry: Arc<Telemetry>,
-    exchanges: RwLock<HashMap<u64, StoredExchange>>,
+    exchanges: RwLock<ExchangeStore>,
     quotas: RwLock<HashMap<String, QuotaState>>,
+    /// Snapshot+WAL durability; `None` when no data dir is configured.
+    persist: Option<Arc<Persistence>>,
     pub config: BridgeConfig,
 }
 
@@ -96,20 +141,131 @@ impl Bridge {
     }
 
     /// Build on an already-running engine (shared across bridges in tests).
+    ///
+    /// With `config.data_dir` set, boot restores the committed snapshot
+    /// generation, replays the WAL tail on top (tolerating a torn final
+    /// record), and wires the cache's journal — a populated cache serves
+    /// the same hits after a restart as before it. A corrupt snapshot or
+    /// an interior-corrupt WAL fails boot with [`BridgeError::Persist`]
+    /// rather than silently loading partial state.
     pub fn from_engine(engine: EngineHandle, config: BridgeConfig) -> Result<Bridge> {
         let mut generator = Generator::new(engine.clone());
         generator.memoize = config.memoize;
         let embed_dim = engine.embed_dim();
+        let telemetry = Arc::new(Telemetry::default());
+
+        let mut kv = KvStore::new();
+        let mut cache = SemanticCache::new(embed_dim);
+        let mut quotas: HashMap<String, QuotaState> = HashMap::new();
+        let mut exchanges = ExchangeStore::default();
+        let mut persist = None;
+
+        if let Some(dir) = &config.data_dir {
+            let (p, boot) = Persistence::open(dir, embed_dim)?;
+            if let Some(snap) = boot.snapshot {
+                kv = snap.kv;
+                cache = snap.cache;
+                for q in snap.quotas {
+                    quotas.insert(
+                        q.user,
+                        QuotaState {
+                            requests: q.requests,
+                            input_tokens: q.input_tokens,
+                            output_tokens: q.output_tokens,
+                        },
+                    );
+                }
+                for e in snap.exchanges {
+                    let request = Request::from_json(&e.request).map_err(|err| {
+                        BridgeError::Persist(format!(
+                            "snapshot exchange {:016x}: {err:#}",
+                            e.request_id
+                        ))
+                    })?;
+                    exchanges.insert(
+                        e.request_id,
+                        StoredExchange {
+                            request,
+                            regen_count: e.regen_count,
+                        },
+                    );
+                }
+            }
+            let replayed = boot.wal_ops.len();
+            for op in boot.wal_ops {
+                match op {
+                    WalOp::PutExact { prompt, response } => {
+                        cache.put_exact(&prompt, &response)
+                    }
+                    WalOp::PutObject { object, keys } => {
+                        cache.apply_logged_put(object, &keys).map_err(|e| {
+                            BridgeError::Persist(format!("wal replay: {e:#}"))
+                        })?
+                    }
+                    WalOp::Clear => cache.clear(),
+                    WalOp::Quota {
+                        user,
+                        requests,
+                        input_tokens,
+                        output_tokens,
+                    } => {
+                        quotas.insert(
+                            user,
+                            QuotaState {
+                                requests,
+                                input_tokens,
+                                output_tokens,
+                            },
+                        );
+                    }
+                    WalOp::Exchange {
+                        request_id,
+                        regen_count,
+                        request_json,
+                    } => {
+                        let request = Json::parse(&request_json)
+                            .and_then(|j| Request::from_json(&j))
+                            .map_err(|e| {
+                                BridgeError::Persist(format!(
+                                    "wal exchange {request_id:016x}: {e:#}"
+                                ))
+                            })?;
+                        exchanges.insert(
+                            request_id,
+                            StoredExchange {
+                                request,
+                                regen_count,
+                            },
+                        );
+                    }
+                }
+            }
+            telemetry.counters.add("persist_replayed_ops", replayed as u64);
+            telemetry
+                .counters
+                .add("persist_truncated_bytes", boot.report.truncated_bytes);
+            let p = Arc::new(p);
+            // Journal wired only now: recovery itself is not re-journaled.
+            cache.set_journal(p.clone());
+            persist = Some(p);
+        }
+
         Ok(Bridge {
             engine,
             generator: Arc::new(generator),
-            kv: KvStore::new(),
-            cache: SemanticCache::new(embed_dim),
-            telemetry: Arc::new(Telemetry::default()),
-            exchanges: RwLock::new(HashMap::new()),
-            quotas: RwLock::new(HashMap::new()),
+            kv,
+            cache,
+            telemetry,
+            exchanges: RwLock::new(exchanges),
+            quotas: RwLock::new(quotas),
+            persist,
             config,
         })
+    }
+
+    /// The persistence layer, when a data dir is configured.
+    pub fn persistence(&self) -> Option<&Arc<Persistence>> {
+        self.persist.as_ref()
     }
 
     pub fn engine(&self) -> &EngineHandle {
@@ -145,14 +301,30 @@ impl Bridge {
     /// `proxy.request` (Table 2).
     pub fn handle(&self, req: Request) -> Result<Response, BridgeError> {
         let resp = self.resolve(&req, 0)?;
-        self.exchanges.write().unwrap().insert(
-            resp.metadata.request_id,
+        self.record_exchange(resp.metadata.request_id, req, 0);
+        Ok(resp)
+    }
+
+    /// Store (and, when durable, journal) a served exchange so
+    /// `regenerate` works across restarts. Append under the exchange
+    /// write lock so WAL order matches state order.
+    fn record_exchange(&self, request_id: u64, request: Request, regen_count: u32) {
+        let _gate = self.persist.as_ref().map(|p| p.gate_shared());
+        let mut ex = self.exchanges.write().unwrap();
+        if let Some(p) = &self.persist {
+            p.append_best_effort(&WalOp::Exchange {
+                request_id,
+                regen_count,
+                request_json: request.to_json().to_string(),
+            });
+        }
+        ex.insert(
+            request_id,
             StoredExchange {
-                request: req,
-                regen_count: 0,
+                request,
+                regen_count,
             },
         );
-        Ok(resp)
     }
 
     /// `proxy.regenerate` (Table 2): re-resolve a previous request.
@@ -166,6 +338,7 @@ impl Bridge {
         let (mut req, count) = {
             let ex = self.exchanges.read().unwrap();
             let e = ex
+                .map
                 .get(&request_id)
                 .ok_or(BridgeError::UnknownRequest(request_id))?;
             (e.request.clone(), e.regen_count + 1)
@@ -176,13 +349,7 @@ impl Bridge {
         };
         self.telemetry.counters.incr("regenerations");
         let resp = self.resolve(&req, count)?;
-        self.exchanges.write().unwrap().insert(
-            resp.metadata.request_id,
-            StoredExchange {
-                request: req,
-                regen_count: count,
-            },
-        );
+        self.record_exchange(resp.metadata.request_id, req, count);
         Ok(resp)
     }
 
@@ -296,6 +463,7 @@ impl Bridge {
     /// between a read-side check and a later charge. Returns whether the
     /// slot was reserved.
     pub(crate) fn reserve_quota_slot(&self, user: &str) -> bool {
+        let _gate = self.persist.as_ref().map(|p| p.gate_shared());
         let mut q = self.quotas.write().unwrap();
         let quota = &self.config.quota;
         let st = q.entry(user.to_string()).or_default();
@@ -306,25 +474,45 @@ impl Bridge {
             return false;
         }
         st.requests += 1;
+        self.journal_quota(user, st);
         true
     }
 
     /// Roll back a reservation whose request failed after the gate — a
     /// request that served nothing must not consume quota.
     pub(crate) fn release_quota_slot(&self, user: &str) {
+        let _gate = self.persist.as_ref().map(|p| p.gate_shared());
         let mut q = self.quotas.write().unwrap();
         if let Some(st) = q.get_mut(user) {
             st.requests = st.requests.saturating_sub(1);
+            let st = st.clone();
+            self.journal_quota(user, &st);
         }
     }
 
     /// Charge a resolved request's token usage (its request slot was
     /// reserved at the route gate).
     pub(crate) fn charge_quota_tokens(&self, user: &str, input_tokens: u64, output_tokens: u64) {
+        let _gate = self.persist.as_ref().map(|p| p.gate_shared());
         let mut q = self.quotas.write().unwrap();
         let st = q.entry(user.to_string()).or_default();
         st.input_tokens += input_tokens;
         st.output_tokens += output_tokens;
+        self.journal_quota(user, st);
+    }
+
+    /// Journal a user's absolute quota state. Called while the caller
+    /// still holds the quota write lock (so WAL record order matches
+    /// state-mutation order; the replay rule is last-record-wins).
+    fn journal_quota(&self, user: &str, st: &QuotaState) {
+        if let Some(p) = &self.persist {
+            p.append_best_effort(&WalOp::Quota {
+                user: user.to_string(),
+                requests: st.requests,
+                input_tokens: st.input_tokens,
+                output_tokens: st.output_tokens,
+            });
+        }
     }
 
     /// Quota usage for a user (classroom dashboards).
@@ -333,6 +521,88 @@ impl Bridge {
         q.get(user)
             .map(|s| (s.requests, s.input_tokens, s.output_tokens))
             .unwrap_or((0, 0, 0))
+    }
+
+    // ------------------------------------------------------- compaction
+
+    /// Fold the WAL into a fresh snapshot generation (no-op without a
+    /// data dir; returns whether a compaction ran). The persist layer
+    /// holds its gate exclusively across the capture, so the snapshot is
+    /// a consistent cut and the superseded WAL is complete.
+    pub fn compact_persistence(&self) -> Result<bool, BridgeError> {
+        let Some(p) = &self.persist else {
+            return Ok(false);
+        };
+        let ran = p.compact_with(self.engine.embed_dim(), |tmp| {
+            // History writes are not gated, so the manifest must describe
+            // exactly the rows the file captured — snapshot() returns the
+            // (len, checksum) it computed under the shard locks as it
+            // wrote, never a second (possibly newer) read of the store.
+            let (kv_len, kv_checksum) = self
+                .kv
+                .snapshot(&tmp.join("kv.jsonl"))
+                .map_err(|e| BridgeError::Persist(format!("kv snapshot: {e:#}")))?;
+            self.cache
+                .snapshot_into(tmp)
+                .map_err(|e| BridgeError::Persist(format!("cache snapshot: {e:#}")))?;
+            let quotas: Vec<QuotaRow> = {
+                let q = self.quotas.read().unwrap();
+                q.iter()
+                    .map(|(user, st)| QuotaRow {
+                        user: user.clone(),
+                        requests: st.requests,
+                        input_tokens: st.input_tokens,
+                        output_tokens: st.output_tokens,
+                    })
+                    .collect()
+            };
+            let exchanges: Vec<ExchangeRow> = {
+                // Capture in insertion order so the restored store evicts
+                // the same (oldest) entries when the window refills.
+                let ex = self.exchanges.read().unwrap();
+                ex.order
+                    .iter()
+                    .filter_map(|id| {
+                        ex.map.get(id).map(|e| ExchangeRow {
+                            request_id: *id,
+                            regen_count: e.regen_count,
+                            request: e.request.to_json(),
+                        })
+                    })
+                    .collect()
+            };
+            crate::persist::snapshot::write_state(
+                &tmp.join("state.jsonl"),
+                &quotas,
+                &exchanges,
+            )?;
+            // Cache/quota/exchange mutators all hold the gate, so these
+            // reads are consistent with the files just written.
+            Ok(CaptureCounts {
+                objects: self.cache.len_objects(),
+                keys: self.cache.len_keys(),
+                exact: self.cache.len_exact(),
+                next_id: self.cache.next_id_hint(),
+                kv_len,
+                kv_checksum,
+            })
+        })?;
+        if ran {
+            self.telemetry.counters.incr("persist_compactions");
+        }
+        Ok(ran)
+    }
+
+    /// Compact iff the WAL has outgrown `config.compact_wal_bytes` — the
+    /// size-keyed trigger the server's background janitor polls.
+    pub fn maybe_compact(&self) -> Result<bool, BridgeError> {
+        let Some(p) = &self.persist else {
+            return Ok(false);
+        };
+        if p.wal_len() < self.config.compact_wal_bytes {
+            return Ok(false);
+        }
+        self.compact_persistence()
     }
 }
 

@@ -20,6 +20,10 @@ pub enum BridgeError {
     BadRequest(String),
     /// Engine / runtime failure — nothing the caller did wrong.
     Internal(anyhow::Error),
+    /// Durable-state failure: snapshot/WAL corruption detected at boot or
+    /// compaction (torn *tails* are tolerated and never reach here; this
+    /// is interior corruption or an unreadable data dir).
+    Persist(String),
 }
 
 impl BridgeError {
@@ -30,6 +34,7 @@ impl BridgeError {
             BridgeError::UnknownRequest(_) => 404,
             BridgeError::BadRequest(_) => 400,
             BridgeError::Internal(_) => 500,
+            BridgeError::Persist(_) => 500,
         }
     }
 
@@ -48,6 +53,7 @@ impl fmt::Display for BridgeError {
             BridgeError::BadRequest(msg) => write!(f, "{msg}"),
             // `{:#}` keeps the anyhow context chain in one line.
             BridgeError::Internal(e) => write!(f, "{e:#}"),
+            BridgeError::Persist(msg) => write!(f, "persistence: {msg}"),
         }
     }
 }
@@ -73,6 +79,14 @@ mod tests {
             BridgeError::Internal(anyhow::anyhow!("boom")).http_status(),
             500
         );
+        assert_eq!(BridgeError::Persist("bad wal".into()).http_status(), 500);
+    }
+
+    #[test]
+    fn persist_display_names_the_subsystem() {
+        let e = BridgeError::Persist("wal checksum mismatch in record 3".into());
+        assert!(e.to_string().contains("persistence"));
+        assert!(e.to_string().contains("checksum"));
     }
 
     #[test]

@@ -83,26 +83,72 @@ impl KvStore {
         out
     }
 
-    /// Persist as JSON-lines: one `{"k":...,"v":...}` per line.
-    pub fn snapshot(&self, path: &Path) -> Result<()> {
-        let mut f = std::fs::File::create(path)
+    /// One FNV hash over key + NUL + value: binding the pair into a single
+    /// hash means swapping values between keys changes the entry hashes (a
+    /// per-part XOR would cancel under that permutation).
+    fn entry_hash(k: &str, v: &str) -> u64 {
+        let mut buf = Vec::with_capacity(k.len() + 1 + v.len());
+        buf.extend_from_slice(k.as_bytes());
+        buf.push(0);
+        buf.extend_from_slice(v.as_bytes());
+        fnv1a(&buf)
+    }
+
+    /// Persist as JSON-lines: one `{"k":...,"v":...}` per line, fsynced
+    /// (snapshots participate in the persist layer's crash-safety story).
+    ///
+    /// Returns the `(len, checksum)` of **exactly the rows written** —
+    /// computed under the same shard locks as the writes, so a manifest
+    /// built from the return value always validates against the file even
+    /// if other threads mutate the store mid-snapshot.
+    pub fn snapshot(&self, path: &Path) -> Result<(usize, u64)> {
+        let f = std::fs::File::create(path)
             .with_context(|| format!("snapshot create {path:?}"))?;
+        let mut w = std::io::BufWriter::new(f);
+        let mut len = 0usize;
+        let mut checksum = 0u64;
         for s in &self.shards {
             let m = s.lock().unwrap();
             for (k, v) in m.iter() {
                 let line = Json::obj(vec![("k", Json::str(k.clone())), ("v", v.clone())]);
-                writeln!(f, "{}", line.to_string())?;
+                writeln!(w, "{}", line.to_string())?;
+                len += 1;
+                checksum ^= Self::entry_hash(k, &v.to_string());
             }
         }
-        Ok(())
+        let f = w.into_inner().context("snapshot flush")?;
+        f.sync_all().context("snapshot sync")?;
+        Ok((len, checksum))
+    }
+
+    /// Order-independent content checksum: XOR of per-entry hashes, each
+    /// binding key to value (see [`KvStore::entry_hash`]). Recorded in the
+    /// snapshot MANIFEST by [`KvStore::snapshot`] and cross-checked against
+    /// the restored store on boot.
+    pub fn checksum(&self) -> u64 {
+        let mut acc = 0u64;
+        for s in &self.shards {
+            let m = s.lock().unwrap();
+            for (k, v) in m.iter() {
+                acc ^= Self::entry_hash(k, &v.to_string());
+            }
+        }
+        acc
     }
 
     pub fn restore(path: &Path) -> Result<KvStore> {
+        use std::io::BufRead as _;
         let store = KvStore::new();
-        let text = std::fs::read_to_string(path)
+        let f = std::fs::File::open(path)
             .with_context(|| format!("snapshot read {path:?}"))?;
-        for line in text.lines().filter(|l| !l.trim().is_empty()) {
-            let row = Json::parse(line)?;
+        // Stream line-by-line: months of history must not be held as one
+        // String alongside the parsed rows during boot.
+        for line in std::io::BufReader::new(f).lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let row = Json::parse(&line)?;
             let k = row.str_of("k")?;
             let v = row.req("v")?.clone();
             store.put(&k, v);
@@ -156,10 +202,35 @@ mod tests {
         let dir = std::env::temp_dir().join("llmbridge_kv_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("snap.jsonl");
-        kv.snapshot(&path).unwrap();
+        let (len, checksum) = kv.snapshot(&path).unwrap();
+        assert_eq!(len, 2);
         let back = KvStore::restore(&path).unwrap();
         assert_eq!(back.get("a"), Some(Json::str("x\ny")));
         assert_eq!(back.len(), 2);
+        // The restored store hashes identically to the rows as written
+        // (this is exactly the manifest validation on boot).
+        assert_eq!(back.checksum(), checksum);
+        assert_eq!(kv.checksum(), checksum);
+    }
+
+    #[test]
+    fn checksum_tracks_content_not_order() {
+        let a = KvStore::new();
+        a.put("x", Json::num(1.0));
+        a.put("y", Json::num(2.0));
+        let b = KvStore::new();
+        b.put("y", Json::num(2.0));
+        b.put("x", Json::num(1.0));
+        assert_eq!(a.checksum(), b.checksum());
+        b.put("y", Json::num(3.0));
+        assert_ne!(a.checksum(), b.checksum());
+        assert_ne!(KvStore::new().checksum(), a.checksum());
+        // Swapping values between keys must NOT cancel: each entry hash
+        // binds key to value.
+        let swapped = KvStore::new();
+        swapped.put("x", Json::num(2.0));
+        swapped.put("y", Json::num(1.0));
+        assert_ne!(a.checksum(), swapped.checksum());
     }
 
     #[test]

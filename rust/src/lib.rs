@@ -18,7 +18,11 @@
 //! * **Semantic caching** ([`cache`]) — a typed-key semantic cache over a
 //!   vector database, with *delegated* PUT (chunking + key generation via a
 //!   cache-LLM) and *delegated* GET ("SmartCache") that grounds a local
-//!   model's answer in cached facts (§3.5).
+//!   model's answer in cached facts (§3.5). With a data directory
+//!   configured, the [`persist`] subsystem (snapshot + WAL) makes the
+//!   cache, quotas, and exchanges durable to the last write — restarts
+//!   never re-pay the API cost the cache exists to avoid — while
+//!   conversation history restores from the last snapshot compaction.
 //!
 //! Applications drive these through the high-level, **bidirectional** API
 //! ([`api`]): a `service_type` per request delegates decisions to the proxy,
@@ -51,6 +55,7 @@ pub mod error;
 pub mod experiments;
 pub mod kvstore;
 pub mod models;
+pub mod persist;
 pub mod queuing;
 pub mod router;
 pub mod runtime;

@@ -3,6 +3,7 @@
 //! ```text
 //! llmbridge serve   [--bind 127.0.0.1:8080] [--workers 4] [--artifacts DIR]
 //!                   [--prefetch] [--generation old|new]
+//!                   [--data-dir DIR] [--compact-wal-bytes N]
 //! llmbridge ask     --prompt "..." [--service TYPE] [--user u] [--artifacts DIR]
 //! llmbridge warm    [--artifacts DIR]        # load corpus into the cache
 //! llmbridge models                            # print the model pool
@@ -30,6 +31,10 @@ fn config_from(args: &Args) -> BridgeConfig {
         },
         memoize: !args.flag("no-memoize"),
         quota: Default::default(),
+        // Durable cache/quota/exchange state (snapshot + WAL). Off by
+        // default: without --data-dir the proxy is fully in-memory.
+        data_dir: args.get("data-dir").map(std::path::PathBuf::from),
+        compact_wal_bytes: args.u64_or("compact-wal-bytes", 8 * 1024 * 1024),
     }
 }
 
@@ -138,7 +143,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: llmbridge <serve|ask|warm|models> [--artifacts DIR] \
                  [--service TYPE] [--prompt TEXT] [--bind ADDR] [--workers N] \
-                 [--generation old|new] [--prefetch] [--warm]"
+                 [--generation old|new] [--prefetch] [--warm] \
+                 [--data-dir DIR] [--compact-wal-bytes N]"
             );
         }
     }

@@ -1,0 +1,529 @@
+//! Durable-state subsystem: snapshot + write-ahead-log persistence for
+//! the proxy's stateful core (semantic cache, vector index, quotas,
+//! exchanges, KV history).
+//!
+//! The paper's cache pays off over *months* of deployment (the WhatsApp
+//! service ran 12+; §5.1), so the state it accumulates must survive
+//! restarts instead of re-paying the API cost it exists to avoid. The
+//! design is a classic snapshot + log pair:
+//!
+//! * every cache mutation (`put_exact` / `put` / `put_interaction` /
+//!   `put_delegated` / `clear`) and every quota/exchange update appends a
+//!   checksummed binary record to the current WAL ([`wal`]). PUT records
+//!   carry the embedding vectors computed at insert time, so restore
+//!   never re-embeds;
+//! * compaction folds the log into a snapshot generation ([`snapshot`]):
+//!   a validated bulk image of the sharded cache (LBV2 vector rows +
+//!   object/key/exact rows), the KV store, and quota/exchange state,
+//!   committed by an atomic `CURRENT` swap;
+//! * boot restores the committed snapshot, then replays the WAL tail,
+//!   tolerating a torn final record (truncate-and-warn) while rejecting
+//!   interior corruption with a typed [`BridgeError::Persist`].
+//!
+//! ## Concurrency: the compaction gate
+//!
+//! All journaled mutators hold the [`Persistence`] gate in *shared* mode
+//! across their apply+append; compaction holds it *exclusively* while it
+//! captures state and swaps generations. That makes each snapshot a
+//! consistent cut with an empty log — no mutation can straddle the swap.
+//! Lock order is always gate → state locks (cache shards / quota map) →
+//! WAL file mutex; compaction takes gate(write) → state read locks, so
+//! there is no cycle. The gate is free (one uncontended `RwLock` read)
+//! when persistence is enabled and entirely absent when it is not.
+
+pub mod snapshot;
+pub mod wal;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+use crate::cache::{CacheObject, CachedType, Journal, JournalGuard};
+use crate::error::BridgeError;
+use self::snapshot::{persist_err, CaptureCounts, Manifest, SnapshotState};
+use self::wal::{RecoveryReport, WalOp, WalWriter};
+
+/// Everything boot needs to rebuild the in-memory state: the committed
+/// snapshot (if any) plus the decoded WAL tail to replay on top.
+pub struct Boot {
+    pub snapshot: Option<SnapshotState>,
+    pub wal_ops: Vec<WalOp>,
+    pub report: RecoveryReport,
+}
+
+struct WriterSlot {
+    generation: u64,
+    wal: WalWriter,
+}
+
+/// Counters surfaced for tests/metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PersistStats {
+    pub generation: u64,
+    pub wal_bytes: u64,
+    pub replayed_ops: usize,
+    pub truncated_bytes: u64,
+    pub compactions: u64,
+    pub append_errors: u64,
+}
+
+/// A live data directory: the current WAL writer plus the compaction
+/// machinery. Owned by the `Bridge` (behind `Arc`, because the cache
+/// holds it as its [`Journal`]).
+pub struct Persistence {
+    dir: PathBuf,
+    gate: RwLock<()>,
+    writer: Mutex<WriterSlot>,
+    compacting: AtomicBool,
+    compactions: AtomicU64,
+    boot_report: RecoveryReport,
+    /// Canonicalized registry key for the data-dir lock this instance
+    /// holds a reference on (released on drop).
+    lock_key: PathBuf,
+}
+
+impl Drop for Persistence {
+    fn drop(&mut self) {
+        release_dir_lock(&self.lock_key);
+    }
+}
+
+/// Process-local refcount of held data-dir locks, keyed by canonical
+/// path. The LOCK *file* guards against other processes; this registry
+/// makes in-process sharing sound: the file is created when the first
+/// instance acquires a dir and removed only when the last one drops —
+/// dropping one of two same-process bridges no longer unlocks the dir
+/// under the survivor.
+static LOCKED_DIRS: std::sync::OnceLock<Mutex<std::collections::HashMap<PathBuf, usize>>> =
+    std::sync::OnceLock::new();
+
+fn lock_registry() -> &'static Mutex<std::collections::HashMap<PathBuf, usize>> {
+    LOCKED_DIRS.get_or_init(|| Mutex::new(std::collections::HashMap::new()))
+}
+
+fn release_dir_lock(key: &Path) {
+    let mut reg = lock_registry().lock().unwrap();
+    if let Some(n) = reg.get_mut(key) {
+        *n -= 1;
+        if *n == 0 {
+            reg.remove(key);
+            let _ = std::fs::remove_file(key.join("LOCK"));
+        }
+    }
+}
+
+/// The process's start time from `/proc/<pid>/stat` (field 22) — the
+/// cheap std-only way to tell a recycled pid from the original owner
+/// after a host reboot. `None` when the process does not exist (or on
+/// platforms without procfs).
+fn proc_starttime(pid: u32) -> Option<String> {
+    #[cfg(target_os = "linux")]
+    {
+        let stat = std::fs::read_to_string(format!("/proc/{pid}/stat")).ok()?;
+        // The comm field is parenthesized and may contain spaces; fields
+        // resume after the last ')'. starttime is field 22, i.e. index 19
+        // of the post-comm whitespace split (state is field 3).
+        let rest = stat.rsplit_once(')')?.1;
+        rest.split_whitespace().nth(19).map(|s| s.to_string())
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = pid;
+        None
+    }
+}
+
+/// Is the LOCK's recorded owner still the process that wrote it?
+/// Without procfs we cannot probe, so a foreign owner is conservatively
+/// treated as alive (the operator removes a truly stale LOCK by hand).
+fn lock_owner_alive(pid: u32, recorded_start: Option<&str>) -> bool {
+    if !cfg!(target_os = "linux") {
+        return true;
+    }
+    match proc_starttime(pid) {
+        // No such process.
+        None => false,
+        // A different start time means the pid was recycled after a
+        // reboot/crash: the recorded owner is dead.
+        Some(current) => match recorded_start {
+            Some(rec) if !rec.is_empty() => current == rec,
+            _ => true,
+        },
+    }
+}
+
+/// Advisory cross-process lock: a `LOCK` file holding `pid starttime`,
+/// created with `create_new`. Two *processes* on one data dir would
+/// destroy each other's state (dueling compactions, appends to an
+/// unlinked WAL), so a live foreign owner is a typed refusal. A lock
+/// whose owner is gone — or whose pid was recycled after a reboot
+/// (start-time mismatch) — is reclaimed. In-process sharing goes through
+/// [`lock_registry`]: additional opens of an already-held dir just bump
+/// the refcount (tests that reopen a dir they still hold a bridge for;
+/// the WAL-sharing hazards of doing so with two *writing* bridges remain
+/// the caller's responsibility). Returns the registry key.
+fn acquire_dir_lock(dir: &Path) -> Result<PathBuf, BridgeError> {
+    let key = dir
+        .canonicalize()
+        .map_err(|e| persist_err("data dir canonicalize", e))?;
+    // Hold the registry mutex across the whole file dance so two threads
+    // of this process can't race the create_new/reclaim sequence.
+    let mut reg = lock_registry().lock().unwrap();
+    if let Some(n) = reg.get_mut(&key) {
+        *n += 1;
+        return Ok(key);
+    }
+    let path = key.join("LOCK");
+    for _ in 0..2 {
+        match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+            Ok(mut f) => {
+                use std::io::Write as _;
+                let me = std::process::id();
+                let _ = writeln!(f, "{me} {}", proc_starttime(me).unwrap_or_default());
+                let _ = f.sync_all();
+                reg.insert(key.clone(), 1);
+                return Ok(key);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                let content = std::fs::read_to_string(&path).unwrap_or_default();
+                let mut parts = content.split_whitespace();
+                let owner: Option<u32> = parts.next().and_then(|s| s.parse().ok());
+                let recorded_start = parts.next();
+                match owner {
+                    // Our own pid with no registry entry: a leaked file
+                    // from an aborted boot of this process — reclaim.
+                    Some(pid) if pid == std::process::id() => {
+                        let _ = std::fs::remove_file(&path);
+                    }
+                    Some(pid) if !lock_owner_alive(pid, recorded_start) => {
+                        // Dead owner: reclaim and retry the create_new.
+                        let _ = std::fs::remove_file(&path);
+                    }
+                    // Unparseable/empty LOCK: a torn acquire — reclaim.
+                    None => {
+                        let _ = std::fs::remove_file(&path);
+                    }
+                    Some(pid) => {
+                        return Err(BridgeError::Persist(format!(
+                            "data dir {dir:?} is locked by another process \
+                             (LOCK pid {pid}); refusing to share a WAL",
+                        )))
+                    }
+                }
+            }
+            Err(e) => return Err(persist_err("LOCK create", e)),
+        }
+    }
+    Err(BridgeError::Persist(format!(
+        "data dir {dir:?} LOCK contention; retry"
+    )))
+}
+
+/// Remove every `snap-*` dir / `wal-*.log` file whose generation is not
+/// the committed one, plus aborted temp files. Best-effort (boot-time
+/// hygiene, never a boot failure).
+fn gc_stale_generations(dir: &Path, current: u64) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else {
+            continue;
+        };
+        let snap_gen = name.strip_prefix("snap-").and_then(|s| s.parse::<u64>().ok());
+        let wal_gen = name
+            .strip_prefix("wal-")
+            .and_then(|s| s.strip_suffix(".log"))
+            .and_then(|s| s.parse::<u64>().ok());
+        let stale = match (snap_gen, wal_gen) {
+            (Some(g), _) | (_, Some(g)) => g != current,
+            _ => name == "snap-tmp" || name == "CURRENT.tmp",
+        };
+        if stale {
+            let path = entry.path();
+            if path.is_dir() {
+                let _ = std::fs::remove_dir_all(&path);
+            } else {
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+    }
+}
+
+impl Persistence {
+    /// Open (or create) a data directory: take the advisory lock, restore
+    /// the committed snapshot, recover the WAL (truncating a torn tail),
+    /// and arm the writer.
+    pub fn open(dir: &Path, embed_dim: usize) -> Result<(Persistence, Boot), BridgeError> {
+        std::fs::create_dir_all(dir).map_err(|e| persist_err("data dir create", e))?;
+        let lock_key = acquire_dir_lock(dir)?;
+        // If boot fails past this point (corrupt CURRENT/snapshot/WAL),
+        // release this call's lock reference — otherwise a failed open
+        // leaks the refcount (and possibly the LOCK file) forever.
+        struct LockCleanup {
+            key: Option<PathBuf>,
+        }
+        impl Drop for LockCleanup {
+            fn drop(&mut self) {
+                if let Some(key) = &self.key {
+                    release_dir_lock(key);
+                }
+            }
+        }
+        let mut cleanup = LockCleanup {
+            key: Some(lock_key.clone()),
+        };
+        let generation = snapshot::read_current(dir)?;
+        // Sweep generations other than the committed one: aborted
+        // captures (snap-tmp, uncommitted snap-N+1) and — after a crash
+        // in the post-commit GC window — the superseded generation, which
+        // later compactions would otherwise never reclaim.
+        gc_stale_generations(dir, generation);
+        let snap = snapshot::load(dir, generation, embed_dim)?;
+        let wal_file = snapshot::wal_path(dir, generation);
+        let (wal_ops, report) = wal::recover(&wal_file)?;
+        // A missing or sub-magic file (torn before the header landed)
+        // starts fresh; otherwise append after the recovered prefix.
+        let durable_len = std::fs::metadata(&wal_file).map(|m| m.len()).unwrap_or(0);
+        let wal = if durable_len < wal::WAL_MAGIC.len() as u64 {
+            WalWriter::create(&wal_file)
+        } else {
+            WalWriter::open_append(&wal_file)
+        }
+        .map_err(|e| persist_err("wal open", e))?;
+        let p = Persistence {
+            dir: dir.to_path_buf(),
+            gate: RwLock::new(()),
+            writer: Mutex::new(WriterSlot { generation, wal }),
+            compacting: AtomicBool::new(false),
+            compactions: AtomicU64::new(0),
+            boot_report: report,
+            lock_key,
+        };
+        let boot = Boot {
+            snapshot: snap,
+            wal_ops,
+            report,
+        };
+        // Boot succeeded: the Persistence's own Drop now holds the lock
+        // reference.
+        cleanup.key = None;
+        Ok((p, boot))
+    }
+
+    pub fn data_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Shared-mode gate for one journaled mutation (see module docs).
+    pub fn gate_shared(&self) -> RwLockReadGuard<'_, ()> {
+        self.gate.read().unwrap()
+    }
+
+    fn gate_exclusive(&self) -> RwLockWriteGuard<'_, ()> {
+        self.gate.write().unwrap()
+    }
+
+    pub fn append(&self, op: &WalOp) -> std::io::Result<()> {
+        self.writer.lock().unwrap().wal.append(op)
+    }
+
+    pub fn append_best_effort(&self, op: &WalOp) {
+        self.writer.lock().unwrap().wal.append_best_effort(op)
+    }
+
+    /// Current WAL size — the compaction trigger input.
+    pub fn wal_len(&self) -> u64 {
+        self.writer.lock().unwrap().wal.len()
+    }
+
+    pub fn stats(&self) -> PersistStats {
+        let slot = self.writer.lock().unwrap();
+        PersistStats {
+            generation: slot.generation,
+            wal_bytes: slot.wal.len(),
+            replayed_ops: self.boot_report.ops,
+            truncated_bytes: self.boot_report.truncated_bytes,
+            compactions: self.compactions.load(Ordering::Relaxed),
+            append_errors: slot.wal.append_errors(),
+        }
+    }
+
+    /// Run one compaction. `capture` writes the bridge-owned state files
+    /// (`kv.jsonl`, `vecdb.bin`, `cache.jsonl`, `state.jsonl`) into the
+    /// fresh snapshot dir and returns the manifest counts; it runs with
+    /// the gate held exclusively, so the cut is consistent and the WAL it
+    /// supersedes is complete. Returns false if a compaction was already
+    /// in flight.
+    pub fn compact_with(
+        &self,
+        embed_dim: usize,
+        capture: impl FnOnce(&Path) -> Result<CaptureCounts, BridgeError>,
+    ) -> Result<bool, BridgeError> {
+        if self.compacting.swap(true, Ordering::Acquire) {
+            return Ok(false);
+        }
+        let out = self.compact_inner(embed_dim, capture);
+        self.compacting.store(false, Ordering::Release);
+        out.map(|_| true)
+    }
+
+    fn compact_inner(
+        &self,
+        embed_dim: usize,
+        capture: impl FnOnce(&Path) -> Result<CaptureCounts, BridgeError>,
+    ) -> Result<(), BridgeError> {
+        let _gate = self.gate_exclusive();
+        let mut slot = self.writer.lock().unwrap();
+        let old_gen = slot.generation;
+        let new_gen = old_gen + 1;
+
+        // 1. Capture into snap-tmp (clobbering any stale aborted attempt).
+        let tmp = self.dir.join("snap-tmp");
+        let _ = std::fs::remove_dir_all(&tmp);
+        std::fs::create_dir_all(&tmp).map_err(|e| persist_err("snap-tmp create", e))?;
+        let counts = capture(&tmp)?;
+        write_manifest_for(&tmp, new_gen, embed_dim, &counts)?;
+
+        // 2. Publish the files under their generation names. The capture
+        //    files are individually fsynced; sync the tmp dir so its
+        //    entries are durable before the rename, then the data dir so
+        //    the rename itself is.
+        snapshot::sync_dir(&tmp)?;
+        let final_dir = snapshot::snap_dir(&self.dir, new_gen);
+        let _ = std::fs::remove_dir_all(&final_dir);
+        std::fs::rename(&tmp, &final_dir).map_err(|e| persist_err("snapshot rename", e))?;
+        let new_wal_path = snapshot::wal_path(&self.dir, new_gen);
+        let _ = std::fs::remove_file(&new_wal_path);
+        let new_wal =
+            WalWriter::create(&new_wal_path).map_err(|e| persist_err("new wal create", e))?;
+        snapshot::sync_dir(&self.dir)?;
+
+        // 3. Commit: CURRENT now names the new generation (write_current
+        //    fsyncs the data dir after its rename, so the commit is
+        //    durable before any GC below). A crash before this line
+        //    leaves the old generation authoritative.
+        snapshot::write_current(&self.dir, new_gen)?;
+        *slot = WriterSlot {
+            generation: new_gen,
+            wal: new_wal,
+        };
+
+        // 4. GC the superseded generation (best-effort).
+        let _ = std::fs::remove_file(snapshot::wal_path(&self.dir, old_gen));
+        let _ = std::fs::remove_dir_all(snapshot::snap_dir(&self.dir, old_gen));
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+fn write_manifest_for(
+    tmp: &Path,
+    generation: u64,
+    embed_dim: usize,
+    counts: &CaptureCounts,
+) -> Result<(), BridgeError> {
+    snapshot::write_manifest(
+        tmp,
+        &Manifest {
+            generation,
+            embed_dim,
+            objects: counts.objects,
+            keys: counts.keys,
+            exact: counts.exact,
+            next_id: counts.next_id,
+            kv_len: counts.kv_len,
+            kv_checksum: counts.kv_checksum,
+        },
+    )
+}
+
+/// The cache journals through the persistence layer: mutations enter the
+/// gate in shared mode and append their WAL record after the in-memory
+/// apply. `log_put` surfaces append failures (the PUT's `Result` can carry
+/// them); the `()`-signature paths are best-effort and counted.
+impl Journal for Persistence {
+    fn enter(&self) -> JournalGuard<'_> {
+        JournalGuard::Shared(self.gate_shared())
+    }
+
+    fn enter_exclusive(&self) -> JournalGuard<'_> {
+        JournalGuard::Exclusive(self.gate_exclusive())
+    }
+
+    fn log_put_exact(&self, prompt: &str, response: &str) {
+        self.append_best_effort(&WalOp::PutExact {
+            prompt: prompt.to_string(),
+            response: response.to_string(),
+        });
+    }
+
+    fn log_put(
+        &self,
+        object: CacheObject,
+        keys: Vec<(u64, CachedType, Vec<f32>)>,
+    ) -> anyhow::Result<()> {
+        self.append(&WalOp::PutObject { object, keys })
+            .map_err(|e| anyhow::anyhow!("wal append: {e}"))
+    }
+
+    fn log_clear(&self) {
+        self.append_best_effort(&WalOp::Clear);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "llmbridge_persist_mod_{name}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn open_fresh_dir_is_empty_generation_zero() {
+        let dir = fresh_dir("fresh");
+        let (p, boot) = Persistence::open(&dir, 8).unwrap();
+        assert!(boot.snapshot.is_none());
+        assert!(boot.wal_ops.is_empty());
+        let s = p.stats();
+        assert_eq!(s.generation, 0);
+        assert_eq!(s.wal_bytes, wal::WAL_MAGIC.len() as u64);
+        // The WAL file exists and is re-openable.
+        drop(p);
+        let (p, boot) = Persistence::open(&dir, 8).unwrap();
+        assert!(boot.wal_ops.is_empty());
+        assert_eq!(p.stats().generation, 0);
+    }
+
+    #[test]
+    fn appends_survive_reopen() {
+        let dir = fresh_dir("reopen");
+        let (p, _) = Persistence::open(&dir, 8).unwrap();
+        p.append(&WalOp::PutExact {
+            prompt: "p".into(),
+            response: "r".into(),
+        })
+        .unwrap();
+        p.append(&WalOp::Clear).unwrap();
+        drop(p);
+        let (_, boot) = Persistence::open(&dir, 8).unwrap();
+        assert_eq!(boot.wal_ops.len(), 2);
+        assert!(matches!(boot.wal_ops[1], WalOp::Clear));
+    }
+
+    #[test]
+    fn current_pointing_at_missing_snapshot_is_typed_corruption() {
+        let dir = fresh_dir("missing_snap");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("CURRENT"), "3\n").unwrap();
+        let err = Persistence::open(&dir, 8).unwrap_err();
+        assert!(matches!(err, BridgeError::Persist(_)), "{err}");
+    }
+}

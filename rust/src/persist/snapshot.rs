@@ -1,0 +1,335 @@
+//! Snapshot directory format + the `CURRENT` generation pointer.
+//!
+//! A data directory holds one committed generation `N`:
+//!
+//! ```text
+//! CURRENT          "N\n" — the committed generation (atomic rename swap)
+//! snap-N/          absent for N == 0 (nothing compacted yet)
+//!   MANIFEST.json  geometry + checksums the loader validates against
+//!   kv.jsonl       KvStore::snapshot (history, profiles)
+//!   vecdb.bin      FlatIndex::save — LBV2 bulk rows (pre-normalized)
+//!   cache.jsonl    SemanticCache::snapshot_into — objects/keys/exact/meta
+//!   state.jsonl    quota rows + exchange rows
+//! wal-N.log        mutations since snap-N
+//! ```
+//!
+//! Compaction writes the next generation into `snap-tmp`, renames it to
+//! `snap-(N+1)`, creates `wal-(N+1).log`, and only then swaps `CURRENT`
+//! (write-temp + rename). A crash anywhere before the swap leaves
+//! generation `N` fully intact; stale `snap-tmp` / next-generation
+//! leftovers are clobbered by the next attempt.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::cache::SemanticCache;
+use crate::error::BridgeError;
+use crate::kvstore::KvStore;
+use crate::util::json::Json;
+
+const MANIFEST_VERSION: f64 = 1.0;
+
+pub(crate) fn persist_err(what: &str, e: impl std::fmt::Display) -> BridgeError {
+    BridgeError::Persist(format!("{what}: {e}"))
+}
+
+/// Snapshot geometry + checksums, written last into the snapshot dir and
+/// validated field-by-field on restore.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub generation: u64,
+    pub embed_dim: usize,
+    pub objects: usize,
+    pub keys: usize,
+    pub exact: usize,
+    pub next_id: u64,
+    pub kv_len: usize,
+    pub kv_checksum: u64,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(MANIFEST_VERSION)),
+            ("generation", Json::num(self.generation as f64)),
+            ("embed_dim", Json::num(self.embed_dim as f64)),
+            ("objects", Json::num(self.objects as f64)),
+            ("keys", Json::num(self.keys as f64)),
+            ("exact", Json::num(self.exact as f64)),
+            ("next_id", Json::num(self.next_id as f64)),
+            ("kv_len", Json::num(self.kv_len as f64)),
+            // Full-width u64: hex string, not a (lossy) JSON number.
+            ("kv_checksum", Json::str(format!("{:016x}", self.kv_checksum))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest, BridgeError> {
+        let field = |k: &str| {
+            j.f64_of(k)
+                .map_err(|e| persist_err("snapshot MANIFEST", e))
+        };
+        if field("version")? != MANIFEST_VERSION {
+            return Err(BridgeError::Persist(format!(
+                "snapshot MANIFEST version {} unsupported (want {MANIFEST_VERSION})",
+                field("version")?
+            )));
+        }
+        let kv_checksum = u64::from_str_radix(
+            &j.str_of("kv_checksum")
+                .map_err(|e| persist_err("snapshot MANIFEST", e))?,
+            16,
+        )
+        .map_err(|e| persist_err("snapshot MANIFEST kv_checksum", e))?;
+        Ok(Manifest {
+            generation: field("generation")? as u64,
+            embed_dim: field("embed_dim")? as usize,
+            objects: field("objects")? as usize,
+            keys: field("keys")? as usize,
+            exact: field("exact")? as usize,
+            next_id: field("next_id")? as u64,
+            kv_len: field("kv_len")? as usize,
+            kv_checksum,
+        })
+    }
+}
+
+/// Per-user quota state row (absolute values, like the WAL op).
+#[derive(Clone, Debug)]
+pub struct QuotaRow {
+    pub user: String,
+    pub requests: u64,
+    pub input_tokens: u64,
+    pub output_tokens: u64,
+}
+
+/// A served exchange row; the request is kept in its REST JSON form.
+#[derive(Clone, Debug)]
+pub struct ExchangeRow {
+    pub request_id: u64,
+    pub regen_count: u32,
+    pub request: Json,
+}
+
+/// Everything a snapshot restores (the WAL tail replays on top).
+pub struct SnapshotState {
+    pub kv: KvStore,
+    pub cache: SemanticCache,
+    pub quotas: Vec<QuotaRow>,
+    pub exchanges: Vec<ExchangeRow>,
+}
+
+/// Counts the compaction capture hands back for the manifest.
+pub struct CaptureCounts {
+    pub objects: usize,
+    pub keys: usize,
+    pub exact: usize,
+    pub next_id: u64,
+    pub kv_len: usize,
+    pub kv_checksum: u64,
+}
+
+// ------------------------------------------------------------- CURRENT
+
+pub fn snap_dir(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("snap-{generation}"))
+}
+
+pub fn wal_path(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("wal-{generation}.log"))
+}
+
+/// The committed generation (0 when nothing was ever compacted).
+pub fn read_current(dir: &Path) -> Result<u64, BridgeError> {
+    let path = dir.join("CURRENT");
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+        Err(e) => return Err(persist_err("CURRENT read", e)),
+    };
+    text.trim()
+        .parse::<u64>()
+        .map_err(|e| persist_err(&format!("CURRENT parse '{}'", text.trim()), e))
+}
+
+/// fsync a directory so renames/creations/unlinks of its entries are
+/// durable, not just the file contents (Linux semantics; best-effort
+/// no-op where directories can't be opened).
+pub fn sync_dir(dir: &Path) -> Result<(), BridgeError> {
+    match std::fs::File::open(dir) {
+        Ok(f) => f.sync_all().map_err(|e| persist_err("dir sync", e)),
+        Err(_) => Ok(()),
+    }
+}
+
+/// Atomically commit a new generation: write-temp, fsync, rename, then
+/// fsync the directory so the rename itself is durable before callers
+/// GC the superseded generation.
+pub fn write_current(dir: &Path, generation: u64) -> Result<(), BridgeError> {
+    let tmp = dir.join("CURRENT.tmp");
+    let mut f = std::fs::File::create(&tmp).map_err(|e| persist_err("CURRENT.tmp", e))?;
+    writeln!(f, "{generation}").map_err(|e| persist_err("CURRENT.tmp write", e))?;
+    f.sync_all().map_err(|e| persist_err("CURRENT.tmp sync", e))?;
+    std::fs::rename(&tmp, dir.join("CURRENT"))
+        .map_err(|e| persist_err("CURRENT rename", e))?;
+    sync_dir(dir)
+}
+
+// ------------------------------------------------------------ snapshot
+
+/// Write MANIFEST.json into a snapshot dir (done last: a dir without a
+/// manifest is an aborted capture, and the loader will reject it).
+pub fn write_manifest(snap: &Path, manifest: &Manifest) -> Result<(), BridgeError> {
+    let path = snap.join("MANIFEST.json");
+    let mut f = std::fs::File::create(&path).map_err(|e| persist_err("MANIFEST create", e))?;
+    f.write_all(manifest.to_json().to_string().as_bytes())
+        .map_err(|e| persist_err("MANIFEST write", e))?;
+    f.sync_all().map_err(|e| persist_err("MANIFEST sync", e))?;
+    Ok(())
+}
+
+/// Write state.jsonl: quota + exchange rows.
+pub fn write_state(
+    path: &Path,
+    quotas: &[QuotaRow],
+    exchanges: &[ExchangeRow],
+) -> Result<(), BridgeError> {
+    let f = std::fs::File::create(path).map_err(|e| persist_err("state.jsonl create", e))?;
+    let mut w = std::io::BufWriter::new(f);
+    for q in quotas {
+        let row = Json::obj(vec![
+            ("t", Json::str("quota")),
+            ("user", Json::str(q.user.clone())),
+            ("requests", Json::num(q.requests as f64)),
+            ("in", Json::num(q.input_tokens as f64)),
+            ("out", Json::num(q.output_tokens as f64)),
+        ]);
+        writeln!(w, "{}", row.to_string()).map_err(|e| persist_err("state.jsonl write", e))?;
+    }
+    for e in exchanges {
+        let row = Json::obj(vec![
+            ("t", Json::str("exch")),
+            // Request ids are full-width hashes: hex, not f64.
+            ("id", Json::str(format!("{:016x}", e.request_id))),
+            ("regen", Json::num(e.regen_count as f64)),
+            ("req", e.request.clone()),
+        ]);
+        writeln!(w, "{}", row.to_string()).map_err(|e| persist_err("state.jsonl write", e))?;
+    }
+    let f = w
+        .into_inner()
+        .map_err(|e| persist_err("state.jsonl flush", e))?;
+    f.sync_all().map_err(|e| persist_err("state.jsonl sync", e))?;
+    Ok(())
+}
+
+fn read_state(path: &Path) -> Result<(Vec<QuotaRow>, Vec<ExchangeRow>), BridgeError> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| persist_err("state.jsonl read", e))?;
+    let mut quotas = Vec::new();
+    let mut exchanges = Vec::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let row = Json::parse(line).map_err(|e| persist_err("state.jsonl parse", e))?;
+        let tag = row
+            .str_of("t")
+            .map_err(|e| persist_err("state.jsonl row", e))?;
+        match tag.as_str() {
+            "quota" => quotas.push(QuotaRow {
+                user: row.str_of("user").map_err(|e| persist_err("quota row", e))?,
+                requests: row.f64_of("requests").map_err(|e| persist_err("quota row", e))?
+                    as u64,
+                input_tokens: row.f64_of("in").map_err(|e| persist_err("quota row", e))?
+                    as u64,
+                output_tokens: row.f64_of("out").map_err(|e| persist_err("quota row", e))?
+                    as u64,
+            }),
+            "exch" => exchanges.push(ExchangeRow {
+                request_id: u64::from_str_radix(
+                    &row.str_of("id").map_err(|e| persist_err("exch row", e))?,
+                    16,
+                )
+                .map_err(|e| persist_err("exch row id", e))?,
+                regen_count: row.f64_of("regen").map_err(|e| persist_err("exch row", e))?
+                    as u32,
+                request: row
+                    .req("req")
+                    .map_err(|e| persist_err("exch row", e))?
+                    .clone(),
+            }),
+            other => {
+                return Err(BridgeError::Persist(format!(
+                    "unknown state.jsonl row type '{other}'"
+                )))
+            }
+        }
+    }
+    Ok((quotas, exchanges))
+}
+
+/// Load generation `generation`'s snapshot. Generation 0 has none by
+/// construction; for N > 0 a missing or inconsistent snapshot dir is
+/// corruption (CURRENT committed it).
+pub fn load(
+    dir: &Path,
+    generation: u64,
+    embed_dim: usize,
+) -> Result<Option<SnapshotState>, BridgeError> {
+    if generation == 0 {
+        return Ok(None);
+    }
+    let snap = snap_dir(dir, generation);
+    if !snap.is_dir() {
+        return Err(BridgeError::Persist(format!(
+            "CURRENT names generation {generation} but {snap:?} is missing"
+        )));
+    }
+    let manifest_text = std::fs::read_to_string(snap.join("MANIFEST.json"))
+        .map_err(|e| persist_err("MANIFEST read", e))?;
+    let manifest = Manifest::from_json(
+        &Json::parse(&manifest_text).map_err(|e| persist_err("MANIFEST parse", e))?,
+    )?;
+    if manifest.generation != generation {
+        return Err(BridgeError::Persist(format!(
+            "MANIFEST generation {} does not match CURRENT {generation}",
+            manifest.generation
+        )));
+    }
+    if manifest.embed_dim != embed_dim {
+        return Err(BridgeError::Persist(format!(
+            "snapshot embed_dim {} does not match the engine's {embed_dim}",
+            manifest.embed_dim
+        )));
+    }
+    let kv = KvStore::restore(&snap.join("kv.jsonl"))
+        .map_err(|e| persist_err("kv.jsonl restore", e))?;
+    if kv.len() != manifest.kv_len || kv.checksum() != manifest.kv_checksum {
+        return Err(BridgeError::Persist(format!(
+            "kv.jsonl does not match MANIFEST (len {} vs {}, checksum mismatch)",
+            kv.len(),
+            manifest.kv_len
+        )));
+    }
+    let cache = SemanticCache::restore_from_dir(&snap, embed_dim)
+        .map_err(|e| persist_err("cache snapshot restore", format!("{e:#}")))?;
+    if cache.len_objects() != manifest.objects
+        || cache.len_keys() != manifest.keys
+        || cache.len_exact() != manifest.exact
+        || cache.next_id_hint() != manifest.next_id
+    {
+        return Err(BridgeError::Persist(format!(
+            "cache snapshot does not match MANIFEST (objects {}/{}, keys {}/{}, exact {}/{})",
+            cache.len_objects(),
+            manifest.objects,
+            cache.len_keys(),
+            manifest.keys,
+            cache.len_exact(),
+            manifest.exact,
+        )));
+    }
+    let (quotas, exchanges) = read_state(&snap.join("state.jsonl"))?;
+    Ok(Some(SnapshotState {
+        kv,
+        cache,
+        quotas,
+        exchanges,
+    }))
+}

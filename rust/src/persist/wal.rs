@@ -1,0 +1,716 @@
+//! Binary write-ahead log: length-prefixed, checksummed records.
+//!
+//! File layout: an 8-byte magic (`LBWAL001`) followed by records of the
+//! form `[payload_len: u32 LE][crc: u64 LE][payload]`, where `crc` is the
+//! FNV-1a hash of the payload. Each [`WalOp`] payload is a tagged binary
+//! encoding (no JSON on the append path — a PUT carries its embedding
+//! vectors, so records are written raw and bulk).
+//!
+//! ## Recovery semantics
+//!
+//! * A **torn tail** — the expected artifact of a crash or power loss —
+//!   is truncated away with a warning, keeping the durable prefix.
+//!   Appends reach only the page cache, so a power loss can legitimately
+//!   leave garbage *inside* the last record (or a zero-filled tail), not
+//!   just a short one. An anomalous record (checksum mismatch,
+//!   undecodable payload, past-EOF or insane declared length) is torn
+//!   when a **resync probe** finds no complete valid record after it.
+//! * An anomalous record with a decodable, checksum-valid record
+//!   somewhere after it is **interior corruption**: recovery surfaces
+//!   [`BridgeError::Persist`] rather than silently dropping the valid
+//!   tail (a flipped length field cannot masquerade as a torn tail).
+//!
+//! Appends are a single `write_all` of the whole record under one mutex,
+//! so a crash can tear at most the final record. Bytes reach the OS page
+//! cache on every append (durable across process crashes); `fsync` is
+//! paid only at WAL creation and snapshot compaction, not per append.
+
+use std::io::{Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::cache::{CacheObject, CachedType};
+use crate::error::BridgeError;
+use crate::util::fnv1a;
+
+/// WAL file magic + format version.
+pub const WAL_MAGIC: &[u8; 8] = b"LBWAL001";
+/// `payload_len: u32` + `crc: u64`.
+const RECORD_HEADER: usize = 4 + 8;
+/// Sanity cap on one record's payload. Far above any real op (a delegated
+/// PUT logs tens of keys x embed_dim f32s, i.e. tens of KiB); a declared
+/// length beyond it is corruption, not a big record.
+pub const MAX_RECORD: usize = 64 * 1024 * 1024;
+
+const TAG_PUT_EXACT: u8 = 1;
+const TAG_PUT_OBJECT: u8 = 2;
+const TAG_CLEAR: u8 = 3;
+const TAG_QUOTA: u8 = 4;
+const TAG_EXCHANGE: u8 = 5;
+
+/// One durable mutation. Cache PUTs carry the embedding vectors computed
+/// at insert time, so replay never touches the engine (no re-embedding).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WalOp {
+    /// `SemanticCache::put_exact` (original prompt; normalization is
+    /// deterministic and re-applied on replay).
+    PutExact { prompt: String, response: String },
+    /// One `SemanticCache::put`: the object plus its typed keys, each with
+    /// the original key id and the raw embedding handed to the index.
+    PutObject {
+        object: CacheObject,
+        keys: Vec<(u64, CachedType, Vec<f32>)>,
+    },
+    /// `SemanticCache::clear`.
+    Clear,
+    /// Absolute per-user quota state after a mutation (last record wins on
+    /// replay; appended under the quota lock so WAL order = state order).
+    Quota {
+        user: String,
+        requests: u64,
+        input_tokens: u64,
+        output_tokens: u64,
+    },
+    /// A served exchange (for `regenerate` across restarts); the request
+    /// is stored as its REST JSON form.
+    Exchange {
+        request_id: u64,
+        regen_count: u32,
+        request_json: String,
+    },
+}
+
+// ------------------------------------------------------------- encoding
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u32(out, v.len() as u32);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| format!("payload underrun at byte {}", self.pos))?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| "non-utf8 string".to_string())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or("vector length overflow")?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.pos != self.bytes.len() {
+            return Err(format!(
+                "trailing bytes in payload ({} of {})",
+                self.pos,
+                self.bytes.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl WalOp {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            WalOp::PutExact { prompt, response } => {
+                out.push(TAG_PUT_EXACT);
+                put_str(&mut out, prompt);
+                put_str(&mut out, response);
+            }
+            WalOp::PutObject { object, keys } => {
+                out.push(TAG_PUT_OBJECT);
+                put_u64(&mut out, object.id);
+                out.push(object.is_document as u8);
+                put_str(&mut out, &object.text);
+                put_str(&mut out, &object.origin);
+                put_u32(&mut out, keys.len() as u32);
+                for (key_id, ctype, vector) in keys {
+                    put_u64(&mut out, *key_id);
+                    out.push(ctype.tag());
+                    put_f32s(&mut out, vector);
+                }
+            }
+            WalOp::Clear => out.push(TAG_CLEAR),
+            WalOp::Quota {
+                user,
+                requests,
+                input_tokens,
+                output_tokens,
+            } => {
+                out.push(TAG_QUOTA);
+                put_str(&mut out, user);
+                put_u64(&mut out, *requests);
+                put_u64(&mut out, *input_tokens);
+                put_u64(&mut out, *output_tokens);
+            }
+            WalOp::Exchange {
+                request_id,
+                regen_count,
+                request_json,
+            } => {
+                out.push(TAG_EXCHANGE);
+                put_u64(&mut out, *request_id);
+                put_u32(&mut out, *regen_count);
+                put_str(&mut out, request_json);
+            }
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<WalOp, String> {
+        let mut c = Cursor {
+            bytes: payload,
+            pos: 0,
+        };
+        let op = match c.u8()? {
+            TAG_PUT_EXACT => WalOp::PutExact {
+                prompt: c.str()?,
+                response: c.str()?,
+            },
+            TAG_PUT_OBJECT => {
+                let id = c.u64()?;
+                let is_document = c.u8()? != 0;
+                let text = c.str()?;
+                let origin = c.str()?;
+                let nkeys = c.u32()? as usize;
+                let mut keys = Vec::with_capacity(nkeys.min(1024));
+                for _ in 0..nkeys {
+                    let key_id = c.u64()?;
+                    let ctype = CachedType::from_tag(c.u8()?)
+                        .ok_or_else(|| "bad cached-type tag".to_string())?;
+                    keys.push((key_id, ctype, c.f32s()?));
+                }
+                WalOp::PutObject {
+                    object: CacheObject {
+                        id,
+                        text,
+                        origin,
+                        is_document,
+                    },
+                    keys,
+                }
+            }
+            TAG_CLEAR => WalOp::Clear,
+            TAG_QUOTA => WalOp::Quota {
+                user: c.str()?,
+                requests: c.u64()?,
+                input_tokens: c.u64()?,
+                output_tokens: c.u64()?,
+            },
+            TAG_EXCHANGE => WalOp::Exchange {
+                request_id: c.u64()?,
+                regen_count: c.u32()?,
+                request_json: c.str()?,
+            },
+            t => return Err(format!("unknown op tag {t}")),
+        };
+        c.done()?;
+        Ok(op)
+    }
+}
+
+// -------------------------------------------------------------- writing
+
+/// Append-side of a WAL file. Thread-safe: one internal mutex serializes
+/// appends, and each record is a single `write_all`, so a crash can tear
+/// only the final record.
+pub struct WalWriter {
+    file: Mutex<std::fs::File>,
+    len: AtomicU64,
+    append_errors: AtomicU64,
+    /// Latched when a failed append could not be rolled back: the file may
+    /// end in a partial record that later appends would bury as *interior*
+    /// corruption, so the writer refuses all further work.
+    poisoned: AtomicBool,
+}
+
+impl WalWriter {
+    /// Create (truncate) a fresh WAL and write + fsync the magic.
+    pub fn create(path: &Path) -> std::io::Result<WalWriter> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(WAL_MAGIC)?;
+        f.sync_all()?;
+        Ok(WalWriter {
+            file: Mutex::new(f),
+            len: AtomicU64::new(WAL_MAGIC.len() as u64),
+            append_errors: AtomicU64::new(0),
+            poisoned: AtomicBool::new(false),
+        })
+    }
+
+    /// Open an existing, already-recovered WAL for append.
+    pub fn open_append(path: &Path) -> std::io::Result<WalWriter> {
+        let f = std::fs::OpenOptions::new().append(true).open(path)?;
+        let len = f.metadata()?.len();
+        Ok(WalWriter {
+            file: Mutex::new(f),
+            len: AtomicU64::new(len),
+            append_errors: AtomicU64::new(0),
+            poisoned: AtomicBool::new(false),
+        })
+    }
+
+    /// Current file length in bytes (compaction trigger input).
+    pub fn len(&self) -> u64 {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    pub fn append_errors(&self) -> u64 {
+        self.append_errors.load(Ordering::Relaxed)
+    }
+
+    pub fn append(&self, op: &WalOp) -> std::io::Result<()> {
+        let payload = op.encode();
+        if payload.len() > MAX_RECORD {
+            // Enforce the reader's sanity cap at write time: an op this
+            // size must be rejected here (the caller sees the error and
+            // the record is dropped), never written and then classified
+            // as corruption at every subsequent boot.
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!(
+                    "wal record of {} bytes exceeds the {MAX_RECORD}-byte cap",
+                    payload.len()
+                ),
+            ));
+        }
+        let mut rec = Vec::with_capacity(RECORD_HEADER + payload.len());
+        rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        rec.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        rec.extend_from_slice(&payload);
+        let mut f = self.file.lock().unwrap();
+        if self.poisoned.load(Ordering::Relaxed) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "wal writer poisoned by an unrecoverable earlier append failure",
+            ));
+        }
+        if let Err(e) = f.write_all(&rec) {
+            // write_all may have persisted a prefix of the record. Roll
+            // the file back to the last committed offset so a later
+            // successful append cannot bury the partial record as
+            // *interior* corruption (which would brick every future
+            // boot). If the rollback itself fails, latch the writer shut.
+            let committed = self.len.load(Ordering::Relaxed);
+            let rolled_back =
+                f.set_len(committed).is_ok() && f.seek(SeekFrom::Start(committed)).is_ok();
+            if !rolled_back {
+                self.poisoned.store(true, Ordering::Relaxed);
+                eprintln!(
+                    "persist: WAL append failed AND rollback failed; \
+                     writer latched shut (recovery will truncate the torn tail)"
+                );
+            }
+            return Err(e);
+        }
+        self.len.fetch_add(rec.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Append, counting (and warning once about) failures instead of
+    /// surfacing them — for mutation paths with `()` signatures
+    /// (`put_exact`, `clear`, quota charges) where durability is
+    /// best-effort by design.
+    pub fn append_best_effort(&self, op: &WalOp) {
+        if let Err(e) = self.append(op) {
+            if self.append_errors.fetch_add(1, Ordering::Relaxed) == 0 {
+                eprintln!("persist: WAL append failed ({e}); durability degraded");
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- reading
+
+/// What recovery found and did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecoveryReport {
+    /// Complete, checksum-valid records replayed.
+    pub ops: usize,
+    /// Torn-tail bytes dropped (0 on a clean shutdown).
+    pub truncated_bytes: u64,
+}
+
+/// Pure scan of WAL bytes: the decoded ops plus the durable byte length
+/// (everything after it is a torn tail). An anomalous record (bad
+/// checksum, undecodable payload, insane declared length) is a torn tail
+/// when it is the *final* record or the rest of the file is zeros — the
+/// expected power-loss artifacts under page-cache-only appends — and
+/// typed interior corruption ([`BridgeError::Persist`]) when valid-looking
+/// data continues beyond it.
+pub fn scan(bytes: &[u8]) -> Result<(Vec<WalOp>, u64), BridgeError> {
+    if bytes.len() < WAL_MAGIC.len() {
+        // Torn before the magic finished writing: nothing durable.
+        return Ok((Vec::new(), 0));
+    }
+    if &bytes[..WAL_MAGIC.len()] != WAL_MAGIC {
+        return Err(BridgeError::Persist(
+            "bad WAL magic (not a LBWAL001 file)".to_string(),
+        ));
+    }
+    let mut pos = WAL_MAGIC.len();
+    let mut ops = Vec::new();
+    loop {
+        let rem = bytes.len() - pos;
+        if rem < RECORD_HEADER {
+            break; // clean EOF, or torn header
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u64::from_le_bytes(bytes[pos + 4..pos + 12].try_into().unwrap());
+        let anomaly = if len > MAX_RECORD {
+            format!(
+                "record {} at byte {pos} declares {len} bytes (cap {MAX_RECORD})",
+                ops.len()
+            )
+        } else if rem < RECORD_HEADER + len {
+            // Usually a genuine torn final record — but a flipped length
+            // field on a mid-file record claims the same shape, so this
+            // too must pass the resync probe below before truncating.
+            format!("record {} at byte {pos} extends past end of file", ops.len())
+        } else {
+            let payload = &bytes[pos + RECORD_HEADER..pos + RECORD_HEADER + len];
+            if fnv1a(payload) == crc {
+                match WalOp::decode(payload) {
+                    Ok(op) => {
+                        ops.push(op);
+                        pos += RECORD_HEADER + len;
+                        continue;
+                    }
+                    Err(e) => format!("record {} at byte {pos} decode: {e}", ops.len()),
+                }
+            } else {
+                format!("checksum mismatch in record {} at byte {pos}", ops.len())
+            }
+        };
+        // Anomalous record: a crash artifact only if nothing meaningful
+        // follows. A flipped length field can make a mid-file record
+        // *claim* to reach EOF, so "extent reaches EOF" alone would
+        // silently truncate valid later records — probe ahead for any
+        // decodable record first; finding one proves this is interior
+        // corruption, not a torn tail.
+        let zero_tail = bytes[pos..].iter().all(|&b| b == 0);
+        if !zero_tail && any_valid_record_in(bytes, pos + 1) {
+            return Err(BridgeError::Persist(format!("wal {anomaly}")));
+        }
+        break;
+    }
+    Ok((ops, pos as u64))
+}
+
+/// How far past an anomaly the resync probe looks for a next record. A
+/// true record after a corrupt one starts within `RECORD_HEADER +
+/// payload_len` bytes; typical payloads are KBs, so 1 MiB covers real
+/// logs while bounding the (rare, recovery-only) probe cost.
+const RESYNC_WINDOW: usize = 1024 * 1024;
+
+/// Is there a complete, checksum-valid, decodable record starting
+/// anywhere in `bytes[start..start+RESYNC_WINDOW]`? A 64-bit content
+/// checksum plus a successful decode makes a false positive on garbage
+/// astronomically unlikely.
+fn any_valid_record_in(bytes: &[u8], start: usize) -> bool {
+    let end = bytes.len();
+    let probe_end = end.min(start.saturating_add(RESYNC_WINDOW));
+    let mut q = start;
+    while q + RECORD_HEADER <= probe_end {
+        let len = u32::from_le_bytes(bytes[q..q + 4].try_into().unwrap()) as usize;
+        if len <= MAX_RECORD && q + RECORD_HEADER + len <= end {
+            let crc = u64::from_le_bytes(bytes[q + 4..q + 12].try_into().unwrap());
+            let payload = &bytes[q + RECORD_HEADER..q + RECORD_HEADER + len];
+            if fnv1a(payload) == crc && WalOp::decode(payload).is_ok() {
+                return true;
+            }
+        }
+        q += 1;
+    }
+    false
+}
+
+/// Read and recover a WAL file: decode the durable prefix and truncate a
+/// torn tail in place (with a warning). A missing file is an empty log.
+pub fn recover(path: &Path) -> Result<(Vec<WalOp>, RecoveryReport), BridgeError> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok((Vec::new(), RecoveryReport::default()))
+        }
+        Err(e) => {
+            return Err(BridgeError::Persist(format!("wal read {path:?}: {e}")))
+        }
+    };
+    let (ops, valid_len) = scan(&bytes)?;
+    let truncated_bytes = bytes.len() as u64 - valid_len;
+    if truncated_bytes > 0 {
+        eprintln!(
+            "persist: torn WAL tail at {path:?}: keeping {} records, dropping {truncated_bytes} trailing bytes",
+            ops.len()
+        );
+        let f = std::fs::OpenOptions::new()
+            .write(true)
+            .open(path)
+            .map_err(|e| BridgeError::Persist(format!("wal truncate open {path:?}: {e}")))?;
+        f.set_len(valid_len)
+            .map_err(|e| BridgeError::Persist(format!("wal truncate {path:?}: {e}")))?;
+    }
+    let report = RecoveryReport {
+        ops: ops.len(),
+        truncated_bytes,
+    };
+    Ok((ops, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen_text};
+
+    fn sample_ops(r: &mut crate::util::rng::Rng) -> Vec<WalOp> {
+        let n = 1 + r.below(6);
+        (0..n)
+            .map(|i| match r.below(5) {
+                0 => WalOp::PutExact {
+                    prompt: gen_text(r, 6),
+                    response: gen_text(r, 6),
+                },
+                1 => WalOp::PutObject {
+                    object: CacheObject {
+                        id: r.next_u64() >> 12,
+                        text: gen_text(r, 8),
+                        origin: gen_text(r, 3),
+                        is_document: r.chance(0.5),
+                    },
+                    keys: (0..1 + r.below(3))
+                        .map(|k| {
+                            (
+                                r.next_u64() >> 12,
+                                CachedType::from_tag((k % 7) as u8).unwrap(),
+                                (0..8).map(|_| r.normal() as f32).collect(),
+                            )
+                        })
+                        .collect(),
+                },
+                2 => WalOp::Clear,
+                3 => WalOp::Quota {
+                    user: gen_text(r, 2),
+                    requests: i as u64,
+                    input_tokens: r.next_u64() >> 20,
+                    output_tokens: r.next_u64() >> 20,
+                },
+                _ => WalOp::Exchange {
+                    request_id: r.next_u64(),
+                    regen_count: r.below(4) as u32,
+                    request_json: format!("{{\"user\":\"{}\"}}", gen_text(r, 1)),
+                },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prop_op_encode_decode_roundtrip() {
+        forall(
+            41,
+            100,
+            |r| sample_ops(r),
+            |ops| {
+                ops.iter()
+                    .all(|op| WalOp::decode(&op.encode()).as_ref() == Ok(op))
+            },
+        );
+    }
+
+    #[test]
+    fn writer_scan_roundtrip_and_torn_tail() {
+        let dir = std::env::temp_dir().join("llmbridge_wal_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.wal");
+        let w = WalWriter::create(&path).unwrap();
+        let ops = vec![
+            WalOp::PutExact {
+                prompt: "what is a wal".into(),
+                response: "a log".into(),
+            },
+            WalOp::Clear,
+            WalOp::Quota {
+                user: "u1".into(),
+                requests: 3,
+                input_tokens: 10,
+                output_tokens: 20,
+            },
+        ];
+        for op in &ops {
+            w.append(op).unwrap();
+        }
+        assert_eq!(w.len(), std::fs::metadata(&path).unwrap().len());
+        let bytes = std::fs::read(&path).unwrap();
+        let (back, valid) = scan(&bytes).unwrap();
+        assert_eq!(back, ops);
+        assert_eq!(valid, bytes.len() as u64);
+
+        // Torn tail: drop 3 bytes — last record is gone, prefix survives.
+        let (back, valid) = scan(&bytes[..bytes.len() - 3]).unwrap();
+        assert_eq!(back.len(), 2);
+        assert!(valid < bytes.len() as u64);
+
+        // recover() truncates the file in place.
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        let (back, report) = recover(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert!(report.truncated_bytes > 0);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), valid);
+        // A second recovery is clean.
+        let (_, report) = recover(&path).unwrap();
+        assert_eq!(report.truncated_bytes, 0);
+    }
+
+    #[test]
+    fn interior_corruption_is_typed_not_truncated() {
+        let dir = std::env::temp_dir().join("llmbridge_wal_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.wal");
+        let w = WalWriter::create(&path).unwrap();
+        for i in 0..4 {
+            w.append(&WalOp::PutExact {
+                prompt: format!("interior prompt {i}"),
+                response: "r".into(),
+            })
+            .unwrap();
+        }
+        let good = std::fs::read(&path).unwrap();
+
+        // Flip a payload byte of the first record: valid records follow,
+        // so this is interior corruption, not a crash artifact.
+        let mut bad = good.clone();
+        bad[WAL_MAGIC.len() + RECORD_HEADER + 10] ^= 0x40;
+        let err = scan(&bad).unwrap_err();
+        assert!(matches!(err, BridgeError::Persist(_)), "{err}");
+        assert_eq!(err.http_status(), 500);
+
+        // An insane declared length mid-file: the resync probe finds the
+        // intact records after it, so this is typed interior corruption —
+        // never a silent truncation of the valid tail.
+        let mut bad = good.clone();
+        bad[WAL_MAGIC.len()..WAL_MAGIC.len() + 4]
+            .copy_from_slice(&(MAX_RECORD as u32 + 1).to_le_bytes());
+        assert!(matches!(scan(&bad).unwrap_err(), BridgeError::Persist(_)));
+
+        // Wrong magic.
+        let mut bad = good;
+        bad[0] = b'X';
+        assert!(matches!(scan(&bad).unwrap_err(), BridgeError::Persist(_)));
+    }
+
+    /// Power-loss artifacts under page-cache-only appends: garbage inside
+    /// the final record and a zero-filled tail page both recover as torn
+    /// tails (the durable prefix survives), never as boot-fatal errors.
+    #[test]
+    fn power_loss_tail_artifacts_recover_as_torn() {
+        let dir = std::env::temp_dir().join("llmbridge_wal_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("powerloss.wal");
+        let w = WalWriter::create(&path).unwrap();
+        let mut boundaries = vec![w.len()];
+        for i in 0..4 {
+            w.append(&WalOp::PutExact {
+                prompt: format!("powerloss prompt {i}"),
+                response: "r".into(),
+            })
+            .unwrap();
+            boundaries.push(w.len());
+        }
+        drop(w);
+        let good = std::fs::read(&path).unwrap();
+
+        // Garbage inside the FINAL record (checksum mismatch at EOF).
+        let mut torn = good.clone();
+        let last_payload = boundaries[3] as usize + RECORD_HEADER + 2;
+        torn[last_payload] ^= 0xFF;
+        let (ops, valid) = scan(&torn).unwrap();
+        assert_eq!(ops.len(), 3);
+        assert_eq!(valid, boundaries[3]);
+
+        // Zero-filled tail after the last good record (delayed alloc).
+        let mut torn = good.clone();
+        torn.extend(std::iter::repeat(0u8).take(512));
+        let (ops, valid) = scan(&torn).unwrap();
+        assert_eq!(ops.len(), 4);
+        assert_eq!(valid, boundaries[4]);
+    }
+
+    #[test]
+    fn oversized_record_rejected_at_append_not_at_boot() {
+        let dir = std::env::temp_dir().join("llmbridge_wal_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("oversize.wal");
+        let w = WalWriter::create(&path).unwrap();
+        w.append(&WalOp::Clear).unwrap();
+        let huge = WalOp::PutExact {
+            prompt: "p".into(),
+            response: "r".repeat(MAX_RECORD + 1),
+        };
+        let err = w.append(&huge).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+        drop(w);
+        // The file stays fully readable: nothing oversized was written.
+        let (ops, report) = recover(&path).unwrap();
+        assert_eq!(ops, vec![WalOp::Clear]);
+        assert_eq!(report.truncated_bytes, 0);
+    }
+
+    #[test]
+    fn missing_file_is_empty_log() {
+        let (ops, report) =
+            recover(Path::new("/definitely/not/a/real/llmbridge.wal")).unwrap();
+        assert!(ops.is_empty());
+        assert_eq!(report.truncated_bytes, 0);
+    }
+}

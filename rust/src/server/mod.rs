@@ -258,6 +258,43 @@ impl Server {
             }));
         }
 
+        // Janitor: background WAL-compaction trigger (size-keyed). Cache
+        // reads are never blocked by a compaction; journaled *mutations*
+        // quiesce for the capture's duration (see persist module docs),
+        // which this thread pays instead of a request thread. Spawned
+        // only when a data dir is configured; failures back off
+        // exponentially (capped at 30s) so a full disk doesn't retry a
+        // gate-exclusive snapshot capture 4x per second.
+        if bridge.persistence().is_some() {
+            let stop = stop.clone();
+            let bridge = bridge.clone();
+            join.push(std::thread::spawn(move || {
+                let mut wait_ms: u64 = 250;
+                'outer: loop {
+                    // Sleep in short slices so stop() stays responsive
+                    // even while backed off.
+                    let mut slept = 0;
+                    while slept < wait_ms {
+                        if stop.load(Ordering::Relaxed) {
+                            break 'outer;
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(50));
+                        slept += 50;
+                    }
+                    match bridge.maybe_compact() {
+                        Ok(_) => wait_ms = 250,
+                        Err(e) => {
+                            wait_ms = (wait_ms * 2).min(30_000);
+                            eprintln!(
+                                "persist: background compaction failed \
+                                 (retrying in {wait_ms}ms): {e}"
+                            );
+                        }
+                    }
+                }
+            }));
+        }
+
         // Workers: a raw pop parses and re-enqueues under the user group;
         // a ready pop dispatches. Raw groups are connection-unique, so
         // parsing parallelizes; ready groups serialize per user (the SQS

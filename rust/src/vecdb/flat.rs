@@ -55,6 +55,12 @@ impl FlatIndex {
         self.metric
     }
 
+    /// Whether `id` has a row (O(1) via the id→slot map) — the snapshot
+    /// bulk-load uses this to cross-validate key rows against vectors.
+    pub fn contains(&self, id: u64) -> bool {
+        self.slots.contains_key(&id)
+    }
+
     fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.dim..(i + 1) * self.dim]
     }
@@ -78,7 +84,12 @@ impl FlatIndex {
         for v in &self.data {
             out.extend_from_slice(&v.to_le_bytes());
         }
-        std::fs::write(path, out)?;
+        // write + fsync: snapshots participate in the persist layer's
+        // crash-safety story, so a committed snapshot directory must not
+        // hold a page-cache-only vecdb.bin.
+        let mut f = std::fs::File::create(path)?;
+        std::io::Write::write_all(&mut f, &out)?;
+        f.sync_all()?;
         Ok(())
     }
 

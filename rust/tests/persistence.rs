@@ -1,0 +1,512 @@
+//! Crash-recovery test substrate for the persist subsystem (snapshot +
+//! WAL): durable-prefix parity against an in-memory oracle under
+//! arbitrary WAL cuts, byte-identical restore equivalence across all
+//! `GetFilter` shapes on a 5k-entry cache, WAL-corruption fuzzing
+//! (truncate vs bit-flip), concurrency regression with the journal wired,
+//! and quota/exchange/regenerate survival across restarts.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use llmbridge::api::{Request, ServiceType};
+use llmbridge::cache::{CacheHit, CachedType, GetFilter};
+use llmbridge::coordinator::{Bridge, BridgeConfig};
+use llmbridge::error::BridgeError;
+use llmbridge::models::pricing::ModelId;
+use llmbridge::persist::wal::{self, WalOp, WalWriter, WAL_MAGIC};
+use llmbridge::util::prop::gen_text;
+use llmbridge::util::rng::Rng;
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "llmbridge_persistence_{name}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn persisted_config(dir: &Path) -> BridgeConfig {
+    BridgeConfig {
+        data_dir: Some(dir.to_path_buf()),
+        ..Default::default()
+    }
+}
+
+/// A durable bridge sharing the test binary's engine.
+fn persisted_bridge(dir: &Path) -> Bridge {
+    Bridge::from_engine(common::bridge().engine().clone(), persisted_config(dir)).unwrap()
+}
+
+/// A fresh, fully in-memory bridge on the same engine (the oracle side).
+fn oracle_bridge() -> Bridge {
+    Bridge::from_engine(common::bridge().engine().clone(), BridgeConfig::default()).unwrap()
+}
+
+fn wal_file(dir: &Path, generation: u64) -> PathBuf {
+    dir.join(format!("wal-{generation}.log"))
+}
+
+fn wal_len(dir: &Path, generation: u64) -> u64 {
+    std::fs::metadata(wal_file(dir, generation)).unwrap().len()
+}
+
+/// Everything observable about a hit list, bit-exact (scores compared by
+/// f64 bits — "byte-identical", not approximately equal).
+fn fingerprint(hits: &[CacheHit]) -> Vec<(u64, String, String, bool, &'static str, u64)> {
+    hits.iter()
+        .map(|h| {
+            (
+                h.object.id,
+                h.object.text.clone(),
+                h.object.origin.clone(),
+                h.object.is_document,
+                h.matched_type.as_str(),
+                h.score.to_bits(),
+            )
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Satellite 1: crash-recovery property test — random op sequences, WAL
+// cut at arbitrary byte offsets, restore must equal an oracle that saw
+// exactly the durable prefix.
+// ---------------------------------------------------------------------
+
+enum Op {
+    Exact(String, String),
+    Interaction(String, String),
+}
+
+impl Op {
+    fn prompt(&self) -> &str {
+        match self {
+            Op::Exact(p, _) | Op::Interaction(p, _) => p,
+        }
+    }
+
+    fn apply(&self, bridge: &Bridge) {
+        match self {
+            Op::Exact(p, r) => bridge.cache().put_exact(p, r),
+            Op::Interaction(p, r) => {
+                bridge
+                    .cache()
+                    .put_interaction(bridge.generator(), p, r)
+                    .unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn crash_recovery_matches_durable_prefix_oracle() {
+    let dir = fresh_dir("crash");
+    let live = persisted_bridge(&dir);
+    let mut r = Rng::new(0x51AB);
+
+    // Seeded random op sequence; record the WAL high-water mark after
+    // each op — the durable boundary if the process dies right there.
+    let mut ops: Vec<(Op, u64)> = Vec::new();
+    for i in 0..32 {
+        let prompt = format!("{} crash probe {i}", gen_text(&mut r, 5));
+        let response = format!("crash answer {i} {}", gen_text(&mut r, 4));
+        let op = if r.chance(0.4) {
+            Op::Exact(prompt, response)
+        } else {
+            Op::Interaction(prompt, response)
+        };
+        op.apply(&live);
+        ops.push((op, wal_len(&dir, 0)));
+    }
+    let final_len = wal_len(&dir, 0);
+    assert!(final_len > WAL_MAGIC.len() as u64);
+
+    // Cut offsets: the bare magic, clean op boundaries, arbitrary
+    // mid-record bytes, and the uncut file.
+    let mut cuts: Vec<u64> = vec![WAL_MAGIC.len() as u64, ops[5].1, ops[20].1, final_len];
+    for _ in 0..6 {
+        cuts.push(WAL_MAGIC.len() as u64 + r.next_u64() % (final_len - WAL_MAGIC.len() as u64));
+    }
+
+    for cut in cuts {
+        // "Crash": copy the WAL, truncate at the cut, restore from it.
+        let cut_dir = fresh_dir(&format!("crash_cut_{cut}"));
+        std::fs::copy(wal_file(&dir, 0), wal_file(&cut_dir, 0)).unwrap();
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(wal_file(&cut_dir, 0))
+            .unwrap()
+            .set_len(cut)
+            .unwrap();
+        let restored = persisted_bridge(&cut_dir);
+
+        // Oracle: an in-memory cache that saw exactly the ops whose
+        // records are fully inside the durable prefix.
+        let oracle = oracle_bridge();
+        for (op, end) in &ops {
+            if *end <= cut {
+                op.apply(&oracle);
+            }
+        }
+
+        // Exact-hit parity over every prompt ever issued.
+        for (op, _) in &ops {
+            assert_eq!(
+                restored.cache().get_exact(op.prompt()),
+                oracle.cache().get_exact(op.prompt()),
+                "exact parity diverged at cut={cut} prompt={:?}",
+                op.prompt()
+            );
+        }
+        // Top-k semantic parity (ids, types, bit-exact scores).
+        for (qi, (op, _)) in ops.iter().enumerate().step_by(5) {
+            let filter = GetFilter {
+                types: None,
+                min_score: 0.0,
+                k: 4,
+            };
+            let a = restored
+                .cache()
+                .get(restored.generator(), op.prompt(), &filter)
+                .unwrap();
+            let b = oracle
+                .cache()
+                .get(oracle.generator(), op.prompt(), &filter)
+                .unwrap();
+            assert_eq!(
+                fingerprint(&a),
+                fingerprint(&b),
+                "semantic parity diverged at cut={cut} query #{qi}"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&cut_dir);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite 2: restore equivalence — a 5k-entry cache restarted through
+// snapshot + WAL must serve byte-identical hits across filter shapes.
+// ---------------------------------------------------------------------
+
+#[test]
+fn restore_equivalence_5k_entries_all_filter_shapes() {
+    let dir = fresh_dir("equiv");
+    let live = persisted_bridge(&dir);
+    let mut r = Rng::new(0xE017);
+
+    let mut prompts: Vec<String> = Vec::new();
+    for i in 0..2500 {
+        let prompt = format!("{} entry {i}", gen_text(&mut r, 4));
+        let response = format!("{} detail {i}", gen_text(&mut r, 4));
+        live.cache()
+            .put_interaction(live.generator(), &prompt, &response)
+            .unwrap();
+        if i % 250 == 0 {
+            live.cache().put_exact(&prompt, &response);
+        }
+        prompts.push(prompt);
+        if i == 1600 {
+            // Fold the first 1601 interactions into a snapshot so the
+            // restart exercises snapshot restore *plus* WAL-tail replay.
+            assert!(live.compact_persistence().unwrap());
+        }
+    }
+    assert_eq!(live.cache().len_keys(), 5000, "5k typed keys in the index");
+
+    let restored = persisted_bridge(&dir);
+    assert_eq!(restored.cache().len_objects(), live.cache().len_objects());
+    assert_eq!(restored.cache().len_keys(), live.cache().len_keys());
+
+    let type_shapes: [Option<Vec<CachedType>>; 4] = [
+        None,
+        Some(vec![CachedType::Prompt]),
+        Some(vec![CachedType::Response]),
+        Some(vec![CachedType::Prompt, CachedType::Response]),
+    ];
+    let queries: Vec<String> = (0..12)
+        .map(|i| prompts[i * 200].clone())
+        .chain((0..4).map(|_| gen_text(&mut r, 6)))
+        .collect();
+    for q in &queries {
+        for types in &type_shapes {
+            for &min_score in &[0.0, 0.5] {
+                // k=16 with a threshold exercises the widening over-fetch
+                // loop; its result order must survive the restart too.
+                for &k in &[1usize, 4, 16] {
+                    let filter = GetFilter {
+                        types: types.clone(),
+                        min_score,
+                        k,
+                    };
+                    let a = live.cache().get(live.generator(), q, &filter).unwrap();
+                    let b = restored
+                        .cache()
+                        .get(restored.generator(), q, &filter)
+                        .unwrap();
+                    assert_eq!(
+                        fingerprint(&a),
+                        fingerprint(&b),
+                        "hit divergence: q={q:?} types={types:?} min={min_score} k={k}"
+                    );
+                }
+            }
+        }
+    }
+    for p in prompts.iter().step_by(250) {
+        assert_eq!(live.cache().get_exact(p), restored.cache().get_exact(p));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite 3: WAL-corruption fuzzing — truncation always recovers with
+// a warning; interior corruption is always a typed error; never a panic,
+// never a silent full parse of damaged bytes.
+// ---------------------------------------------------------------------
+
+#[test]
+fn wal_corruption_fuzz_truncate_vs_bitflip() {
+    let dir = fresh_dir("fuzz");
+    let path = wal_file(&dir, 0);
+    let writer = WalWriter::create(&path).unwrap();
+    let mut boundaries = vec![writer.len()];
+    for i in 0..6 {
+        writer
+            .append(&WalOp::PutExact {
+                prompt: format!("fuzz prompt {i}"),
+                response: format!("fuzz resp {i}"),
+            })
+            .unwrap();
+        boundaries.push(writer.len());
+    }
+    drop(writer);
+    let good = std::fs::read(&path).unwrap();
+
+    // (a) Truncation at EVERY byte offset recovers: no error, no panic,
+    // and exactly the fully-durable prefix survives.
+    for cut in 0..=good.len() {
+        let (ops, valid) = wal::scan(&good[..cut]).unwrap_or_else(|e| {
+            panic!("truncation at {cut} must recover, got error: {e}")
+        });
+        let expect = boundaries.iter().skip(1).filter(|b| **b <= cut as u64).count();
+        assert_eq!(ops.len(), expect, "cut={cut}");
+        assert!(valid <= cut as u64);
+    }
+
+    // (b) A single flipped bit anywhere in the record region is never
+    // silently absorbed: either a typed Persist error (checksum/length/
+    // decode) or a detected-and-warned truncation — never a clean parse
+    // of all 6 records, and never a panic.
+    for pos in WAL_MAGIC.len()..good.len() {
+        let mut bad = good.clone();
+        bad[pos] ^= 0x10;
+        match wal::scan(&bad) {
+            Ok((ops, _)) => assert!(
+                ops.len() < 6,
+                "bit flip at byte {pos} was silently absorbed"
+            ),
+            Err(e) => assert!(matches!(e, BridgeError::Persist(_)), "{e}"),
+        }
+    }
+
+    // (c) End-to-end: a torn tail boots with the prefix; a payload flip
+    // fails boot with BridgeError::Persist (the REST layer maps it 500).
+    std::fs::write(&path, &good[..(boundaries[3] + 5) as usize]).unwrap();
+    let bridge = persisted_bridge(&dir);
+    assert_eq!(
+        bridge.cache().get_exact("fuzz prompt 2").as_deref(),
+        Some("fuzz resp 2")
+    );
+    assert_eq!(bridge.cache().get_exact("fuzz prompt 4"), None);
+    let stats = bridge.persistence().unwrap().stats();
+    assert_eq!(stats.replayed_ops, 3);
+    assert!(stats.truncated_bytes > 0, "torn tail must be reported");
+    drop(bridge);
+
+    let mut bad = good.clone();
+    bad[boundaries[1] as usize + 12 + 3] ^= 0x01; // record 1, payload byte
+    std::fs::write(&path, &bad).unwrap();
+    let err = Bridge::from_engine(common::bridge().engine().clone(), persisted_config(&dir))
+        .unwrap_err();
+    let be = err
+        .downcast_ref::<BridgeError>()
+        .expect("boot failure must stay typed");
+    assert!(matches!(be, BridgeError::Persist(_)), "{be}");
+    assert_eq!(be.http_status(), 500);
+}
+
+// ---------------------------------------------------------------------
+// Satellite 4: concurrency regression — 8 threads of mixed PUT/GET with
+// the journal wired (plus compactions racing the traffic) keep the
+// tests/concurrency.rs invariants, don't deadlock against the 16-way
+// shard locks, and everything lands durably.
+// ---------------------------------------------------------------------
+
+#[test]
+fn wal_concurrent_mixed_ops_no_deadlock_and_all_durable() {
+    let dir = fresh_dir("conc");
+    let bridge = Arc::new(persisted_bridge(&dir));
+    let threads = 8;
+    let per_thread = 8;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let bridge = bridge.clone();
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    let prompt =
+                        format!("durable thread {t} question {i} about subject {}", i % 3);
+                    let response = format!("durable answer {t} {i}");
+                    bridge
+                        .cache()
+                        .put_interaction(bridge.generator(), &prompt, &response)
+                        .unwrap();
+                    bridge.cache().put_exact(&prompt, &response);
+                    assert_eq!(
+                        bridge.cache().get_exact(&prompt).as_deref(),
+                        Some(response.as_str())
+                    );
+                    let hits = bridge
+                        .cache()
+                        .get(bridge.generator(), &prompt, &GetFilter::default())
+                        .unwrap();
+                    assert!(!hits.is_empty(), "semantic lookup starved for {prompt:?}");
+                }
+            });
+        }
+        // Compactions racing the writers exercise the gate's exclusive
+        // path against the shared-mode mutators.
+        let compactor = bridge.clone();
+        s.spawn(move || {
+            for _ in 0..3 {
+                compactor.compact_persistence().unwrap();
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        });
+    });
+    // Same count invariants as tests/concurrency.rs.
+    assert_eq!(bridge.cache().len_objects(), threads * per_thread);
+    assert_eq!(bridge.cache().len_keys(), 2 * threads * per_thread);
+    assert_eq!(bridge.cache().len_exact(), threads * per_thread);
+
+    // Everything that happened is durable across a restart.
+    drop(bridge);
+    let restored = persisted_bridge(&dir);
+    assert_eq!(restored.cache().len_objects(), threads * per_thread);
+    assert_eq!(restored.cache().len_keys(), 2 * threads * per_thread);
+    for t in 0..threads {
+        for i in 0..per_thread {
+            let prompt = format!("durable thread {t} question {i} about subject {}", i % 3);
+            assert_eq!(
+                restored.cache().get_exact(&prompt).as_deref(),
+                Some(format!("durable answer {t} {i}").as_str())
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Quota + exchange durability: gated usage and regeneration handles
+// survive a restart.
+// ---------------------------------------------------------------------
+
+#[test]
+fn quotas_and_exchanges_survive_restart() {
+    let dir = fresh_dir("quota");
+    let bridge = persisted_bridge(&dir);
+    let st = ServiceType::UsageBased {
+        allowed: vec![ModelId::Gpt4oMini],
+        fallback: ModelId::Gpt4oMini,
+    };
+    let resp = bridge
+        .handle(
+            Request::new("student-1", "c1", "what is photosynthesis in plants")
+                .service_type(st.clone()),
+        )
+        .unwrap();
+    bridge
+        .handle(
+            Request::new("student-1", "c1", "and how does chlorophyll relate to it")
+                .service_type(st),
+        )
+        .unwrap();
+    let usage = bridge.quota_usage("student-1");
+    assert!(usage.0 >= 2, "two gated requests reserved: {usage:?}");
+    let request_id = resp.metadata.request_id;
+    drop(bridge);
+
+    let restored = persisted_bridge(&dir);
+    assert_eq!(
+        restored.quota_usage("student-1"),
+        usage,
+        "quota state must survive the restart"
+    );
+    // The pre-restart exchange is regenerable — not UnknownRequest.
+    let regen = restored.regenerate(request_id, None).unwrap();
+    assert!(!regen.text.is_empty());
+    assert_eq!(regen.metadata.regen_count, 1);
+}
+
+// ---------------------------------------------------------------------
+// Compaction: size-keyed trigger, generation GC, restart from snapshot.
+// ---------------------------------------------------------------------
+
+#[test]
+fn compaction_triggers_on_wal_size_and_gcs_old_generation() {
+    let dir = fresh_dir("compact");
+    let config = BridgeConfig {
+        data_dir: Some(dir.clone()),
+        compact_wal_bytes: 2048,
+        ..Default::default()
+    };
+    let bridge =
+        Bridge::from_engine(common::bridge().engine().clone(), config.clone()).unwrap();
+    for i in 0..64 {
+        bridge
+            .cache()
+            .put_exact(&format!("compact probe number {i}"), "resp");
+    }
+    assert!(wal_len(&dir, 0) > 2048);
+    assert!(bridge.maybe_compact().unwrap(), "threshold crossed");
+    assert!(dir.join("snap-1").is_dir());
+    assert_eq!(
+        std::fs::read_to_string(dir.join("CURRENT")).unwrap().trim(),
+        "1"
+    );
+    assert!(!wal_file(&dir, 0).exists(), "old WAL GC'd");
+    assert_eq!(wal_len(&dir, 1), WAL_MAGIC.len() as u64, "fresh WAL");
+    assert!(!bridge.maybe_compact().unwrap(), "below threshold again");
+    drop(bridge);
+
+    let restored = Bridge::from_engine(common::bridge().engine().clone(), config).unwrap();
+    for i in 0..64 {
+        assert_eq!(
+            restored
+                .cache()
+                .get_exact(&format!("compact probe number {i}"))
+                .as_deref(),
+            Some("resp")
+        );
+    }
+    assert_eq!(restored.persistence().unwrap().stats().generation, 1);
+}
+
+// ---------------------------------------------------------------------
+// Guardrail: with no data dir, nothing touches the filesystem and the
+// hot path runs exactly as before (the default for tier-1 and benches).
+// ---------------------------------------------------------------------
+
+#[test]
+fn no_data_dir_means_no_persistence_machinery() {
+    let bridge = oracle_bridge();
+    assert!(bridge.persistence().is_none());
+    assert!(!bridge.maybe_compact().unwrap());
+    assert!(!bridge.compact_persistence().unwrap());
+    bridge.cache().put_exact("ephemeral probe", "resp");
+    assert_eq!(
+        bridge.cache().get_exact("ephemeral probe").as_deref(),
+        Some("resp")
+    );
+}

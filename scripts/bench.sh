@@ -3,6 +3,10 @@
 # benches, and write BENCH_hotpath.json / BENCH_throughput.json at the
 # repo root so successive PRs have a comparable baseline.
 #
+# The hotpath bench includes the persist micro-benches
+# (persist/wal_append_interaction, persist/cold_restore_20k) so WAL
+# append throughput and cold-restore time ride the same trajectory file.
+#
 # Usage: scripts/bench.sh [--fast]
 #   --fast   shrink iteration counts (LLMBRIDGE_BENCH_FAST=1) for CI.
 set -euo pipefail
