@@ -1,8 +1,11 @@
 //! Hot-path micro-benchmarks — the L3 profile the perf pass iterates on
-//! (EXPERIMENTS.md §Perf): tokenizer, embedding, vecdb scan (flat vs IVF,
-//! 20k and 100k rows), JSON, per-execute PJRT latency per variant, batched
+//! (EXPERIMENTS.md §Perf): tokenizer, embedding, vecdb scan (flat vs IVF
+//! vs the adaptive tier, 20k and 100k rows, incl. migration/retrain cost
+//! and recall@4), JSON, per-execute PJRT latency per variant, batched
 //! embeds, and end-to-end dispatch. Writes the results as JSON to the path
-//! in `LLMBRIDGE_BENCH_JSON` (see scripts/bench.sh).
+//! in `LLMBRIDGE_BENCH_JSON` (see scripts/bench.sh). Under
+//! `LLMBRIDGE_BENCH_SMOKE=1` corpora shrink and every bench runs a single
+//! iteration — the CI smoke job's populated-JSON proof, not a perf claim.
 
 mod bench_common;
 
@@ -11,15 +14,27 @@ use llmbridge::cache::{CacheObject, CachedType, SemanticCache};
 use llmbridge::models::pricing::{Generation, ModelId};
 use llmbridge::persist::wal::{WalOp, WalWriter};
 use llmbridge::runtime::tokenizer;
-use llmbridge::util::bench::{bench, black_box, BenchReport};
+use llmbridge::util::bench::{bench, black_box, fast_mode, smoke_mode, BenchReport};
 use llmbridge::util::json::Json;
 use llmbridge::util::rng::Rng;
+use llmbridge::vecdb::adaptive::{AdaptiveConfig, AdaptiveIndex};
 use llmbridge::vecdb::flat::FlatIndex;
 use llmbridge::vecdb::ivf::IvfIndex;
 use llmbridge::vecdb::{Metric, VectorIndex};
 
 fn main() {
     let mut report = BenchReport::new();
+    let smoke = smoke_mode();
+    report.push(
+        "bench_mode",
+        Json::str(if smoke {
+            "smoke"
+        } else if fast_mode() {
+            "fast"
+        } else {
+            "full"
+        }),
+    );
     let text = "tell me about vaccination and why people in my community talk about it so much";
 
     report.record(&bench("tokenizer/window", 100, 5_000, || {
@@ -30,10 +45,12 @@ fn main() {
     }));
 
     // --- vecdb: flat vs IVF at cache-sized corpora -----------------------
+    let n20 = if smoke { 2_000 } else { 20_000 };
+    let n100 = if smoke { 10_000 } else { 100_000 };
     let mut rng = Rng::new(3);
     let mut flat = FlatIndex::new(64, Metric::Cosine);
     let mut ivf = IvfIndex::new(64, Metric::Cosine, 32, 4);
-    for i in 0..20_000u64 {
+    for i in 0..n20 as u64 {
         let v: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
         flat.insert(i, &v).unwrap();
         ivf.insert(i, &v).unwrap();
@@ -48,13 +65,105 @@ fn main() {
     }));
     // 100k rows: the blocked normalized scan's headroom case.
     let mut flat100 = FlatIndex::new(64, Metric::Cosine);
-    for i in 0..100_000u64 {
+    for i in 0..n100 as u64 {
         let v: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
         flat100.insert(i, &v).unwrap();
     }
     report.record(&bench("vecdb/flat_top4_100k", 5, 100, || {
         black_box(flat100.search(&q, 4, 0.0));
     }));
+
+    // --- vecdb: adaptive tier at deployment scale -------------------------
+    // Clustered corpus (cached prompts cluster by topic — the regime the
+    // ANN tier is built for); queries are perturbed corpus points, so
+    // recall@4 against the exact flat scan is meaningful.
+    let mut corpus: Vec<Vec<f32>> = Vec::with_capacity(n100);
+    {
+        let centers: Vec<Vec<f32>> = (0..256)
+            .map(|_| (0..64).map(|_| rng.normal() as f32 * 8.0).collect())
+            .collect();
+        for _ in 0..n100 {
+            let c = rng.choice(&centers).clone();
+            corpus.push(c.iter().map(|x| x + rng.normal() as f32 * 0.5).collect());
+        }
+    }
+    let mut flat_c = FlatIndex::new(64, Metric::Cosine);
+    let mut adaptive = AdaptiveIndex::new(64, Metric::Cosine, AdaptiveConfig::default());
+    for (i, v) in corpus.iter().enumerate() {
+        flat_c.insert(i as u64, v).unwrap();
+        adaptive.insert(i as u64, v).unwrap();
+    }
+    // One-shot flat→IVF migration (plan + k-means + install) — the cost a
+    // janitor tick pays off the read path when the corpus crosses the
+    // threshold.
+    let t0 = std::time::Instant::now();
+    let plan = adaptive.rebuild_plan().expect("corpus is past the migration threshold");
+    let trained = plan.train();
+    let train_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert!(adaptive.install(trained), "single-threaded: same instance");
+    report.push(
+        "vecdb/adaptive_migrate_100k",
+        Json::obj(vec![
+            ("rows", Json::num(n100 as f64)),
+            ("train_ms", Json::num(train_ms)),
+        ]),
+    );
+    // Retrain micro-bench at 20k (plan export + k-means, never installed,
+    // so each iteration trains from the same flat tier).
+    let mut a20 = AdaptiveIndex::new(
+        64,
+        Metric::Cosine,
+        AdaptiveConfig {
+            migrate_threshold: 1000,
+            ..AdaptiveConfig::default()
+        },
+    );
+    for (i, v) in corpus.iter().take(n20).enumerate() {
+        a20.insert(i as u64, v).unwrap();
+    }
+    report.record(&bench("vecdb/adaptive_retrain_20k", 0, 3, || {
+        let plan = a20.rebuild_plan().expect("low threshold keeps rebuild armed");
+        black_box(plan.train());
+    }));
+    // The acceptance pair: exact flat scan vs adaptive (IVF) top-4 GET on
+    // the same clustered 100k corpus, plus recall@4 of the latter.
+    let qc: Vec<f32> = corpus[n100 / 2].iter().map(|x| x + 0.01).collect();
+    let flat_res = bench("vecdb/flat_top4_100k_clustered", 5, 100, || {
+        black_box(flat_c.search(&qc, 4, 0.0));
+    });
+    let adaptive_res = bench("vecdb/adaptive_top4_100k", 10, 300, || {
+        black_box(adaptive.search(&qc, 4, 0.0));
+    });
+    let speedup =
+        flat_res.mean.as_secs_f64() / adaptive_res.mean.as_secs_f64().max(1e-12);
+    report.record(&flat_res);
+    report.record(&adaptive_res);
+    let nq = if smoke { 20 } else { 100 };
+    let mut found = 0usize;
+    let mut total = 0usize;
+    for _ in 0..nq {
+        let base = rng.choice(&corpus).clone();
+        let probe: Vec<f32> = base
+            .iter()
+            .map(|x| x + rng.normal() as f32 * 0.1)
+            .collect();
+        let truth = flat_c.search(&probe, 4, 0.0);
+        let got = adaptive.search(&probe, 4, 0.0);
+        total += truth.len();
+        found += truth
+            .iter()
+            .filter(|t| got.iter().any(|g| g.id == t.id))
+            .count();
+    }
+    report.push(
+        "vecdb/adaptive_100k_quality",
+        Json::obj(vec![
+            ("rows", Json::num(n100 as f64)),
+            ("queries", Json::num(nq as f64)),
+            ("recall_at4", Json::num(found as f64 / total.max(1) as f64)),
+            ("speedup_vs_flat", Json::num(speedup)),
+        ]),
+    );
 
     // --- JSON substrate ---------------------------------------------------
     let body = r#"{"user":"u1","conversation":"c1","prompt":"tell me about dates and mangoes",

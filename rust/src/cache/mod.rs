@@ -18,9 +18,17 @@
 //! The cache is read-mostly and designed so concurrent GETs never
 //! serialize on each other:
 //!
-//! * The vector index sits behind one `RwLock`; `search` takes a read
-//!   lock, only key insertion takes the write lock (briefly, for the whole
-//!   key batch of a PUT).
+//! * The vector index — an [`AdaptiveIndex`]: bit-exact flat scans below
+//!   the migration threshold, a trained IVF tier above it — sits behind
+//!   one `RwLock`; `search` takes a read lock, only key insertion takes
+//!   the write lock (briefly, for the whole key batch of a PUT).
+//! * Index migration/retraining runs **off the read path**:
+//!   [`SemanticCache::maybe_rebuild_index`] exports rows under the read
+//!   lock, trains k-means with no lock held, and installs the trained
+//!   tier under a brief write lock (reconciling any interim churn). It
+//!   never touches the journal gate — a retrain changes the physical
+//!   layout, not the journaled content, so it can run concurrently with
+//!   WAL appends and needs no WAL record of its own.
 //! * The `keys`, `objects`, and `exact` maps are split into
 //!   [`SHARD_COUNT`] hash shards, each behind its own `RwLock`. Lookups
 //!   take the touched shard's read lock; PUTs write-lock only the shard
@@ -47,7 +55,7 @@ pub mod chunker;
 use std::collections::{HashMap, HashSet};
 use std::io::Write as _;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{OnceLock, RwLock};
 
 use anyhow::{anyhow, bail, Result};
@@ -55,8 +63,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::models::generator::{Completion, Generator};
 use crate::models::pricing::ModelId;
 use crate::models::quality::{classify, QueryTraits};
-use crate::vecdb::flat::FlatIndex;
-use crate::vecdb::{Metric, VectorIndex};
+use crate::vecdb::adaptive::{AdaptiveConfig, AdaptiveIndex, IndexStats};
+use crate::vecdb::{Hit, Metric, VectorIndex};
 
 /// Number of hash shards for the key/object/exact maps. Power of two so
 /// shard selection is a mask; 16 is comfortably above the core counts the
@@ -217,11 +225,14 @@ pub trait Journal: Send + Sync {
 }
 
 pub struct SemanticCache {
-    index: RwLock<FlatIndex>,
+    index: RwLock<AdaptiveIndex>,
     keys: Vec<RwLock<HashMap<u64, KeyEntry>>>,
     objects: Vec<RwLock<HashMap<u64, CacheObject>>>,
     exact: Vec<RwLock<HashMap<String, String>>>,
     next_id: AtomicU64,
+    /// Serializes off-path index rebuilds (train is expensive; two
+    /// concurrent maintenance callers must not both run k-means).
+    rebuilding: AtomicBool,
     /// Durable-mutation sink; unset (zero-cost) for in-memory deployments.
     journal: OnceLock<std::sync::Arc<dyn Journal>>,
     /// Relevance threshold the SmartCache ground truth uses.
@@ -230,12 +241,19 @@ pub struct SemanticCache {
 
 impl SemanticCache {
     pub fn new(embed_dim: usize) -> SemanticCache {
+        Self::with_index_config(embed_dim, AdaptiveConfig::default())
+    }
+
+    /// Build with explicit index-tier policy (tests and benches shrink the
+    /// migration threshold; production uses the defaults).
+    pub fn with_index_config(embed_dim: usize, cfg: AdaptiveConfig) -> SemanticCache {
         SemanticCache {
-            index: RwLock::new(FlatIndex::new(embed_dim, Metric::Cosine)),
+            index: RwLock::new(AdaptiveIndex::new(embed_dim, Metric::Cosine, cfg)),
             keys: (0..SHARD_COUNT).map(|_| RwLock::new(HashMap::new())).collect(),
             objects: (0..SHARD_COUNT).map(|_| RwLock::new(HashMap::new())).collect(),
             exact: (0..SHARD_COUNT).map(|_| RwLock::new(HashMap::new())).collect(),
             next_id: AtomicU64::new(1),
+            rebuilding: AtomicBool::new(false),
             journal: OnceLock::new(),
             relevance_threshold: 0.40,
         }
@@ -508,7 +526,11 @@ impl SemanticCache {
     ///
     /// Over-fetches `k * OVERFETCH_PER_K + OVERFETCH_BASE` raw keys, then
     /// widens (doubling) if type filtering and per-object dedup starved the
-    /// result set below `k` while unseen keys remain.
+    /// result set below `k` while unseen keys remain. On the IVF tier each
+    /// widening step also doubles the probed cells (the index's `effort`
+    /// knob), so a starved result set recruits more of the corpus — up to
+    /// an exhaustive all-cells probe — before the GET settles for fewer
+    /// than `k` hits.
     pub fn get(
         &self,
         generator: &Generator,
@@ -516,25 +538,81 @@ impl SemanticCache {
         filter: &GetFilter,
     ) -> Result<Vec<CacheHit>> {
         let emb = generator.engine().embed_text(query)?;
+        // Effort level at which search_effort is exhaustive for any nlist
+        // (probes = nprobe << 20 dwarfs the 1024-cell cap).
+        const MAX_EFFORT: u32 = 20;
         let mut fetch = filter.k * OVERFETCH_PER_K + OVERFETCH_BASE;
+        let mut effort = 0u32;
         loop {
-            let (raw, total) = {
+            let (raw, total, exhaustive) = {
                 let index = self.index.read().unwrap();
-                (
-                    index.search(&emb, fetch, filter.min_score as f32),
-                    index.len(),
-                )
+                let (raw, exhaustive) =
+                    index.search_effort(&emb, fetch, filter.min_score as f32, effort);
+                (raw, index.len(), exhaustive)
             };
-            // Fewer raw hits than asked for means everything above
+            // Only an exhaustive scan can prove there is nothing left:
+            // fewer raw hits than asked for means everything above
             // min_score has been seen; fetch >= total means the whole
             // index was scanned.
-            let exhausted = raw.len() < fetch || fetch >= total;
+            let exhausted = exhaustive && (raw.len() < fetch || fetch >= total);
+            let starved_probe = !exhaustive && raw.len() < fetch;
             let hits = self.resolve_hits(raw, filter);
             if hits.len() >= filter.k || exhausted {
                 return Ok(hits);
             }
-            fetch *= 2;
+            if starved_probe {
+                // The probed cells hold nothing more above min_score, so a
+                // bigger fetch cannot help — only more cells can. Jump
+                // straight to the exhaustive probe instead of climbing the
+                // geometric ladder (which would re-scan every
+                // already-probed cell per step — a likely cache *miss*
+                // must not cost multiples of the flat scan it replaced).
+                effort = MAX_EFFORT;
+            } else {
+                fetch *= 2;
+                effort = (effort + 1).min(MAX_EFFORT);
+            }
         }
+    }
+
+    /// Raw index probe (no engine, no key/object resolution) — the
+    /// persistence suite compares restored indexes with this.
+    pub fn search_raw(&self, embedding: &[f32], k: usize, min_score: f32) -> Vec<Hit> {
+        self.index.read().unwrap().search(embedding, k, min_score)
+    }
+
+    /// Index tier diagnostics (which tier, rows, trained, cells).
+    pub fn index_stats(&self) -> IndexStats {
+        self.index.read().unwrap().stats()
+    }
+
+    /// Run one index maintenance step if due: migrate the flat tier to a
+    /// trained IVF once the corpus outgrows the configured threshold, or
+    /// retrain a drifted IVF tier. Training runs **without any lock held**
+    /// (reads take the index read lock concurrently throughout); only the
+    /// final swap takes the write lock, where interim churn is reconciled.
+    /// Returns whether a rebuild ran. Polled by the server's janitor
+    /// thread; library users call it from their own maintenance cadence.
+    pub fn maybe_rebuild_index(&self) -> bool {
+        if self.rebuilding.swap(true, Ordering::Acquire) {
+            return false;
+        }
+        let ran = (|| {
+            let plan = {
+                let index = self.index.read().unwrap();
+                index.rebuild_plan()
+            };
+            let Some(plan) = plan else {
+                return false;
+            };
+            let trained = plan.train();
+            // install() refuses the trained tier (returning false) if the
+            // index value was replaced mid-train — e.g. clear() swapped in
+            // a fresh flat index; the stale centroids are discarded.
+            self.index.write().unwrap().install(trained)
+        })();
+        self.rebuilding.store(false, Ordering::Release);
+        ran
     }
 
     /// Post-filter raw index hits: map key → object, apply the type
@@ -652,10 +730,12 @@ impl SemanticCache {
         {
             // Single guarded scope: read dim and swap in the fresh index
             // under one write lock (the seed locked the index twice in one
-            // statement — a latent deadlock shape).
+            // statement — a latent deadlock shape). A clear resets to the
+            // flat tier (an empty IVF has nothing to probe).
             let mut index = self.index.write().unwrap();
             let dim = index.dim();
-            *index = FlatIndex::new(dim, Metric::Cosine);
+            let cfg = index.config().clone();
+            *index = AdaptiveIndex::new(dim, Metric::Cosine, cfg);
         }
         for shard in &self.keys {
             shard.write().unwrap().clear();
@@ -674,9 +754,11 @@ impl SemanticCache {
     // ---------------------------------------------------------- snapshot
 
     /// Write this cache's durable image into `dir`: `vecdb.bin` (bulk
-    /// LBV2 rows, pre-normalized) plus `cache.jsonl` (meta, object, key,
-    /// and exact rows). The caller must have quiesced writers — the
-    /// persist layer holds its compaction gate exclusively around this.
+    /// rows, pre-normalized — LBV2 on the flat tier, LBV3 with the trained
+    /// centroids + assignments on the IVF tier, so a cold restore never
+    /// re-trains) plus `cache.jsonl` (meta, object, key, and exact rows).
+    /// The caller must have quiesced writers — the persist layer holds its
+    /// compaction gate exclusively around this.
     pub fn snapshot_into(&self, dir: &Path) -> Result<()> {
         {
             let index = self.index.read().unwrap();
@@ -741,10 +823,26 @@ impl SemanticCache {
     }
 
     /// Load a snapshot written by [`SemanticCache::snapshot_into`] back
-    /// into a fresh cache via the validated bulk path.
+    /// into a fresh cache via the validated bulk path, with the default
+    /// index-tier policy. The *trained* state (centroids, assignments,
+    /// nprobe) always comes from the snapshot itself; the policy knobs
+    /// (migration threshold, retrain fraction, next train's parameters)
+    /// come from the config — deployments that customized them via
+    /// [`SemanticCache::with_index_config`] should restore through
+    /// [`SemanticCache::restore_from_dir_with`] to keep their policy.
     pub fn restore_from_dir(dir: &Path, embed_dim: usize) -> Result<SemanticCache> {
+        Self::restore_from_dir_with(dir, embed_dim, AdaptiveConfig::default())
+    }
+
+    /// [`SemanticCache::restore_from_dir`] with an explicit index-tier
+    /// policy (the restore-side pair of `with_index_config`).
+    pub fn restore_from_dir_with(
+        dir: &Path,
+        embed_dim: usize,
+        cfg: AdaptiveConfig,
+    ) -> Result<SemanticCache> {
         use std::io::BufRead as _;
-        let index = FlatIndex::load(&dir.join("vecdb.bin"))?;
+        let index = AdaptiveIndex::load(&dir.join("vecdb.bin"), cfg)?;
         // Stream line-by-line, mirroring the writer: boot must not hold
         // the whole cache.jsonl text alongside the parsed rows.
         let reader = std::io::BufReader::new(std::fs::File::open(dir.join("cache.jsonl"))?);
@@ -798,16 +896,18 @@ impl SemanticCache {
     }
 
     /// Validated bulk load: rebuild the sharded maps and adopt a loaded
-    /// index wholesale (its id→slot map was rebuilt by
-    /// [`FlatIndex::load`]; shard placement is re-derived here from the
-    /// same id/key hashing the live path uses). Rejects dangling key→
-    /// object references, keys without vectors, orphan vectors, duplicate
-    /// ids, and a stale id allocator — a snapshot failing any of these is
-    /// corrupt, and loading it would silently lose recall.
+    /// index wholesale, for **whichever tier is active** — the flat tier's
+    /// id→slot map or the IVF tier's posting lists + id→(cell, slot) map
+    /// were rebuilt by [`AdaptiveIndex::load`]; shard placement is
+    /// re-derived here from the same id/key hashing the live path uses.
+    /// Rejects dangling key→object references, keys without vectors,
+    /// orphan vectors, duplicate ids, and a stale id allocator — a
+    /// snapshot failing any of these is corrupt, and loading it would
+    /// silently lose recall.
     #[allow(clippy::too_many_arguments)]
     pub fn restore_bulk(
         embed_dim: usize,
-        index: FlatIndex,
+        index: AdaptiveIndex,
         objects: Vec<CacheObject>,
         keys: Vec<(u64, u64, CachedType)>,
         exact: Vec<(String, String)>,
@@ -988,10 +1088,12 @@ mod tests {
 
     #[test]
     fn restore_bulk_rejects_inconsistent_snapshots() {
+        use crate::vecdb::flat::FlatIndex;
+        let adopt = |flat: FlatIndex| AdaptiveIndex::from_flat(flat, AdaptiveConfig::default());
         let mk_index = || {
             let mut idx = FlatIndex::new(4, Metric::Cosine);
             idx.insert(2, &[1.0, 0.0, 0.0, 0.0]).unwrap();
-            idx
+            adopt(idx)
         };
         let obj = CacheObject {
             id: 1,
@@ -1058,6 +1160,71 @@ mod tests {
             0.4,
         )
         .is_err());
+    }
+
+    /// Index rebuild racing concurrent readers: GETs keep the read lock
+    /// only per-probe, the k-means runs with no lock held, and the swap
+    /// lands without deadlock or lost rows.
+    #[test]
+    fn rebuild_races_concurrent_reads() {
+        use crate::util::rng::Rng;
+        use std::sync::atomic::AtomicBool;
+        let cfg = AdaptiveConfig {
+            migrate_threshold: 400,
+            train_sample: 512,
+            kmeans_iters: 2,
+            ..AdaptiveConfig::default()
+        };
+        let cache = Arc::new(SemanticCache::with_index_config(8, cfg));
+        let put = |r: &mut Rng, i: u64| {
+            let base = i * 3 + 1;
+            let emb = |r: &mut Rng| (0..8).map(|_| r.normal() as f32).collect::<Vec<f32>>();
+            let keys = vec![
+                (base + 1, CachedType::Prompt, emb(r)),
+                (base + 2, CachedType::Response, emb(r)),
+            ];
+            cache
+                .apply_logged_put(
+                    CacheObject {
+                        id: base,
+                        text: format!("text {i}"),
+                        origin: format!("origin {i}"),
+                        is_document: false,
+                    },
+                    &keys,
+                )
+                .unwrap();
+        };
+        let mut r = Rng::new(0xACE);
+        for i in 0..300u64 {
+            put(&mut r, i);
+        }
+        assert_eq!(cache.index_stats().tier, "flat");
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let cache = Arc::clone(&cache);
+                let stop = &stop;
+                s.spawn(move || {
+                    let mut r = Rng::new(t + 1);
+                    while !stop.load(Ordering::Relaxed) {
+                        let q: Vec<f32> = (0..8).map(|_| r.normal() as f32).collect();
+                        let hits = cache.search_raw(&q, 4, f32::MIN);
+                        assert!(hits.len() <= 4);
+                    }
+                });
+            }
+            for i in 300..600u64 {
+                put(&mut r, i);
+            }
+            assert!(cache.maybe_rebuild_index(), "600 objects x2 keys > 400");
+            stop.store(true, Ordering::Relaxed);
+        });
+        let stats = cache.index_stats();
+        assert_eq!(stats.tier, "ivf");
+        assert!(stats.trained);
+        assert_eq!(stats.rows, 1200);
+        assert_eq!(cache.len_keys(), 1200);
     }
 
     #[test]

@@ -604,6 +604,19 @@ impl Bridge {
         }
         self.compact_persistence()
     }
+
+    /// Run one semantic-cache index maintenance step if due (flat→IVF
+    /// migration past the threshold, or a drift-triggered retrain). The
+    /// k-means runs off every request path — the server's janitor polls
+    /// this; returns whether a rebuild ran. Unlike compaction this is
+    /// independent of persistence: a purely in-memory cache migrates too.
+    pub fn maybe_rebuild_index(&self) -> bool {
+        let ran = self.cache.maybe_rebuild_index();
+        if ran {
+            self.telemetry.counters.incr("index_rebuilds");
+        }
+        ran
+    }
 }
 
 pub(crate) fn exchange_id(req: &Request, regen_count: u32) -> u64 {

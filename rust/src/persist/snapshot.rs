@@ -7,7 +7,11 @@
 //! snap-N/          absent for N == 0 (nothing compacted yet)
 //!   MANIFEST.json  geometry + checksums the loader validates against
 //!   kv.jsonl       KvStore::snapshot (history, profiles)
-//!   vecdb.bin      FlatIndex::save — LBV2 bulk rows (pre-normalized)
+//!   vecdb.bin      AdaptiveIndex::save — bulk rows (pre-normalized):
+//!                  LBV2 on the flat tier; LBV3 (rows + cell assignments
+//!                  + trained centroids) on the IVF tier, so a restore of
+//!                  a migrated cache never re-runs k-means. LBV2 dirs
+//!                  written before the adaptive tier keep loading.
 //!   cache.jsonl    SemanticCache::snapshot_into — objects/keys/exact/meta
 //!   state.jsonl    quota rows + exchange rows
 //! wal-N.log        mutations since snap-N

@@ -24,6 +24,11 @@
 //! so a crash can tear at most the final record. Bytes reach the OS page
 //! cache on every append (durable across process crashes); `fsync` is
 //! paid only at WAL creation and snapshot compaction, not per append.
+//!
+//! WAL records are **tier-agnostic**: a replayed PUT re-inserts its logged
+//! embeddings into whichever vector-index tier the restored snapshot is on
+//! (flat, or the LBV3-restored IVF, where the row lands in its nearest
+//! trained cell) — the log format needs no knowledge of the index tier.
 
 use std::io::{Seek, SeekFrom, Write};
 use std::path::Path;

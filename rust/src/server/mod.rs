@@ -258,36 +258,52 @@ impl Server {
             }));
         }
 
-        // Janitor: background WAL-compaction trigger (size-keyed). Cache
-        // reads are never blocked by a compaction; journaled *mutations*
-        // quiesce for the capture's duration (see persist module docs),
-        // which this thread pays instead of a request thread. Spawned
-        // only when a data dir is configured; failures back off
-        // exponentially (capped at 30s) so a full disk doesn't retry a
-        // gate-exclusive snapshot capture 4x per second.
-        if bridge.persistence().is_some() {
+        // Janitor: background maintenance off the request paths —
+        // (a) semantic-cache index rebuilds (flat→IVF migration past the
+        // row threshold, drift-triggered retrains; the k-means runs with
+        // no index lock held), and (b) the WAL-compaction trigger
+        // (size-keyed) when a data dir is configured. Cache reads are
+        // never blocked by either; journaled *mutations* quiesce for a
+        // compaction capture's duration (see persist module docs), which
+        // this thread pays instead of a request thread. Compaction
+        // failures back off exponentially (capped at 30s) so a full disk
+        // doesn't retry a gate-exclusive snapshot capture 4x per second.
+        {
             let stop = stop.clone();
             let bridge = bridge.clone();
             join.push(std::thread::spawn(move || {
-                let mut wait_ms: u64 = 250;
+                // Fixed 250ms tick for index maintenance; compaction
+                // failures back off via their own cooldown so a full disk
+                // never slows in-memory index rebuilds.
+                const TICK_MS: u64 = 250;
+                let mut compact_backoff_ms: u64 = TICK_MS;
+                let mut compact_cooldown_ms: u64 = 0;
                 'outer: loop {
-                    // Sleep in short slices so stop() stays responsive
-                    // even while backed off.
+                    // Sleep in short slices so stop() stays responsive.
                     let mut slept = 0;
-                    while slept < wait_ms {
+                    while slept < TICK_MS {
                         if stop.load(Ordering::Relaxed) {
                             break 'outer;
                         }
                         std::thread::sleep(std::time::Duration::from_millis(50));
                         slept += 50;
                     }
+                    bridge.maybe_rebuild_index();
+                    if bridge.persistence().is_none() {
+                        continue;
+                    }
+                    if compact_cooldown_ms > 0 {
+                        compact_cooldown_ms = compact_cooldown_ms.saturating_sub(TICK_MS);
+                        continue;
+                    }
                     match bridge.maybe_compact() {
-                        Ok(_) => wait_ms = 250,
+                        Ok(_) => compact_backoff_ms = TICK_MS,
                         Err(e) => {
-                            wait_ms = (wait_ms * 2).min(30_000);
+                            compact_backoff_ms = (compact_backoff_ms * 2).min(30_000);
+                            compact_cooldown_ms = compact_backoff_ms;
                             eprintln!(
                                 "persist: background compaction failed \
-                                 (retrying in {wait_ms}ms): {e}"
+                                 (retrying in {compact_backoff_ms}ms): {e}"
                             );
                         }
                     }

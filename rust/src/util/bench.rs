@@ -86,10 +86,23 @@ pub fn fast_mode() -> bool {
     std::env::var("LLMBRIDGE_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
 }
 
+/// CI smoke mode (`scripts/bench.sh --smoke`): single timed iteration, no
+/// warmup — the run proves the bench harness works and emits populated
+/// JSON, not that the numbers are stable. Benches also shrink their
+/// corpus sizes under this flag.
+pub fn smoke_mode() -> bool {
+    std::env::var("LLMBRIDGE_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
 /// Run `f` for `iters` timed iterations after `warmup` untimed ones.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
-    let iters = if fast_mode() { iters.div_ceil(10).max(3) } else { iters };
-    let warmup = if fast_mode() { warmup.min(1) } else { warmup };
+    let (warmup, iters) = if smoke_mode() {
+        (0, 1)
+    } else if fast_mode() {
+        (warmup.min(1), iters.div_ceil(10).max(3))
+    } else {
+        (warmup, iters)
+    };
     for _ in 0..warmup {
         f();
     }

@@ -1,0 +1,971 @@
+//! Adaptive vector-index tier — what the semantic cache actually holds.
+//!
+//! Small corpora are a solved problem: a blocked flat scan over a few
+//! thousand rows beats any ANN structure and is *exact*. A months-old
+//! deployment cache is not small — §3.5's cost absorption only pays off if
+//! a 10⁵–10⁶-row corpus still answers GETs on the hot path. The adaptive
+//! index serves both regimes behind one [`VectorIndex`]:
+//!
+//! * **Flat tier** (below [`AdaptiveConfig::migrate_threshold`] rows):
+//!   delegates verbatim to [`FlatIndex`] — results are bit-exact with the
+//!   pre-adaptive cache by construction.
+//! * **IVF tier** (at/above the threshold): a k-means-trained
+//!   [`IvfIndex`] probing [`AdaptiveConfig::nprobe`] cells, widened by the
+//!   cache's over-fetch GET via [`AdaptiveIndex::search_effort`] so recall
+//!   escalates (up to an exhaustive all-cells probe) before a miss is
+//!   declared.
+//!
+//! ## Retraining off the read path
+//!
+//! Migration and retraining are **not** done inside `insert` — k-means
+//! over 10⁵ rows takes seconds and the cache's index lock must never be
+//! held that long. Instead:
+//!
+//! 1. a maintenance caller (the cache's `maybe_rebuild_index`, polled by
+//!    the server janitor) takes [`AdaptiveIndex::rebuild_plan`] under the
+//!    read lock — a cheap row export + the current mutation epoch;
+//! 2. [`RebuildPlan::train`] runs k-means with **no lock held** (training
+//!    set sampled down to [`AdaptiveConfig::train_sample`] rows);
+//! 3. [`AdaptiveIndex::install`] swaps the trained tier in under a brief
+//!    write lock. Mutations that landed between plan and install are
+//!    **reconciled** (inserted into / removed from the trained tier) so
+//!    the swap never loses or resurrects a row — the install is atomic
+//!    *and* content-preserving under concurrent churn.
+//!
+//! Retrains are re-triggered by churn: once inserts+removals since the
+//! last train exceed [`AdaptiveConfig::retrain_fraction`] of the trained
+//! corpus, the centroids are considered drifted.
+//!
+//! ## Snapshot format
+//!
+//! `save`/`load` round-trip the trained state so a cold restore **never
+//! re-trains**: the flat tier writes the LBV2 bulk-row format unchanged,
+//! the IVF tier writes LBV3 — LBV2's geometry plus a trained section
+//! (cell assignments + centroids). `load` accepts both (a pre-adaptive
+//! LBV2 snapshot boots as the flat tier and migrates through the normal
+//! maintenance path).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use super::flat::FlatIndex;
+use super::ivf::{kmeans_centroids, nearest_centroid, IvfIndex};
+use super::{Hit, Metric, VectorIndex};
+use crate::util::rng::Rng;
+
+/// Process-unique identity per [`AdaptiveIndex`] value. A [`RebuildPlan`]
+/// remembers the instance it was exported from so [`AdaptiveIndex::install`]
+/// can refuse a trained tier whose source index has since been *replaced*
+/// (e.g. the cache's `clear()` swapping in a fresh index) — epoch counters
+/// alone cannot tell "mutated" from "different index that restarted at 0".
+static NEXT_INSTANCE: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_instance() -> u64 {
+    NEXT_INSTANCE.fetch_add(1, Ordering::Relaxed)
+}
+
+/// LBV3 snapshot magic: LBV2 geometry + trained IVF section.
+const LBV3_MAGIC: &[u8; 4] = b"LBV3";
+/// magic(4) + dim(u32) + metric(u8) + count(u64) + nlist(u32) + nprobe(u32)
+/// + fnv1a-crc(u64) over the payload (ids, rows, assignments, centroids).
+/// The checksum puts LBV3 on par with the persist layer's other durable
+/// artifacts (WAL records, kv.jsonl): an in-range payload bit-flip — e.g.
+/// an assignment silently pointing at the wrong cell — must fail the load,
+/// not quietly lose recall.
+const LBV3_HEADER: usize = 4 + 4 + 1 + 8 + 4 + 4 + 8;
+
+/// Tier/retrain policy knobs (defaults are the cache's production shape).
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    /// Row count at/above which the flat tier migrates to IVF. Below it a
+    /// flat scan is both faster and exact.
+    pub migrate_threshold: usize,
+    /// Cells probed per query at effort 0; each over-fetch widening step
+    /// doubles it (capped at an exhaustive all-cells probe). This is the
+    /// value a (re)train stamps onto the IVF tier — the live tier's own
+    /// (LBV3-persisted) nprobe is what queries actually use, so a restored
+    /// index keeps the policy it was trained under.
+    pub nprobe: usize,
+    /// Lloyd iterations per (re)train.
+    pub kmeans_iters: usize,
+    /// k-means training-set cap: larger corpora are sampled down so a
+    /// retrain stays O(train_sample · nlist) per iteration.
+    pub train_sample: usize,
+    /// Retrain once (inserts + removals since the last train) exceeds this
+    /// fraction of the trained corpus — the drift trigger.
+    pub retrain_fraction: f64,
+    /// Deterministic k-means seed (mixed with the mutation epoch so
+    /// successive retrains explore different initializations).
+    pub seed: u64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> AdaptiveConfig {
+        AdaptiveConfig {
+            migrate_threshold: 8192,
+            nprobe: 8,
+            kmeans_iters: 4,
+            train_sample: 16384,
+            retrain_fraction: 0.5,
+            seed: 0x1DB5,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// Coarse-cell count for an `n`-row corpus: ~sqrt(n), clamped.
+    fn nlist_for(&self, n: usize) -> usize {
+        ((n as f64).sqrt().round() as usize).clamp(8, 1024).min(n.max(1))
+    }
+}
+
+#[derive(Debug)]
+enum Tier {
+    Flat(FlatIndex),
+    Ivf(IvfIndex),
+}
+
+/// Diagnostics surfaced through `SemanticCache::index_stats` (tests, the
+/// persistence suite's "restored without retraining" assertion, ops).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IndexStats {
+    /// `"flat"` or `"ivf"`.
+    pub tier: &'static str,
+    pub rows: usize,
+    /// Whether the IVF tier holds trained centroids (always false on flat).
+    pub trained: bool,
+    /// Coarse cells (0 on flat).
+    pub nlist: usize,
+}
+
+/// Everything a trainer needs, exported under the read lock: row snapshot
+/// plus the (instance, mutation-epoch) pair it corresponds to.
+pub struct RebuildPlan {
+    cfg: AdaptiveConfig,
+    dim: usize,
+    metric: Metric,
+    ids: Vec<u64>,
+    /// Row-major, already in stored form (cosine rows pre-normalized).
+    rows: Vec<f32>,
+    instance: u64,
+    epoch: u64,
+}
+
+/// A trained IVF tier ready to [`AdaptiveIndex::install`].
+pub struct TrainedTier {
+    ivf: IvfIndex,
+    instance: u64,
+    epoch: u64,
+}
+
+impl RebuildPlan {
+    /// Run k-means and assign every exported row — pure CPU, call with no
+    /// lock held. Deterministic for a given (config seed, epoch).
+    pub fn train(self) -> TrainedTier {
+        let n = self.ids.len();
+        let nlist = self.cfg.nlist_for(n);
+        let mut rng = Rng::new(self.cfg.seed ^ self.epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        // Sample the training set; assignments below still cover all rows.
+        let train_rows: Vec<f32> = if n > self.cfg.train_sample {
+            let picks = rng.sample_indices(n, self.cfg.train_sample);
+            picks
+                .iter()
+                .flat_map(|&i| self.rows[i * self.dim..(i + 1) * self.dim].iter().copied())
+                .collect()
+        } else {
+            self.rows.clone()
+        };
+        let centroids = kmeans_centroids(
+            &mut rng,
+            self.metric,
+            &train_rows,
+            self.dim,
+            nlist,
+            self.cfg.kmeans_iters.max(1),
+        );
+        let assignments: Vec<u32> = (0..n)
+            .map(|i| {
+                nearest_centroid(
+                    self.metric,
+                    &centroids,
+                    self.dim,
+                    &self.rows[i * self.dim..(i + 1) * self.dim],
+                ) as u32
+            })
+            .collect();
+        let ivf = IvfIndex::from_trained_parts(
+            self.dim,
+            self.metric,
+            self.cfg.nprobe,
+            centroids,
+            self.ids,
+            self.rows,
+            &assignments,
+        )
+        .expect("self-built trained parts are consistent");
+        TrainedTier {
+            ivf,
+            instance: self.instance,
+            epoch: self.epoch,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct AdaptiveIndex {
+    cfg: AdaptiveConfig,
+    tier: Tier,
+    /// Process-unique identity (see [`NEXT_INSTANCE`]): lets `install`
+    /// reject a trained tier whose source index was replaced wholesale.
+    instance: u64,
+    /// Bumped on every content mutation; a [`RebuildPlan`] remembers the
+    /// epoch it exported so [`AdaptiveIndex::install`] knows whether it
+    /// must reconcile.
+    epoch: u64,
+    /// Rows present when the IVF tier was last trained (0 on flat).
+    trained_rows: usize,
+    /// Inserts + removals since the last train — the drift counter.
+    churn_since_train: usize,
+}
+
+impl AdaptiveIndex {
+    pub fn new(dim: usize, metric: Metric, cfg: AdaptiveConfig) -> AdaptiveIndex {
+        AdaptiveIndex::from_flat(FlatIndex::new(dim, metric), cfg)
+    }
+
+    /// Adopt an existing flat index as the flat tier (bulk restore of LBV2
+    /// snapshots; also the `restore_bulk` entry point).
+    pub fn from_flat(flat: FlatIndex, cfg: AdaptiveConfig) -> AdaptiveIndex {
+        AdaptiveIndex {
+            cfg,
+            tier: Tier::Flat(flat),
+            instance: fresh_instance(),
+            epoch: 0,
+            trained_rows: 0,
+            churn_since_train: 0,
+        }
+    }
+
+    pub fn config(&self) -> &AdaptiveConfig {
+        &self.cfg
+    }
+
+    pub fn metric(&self) -> Metric {
+        match &self.tier {
+            Tier::Flat(f) => f.metric(),
+            Tier::Ivf(i) => i.metric(),
+        }
+    }
+
+    /// Whether `id` has a row (O(1) on both tiers).
+    pub fn contains(&self, id: u64) -> bool {
+        match &self.tier {
+            Tier::Flat(f) => f.contains(id),
+            Tier::Ivf(i) => i.contains(id),
+        }
+    }
+
+    pub fn stats(&self) -> IndexStats {
+        match &self.tier {
+            Tier::Flat(f) => IndexStats {
+                tier: "flat",
+                rows: f.len(),
+                trained: false,
+                nlist: 0,
+            },
+            Tier::Ivf(i) => IndexStats {
+                tier: "ivf",
+                rows: i.len(),
+                trained: i.is_trained(),
+                nlist: i.nlist(),
+            },
+        }
+    }
+
+    /// Top-k at an escalating effort level — the cache's over-fetch GET
+    /// passes its widening attempt number. Effort `e` probes
+    /// `nprobe * 2^e` cells. The second return value is `true` when the
+    /// scan was exhaustive (flat, or every cell probed): only then can the
+    /// caller conclude that nothing above `min_score` was missed.
+    pub fn search_effort(
+        &self,
+        query: &[f32],
+        k: usize,
+        min_score: f32,
+        effort: u32,
+    ) -> (Vec<Hit>, bool) {
+        match &self.tier {
+            Tier::Flat(f) => (f.search(query, k, min_score), true),
+            Tier::Ivf(i) => {
+                if !i.is_trained() {
+                    // Untrained IVF scans pending exactly (not reachable
+                    // through the cache, which only installs trained tiers).
+                    return (i.search(query, k, min_score), true);
+                }
+                // Base probes come from the live tier (stamped at train
+                // time, LBV3-persisted) so a restored index keeps the
+                // policy it was trained under.
+                let probes = i
+                    .nprobe
+                    .max(1)
+                    .saturating_mul(1usize << effort.min(20))
+                    .min(i.nlist());
+                (
+                    i.search_probes(query, k, min_score, probes),
+                    probes >= i.nlist(),
+                )
+            }
+        }
+    }
+
+    /// Does the index want a (re)train? Flat: the corpus outgrew the
+    /// migration threshold. IVF: churn since the last train exceeds the
+    /// drift fraction.
+    pub fn needs_rebuild(&self) -> bool {
+        match &self.tier {
+            Tier::Flat(f) => !f.is_empty() && f.len() >= self.cfg.migrate_threshold,
+            Tier::Ivf(_) => {
+                self.churn_since_train as f64
+                    >= self.cfg.retrain_fraction * self.trained_rows.max(1) as f64
+            }
+        }
+    }
+
+    /// Export a training plan (row snapshot + epoch) if a rebuild is due.
+    /// Cheap enough for a read-locked critical section: one bulk copy of
+    /// ids and rows.
+    pub fn rebuild_plan(&self) -> Option<RebuildPlan> {
+        if !self.needs_rebuild() || self.len() == 0 {
+            return None;
+        }
+        let (ids, rows) = match &self.tier {
+            Tier::Flat(f) => (f.ids().to_vec(), f.rows().to_vec()),
+            Tier::Ivf(i) => {
+                let (ids, rows, _) = i.export_parts();
+                (ids, rows)
+            }
+        };
+        Some(RebuildPlan {
+            cfg: self.cfg.clone(),
+            dim: self.dim(),
+            metric: self.metric(),
+            ids,
+            rows,
+            instance: self.instance,
+            epoch: self.epoch,
+        })
+    }
+
+    /// Swap a trained tier in (write-locked critical section). If
+    /// mutations landed since the plan's epoch, the delta is reconciled
+    /// into the trained tier first — rows inserted meanwhile are assigned
+    /// to their nearest cell, rows removed meanwhile are dropped — so the
+    /// swap is content-preserving under concurrent churn. The reconcile
+    /// costs two O(n) hash-probe sweeps (single-digit ms at 100k rows),
+    /// paid only when churn actually landed mid-train; with no churn the
+    /// install is a plain pointer swap.
+    ///
+    /// Returns `false` (tier unchanged, trained work discarded) when the
+    /// plan came from a *different index value* — e.g. the cache was
+    /// cleared or wholesale-replaced between plan and install; reconciling
+    /// across that boundary would resurrect stale centroids over a fresh
+    /// index.
+    #[must_use]
+    pub fn install(&mut self, trained: TrainedTier) -> bool {
+        if trained.instance != self.instance {
+            return false;
+        }
+        let mut ivf = trained.ivf;
+        if trained.epoch != self.epoch {
+            // Additions: in the live tier but unknown to the trained one.
+            let mut added: Vec<(u64, Vec<f32>)> = Vec::new();
+            self.for_each_row(|id, row| {
+                if !ivf.contains(id) {
+                    added.push((id, row.to_vec()));
+                }
+            });
+            // Removals: trained from a row that has since been deleted.
+            let mut removed: Vec<u64> = Vec::new();
+            ivf.for_each_row(|id, _| {
+                if !self.contains(id) {
+                    removed.push(id);
+                }
+            });
+            for (id, row) in added {
+                // Rows are already in stored (normalized) form.
+                ivf.insert_stored(id, &row)
+                    .expect("reconciled row has the index's dim");
+            }
+            for id in removed {
+                ivf.remove(id);
+            }
+        }
+        debug_assert_eq!(ivf.len(), self.len());
+        self.trained_rows = ivf.len();
+        self.churn_since_train = 0;
+        self.tier = Tier::Ivf(ivf);
+        true
+    }
+
+    /// Visit every `(id, row)` pair in stored form.
+    pub(crate) fn for_each_row(&self, f: impl FnMut(u64, &[f32])) {
+        match &self.tier {
+            Tier::Flat(fl) => fl.for_each_row(f),
+            Tier::Ivf(i) => i.for_each_row(f),
+        }
+    }
+
+    // ----------------------------------------------------------- snapshot
+
+    /// Durable image: the flat tier writes LBV2 unchanged (old readers
+    /// keep working); the IVF tier writes LBV3 so a restore skips
+    /// training. Both are written + fsynced like [`FlatIndex::save`].
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        match &self.tier {
+            Tier::Flat(f) => f.save(path),
+            Tier::Ivf(i) => {
+                let (ids, rows, assignments) = i.export_parts();
+                let dim = i.dim();
+                let nlist = i.nlist();
+                let centroids = i.centroids();
+                let mut payload: Vec<u8> = Vec::with_capacity(
+                    ids.len() * 8 + rows.len() * 4 + assignments.len() * 4 + centroids.len() * 4,
+                );
+                for id in &ids {
+                    payload.extend_from_slice(&id.to_le_bytes());
+                }
+                for v in &rows {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
+                for a in &assignments {
+                    payload.extend_from_slice(&a.to_le_bytes());
+                }
+                for c in centroids {
+                    payload.extend_from_slice(&c.to_le_bytes());
+                }
+                let mut out: Vec<u8> = Vec::with_capacity(LBV3_HEADER + payload.len());
+                out.extend_from_slice(LBV3_MAGIC);
+                out.extend((dim as u32).to_le_bytes());
+                out.push(match i.metric() {
+                    Metric::Cosine => 0,
+                    Metric::Dot => 1,
+                    Metric::L2 => 2,
+                });
+                out.extend((ids.len() as u64).to_le_bytes());
+                out.extend((nlist as u32).to_le_bytes());
+                out.extend((i.nprobe as u32).to_le_bytes());
+                out.extend(crate::util::fnv1a(&payload).to_le_bytes());
+                out.extend_from_slice(&payload);
+                let mut f = std::fs::File::create(path)?;
+                std::io::Write::write_all(&mut f, &out)?;
+                f.sync_all()?;
+                Ok(())
+            }
+        }
+    }
+
+    /// Load a snapshot written by [`AdaptiveIndex::save`] — or by the
+    /// pre-adaptive [`FlatIndex::save`] (LBV2 boots as the flat tier).
+    pub fn load(path: &std::path::Path, cfg: AdaptiveConfig) -> Result<AdaptiveIndex> {
+        let bytes = std::fs::read(path)?;
+        Self::from_snapshot_bytes(&bytes, cfg)
+    }
+
+    pub(crate) fn from_snapshot_bytes(bytes: &[u8], cfg: AdaptiveConfig) -> Result<AdaptiveIndex> {
+        if bytes.len() >= 4 && &bytes[0..4] == LBV3_MAGIC {
+            return Self::from_lbv3_bytes(bytes, cfg);
+        }
+        // Anything else (including short/corrupt data) goes through the
+        // LBV2 reader, whose validation errors already name the problem.
+        let flat = FlatIndex::from_snapshot_bytes(bytes)?;
+        Ok(AdaptiveIndex::from_flat(flat, cfg))
+    }
+
+    fn from_lbv3_bytes(bytes: &[u8], cfg: AdaptiveConfig) -> Result<AdaptiveIndex> {
+        if bytes.len() < LBV3_HEADER {
+            bail!(
+                "truncated LBV3 snapshot: {} bytes, header is {LBV3_HEADER}",
+                bytes.len()
+            );
+        }
+        let dim = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+        let metric = match bytes[8] {
+            0 => Metric::Cosine,
+            1 => Metric::Dot,
+            2 => Metric::L2,
+            m => bail!("bad metric tag {m}"),
+        };
+        let count = u64::from_le_bytes(bytes[9..17].try_into()?) as usize;
+        let nlist = u32::from_le_bytes(bytes[17..21].try_into()?) as usize;
+        let nprobe = u32::from_le_bytes(bytes[21..25].try_into()?) as usize;
+        let crc = u64::from_le_bytes(bytes[25..33].try_into()?);
+        // Validate the declared geometry against the byte length before
+        // slicing — reject both short data and trailing garbage.
+        let want = (|| {
+            let ids = count.checked_mul(8)?;
+            let rows = count.checked_mul(dim)?.checked_mul(4)?;
+            let assigns = count.checked_mul(4)?;
+            let cents = nlist.checked_mul(dim)?.checked_mul(4)?;
+            LBV3_HEADER
+                .checked_add(ids)?
+                .checked_add(rows)?
+                .checked_add(assigns)?
+                .checked_add(cents)
+        })()
+        .ok_or_else(|| {
+            anyhow::anyhow!("LBV3 snapshot header overflows: count={count} dim={dim} nlist={nlist}")
+        })?;
+        if bytes.len() != want {
+            bail!(
+                "corrupt LBV3 snapshot: {} bytes for count={count} dim={dim} nlist={nlist} \
+                 (expected {want})",
+                bytes.len()
+            );
+        }
+        if crate::util::fnv1a(&bytes[LBV3_HEADER..]) != crc {
+            bail!("corrupt LBV3 snapshot: payload checksum mismatch");
+        }
+        let ids_end = LBV3_HEADER + count * 8;
+        let rows_end = ids_end + count * dim * 4;
+        let assigns_end = rows_end + count * 4;
+        let mut ids = Vec::with_capacity(count);
+        for c in bytes[LBV3_HEADER..ids_end].chunks_exact(8) {
+            ids.push(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let mut rows = Vec::with_capacity(count * dim);
+        for c in bytes[ids_end..rows_end].chunks_exact(4) {
+            rows.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        let mut assignments = Vec::with_capacity(count);
+        for c in bytes[rows_end..assigns_end].chunks_exact(4) {
+            assignments.push(u32::from_le_bytes(c.try_into().unwrap()));
+        }
+        let mut centroids = Vec::with_capacity(nlist * dim);
+        for c in bytes[assigns_end..].chunks_exact(4) {
+            centroids.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        let ivf =
+            IvfIndex::from_trained_parts(dim, metric, nprobe, centroids, ids, rows, &assignments)?;
+        let trained_rows = ivf.len();
+        Ok(AdaptiveIndex {
+            cfg,
+            tier: Tier::Ivf(ivf),
+            instance: fresh_instance(),
+            epoch: 0,
+            trained_rows,
+            churn_since_train: 0,
+        })
+    }
+}
+
+impl VectorIndex for AdaptiveIndex {
+    fn dim(&self) -> usize {
+        match &self.tier {
+            Tier::Flat(f) => f.dim(),
+            Tier::Ivf(i) => i.dim(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match &self.tier {
+            Tier::Flat(f) => f.len(),
+            Tier::Ivf(i) => i.len(),
+        }
+    }
+
+    fn insert(&mut self, id: u64, vector: &[f32]) -> Result<()> {
+        match &mut self.tier {
+            Tier::Flat(f) => f.insert(id, vector)?,
+            Tier::Ivf(i) => i.insert(id, vector)?,
+        }
+        self.epoch += 1;
+        self.churn_since_train += 1;
+        Ok(())
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        let removed = match &mut self.tier {
+            Tier::Flat(f) => f.remove(id),
+            Tier::Ivf(i) => i.remove(id),
+        };
+        if removed {
+            self.epoch += 1;
+            self.churn_since_train += 1;
+        }
+        removed
+    }
+
+    fn search(&self, query: &[f32], k: usize, min_score: f32) -> Vec<Hit> {
+        self.search_effort(query, k, min_score, 0).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn small_cfg(threshold: usize) -> AdaptiveConfig {
+        AdaptiveConfig {
+            migrate_threshold: threshold,
+            nprobe: 8,
+            kmeans_iters: 3,
+            train_sample: 4096,
+            retrain_fraction: 0.5,
+            seed: 0x5EED,
+        }
+    }
+
+    fn rand_vec(r: &mut Rng, dim: usize) -> Vec<f32> {
+        (0..dim).map(|_| r.normal() as f32).collect()
+    }
+
+    /// Points around well-separated centers — the workload shape IVF is
+    /// built for (cached prompts cluster by topic).
+    fn clustered(seed: u64, n: usize, dim: usize, centers: usize) -> Vec<(u64, Vec<f32>)> {
+        let mut rng = Rng::new(seed);
+        let cs: Vec<Vec<f32>> = (0..centers)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32 * 8.0).collect())
+            .collect();
+        (0..n)
+            .map(|i| {
+                let c = rng.choice(&cs).clone();
+                let v = c.iter().map(|x| x + rng.normal() as f32 * 0.4).collect();
+                (i as u64, v)
+            })
+            .collect()
+    }
+
+    fn migrated(data: &[(u64, Vec<f32>)], dim: usize, cfg: AdaptiveConfig) -> AdaptiveIndex {
+        let mut adaptive = AdaptiveIndex::new(dim, Metric::Cosine, cfg);
+        for (id, v) in data {
+            adaptive.insert(*id, v).unwrap();
+        }
+        let plan = adaptive.rebuild_plan().expect("above threshold");
+        assert!(adaptive.install(plan.train()));
+        assert_eq!(adaptive.stats().tier, "ivf");
+        assert!(adaptive.stats().trained);
+        adaptive
+    }
+
+    /// Below the migration threshold the adaptive index IS the flat index:
+    /// identical hit lists with bit-identical scores.
+    #[test]
+    fn prop_flat_tier_bit_exact_parity() {
+        forall(
+            71,
+            25,
+            |r| {
+                let dim = 16;
+                let n = 1 + r.below(300);
+                let mut flat = FlatIndex::new(dim, Metric::Cosine);
+                let mut adaptive =
+                    AdaptiveIndex::new(dim, Metric::Cosine, small_cfg(100_000));
+                for i in 0..n {
+                    let v = rand_vec(r, dim);
+                    flat.insert(i as u64, &v).unwrap();
+                    adaptive.insert(i as u64, &v).unwrap();
+                }
+                // Interleave removes so slot layouts stay in lockstep.
+                for i in (0..n).step_by(7) {
+                    flat.remove(i as u64);
+                    adaptive.remove(i as u64);
+                }
+                let q = rand_vec(r, dim);
+                (flat, adaptive, q)
+            },
+            |(flat, adaptive, q)| {
+                assert_eq!(adaptive.stats().tier, "flat");
+                for (k, min) in [(1usize, f32::MIN), (4, f32::MIN), (16, 0.2)] {
+                    let a = flat.search(q, k, min);
+                    let b = adaptive.search(q, k, min);
+                    if a.len() != b.len() {
+                        return false;
+                    }
+                    for (x, y) in a.iter().zip(&b) {
+                        if x.id != y.id || x.score.to_bits() != y.score.to_bits() {
+                            return false;
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    /// Above the threshold on clustered data, the migrated tier keeps
+    /// recall@4 >= 0.95 against flat ground truth at base effort.
+    #[test]
+    fn migrated_recall_at_4_clustered_20k() {
+        let dim = 32;
+        let data = clustered(0xC0FFEE, 20_000, dim, 64);
+        let mut flat = FlatIndex::new(dim, Metric::Cosine);
+        for (id, v) in &data {
+            flat.insert(*id, v).unwrap();
+        }
+        let adaptive = migrated(&data, dim, small_cfg(1000));
+        let mut rng = Rng::new(0xFACE);
+        let mut found = 0usize;
+        let mut total = 0usize;
+        for _ in 0..60 {
+            let (_, base) = rng.choice(&data).clone();
+            let q: Vec<f32> = base
+                .iter()
+                .map(|x| x + rng.normal() as f32 * 0.1)
+                .collect();
+            let truth: Vec<u64> = flat.search(&q, 4, f32::MIN).iter().map(|h| h.id).collect();
+            let got: Vec<u64> = adaptive.search(&q, 4, f32::MIN).iter().map(|h| h.id).collect();
+            total += truth.len();
+            found += truth.iter().filter(|t| got.contains(t)).count();
+        }
+        let recall = found as f64 / total as f64;
+        assert!(recall >= 0.95, "recall@4={recall}");
+    }
+
+    /// Effort widening converges to the exhaustive all-cells probe, whose
+    /// hit set equals flat ground truth exactly (same rows, same kernel).
+    #[test]
+    fn exhaustive_effort_matches_flat_ground_truth() {
+        let dim = 16;
+        let data = clustered(0xBEEF, 3000, dim, 16);
+        let mut flat = FlatIndex::new(dim, Metric::Cosine);
+        for (id, v) in &data {
+            flat.insert(*id, v).unwrap();
+        }
+        let adaptive = migrated(&data, dim, small_cfg(500));
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            let q = rand_vec(&mut rng, dim);
+            // Find the first exhaustive effort level.
+            let mut effort = 0;
+            let (hits, exhaustive) = loop {
+                let (h, ex) = adaptive.search_effort(&q, 8, f32::MIN, effort);
+                if ex {
+                    break (h, ex);
+                }
+                effort += 1;
+                assert!(effort < 32, "effort never became exhaustive");
+            };
+            assert!(exhaustive);
+            let truth = flat.search(&q, 8, f32::MIN);
+            // Same rows, same kernel — but a row's dot4-block position
+            // differs between layouts, so compare ids exactly and scores
+            // to last-ulp tolerance rather than bit-for-bit.
+            let mut a: Vec<u64> = hits.iter().map(|h| h.id).collect();
+            let mut b: Vec<u64> = truth.iter().map(|h| h.id).collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+            let score_of = |hs: &[Hit], id: u64| {
+                hs.iter().find(|h| h.id == id).unwrap().score
+            };
+            for id in &a {
+                let d = (score_of(&hits, *id) - score_of(&truth, *id)).abs();
+                assert!(d < 1e-5, "score drift {d} for id {id}");
+            }
+        }
+    }
+
+    /// Removing a row after migration and re-adding the same vector gives
+    /// search results equivalent to never having removed it.
+    #[test]
+    fn remove_readd_equivalence_after_migration() {
+        let dim = 16;
+        let data = clustered(0xABBA, 2000, dim, 12);
+        let mut adaptive = migrated(&data, dim, small_cfg(500));
+        let nlist = adaptive.stats().nlist;
+        let q = {
+            let mut rng = Rng::new(99);
+            rand_vec(&mut rng, dim)
+        };
+        let before = adaptive.search_effort(&q, 10, f32::MIN, 32).0;
+        for (id, v) in data.iter().take(50) {
+            assert!(adaptive.remove(*id));
+            assert!(!adaptive.contains(*id));
+            adaptive.insert(*id, v).unwrap();
+            assert!(adaptive.contains(*id));
+        }
+        assert_eq!(adaptive.len(), data.len());
+        assert_eq!(adaptive.stats().nlist, nlist, "no retrain happened");
+        let after = adaptive.search_effort(&q, 10, f32::MIN, 32).0;
+        // Re-added rows land back in the same cell (same centroids, same
+        // normalize) but at a different slot, so scores can wobble by an
+        // ulp — same ids, tolerance on scores.
+        let ids = |hs: &[Hit]| {
+            let mut v: Vec<u64> = hs.iter().map(|h| h.id).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(ids(&before), ids(&after));
+        for b in &before {
+            let a = after.iter().find(|h| h.id == b.id).unwrap();
+            assert!((a.score - b.score).abs() < 1e-5);
+        }
+    }
+
+    /// Mutations that land between rebuild_plan and install are reconciled
+    /// into the trained tier: nothing lost, nothing resurrected.
+    #[test]
+    fn install_reconciles_concurrent_churn() {
+        let dim = 8;
+        let data = clustered(0xD00D, 1200, dim, 8);
+        let mut adaptive = AdaptiveIndex::new(dim, Metric::Cosine, small_cfg(500));
+        for (id, v) in &data {
+            adaptive.insert(*id, v).unwrap();
+        }
+        let plan = adaptive.rebuild_plan().unwrap();
+        // Churn after the plan was taken.
+        for id in 0..40u64 {
+            assert!(adaptive.remove(id));
+        }
+        let mut rng = Rng::new(5);
+        for id in 5000..5030u64 {
+            adaptive.insert(id, &rand_vec(&mut rng, dim)).unwrap();
+        }
+        let trained = plan.train();
+        assert!(adaptive.install(trained), "same index: reconcile, not refuse");
+        assert_eq!(adaptive.len(), 1200 - 40 + 30);
+        for id in 0..40u64 {
+            assert!(!adaptive.contains(id), "removed id {id} resurrected");
+        }
+        for id in 5000..5030u64 {
+            assert!(adaptive.contains(id), "reconciled insert {id} lost");
+            let (hits, _) = adaptive.search_effort(
+                &{
+                    // exhaustive probe for the id's own row
+                    let mut found = None;
+                    adaptive.for_each_row(|rid, row| {
+                        if rid == id {
+                            found = Some(row.to_vec());
+                        }
+                    });
+                    found.unwrap()
+                },
+                1,
+                f32::MIN,
+                32,
+            );
+            assert_eq!(hits[0].id, id, "reconciled row not retrievable");
+        }
+    }
+
+    /// Drift-triggered retrain: enough churn re-arms needs_rebuild.
+    #[test]
+    fn churn_triggers_retrain() {
+        let dim = 8;
+        let data = clustered(0xF00D, 800, dim, 8);
+        let mut adaptive = migrated(&data, dim, small_cfg(400));
+        assert!(!adaptive.needs_rebuild());
+        let mut rng = Rng::new(17);
+        for id in 9000..9000 + 500u64 {
+            adaptive.insert(id, &rand_vec(&mut rng, dim)).unwrap();
+        }
+        assert!(adaptive.needs_rebuild(), "500/800 churn is past 0.5 drift");
+        let plan = adaptive.rebuild_plan().unwrap();
+        assert!(adaptive.install(plan.train()));
+        assert!(!adaptive.needs_rebuild());
+        assert_eq!(adaptive.len(), 1300);
+    }
+
+    /// A plan taken from an index that was then wholesale-replaced (the
+    /// cache's clear()) must be refused, not reconciled into the fresh
+    /// index — stale centroids never demote a cleared cache off the
+    /// bit-exact flat tier.
+    #[test]
+    fn install_refuses_replaced_index() {
+        let dim = 8;
+        let data = clustered(0xCAFE, 800, dim, 8);
+        let mut adaptive = AdaptiveIndex::new(dim, Metric::Cosine, small_cfg(400));
+        for (id, v) in &data {
+            adaptive.insert(*id, v).unwrap();
+        }
+        let plan = adaptive.rebuild_plan().unwrap();
+        let trained = plan.train();
+        // clear(): a brand-new index value takes this one's place.
+        adaptive = AdaptiveIndex::new(dim, Metric::Cosine, small_cfg(400));
+        adaptive.insert(1, &data[0].1).unwrap();
+        assert!(!adaptive.install(trained), "stale trained tier refused");
+        assert_eq!(adaptive.stats().tier, "flat");
+        assert_eq!(adaptive.len(), 1);
+    }
+
+    /// LBV3 round-trip: a migrated index restores trained (no k-means on
+    /// load) with bit-identical hits; LBV2 still loads as the flat tier.
+    #[test]
+    fn snapshot_roundtrip_lbv3_and_lbv2() {
+        let dim = 16;
+        let dir = std::env::temp_dir().join("llmbridge_adaptive_snap");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let data = clustered(0x1CE, 1500, dim, 10);
+        let adaptive = migrated(&data, dim, small_cfg(500));
+        let p3 = dir.join("adaptive.lbv3.bin");
+        adaptive.save(&p3).unwrap();
+        let back = AdaptiveIndex::load(&p3, small_cfg(500)).unwrap();
+        assert_eq!(back.stats(), adaptive.stats());
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let q = rand_vec(&mut rng, dim);
+            let a = adaptive.search(&q, 5, f32::MIN);
+            let b = back.search(&q, 5, f32::MIN);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
+
+        // Flat tier writes plain LBV2, readable by both loaders.
+        let mut small = AdaptiveIndex::new(dim, Metric::Cosine, small_cfg(100_000));
+        for (id, v) in data.iter().take(100) {
+            small.insert(*id, v).unwrap();
+        }
+        let p2 = dir.join("adaptive.lbv2.bin");
+        small.save(&p2).unwrap();
+        assert_eq!(FlatIndex::load(&p2).unwrap().len(), 100);
+        let back2 = AdaptiveIndex::load(&p2, small_cfg(100_000)).unwrap();
+        assert_eq!(back2.stats().tier, "flat");
+        assert_eq!(back2.len(), 100);
+    }
+
+    #[test]
+    fn load_rejects_corrupt_lbv3() {
+        let dim = 8;
+        let dir = std::env::temp_dir().join("llmbridge_adaptive_snap");
+        std::fs::create_dir_all(&dir).unwrap();
+        let data = clustered(0xBAD, 600, dim, 6);
+        let adaptive = migrated(&data, dim, small_cfg(300));
+        let path = dir.join("corrupt.lbv3.bin");
+        adaptive.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        assert_eq!(&good[0..4], LBV3_MAGIC);
+
+        // Truncated mid-section.
+        let err =
+            AdaptiveIndex::from_snapshot_bytes(&good[..good.len() - 3], small_cfg(300))
+                .unwrap_err();
+        assert!(err.to_string().contains("corrupt LBV3"), "{err}");
+        // Trailing garbage.
+        let mut trailing = good.clone();
+        trailing.extend_from_slice(&[1, 2, 3]);
+        assert!(AdaptiveIndex::from_snapshot_bytes(&trailing, small_cfg(300)).is_err());
+        // In-range payload corruption: an assignment flipped to another
+        // (valid) cell would silently lose recall — the payload checksum
+        // catches it before any structural validation could be fooled.
+        let count = adaptive.len();
+        let assigns_start = LBV3_HEADER + count * 8 + count * dim * 4;
+        let mut bad = good.clone();
+        bad[assigns_start] ^= 0x01;
+        let err = AdaptiveIndex::from_snapshot_bytes(&bad, small_cfg(300)).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // Same for a row float bit-flip.
+        let mut bad = good.clone();
+        bad[LBV3_HEADER + count * 8 + 2] ^= 0x40;
+        let err = AdaptiveIndex::from_snapshot_bytes(&bad, small_cfg(300)).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // Shorter than the LBV3 header falls through to the LBV2 reader's
+        // validation (bad magic / truncated).
+        assert!(AdaptiveIndex::from_snapshot_bytes(&good[..3], small_cfg(300)).is_err());
+    }
+}

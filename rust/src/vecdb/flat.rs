@@ -21,7 +21,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use super::{dot4, normalize_in_place, push_topk, Hit, Metric, VectorIndex};
+use super::{normalize_in_place, Hit, Metric, VectorIndex};
 
 /// Snapshot magic + format version. Bumped from the seed's headerless v1
 /// when rows became pre-normalized (a v1 reader would mis-score them).
@@ -65,6 +65,24 @@ impl FlatIndex {
         &self.data[i * self.dim..(i + 1) * self.dim]
     }
 
+    /// Slot-ordered ids (parallel to [`FlatIndex::rows`]).
+    pub(crate) fn ids(&self) -> &[u64] {
+        &self.ids
+    }
+
+    /// Row-major storage (cosine rows pre-normalized) — the adaptive
+    /// tier's migration/export path reads rows in bulk from here.
+    pub(crate) fn rows(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Visit every `(id, row)` pair in slot order.
+    pub(crate) fn for_each_row(&self, mut f: impl FnMut(u64, &[f32])) {
+        for (i, &id) in self.ids.iter().enumerate() {
+            f(id, self.row(i));
+        }
+    }
+
     /// Binary snapshot: `LBV2 [dim u32][metric u8][count u64][ids..][rows..]`
     /// with ids and rows written as contiguous little-endian byte runs.
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
@@ -98,7 +116,7 @@ impl FlatIndex {
         Self::from_snapshot_bytes(&bytes)
     }
 
-    fn from_snapshot_bytes(bytes: &[u8]) -> Result<FlatIndex> {
+    pub(crate) fn from_snapshot_bytes(bytes: &[u8]) -> Result<FlatIndex> {
         if bytes.len() < SNAPSHOT_HEADER {
             bail!(
                 "truncated vecdb snapshot: {} bytes, header is {SNAPSHOT_HEADER}",
@@ -203,55 +221,21 @@ impl VectorIndex for FlatIndex {
                 // Rows are unit-normalized, so score = dot(q, row) / |q|.
                 let qn = super::dot(query, query).sqrt();
                 let q_inv = if qn == 0.0 { 0.0 } else { 1.0 / qn };
-                let n = self.ids.len();
-                let blocks = n / 4;
-                for b in 0..blocks {
-                    let i = b * 4;
-                    let base = i * self.dim;
-                    let scores =
-                        dot4(query, &self.data[base..base + 4 * self.dim], self.dim);
-                    for (j, raw) in scores.iter().enumerate() {
-                        let s = raw * q_inv;
-                        if s >= min_score {
-                            push_topk(
-                                &mut top,
-                                Hit {
-                                    id: self.ids[i + j],
-                                    score: s,
-                                },
-                                k,
-                            );
-                        }
-                    }
-                }
-                for i in blocks * 4..n {
-                    let s = super::dot(query, self.row(i)) * q_inv;
-                    if s >= min_score {
-                        push_topk(
-                            &mut top,
-                            Hit {
-                                id: self.ids[i],
-                                score: s,
-                            },
-                            k,
-                        );
-                    }
-                }
+                super::scan_cosine_rows(
+                    &mut top, query, q_inv, &self.ids, &self.data, self.dim, k, min_score,
+                );
             }
             _ => {
-                for i in 0..self.ids.len() {
-                    let s = self.metric.score(query, self.row(i));
-                    if s >= min_score {
-                        push_topk(
-                            &mut top,
-                            Hit {
-                                id: self.ids[i],
-                                score: s,
-                            },
-                            k,
-                        );
-                    }
-                }
+                super::scan_metric_rows(
+                    &mut top,
+                    self.metric,
+                    query,
+                    &self.ids,
+                    &self.data,
+                    self.dim,
+                    k,
+                    min_score,
+                );
             }
         }
         top

@@ -1,22 +1,134 @@
 //! IVF (inverted-file) approximate index: k-means coarse quantizer, each
 //! vector assigned to its nearest centroid's posting list; queries probe the
 //! `nprobe` nearest cells. Trades a small recall loss for sub-linear scans —
-//! used in the perf pass when the cache corpus grows large.
+//! the large-corpus tier of [`super::adaptive::AdaptiveIndex`].
+//!
+//! Storage layout (the IVF half of the cache hot path):
+//! * Each posting list is **contiguous row-major storage** (`list_rows[c]`)
+//!   with a parallel id vector, so a probed cell scans with the same
+//!   blocked dot4 kernel as the flat index — not a pointer chase over
+//!   per-vector heap allocations.
+//! * An id → (cell, slot) map makes [`IvfIndex::remove`] O(1) (swap-remove
+//!   within the cell, map fix-up for the displaced row) and
+//!   [`IvfIndex::contains`] O(1) — the features the flat index already had,
+//!   required once the semantic cache can sit on either tier.
+//! * [`IvfIndex::from_trained_parts`] is the validated bulk-load path: a
+//!   snapshot restores centroids + rows + assignments wholesale and never
+//!   re-runs k-means.
+
+use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use super::{dot, normalize_in_place, push_topk, Hit, Metric, VectorIndex};
+use super::{dot, normalize_in_place, Hit, Metric, VectorIndex};
 use crate::util::rng::Rng;
 
+/// `locs` cell tag for vectors inserted before training.
+const PENDING_CELL: u32 = u32::MAX;
+
+#[derive(Debug)]
 pub struct IvfIndex {
     dim: usize,
     metric: Metric,
     nlist: usize,
     pub nprobe: usize,
-    centroids: Vec<f32>,          // nlist x dim, empty until trained
-    lists: Vec<Vec<(u64, Vec<f32>)>>,
-    pending: Vec<(u64, Vec<f32>)>, // inserted before training
+    /// nlist x dim, empty until trained.
+    centroids: Vec<f32>,
+    /// Per-cell ids, parallel to `list_rows`.
+    list_ids: Vec<Vec<u64>>,
+    /// Per-cell contiguous row-major vectors.
+    list_rows: Vec<Vec<f32>>,
+    /// Inserted before training (flat id/row arrays, scanned exactly).
+    pending_ids: Vec<u64>,
+    pending_rows: Vec<f32>,
+    /// id → (cell, slot); cell == [`PENDING_CELL`] while untrained.
+    locs: HashMap<u64, (u32, u32)>,
     trained: bool,
+}
+
+// ----------------------------------------------------------- k-means core
+
+/// Index of the centroid with the best metric score for `v`.
+pub(crate) fn nearest_centroid(metric: Metric, centroids: &[f32], dim: usize, v: &[f32]) -> usize {
+    let k = centroids.len() / dim;
+    debug_assert!(k > 0);
+    let mut best = 0;
+    let mut best_score = f32::MIN;
+    for c in 0..k {
+        let s = metric.score(v, &centroids[c * dim..(c + 1) * dim]);
+        if s > best_score {
+            best_score = s;
+            best = c;
+        }
+    }
+    best
+}
+
+/// Lloyd's k-means over contiguous row-major `rows` (fixed iterations,
+/// random distinct seeding). Returns `min(k, n) * dim` centroids. Shared by
+/// [`IvfIndex::train`] and the adaptive tier's off-read-path retrain.
+pub(crate) fn kmeans_centroids(
+    rng: &mut Rng,
+    metric: Metric,
+    rows: &[f32],
+    dim: usize,
+    k: usize,
+    iters: usize,
+) -> Vec<f32> {
+    let n = rows.len() / dim;
+    debug_assert!(n > 0);
+    let k = k.max(1).min(n);
+    let picks = rng.sample_indices(n, k);
+    let mut centroids: Vec<f32> = picks
+        .iter()
+        .flat_map(|&i| rows[i * dim..(i + 1) * dim].iter().copied())
+        .collect();
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters {
+        for (i, a) in assign.iter_mut().enumerate() {
+            *a = nearest_centroid(metric, &centroids, dim, &rows[i * dim..(i + 1) * dim]);
+        }
+        let mut sums = vec![0.0f64; k * dim];
+        let mut counts = vec![0usize; k];
+        for (i, &c) in assign.iter().enumerate() {
+            counts[c] += 1;
+            for (j, x) in rows[i * dim..(i + 1) * dim].iter().enumerate() {
+                sums[c * dim + j] += *x as f64;
+            }
+        }
+        for c in 0..k {
+            // An empty cell keeps its previous centroid.
+            if counts[c] > 0 {
+                for j in 0..dim {
+                    centroids[c * dim + j] = (sums[c * dim + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    centroids
+}
+
+/// Remove row `slot` from an (ids, row-major rows) pair by swap-remove.
+/// Returns the id that moved into `slot`, if any.
+fn swap_remove_row(
+    ids: &mut Vec<u64>,
+    rows: &mut Vec<f32>,
+    dim: usize,
+    slot: usize,
+) -> Option<u64> {
+    let last = ids.len() - 1;
+    ids.swap(slot, last);
+    ids.pop();
+    if slot != last {
+        let (head, tail) = rows.split_at_mut(last * dim);
+        head[slot * dim..(slot + 1) * dim].copy_from_slice(&tail[..dim]);
+    }
+    rows.truncate(last * dim);
+    if slot != last {
+        Some(ids[slot])
+    } else {
+        None
+    }
 }
 
 impl IvfIndex {
@@ -27,8 +139,11 @@ impl IvfIndex {
             nlist: nlist.max(1),
             nprobe: nprobe.max(1),
             centroids: Vec::new(),
-            lists: Vec::new(),
-            pending: Vec::new(),
+            list_ids: Vec::new(),
+            list_rows: Vec::new(),
+            pending_ids: Vec::new(),
+            pending_rows: Vec::new(),
+            locs: HashMap::new(),
             trained: false,
         }
     }
@@ -37,66 +152,248 @@ impl IvfIndex {
         self.trained
     }
 
-    fn centroid(&self, c: usize) -> &[f32] {
-        &self.centroids[c * self.dim..(c + 1) * self.dim]
+    pub fn metric(&self) -> Metric {
+        self.metric
     }
 
+    /// Number of coarse cells (after training, `min(nlist, n)` at train
+    /// time).
+    pub fn nlist(&self) -> usize {
+        self.nlist
+    }
+
+    /// Trained centroids, row-major `nlist x dim` (empty until trained).
+    pub fn centroids(&self) -> &[f32] {
+        &self.centroids
+    }
+
+    /// Whether `id` has a row (O(1) via the id→(cell, slot) map).
+    pub fn contains(&self, id: u64) -> bool {
+        self.locs.contains_key(&id)
+    }
+
+    /// The `n` cells with the best centroid score for `v`, best first.
     fn nearest_cells(&self, v: &[f32], n: usize) -> Vec<usize> {
         let mut scored: Vec<(usize, f32)> = (0..self.nlist)
-            .map(|c| (c, self.metric.score(v, self.centroid(c))))
+            .map(|c| {
+                (
+                    c,
+                    self.metric
+                        .score(v, &self.centroids[c * self.dim..(c + 1) * self.dim]),
+                )
+            })
             .collect();
         scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         scored.truncate(n);
         scored.into_iter().map(|(c, _)| c).collect()
     }
 
+    /// Insert a vector that is already in stored form (cosine rows
+    /// pre-normalized) — the migration/reconcile path, which must not
+    /// re-normalize rows the flat tier already normalized.
+    pub(crate) fn insert_stored(&mut self, id: u64, v: &[f32]) -> Result<()> {
+        if v.len() != self.dim {
+            bail!("dim mismatch: got {}, want {}", v.len(), self.dim);
+        }
+        if self.trained {
+            let c = nearest_centroid(self.metric, &self.centroids, self.dim, v);
+            let slot = self.list_ids[c].len() as u32;
+            self.list_ids[c].push(id);
+            self.list_rows[c].extend_from_slice(v);
+            self.locs.insert(id, (c as u32, slot));
+        } else {
+            let slot = self.pending_ids.len() as u32;
+            self.pending_ids.push(id);
+            self.pending_rows.extend_from_slice(v);
+            self.locs.insert(id, (PENDING_CELL, slot));
+        }
+        Ok(())
+    }
+
     /// Train the coarse quantizer with Lloyd's k-means (fixed iterations)
     /// over all pending vectors, then assign them to cells.
     pub fn train(&mut self, seed: u64, iters: usize) -> Result<()> {
-        if self.pending.is_empty() {
+        if self.trained {
+            bail!("index is already trained");
+        }
+        if self.pending_ids.is_empty() {
             bail!("no vectors to train on");
         }
-        let n = self.pending.len();
+        let n = self.pending_ids.len();
         let k = self.nlist.min(n);
         self.nlist = k;
         let mut rng = Rng::new(seed);
-        // k-means++ style seeding: random distinct picks.
-        let picks = rng.sample_indices(n, k);
-        self.centroids = picks
-            .iter()
-            .flat_map(|&i| self.pending[i].1.iter().copied())
-            .collect();
-        let mut assign = vec![0usize; n];
-        for _ in 0..iters {
-            for (i, (_, v)) in self.pending.iter().enumerate() {
-                assign[i] = self.nearest_cells(v, 1)[0];
-            }
-            let mut sums = vec![0.0f64; k * self.dim];
-            let mut counts = vec![0usize; k];
-            for (i, (_, v)) in self.pending.iter().enumerate() {
-                let c = assign[i];
-                counts[c] += 1;
-                for (j, x) in v.iter().enumerate() {
-                    sums[c * self.dim + j] += *x as f64;
-                }
-            }
-            for c in 0..k {
-                if counts[c] > 0 {
-                    for j in 0..self.dim {
-                        self.centroids[c * self.dim + j] =
-                            (sums[c * self.dim + j] / counts[c] as f64) as f32;
-                    }
-                }
-            }
-        }
-        self.lists = vec![Vec::new(); k];
-        let pending = std::mem::take(&mut self.pending);
+        self.centroids =
+            kmeans_centroids(&mut rng, self.metric, &self.pending_rows, self.dim, k, iters);
+        self.list_ids = vec![Vec::new(); k];
+        self.list_rows = vec![Vec::new(); k];
+        self.locs.clear();
         self.trained = true;
-        for (id, v) in pending {
-            let c = self.nearest_cells(&v, 1)[0];
-            self.lists[c].push((id, v));
+        let ids = std::mem::take(&mut self.pending_ids);
+        let rows = std::mem::take(&mut self.pending_rows);
+        for (i, id) in ids.into_iter().enumerate() {
+            let row = &rows[i * self.dim..(i + 1) * self.dim];
+            let c = nearest_centroid(self.metric, &self.centroids, self.dim, row);
+            let slot = self.list_ids[c].len() as u32;
+            self.list_ids[c].push(id);
+            self.list_rows[c].extend_from_slice(row);
+            self.locs.insert(id, (c as u32, slot));
         }
         Ok(())
+    }
+
+    /// Validated bulk load of a **trained** index: centroids + slot-ordered
+    /// ids/rows + per-row cell assignments, exactly as
+    /// [`IvfIndex::export_parts`] produced them. Rows are adopted verbatim
+    /// (cosine rows were stored pre-normalized), so a restore never
+    /// re-trains and scores stay bit-identical. Rejects geometry mismatches,
+    /// out-of-range assignments, and duplicate ids.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_trained_parts(
+        dim: usize,
+        metric: Metric,
+        nprobe: usize,
+        centroids: Vec<f32>,
+        ids: Vec<u64>,
+        rows: Vec<f32>,
+        assignments: &[u32],
+    ) -> Result<IvfIndex> {
+        if dim == 0 {
+            bail!("ivf snapshot: dim must be positive");
+        }
+        if centroids.is_empty() || centroids.len() % dim != 0 {
+            bail!(
+                "ivf snapshot: {} centroid floats is not a positive multiple of dim {dim}",
+                centroids.len()
+            );
+        }
+        let nlist = centroids.len() / dim;
+        if rows.len() != ids.len() * dim {
+            bail!(
+                "ivf snapshot: {} row floats for {} ids at dim {dim}",
+                rows.len(),
+                ids.len()
+            );
+        }
+        if assignments.len() != ids.len() {
+            bail!(
+                "ivf snapshot: {} assignments for {} ids",
+                assignments.len(),
+                ids.len()
+            );
+        }
+        let mut idx = IvfIndex {
+            dim,
+            metric,
+            nlist,
+            nprobe: nprobe.max(1),
+            centroids,
+            list_ids: vec![Vec::new(); nlist],
+            list_rows: vec![Vec::new(); nlist],
+            pending_ids: Vec::new(),
+            pending_rows: Vec::new(),
+            locs: HashMap::with_capacity(ids.len()),
+            trained: true,
+        };
+        for (i, (&id, &cell)) in ids.iter().zip(assignments).enumerate() {
+            let c = cell as usize;
+            if c >= nlist {
+                bail!("ivf snapshot: row {i} assigned to cell {c} of {nlist}");
+            }
+            let slot = idx.list_ids[c].len() as u32;
+            idx.list_ids[c].push(id);
+            idx.list_rows[c].extend_from_slice(&rows[i * dim..(i + 1) * dim]);
+            if idx.locs.insert(id, (cell, slot)).is_some() {
+                bail!("ivf snapshot: duplicate id {id}");
+            }
+        }
+        Ok(idx)
+    }
+
+    /// Flatten a trained index for snapshotting: slot-ordered `(ids, rows,
+    /// assignments)` that [`IvfIndex::from_trained_parts`] round-trips.
+    pub fn export_parts(&self) -> (Vec<u64>, Vec<f32>, Vec<u32>) {
+        let n = self.locs.len();
+        let mut ids = Vec::with_capacity(n);
+        let mut rows = Vec::with_capacity(n * self.dim);
+        let mut assignments = Vec::with_capacity(n);
+        if self.trained {
+            for c in 0..self.nlist {
+                ids.extend_from_slice(&self.list_ids[c]);
+                rows.extend_from_slice(&self.list_rows[c]);
+                assignments.extend(std::iter::repeat(c as u32).take(self.list_ids[c].len()));
+            }
+        } else {
+            ids.extend_from_slice(&self.pending_ids);
+            rows.extend_from_slice(&self.pending_rows);
+        }
+        (ids, rows, assignments)
+    }
+
+    /// Visit every `(id, row)` pair (arbitrary but stable order).
+    pub(crate) fn for_each_row(&self, mut f: impl FnMut(u64, &[f32])) {
+        if self.trained {
+            for c in 0..self.nlist {
+                for (i, &id) in self.list_ids[c].iter().enumerate() {
+                    f(id, &self.list_rows[c][i * self.dim..(i + 1) * self.dim]);
+                }
+            }
+        } else {
+            for (i, &id) in self.pending_ids.iter().enumerate() {
+                f(id, &self.pending_rows[i * self.dim..(i + 1) * self.dim]);
+            }
+        }
+    }
+
+    /// Top-k over the `probes` nearest cells (the widening knob the cache's
+    /// over-fetch GET escalates; plain [`VectorIndex::search`] uses
+    /// `self.nprobe`). Untrained indexes scan pending exactly.
+    pub fn search_probes(
+        &self,
+        query: &[f32],
+        k: usize,
+        min_score: f32,
+        probes: usize,
+    ) -> Vec<Hit> {
+        let mut top: Vec<Hit> = Vec::with_capacity(k + 1);
+        if k == 0 {
+            return top;
+        }
+        // Stored cosine rows are unit-normalized: score = dot / |q|.
+        let q_inv = if self.metric == Metric::Cosine {
+            let n = dot(query, query).sqrt();
+            if n == 0.0 {
+                0.0
+            } else {
+                1.0 / n
+            }
+        } else {
+            0.0
+        };
+        let mut scan = |ids: &[u64], rows: &[f32]| {
+            if self.metric == Metric::Cosine {
+                super::scan_cosine_rows(&mut top, query, q_inv, ids, rows, self.dim, k, min_score);
+            } else {
+                super::scan_metric_rows(
+                    &mut top,
+                    self.metric,
+                    query,
+                    ids,
+                    rows,
+                    self.dim,
+                    k,
+                    min_score,
+                );
+            }
+        };
+        if !self.trained {
+            scan(&self.pending_ids, &self.pending_rows);
+            return top;
+        }
+        for c in self.nearest_cells(query, probes.max(1)) {
+            scan(&self.list_ids[c], &self.list_rows[c]);
+        }
+        top
     }
 }
 
@@ -106,7 +403,7 @@ impl VectorIndex for IvfIndex {
     }
 
     fn len(&self) -> usize {
-        self.pending.len() + self.lists.iter().map(|l| l.len()).sum::<usize>()
+        self.locs.len()
     }
 
     fn insert(&mut self, id: u64, vector: &[f32]) -> Result<()> {
@@ -120,69 +417,37 @@ impl VectorIndex for IvfIndex {
             // cell assignment and scores are unchanged.
             normalize_in_place(&mut v);
         }
-        if self.trained {
-            let c = self.nearest_cells(&v, 1)[0];
-            self.lists[c].push((id, v));
-        } else {
-            self.pending.push((id, v));
-        }
-        Ok(())
+        self.insert_stored(id, &v)
     }
 
     fn remove(&mut self, id: u64) -> bool {
-        if let Some(i) = self.pending.iter().position(|(x, _)| *x == id) {
-            self.pending.swap_remove(i);
-            return true;
+        let Some((cell, slot)) = self.locs.remove(&id) else {
+            return false;
+        };
+        let moved = if cell == PENDING_CELL {
+            swap_remove_row(
+                &mut self.pending_ids,
+                &mut self.pending_rows,
+                self.dim,
+                slot as usize,
+            )
+        } else {
+            let c = cell as usize;
+            swap_remove_row(
+                &mut self.list_ids[c],
+                &mut self.list_rows[c],
+                self.dim,
+                slot as usize,
+            )
+        };
+        if let Some(moved_id) = moved {
+            self.locs.insert(moved_id, (cell, slot));
         }
-        for list in &mut self.lists {
-            if let Some(i) = list.iter().position(|(x, _)| *x == id) {
-                list.swap_remove(i);
-                return true;
-            }
-        }
-        false
+        true
     }
 
     fn search(&self, query: &[f32], k: usize, min_score: f32) -> Vec<Hit> {
-        let mut top: Vec<Hit> = Vec::with_capacity(k + 1);
-        // Stored cosine vectors are unit-normalized: score = dot / |q|,
-        // computed without re-deriving the row norm per query.
-        let q_inv = if self.metric == Metric::Cosine {
-            let n = dot(query, query).sqrt();
-            if n == 0.0 {
-                0.0
-            } else {
-                1.0 / n
-            }
-        } else {
-            0.0
-        };
-        let score_of = |v: &[f32]| -> f32 {
-            if self.metric == Metric::Cosine {
-                dot(query, v) * q_inv
-            } else {
-                self.metric.score(query, v)
-            }
-        };
-        if !self.trained {
-            // Fallback: exact scan over pending.
-            for (id, v) in &self.pending {
-                let s = score_of(v);
-                if s >= min_score {
-                    push_topk(&mut top, Hit { id: *id, score: s }, k);
-                }
-            }
-            return top;
-        }
-        for c in self.nearest_cells(query, self.nprobe) {
-            for (id, v) in &self.lists[c] {
-                let s = score_of(v);
-                if s >= min_score {
-                    push_topk(&mut top, Hit { id: *id, score: s }, k);
-                }
-            }
-        }
-        top
+        self.search_probes(query, k, min_score, self.nprobe)
     }
 }
 
@@ -256,6 +521,7 @@ mod tests {
         }
         ivf.train(1, 4).unwrap();
         ivf.insert(9999, &data[0].1.clone()).unwrap();
+        assert!(ivf.contains(9999));
         let hits = ivf.search(&data[0].1, 2, f32::MIN);
         assert!(hits.iter().any(|h| h.id == 9999));
     }
@@ -267,10 +533,131 @@ mod tests {
         for (id, v) in &data {
             ivf.insert(*id, v).unwrap();
         }
+        assert!(ivf.contains(10));
         assert!(ivf.remove(10));
+        assert!(!ivf.contains(10));
         ivf.train(1, 3).unwrap();
         assert!(ivf.remove(20));
         assert!(!ivf.remove(20));
         assert_eq!(ivf.len(), 48);
+        // Every surviving id is still findable after the swap-removes.
+        for (id, _) in &data {
+            if *id != 10 && *id != 20 {
+                assert!(ivf.contains(*id), "id {id} lost by remove fix-up");
+            }
+        }
+    }
+
+    /// Randomized remove/re-insert churn: the id→(cell, slot) map must stay
+    /// consistent with the posting lists (the flat index's equivalent
+    /// property, now required of the IVF tier).
+    #[test]
+    fn churn_keeps_locs_consistent() {
+        let data = clustered_data(13, 300, 8);
+        let mut ivf = IvfIndex::new(8, Metric::L2, 8, 8);
+        for (id, v) in &data {
+            ivf.insert(*id, v).unwrap();
+        }
+        ivf.train(5, 4).unwrap();
+        let mut rng = Rng::new(31);
+        let mut live: Vec<u64> = data.iter().map(|(id, _)| *id).collect();
+        for round in 0..600 {
+            if !live.is_empty() && rng.chance(0.5) {
+                let pick = rng.below(live.len());
+                let id = live.swap_remove(pick);
+                assert!(ivf.remove(id), "round {round}: remove({id})");
+                assert!(!ivf.contains(id));
+            } else {
+                let id = 10_000 + round as u64;
+                let (_, v) = rng.choice(&data);
+                ivf.insert(id, &v.clone()).unwrap();
+                live.push(id);
+            }
+            assert_eq!(ivf.len(), live.len());
+        }
+        // Exhaustive probe finds exactly the live set.
+        let got: std::collections::HashSet<u64> = ivf
+            .search_probes(&data[0].1, live.len(), f32::MIN, ivf.nlist())
+            .iter()
+            .map(|h| h.id)
+            .collect();
+        assert_eq!(got.len(), live.len());
+        for id in &live {
+            assert!(ivf.contains(*id));
+        }
+    }
+
+    /// export_parts → from_trained_parts is lossless: identical hits and
+    /// bit-identical scores, with no retraining.
+    #[test]
+    fn trained_parts_roundtrip_bit_exact() {
+        let data = clustered_data(17, 500, 16);
+        let mut ivf = IvfIndex::new(16, Metric::Cosine, 12, 4);
+        for (id, v) in &data {
+            ivf.insert(*id, v).unwrap();
+        }
+        ivf.train(3, 4).unwrap();
+        let (ids, rows, assignments) = ivf.export_parts();
+        let back = IvfIndex::from_trained_parts(
+            16,
+            Metric::Cosine,
+            ivf.nprobe,
+            ivf.centroids().to_vec(),
+            ids,
+            rows,
+            &assignments,
+        )
+        .unwrap();
+        assert!(back.is_trained());
+        assert_eq!(back.len(), ivf.len());
+        assert_eq!(back.nlist(), ivf.nlist());
+        let mut rng = Rng::new(23);
+        for _ in 0..20 {
+            let (_, q) = rng.choice(&data).clone();
+            let a = ivf.search(&q, 6, f32::MIN);
+            let b = back.search(&q, 6, f32::MIN);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits(), "score drifted");
+            }
+        }
+    }
+
+    #[test]
+    fn from_trained_parts_rejects_bad_geometry() {
+        let centroids = vec![0.0f32; 8]; // 2 cells x dim 4
+        let ids = vec![1u64, 2];
+        let rows = vec![0.5f32; 8];
+        // Valid baseline.
+        assert!(IvfIndex::from_trained_parts(
+            4, Metric::Cosine, 2, centroids.clone(), ids.clone(), rows.clone(), &[0, 1],
+        )
+        .is_ok());
+        // Assignment out of range.
+        assert!(IvfIndex::from_trained_parts(
+            4, Metric::Cosine, 2, centroids.clone(), ids.clone(), rows.clone(), &[0, 2],
+        )
+        .is_err());
+        // Assignment count mismatch.
+        assert!(IvfIndex::from_trained_parts(
+            4, Metric::Cosine, 2, centroids.clone(), ids.clone(), rows.clone(), &[0],
+        )
+        .is_err());
+        // Row floats don't match id count.
+        assert!(IvfIndex::from_trained_parts(
+            4, Metric::Cosine, 2, centroids.clone(), ids.clone(), vec![0.5f32; 7], &[0, 1],
+        )
+        .is_err());
+        // Duplicate id.
+        assert!(IvfIndex::from_trained_parts(
+            4, Metric::Cosine, 2, centroids.clone(), vec![1, 1], rows, &[0, 1],
+        )
+        .is_err());
+        // Centroids not a multiple of dim.
+        assert!(IvfIndex::from_trained_parts(
+            4, Metric::Cosine, 2, vec![0.0f32; 7], ids, vec![0.5f32; 8], &[0, 1],
+        )
+        .is_err());
     }
 }

@@ -2,11 +2,15 @@
 //! extension (§4). Stores fixed-dimension f32 vectors with u64 ids and
 //! answers top-k similarity queries with an optional score threshold.
 //!
-//! Two index implementations behind [`VectorIndex`]:
+//! Three index implementations behind [`VectorIndex`]:
 //! * [`flat::FlatIndex`] — contiguous brute-force scan (exact).
 //! * [`ivf::IvfIndex`] — inverted-file index (k-means coarse quantizer with
-//!   `nprobe` cell search), for the perf pass and the ablation bench.
+//!   `nprobe` cell search): sub-linear scans for large corpora.
+//! * [`adaptive::AdaptiveIndex`] — what the semantic cache actually holds:
+//!   bit-exact flat below a row threshold, a trained IVF above it, with
+//!   off-read-path retraining and an atomic tier swap.
 
+pub mod adaptive;
 pub mod flat;
 pub mod ivf;
 
@@ -121,6 +125,80 @@ pub trait VectorIndex: Send {
     fn remove(&mut self, id: u64) -> bool;
     /// Top-k by score, filtered to score >= min_score.
     fn search(&self, query: &[f32], k: usize, min_score: f32) -> Vec<Hit>;
+}
+
+/// Blocked scan of contiguous row-major storage holding **unit-normalized
+/// cosine rows**: score = dot(q, row) * q_inv. Shared by the flat scan and
+/// the IVF posting-list scan so both tiers run the identical dot4 kernel.
+/// Scores are bit-stable for a fixed storage layout; a row's last-ulp
+/// rounding can differ across layouts (dot4-block membership depends on
+/// the slot), which is why cross-layout comparisons use a tolerance.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scan_cosine_rows(
+    top: &mut Vec<Hit>,
+    query: &[f32],
+    q_inv: f32,
+    ids: &[u64],
+    rows: &[f32],
+    dim: usize,
+    k: usize,
+    min_score: f32,
+) {
+    let n = ids.len();
+    debug_assert_eq!(rows.len(), n * dim);
+    let blocks = n / 4;
+    for b in 0..blocks {
+        let i = b * 4;
+        let base = i * dim;
+        let scores = dot4(query, &rows[base..base + 4 * dim], dim);
+        for (j, raw) in scores.iter().enumerate() {
+            let s = raw * q_inv;
+            if s >= min_score {
+                push_topk(
+                    top,
+                    Hit {
+                        id: ids[i + j],
+                        score: s,
+                    },
+                    k,
+                );
+            }
+        }
+    }
+    for i in blocks * 4..n {
+        let s = dot(query, &rows[i * dim..(i + 1) * dim]) * q_inv;
+        if s >= min_score {
+            push_topk(
+                top,
+                Hit {
+                    id: ids[i],
+                    score: s,
+                },
+                k,
+            );
+        }
+    }
+}
+
+/// Row-by-row metric scan of contiguous row-major storage (the non-cosine
+/// path; cosine callers use [`scan_cosine_rows`] over pre-normalized rows).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn scan_metric_rows(
+    top: &mut Vec<Hit>,
+    metric: Metric,
+    query: &[f32],
+    ids: &[u64],
+    rows: &[f32],
+    dim: usize,
+    k: usize,
+    min_score: f32,
+) {
+    for (i, &id) in ids.iter().enumerate() {
+        let s = metric.score(query, &rows[i * dim..(i + 1) * dim]);
+        if s >= min_score {
+            push_topk(top, Hit { id, score: s }, k);
+        }
+    }
 }
 
 /// Maintain a bounded top-k set (small k: insertion into a sorted vec).

@@ -510,3 +510,106 @@ fn no_data_dir_means_no_persistence_machinery() {
         Some("resp")
     );
 }
+
+// ---------------------------------------------------------------------
+// Adaptive index tier (PR 4): a cache that migrated to the IVF tier
+// snapshots its trained state (LBV3) and a kill-and-restore round-trip
+// boots already trained — no k-means on the boot path — serving
+// bit-identical raw hits. WAL-tail replay then lands in the restored
+// IVF tier's cells.
+// ---------------------------------------------------------------------
+
+#[test]
+fn migrated_cache_restores_without_retraining() {
+    use llmbridge::cache::{CacheObject, SemanticCache};
+    use llmbridge::vecdb::adaptive::AdaptiveConfig;
+
+    let dim = 16;
+    let mut r = Rng::new(0xADA7);
+    let centers: Vec<Vec<f32>> = (0..12)
+        .map(|_| (0..dim).map(|_| r.normal() as f32 * 6.0).collect())
+        .collect();
+    let clustered = |r: &mut Rng| -> Vec<f32> {
+        let c = r.choice(&centers).clone();
+        c.iter().map(|x| x + r.normal() as f32 * 0.3).collect()
+    };
+    // Low threshold so 2400 typed keys are enough to migrate; everything
+    // else is the production policy.
+    let cfg = AdaptiveConfig {
+        migrate_threshold: 1500,
+        train_sample: 2048,
+        kmeans_iters: 3,
+        ..AdaptiveConfig::default()
+    };
+    let cache = SemanticCache::with_index_config(dim, cfg);
+    // Populate via the WAL-replay path (synthetic embeddings, engine-free).
+    for i in 0..1200u64 {
+        let base = i * 3 + 1;
+        let keys = vec![
+            (base + 1, CachedType::Prompt, clustered(&mut r)),
+            (base + 2, CachedType::Response, clustered(&mut r)),
+        ];
+        cache
+            .apply_logged_put(
+                CacheObject {
+                    id: base,
+                    text: format!("text {i}"),
+                    origin: format!("origin {i}"),
+                    is_document: false,
+                },
+                &keys,
+            )
+            .unwrap();
+    }
+    assert_eq!(cache.index_stats().tier, "flat");
+    assert!(cache.maybe_rebuild_index(), "past the threshold: migrates");
+    assert!(!cache.maybe_rebuild_index(), "no churn: second call is a no-op");
+    let stats = cache.index_stats();
+    assert_eq!(stats.tier, "ivf");
+    assert!(stats.trained);
+    assert_eq!(stats.rows, 2400);
+
+    // Kill-and-restore through the snapshot (vecdb.bin is LBV3 now).
+    let dir = fresh_dir("adaptive_snap");
+    cache.snapshot_into(&dir).unwrap();
+    let restored = SemanticCache::restore_from_dir(&dir, dim).unwrap();
+    // Boots already trained, same geometry — the restore path has no
+    // k-means to run, so identical stats prove no retraining happened.
+    assert_eq!(restored.index_stats(), stats);
+    assert!(
+        !restored.maybe_rebuild_index(),
+        "freshly restored tier is not drift-due"
+    );
+
+    // Raw probes are bit-identical: LBV3 restores the exact posting-list
+    // layout, so scores round identically.
+    for _ in 0..20 {
+        let q: Vec<f32> = (0..dim).map(|_| r.normal() as f32).collect();
+        let a = cache.search_raw(&q, 6, f32::MIN);
+        let b = restored.search_raw(&q, 6, f32::MIN);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
+    }
+
+    // A WAL-tail op replayed on top of the restored snapshot inserts into
+    // the live IVF tier (nearest trained cell) and is immediately
+    // retrievable at base effort.
+    let tail_vec = clustered(&mut r);
+    restored
+        .apply_logged_put(
+            CacheObject {
+                id: 9001,
+                text: "wal tail".into(),
+                origin: "tail".into(),
+                is_document: false,
+            },
+            &[(9002, CachedType::Prompt, tail_vec.clone())],
+        )
+        .unwrap();
+    assert_eq!(restored.index_stats().rows, 2401);
+    let hits = restored.search_raw(&tail_vec, 1, f32::MIN);
+    assert_eq!(hits[0].id, 9002, "replayed row lands in a probed cell");
+}

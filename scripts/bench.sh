@@ -4,17 +4,43 @@
 # repo root so successive PRs have a comparable baseline.
 #
 # The hotpath bench includes the persist micro-benches
-# (persist/wal_append_interaction, persist/cold_restore_20k) so WAL
-# append throughput and cold-restore time ride the same trajectory file.
+# (persist/wal_append_interaction, persist/cold_restore_20k) and the
+# adaptive vector-index benches (vecdb/adaptive_top4_100k, migration +
+# retrain cost, recall@4) so WAL throughput, cold-restore time, and the
+# ANN tier all ride the same trajectory file.
 #
-# Usage: scripts/bench.sh [--fast]
-#   --fast   shrink iteration counts (LLMBRIDGE_BENCH_FAST=1) for CI.
+# Usage: scripts/bench.sh [--fast|--smoke]
+#   --fast    shrink iteration counts (LLMBRIDGE_BENCH_FAST=1).
+#   --smoke   CI smoke: reduced corpus sizes + a single iteration per
+#             bench (LLMBRIDGE_BENCH_SMOKE=1). Proves the harness runs
+#             end-to-end and emits populated JSON; not a perf claim.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 
-if [[ "${1:-}" == "--fast" ]]; then
-  export LLMBRIDGE_BENCH_FAST=1
+case "${1:-}" in
+  --fast)
+    export LLMBRIDGE_BENCH_FAST=1
+    ;;
+  --smoke)
+    export LLMBRIDGE_BENCH_SMOKE=1
+    export LLMBRIDGE_BENCH_FAST=1
+    ;;
+  "")
+    ;;
+  *)
+    echo "bench.sh: unknown flag '$1' (expected --fast or --smoke)" >&2
+    exit 2
+    ;;
+esac
+
+# Fail loudly when the toolchain is absent: a silent exit here would leave
+# stale BENCH_*.json at the repo root masquerading as fresh numbers.
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "bench.sh: cargo not found on PATH — install the pinned toolchain" \
+       "(see rust-toolchain.toml) before running benches; BENCH_*.json" \
+       "left untouched" >&2
+  exit 1
 fi
 
 # The cargo workspace may sit at the repo root or under rust/.

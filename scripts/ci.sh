@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# The tier-1 CI gate, runnable locally: exactly the steps
+# .github/workflows/ci.yml runs, in the same order, so local runs and CI
+# cannot drift. Green here == green in the `gate` job.
+#
+# Usage: scripts/ci.sh
+#
+# Steps: cargo build --release && cargo test -q  (the ROADMAP tier-1
+# verify), then cargo fmt --check and cargo clippy -D warnings.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "ci.sh: cargo not found on PATH — install rustup and the pinned" \
+       "toolchain (rust-toolchain.toml pins it; 'rustup show' in the repo" \
+       "fetches it automatically)" >&2
+  exit 1
+fi
+
+# The cargo workspace may sit at the repo root or under rust/.
+if [[ -f "$ROOT/Cargo.toml" ]]; then
+  WORKSPACE="$ROOT"
+elif [[ -f "$ROOT/rust/Cargo.toml" ]]; then
+  WORKSPACE="$ROOT/rust"
+else
+  echo "ci.sh: no Cargo.toml at $ROOT or $ROOT/rust — set up the workspace first" >&2
+  exit 1
+fi
+cd "$WORKSPACE"
+
+echo "==> tier-1: cargo build --release"
+cargo build --release
+
+echo "==> tier-1: cargo test -q"
+cargo test -q
+
+echo "==> cargo fmt --check"
+cargo fmt --all -- --check
+
+echo "==> cargo clippy -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "ci.sh: all gates green"
