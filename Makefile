@@ -1,0 +1,12 @@
+# Build-time targets. The rust crate's default build needs none of this —
+# `make artifacts` AOT-compiles the JAX/Pallas model pool (L2/L1) into
+# artifacts/ for the `--features pjrt` serving path (see README.md
+# §PJRT backend). Requires python3 + jax.
+
+.PHONY: artifacts clean-artifacts
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+clean-artifacts:
+	rm -rf artifacts

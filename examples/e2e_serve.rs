@@ -9,9 +9,12 @@
 //! cost accounting in one run.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example e2e_serve -- \
+//! cargo run --release --example e2e_serve -- \
 //!     [--users 8] [--turns 6] [--workers 4]
 //! ```
+//!
+//! The default build serves from the deterministic backend; under
+//! `--features pjrt` run `make artifacts` first to AOT-compile the pool.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;

@@ -2,8 +2,11 @@
 //! inspect the transparency metadata, and regenerate for a better answer.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! The default build serves from the deterministic backend (no artifacts
+//! needed); under `--features pjrt` run `make artifacts` first.
 
 use llmbridge::api::{Request, ServiceType};
 use llmbridge::coordinator::Bridge;

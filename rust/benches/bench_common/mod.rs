@@ -4,11 +4,13 @@ use std::sync::Arc;
 
 use llmbridge::coordinator::{Bridge, BridgeConfig};
 use llmbridge::models::pricing::Generation;
-use llmbridge::runtime::{EngineHandle, Registry};
+use llmbridge::runtime::EngineHandle;
 
 pub fn engine() -> EngineHandle {
+    // Deterministic backend on the default build; PJRT over the AOT
+    // artifacts under `--features pjrt` (then run `make artifacts` first).
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    EngineHandle::spawn(Registry::load(dir).expect("run `make artifacts`")).unwrap()
+    EngineHandle::spawn_from_dir(dir).expect("bring up serving backend")
 }
 
 pub fn bridge(generation: Generation) -> Arc<Bridge> {

@@ -231,7 +231,7 @@ fn main() {
         black_box(back.len_keys());
     }));
 
-    // --- PJRT engine: per-execute latency by variant ----------------------
+    // --- engine: per-execute latency by variant (serving backend) ---------
     let engine = bench_common::engine();
     let (tokens, live) = tokenizer::window(text, engine.seq_len());
     for variant in ["nano", "mini", "large"] {

@@ -238,10 +238,10 @@ fn table3() {
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let registry =
-        llmbridge::runtime::Registry::load(args.get_or("artifacts", "artifacts"))?;
     let cx = Ctx {
-        engine: llmbridge::runtime::EngineHandle::spawn(registry)?,
+        engine: llmbridge::runtime::EngineHandle::spawn_from_dir(
+            args.get_or("artifacts", "artifacts"),
+        )?,
         seed: args.u64_or("seed", exp::DEFAULT_SEED),
         limit: args.get("queries").and_then(|q| q.parse().ok()),
     };

@@ -30,7 +30,7 @@
 //!   layout, not the journaled content, so it can run concurrently with
 //!   WAL appends and needs no WAL record of its own.
 //! * The `keys`, `objects`, and `exact` maps are split into
-//!   [`SHARD_COUNT`] hash shards, each behind its own `RwLock`. Lookups
+//!   `SHARD_COUNT` hash shards, each behind its own `RwLock`. Lookups
 //!   take the touched shard's read lock; PUTs write-lock only the shard
 //!   the id/key hashes to.
 //! * Lock order is always **journal gate → index → keys → objects →

@@ -27,7 +27,7 @@ use crate::persist::snapshot::{CaptureCounts, ExchangeRow, QuotaRow};
 use crate::persist::wal::WalOp;
 use crate::persist::Persistence;
 use crate::router;
-use crate::runtime::{EngineHandle, Registry};
+use crate::runtime::EngineHandle;
 use crate::telemetry::Telemetry;
 use crate::util::json::Json;
 use crate::workload::classroom::Quota;
@@ -129,14 +129,16 @@ pub struct Bridge {
 }
 
 impl Bridge {
-    /// Load artifacts from `dir` and bring up the proxy.
+    /// Bring up the proxy over the build's serving backend: the PJRT
+    /// engine loading artifacts from `dir` under `--features pjrt`, the
+    /// deterministic pure-Rust backend otherwise (`dir` is then not
+    /// consulted — see [`EngineHandle::spawn_from_dir`]).
     pub fn open(dir: impl AsRef<Path>) -> Result<Bridge> {
         Bridge::open_with(dir, BridgeConfig::default())
     }
 
     pub fn open_with(dir: impl AsRef<Path>, config: BridgeConfig) -> Result<Bridge> {
-        let registry = Registry::load(dir)?;
-        let engine = EngineHandle::spawn(registry)?;
+        let engine = EngineHandle::spawn_from_dir(dir)?;
         Bridge::from_engine(engine, config)
     }
 

@@ -122,7 +122,7 @@ impl KvStore {
     }
 
     /// Order-independent content checksum: XOR of per-entry hashes, each
-    /// binding key to value (see [`KvStore::entry_hash`]). Recorded in the
+    /// binding key to value (see `KvStore::entry_hash`). Recorded in the
     /// snapshot MANIFEST by [`KvStore::snapshot`] and cross-checked against
     /// the restored store on boot.
     pub fn checksum(&self) -> u64 {

@@ -38,13 +38,19 @@
 //!                       workload generators
 //!  L2  python/compile/  JAX transformer pool + embedder (build time)
 //!  L1  python/.../kernels  Pallas attention + matmul (build time)
-//!  RT  [`runtime`]      PJRT CPU client executing artifacts/*.hlo.txt
+//!  RT  [`runtime`]      pluggable inference backend behind one engine
+//!                       thread: pure-Rust deterministic (default) or the
+//!                       PJRT client executing artifacts/*.hlo.txt
+//!                       (`--features pjrt`)
 //! ```
 //!
-//! The "LLMs" are AOT-compiled JAX/Pallas transformer artifacts executed via
-//! PJRT on the request path; response *quality* is simulated by a calibrated
-//! latent model ([`models::quality`]) because tiny random-weight LMs have no
-//! meaningful quality ordering — see DESIGN.md §Substitutions.
+//! The "LLMs" are either the default build's deterministic pure-Rust
+//! stand-ins or, under `--features pjrt`, AOT-compiled JAX/Pallas
+//! transformer artifacts executed via PJRT — same geometry, same
+//! tokenizer, same engine-thread RPC (see [`runtime::backend`]). Response
+//! *quality* is simulated by a calibrated latent model
+//! ([`models::quality`]) in both cases, because tiny random-weight LMs
+//! have no meaningful quality ordering — see DESIGN.md §Substitutions.
 
 pub mod adapter;
 pub mod api;

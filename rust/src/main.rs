@@ -7,7 +7,12 @@
 //! llmbridge ask     --prompt "..." [--service TYPE] [--user u] [--artifacts DIR]
 //! llmbridge warm    [--artifacts DIR]        # load corpus into the cache
 //! llmbridge models                            # print the model pool
+//! llmbridge probe-backend [--text "..."]      # backend fingerprint (determinism probe)
 //! ```
+//!
+//! The default build serves from the deterministic pure-Rust backend (no
+//! artifacts needed); `--features pjrt` serves the AOT artifacts under
+//! `--artifacts DIR` via PJRT. See README.md for the build matrix.
 
 use std::sync::Arc;
 
@@ -123,6 +128,34 @@ fn main() -> Result<()> {
             let n = warm_cache(&bridge)?;
             println!("cached {n} chunks from {} articles", corpus::full_corpus().len());
         }
+        "probe-backend" => {
+            // Print a bit-exact fingerprint of the serving backend's
+            // outputs (f32 bit patterns, not decimal renderings).
+            // `tests/backend_determinism.rs` runs this twice in separate
+            // processes and diffs the output — the cross-process
+            // determinism contract of the default backend.
+            use llmbridge::runtime::{tokenizer, EngineHandle};
+            use llmbridge::util::fnv1a;
+            let engine = EngineHandle::spawn_from_dir(args.get_or("artifacts", "artifacts"))?;
+            let text = args.get_or("text", "backend determinism probe");
+            println!("backend {}", engine.backend_name());
+            let bits: Vec<String> = engine
+                .embed_text(text)?
+                .iter()
+                .map(|v| format!("{:08x}", v.to_bits()))
+                .collect();
+            println!("embed {}", bits.join(""));
+            let (tokens, live) = tokenizer::window(text, engine.seq_len());
+            for variant in ["nano", "mini", "large"] {
+                let logits = engine.lm_logits(variant, tokens.clone(), live)?;
+                let mut bytes = Vec::with_capacity(logits.len() * 4);
+                for v in &logits {
+                    bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+                println!("logits {variant} {:016x}", fnv1a(&bytes));
+            }
+            engine.shutdown();
+        }
         "models" => {
             let rows: Vec<Json> = POOL
                 .iter()
@@ -141,7 +174,7 @@ fn main() -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: llmbridge <serve|ask|warm|models> [--artifacts DIR] \
+                "usage: llmbridge <serve|ask|warm|models|probe-backend> [--artifacts DIR] \
                  [--service TYPE] [--prompt TEXT] [--bind ADDR] [--workers N] \
                  [--generation old|new] [--prefetch] [--warm] \
                  [--data-dir DIR] [--compact-wal-bytes N]"

@@ -5,7 +5,8 @@
 //! Cost accounting matches the paper's billing model: input tokens are
 //! counted *pre-truncation* (the artifact window is a sliding context
 //! window; see DESIGN.md §Substitutions), output tokens are the tokens
-//! actually generated, and USD cost comes from the [`pricing`] table.
+//! actually generated, and USD cost comes from the
+//! [`pricing`](crate::models::pricing) table.
 //!
 //! A memo table caches completions by (model, input) hash: generation is
 //! deterministic per (model, input), so replays — the §5.3 benchmarks

@@ -19,9 +19,38 @@
 //!
 //! Compaction writes the next generation into `snap-tmp`, renames it to
 //! `snap-(N+1)`, creates `wal-(N+1).log`, and only then swaps `CURRENT`
-//! (write-temp + rename). A crash anywhere before the swap leaves
-//! generation `N` fully intact; stale `snap-tmp` / next-generation
-//! leftovers are clobbered by the next attempt.
+//! (write-temp + rename, with directory fsyncs around the commit). A
+//! crash anywhere before the swap leaves generation `N` fully intact;
+//! stale `snap-tmp` / next-generation leftovers are clobbered by the next
+//! attempt and GC'd at boot.
+//!
+//! ## vecdb.bin: LBV2 vs LBV3
+//!
+//! The vector file is written by the adaptive index's `save`:
+//!
+//! * **LBV2** (flat tier): `"LBV2" [dim u32][metric u8][count u64]
+//!   [ids: count×u64][rows: count×dim×f32]` — bulk pre-normalized rows;
+//!   load rebuilds the index without re-inserting row by row.
+//! * **LBV3** (IVF tier): LBV2's geometry plus the trained section (cell
+//!   assignments + centroids) and an FNV-1a payload checksum, so a
+//!   migrated cache restores **without re-running k-means**. See
+//!   [`crate::vecdb::adaptive`] for the exact layout.
+//!
+//! Either version loads: an LBV2 file from an older generation boots as
+//! the flat tier and re-migrates through normal maintenance.
+//!
+//! ## Capture consistency and restore validation
+//!
+//! The capture runs with the persist layer's gate held exclusively (all
+//! journaled mutators hold it shared — lock order is documented in
+//! `cache/mod.rs`), so `MANIFEST.json`'s counts and checksums describe
+//! exactly the rows the files captured. Restore validates field by field
+//! and goes through the cache's validated bulk load, which rebuilds the
+//! id→slot map and shard placement and rejects dangling keys, orphan
+//! vectors, duplicate ids, and a stale id allocator — any mismatch is
+//! [`BridgeError::Persist`] (HTTP 500), never a silent partial boot. A
+//! `LOCK` file (owner pid + /proc starttime, so pids recycled after a
+//! reboot are reclaimed) refuses to share one data dir across processes.
 
 use std::io::Write;
 use std::path::{Path, PathBuf};

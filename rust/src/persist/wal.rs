@@ -1,10 +1,30 @@
 //! Binary write-ahead log: length-prefixed, checksummed records.
 //!
-//! File layout: an 8-byte magic (`LBWAL001`) followed by records of the
-//! form `[payload_len: u32 LE][crc: u64 LE][payload]`, where `crc` is the
-//! FNV-1a hash of the payload. Each [`WalOp`] payload is a tagged binary
-//! encoding (no JSON on the append path — a PUT carries its embedding
-//! vectors, so records are written raw and bulk).
+//! ## File format
+//!
+//! ```text
+//! offset 0            "LBWAL001"                      8-byte magic + version
+//! then, per record:   [payload_len: u32 LE]
+//!                     [crc:         u64 LE]           FNV-1a over the payload
+//!                     [payload:     payload_len bytes]
+//! ```
+//!
+//! A declared `payload_len` above [`MAX_RECORD`] is treated as corruption,
+//! not a big record. Each [`WalOp`] payload is a tagged binary encoding
+//! (no JSON on the append path — a PUT carries its raw embedding vectors,
+//! so records are written raw and bulk). The logged operations:
+//!
+//! * **exact-cache put** ([`WalOp::PutExact`]) — prompt + response.
+//! * **semantic put** ([`WalOp::PutObject`]) — the cache object **plus
+//!   each typed key's id and raw embedding**, so restore never touches
+//!   the engine (no re-embedding — restarts never re-pay the inference
+//!   the cache exists to avoid).
+//! * **clear** ([`WalOp::Clear`]).
+//! * **quota** ([`WalOp::Quota`]) — *absolute* per-user state, appended
+//!   under the quota lock so WAL order = state order; replay is
+//!   last-record-wins.
+//! * **exchange** ([`WalOp::Exchange`]) — a served request in its REST
+//!   JSON form, so `regenerate` works across restarts.
 //!
 //! ## Recovery semantics
 //!
@@ -23,7 +43,10 @@
 //! Appends are a single `write_all` of the whole record under one mutex,
 //! so a crash can tear at most the final record. Bytes reach the OS page
 //! cache on every append (durable across process crashes); `fsync` is
-//! paid only at WAL creation and snapshot compaction, not per append.
+//! paid only at WAL creation and snapshot compaction, not per append —
+//! the cache/quota/exchange state is therefore durable *to the last
+//! append* across process crashes, and to the last compaction across
+//! power loss.
 //!
 //! WAL records are **tier-agnostic**: a replayed PUT re-inserts its logged
 //! embeddings into whichever vector-index tier the restored snapshot is on

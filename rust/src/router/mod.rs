@@ -241,6 +241,33 @@ const EXACT_ONLY: CachePlan = CachePlan {
 /// Lower a service type to its policy. This is the single place a service
 /// type's semantics are defined; the coordinator stages execute the
 /// policy blindly.
+///
+/// # Adding a service type
+///
+/// Three steps — the coordinator, server, and pipeline stages need no
+/// changes, because stages never inspect [`ServiceType`]:
+///
+/// 1. **Declare it**: add a variant to [`ServiceType`](crate::api::ServiceType)
+///    and wire its JSON name/params into `ServiceType::from_json`/`to_json`
+///    (the REST representation is `{"name": ..., params...}`).
+/// 2. **Lower it**: add one match arm here picking a [`CachePlan`], a
+///    context [`Filter`], and a [`RoutingPolicy`] — reuse an existing
+///    policy or add a new scored variant (a deterministic argmin/argmax
+///    over [`POOL`](crate::models::pricing::POOL) columns), and set
+///    `quota` if the per-user gate should apply.
+/// 3. **Optionally escalate it**: add an arm to [`escalate`] if
+///    regeneration should nudge the type toward quality (§3.2); the
+///    default keeps the same type.
+///
+/// Worked example — `ServiceType::Budget` ("best model under $X/Mtok
+/// input", added as the policy-extension proof in PR 2): step 1 added the
+/// variant with a `max_usd_per_mtok_in` param; step 2 is the
+/// `ServiceType::Budget` arm below lowering to
+/// [`RoutingPolicy::BudgetCap`] (which rejects an impossible ceiling with
+/// a typed [`RouteError::NoModelUnderBudget`] rather than silently
+/// overspending — a cost-control policy must never overspend); step 3
+/// regenerates as `Quality`, dropping the ceiling. The parity table in
+/// `rust/tests/router_policies.rs` locks each type's lowering + picks.
 pub fn lower(st: &ServiceType, generation: Generation, regen_count: u32) -> ServicePolicy {
     match st {
         ServiceType::Fixed {

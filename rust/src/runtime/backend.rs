@@ -1,0 +1,374 @@
+//! Pluggable inference backends — the seam that lets the default build run
+//! with zero native dependencies.
+//!
+//! [`EmbedBackend`] is the capability the engine thread actually needs:
+//! next-token logits per model-pool variant, plus text embeddings over the
+//! shared word-hash [`tokenizer`] window. Two implementations exist:
+//!
+//! * [`DeterministicBackend`] (always compiled; what the default build
+//!   serves from): a pure-Rust stand-in with the same geometry as the AOT
+//!   artifacts — seq_len 128, embed dim 64, vocab 4096, and the
+//!   `nano`/`mini`/`large` variant ladder of `python/compile/model.py`.
+//!   Embeddings are a seeded ±1 projection summed over the window's word
+//!   ids and unit-normalized (so lexically overlapping texts score high
+//!   cosine, like the artifact embedder trained on the same tokenizer).
+//!   Logits hash the *live* token prefix per variant and fold a resident
+//!   synthetic weight buffer sized like the variant's parameter count, so
+//!   bigger variants cost proportionally more wall-clock per step — the
+//!   latency ordering the routing policies and benches rely on. Every
+//!   value derives from fixed seeds over slices: no map iteration order,
+//!   no addresses, no clock — outputs are bit-identical across calls,
+//!   threads, and processes (`tests/backend_determinism.rs` pins this
+//!   with a cross-process probe).
+//! * `Engine` (`--features pjrt`): the PJRT/XLA path executing the real
+//!   AOT-compiled artifacts from the registry manifest; see
+//!   [`super::engine`].
+//!
+//! The handle/RPC layer ([`super::engine::EngineHandle`]) is
+//! backend-agnostic: wave batching, single-flight embed coalescing, and
+//! reply ordering are identical under either implementation.
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::tokenizer;
+use crate::util::rng::split_mix as mix;
+use crate::util::seed_of;
+
+/// What the engine thread requires of an inference backend. Implementors
+/// are constructed *on* the engine thread (see
+/// [`super::engine::EngineHandle::spawn_backend`]), so they need not be
+/// `Send` — the PJRT types are not.
+pub trait EmbedBackend {
+    /// Short identifier for telemetry and diagnostics (`"deterministic"`,
+    /// `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Token-window length every `lm_logits`/`embed_tokens` call must use.
+    fn seq_len(&self) -> usize;
+
+    /// Embedding dimensionality.
+    fn embed_dim(&self) -> usize;
+
+    /// Next-token logits (vocab-sized) for `tokens[..length]` under the
+    /// named model-pool `variant`.
+    fn lm_logits(&self, variant: &str, tokens: &[i32], length: i32) -> Result<Vec<f32>>;
+
+    /// Text embedding for the window `tokens[..length]`.
+    fn embed_tokens(&self, tokens: &[i32], length: i32) -> Result<Vec<f32>>;
+}
+
+/// Geometry of one deterministic LM variant.
+#[derive(Clone, Copy, Debug)]
+pub struct VariantSpec {
+    pub name: &'static str,
+    pub d_model: usize,
+    pub layers: usize,
+}
+
+impl VariantSpec {
+    /// Size of the synthetic resident weight buffer: a tied token
+    /// embedding/unembedding (`vocab × d_model`) plus ~12·d² per block —
+    /// the same scaling law as the real artifacts, so per-step cost
+    /// ordering (`nano` < `mini` < `large`) matches the hardware path.
+    pub fn param_count(&self) -> usize {
+        let vocab = tokenizer::VOCAB as usize;
+        vocab * self.d_model + 12 * self.layers * self.d_model * self.d_model
+    }
+}
+
+/// The built-in pool ladder — mirrors `VARIANTS` in
+/// `python/compile/model.py` (and the artifact manifest the PJRT path
+/// loads), so routing tables that name artifacts work under both backends.
+pub const BUILTIN_VARIANTS: &[VariantSpec] = &[
+    VariantSpec {
+        name: "nano",
+        d_model: 64,
+        layers: 2,
+    },
+    VariantSpec {
+        name: "mini",
+        d_model: 96,
+        layers: 3,
+    },
+    VariantSpec {
+        name: "large",
+        d_model: 128,
+        layers: 4,
+    },
+];
+
+/// Window length of the built-in pool (mirrors the AOT artifacts).
+pub const BUILTIN_SEQ_LEN: usize = 128;
+
+/// Embedding dimensionality of the built-in pool (mirrors the artifacts'
+/// embedder).
+pub const BUILTIN_EMBED_DIM: usize = 64;
+
+// All backend pseudo-randomness flows through `mix` — one stateless
+// SplitMix64 step ([`crate::util::rng::split_mix`]) keyed on fixed seeds.
+
+/// Map a hash to an f32 in [-0.5, 0.5) using 24 high bits (exact in f32).
+fn unit_f32(h: u64) -> f32 {
+    ((h >> 40) as f32) / (1u64 << 24) as f32 - 0.5
+}
+
+struct DeterministicLm {
+    name: &'static str,
+    d_model: usize,
+    /// Seeded synthetic weights, materialized once at spawn (like the real
+    /// engine's device-resident theta); every `lm_logits` call folds the
+    /// whole buffer once, so call cost scales with parameter count.
+    weights: Vec<f32>,
+}
+
+/// Pure-Rust deterministic backend — the default build's serving path.
+pub struct DeterministicBackend {
+    seq_len: usize,
+    embed_dim: usize,
+    variants: Vec<DeterministicLm>,
+}
+
+impl DeterministicBackend {
+    pub fn new(seq_len: usize, embed_dim: usize, variants: &[VariantSpec]) -> DeterministicBackend {
+        let variants = variants
+            .iter()
+            .map(|spec| {
+                let mut h = seed_of(&["det-weights", spec.name]);
+                let weights = (0..spec.param_count())
+                    .map(|_| {
+                        h = mix(h);
+                        unit_f32(h)
+                    })
+                    .collect();
+                DeterministicLm {
+                    name: spec.name,
+                    d_model: spec.d_model,
+                    weights,
+                }
+            })
+            .collect();
+        DeterministicBackend {
+            seq_len,
+            embed_dim,
+            variants,
+        }
+    }
+
+    /// The standard pool: same variants, window, and embedding dim as the
+    /// AOT artifact set.
+    pub fn builtin_pool() -> DeterministicBackend {
+        DeterministicBackend::new(BUILTIN_SEQ_LEN, BUILTIN_EMBED_DIM, BUILTIN_VARIANTS)
+    }
+
+    /// Validate and slice the live prefix of a window.
+    fn live_prefix<'a>(&self, tokens: &'a [i32], length: i32) -> Result<&'a [i32]> {
+        ensure!(
+            tokens.len() == self.seq_len,
+            "token window is {} but backend expects {}",
+            tokens.len(),
+            self.seq_len
+        );
+        ensure!(
+            length >= 0 && (length as usize) <= tokens.len(),
+            "live length {length} outside the {}-token window",
+            tokens.len()
+        );
+        Ok(&tokens[..length as usize])
+    }
+}
+
+impl EmbedBackend for DeterministicBackend {
+    fn name(&self) -> &'static str {
+        "deterministic"
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn embed_dim(&self) -> usize {
+        self.embed_dim
+    }
+
+    fn lm_logits(&self, variant: &str, tokens: &[i32], length: i32) -> Result<Vec<f32>> {
+        let lm = self
+            .variants
+            .iter()
+            .find(|v| v.name == variant)
+            .ok_or_else(|| anyhow!("unknown variant '{variant}'"))?;
+        let live = self.live_prefix(tokens, length)?;
+
+        // Content signature over the live prefix only — tokens beyond
+        // `length` can never influence logits (mask correctness), and the
+        // signature is position-sensitive so "a b" and "b a" diverge.
+        let mut sig = seed_of(&["det-lm", variant]);
+        for (pos, &t) in live.iter().enumerate() {
+            sig = mix(sig ^ (t as u32 as u64) ^ ((pos as u64) << 32));
+        }
+
+        // The "forward pass": one full fold of the resident weights into a
+        // d_model-wide state with signature-dependent signs. This is where
+        // the wall-clock goes — cost tracks parameter count, preserving
+        // the artifact FLOP ordering (nano < mini < large) that
+        // `larger_model_slower` and the routing benches rely on.
+        let d = lm.d_model;
+        let mut state = vec![0.0f32; d];
+        let lane = mix(sig);
+        for (i, &w) in lm.weights.iter().enumerate() {
+            let flip = lane.rotate_right((i & 63) as u32) & 1;
+            state[i % d] += if flip == 1 { -w } else { w };
+        }
+
+        // Unembedding: per-token-id hash of the signature, nudged by the
+        // state so the weight pass is load-bearing (never optimized out).
+        let vocab = tokenizer::VOCAB as usize;
+        let mut logits = Vec::with_capacity(vocab);
+        let mut h = mix(sig);
+        for v in 0..vocab {
+            h = mix(h ^ (v as u64));
+            logits.push(unit_f32(h) * 8.0 + state[v % d] * 1e-3);
+        }
+        Ok(logits)
+    }
+
+    fn embed_tokens(&self, tokens: &[i32], length: i32) -> Result<Vec<f32>> {
+        let live = self.live_prefix(tokens, length)?;
+        // Bag of seeded ±1 word vectors: each word id contributes a fixed
+        // pseudo-random sign pattern, so texts sharing words land close in
+        // cosine and unrelated texts decorrelate (≈ N(0, 1/√dim) noise).
+        let base = seed_of(&["det-embed"]);
+        let mut acc = vec![0.0f32; self.embed_dim];
+        for &t in live {
+            if t < tokenizer::FIRST_WORD_ID as i32 {
+                continue; // specials (BOS/EOS/PAD/UNK) carry no content
+            }
+            let mut h = mix(base ^ (t as u32 as u64));
+            for (j, slot) in acc.iter_mut().enumerate() {
+                let bit = j & 63;
+                if bit == 0 && j > 0 {
+                    h = mix(h);
+                }
+                *slot += if (h >> bit) & 1 == 1 { 1.0 } else { -1.0 };
+            }
+        }
+        let norm = acc.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm > 0.0 {
+            for x in &mut acc {
+                *x /= norm;
+            }
+        } else {
+            // An all-special window (e.g. empty text) still embeds to a
+            // fixed unit vector rather than zeros or NaNs.
+            acc[0] = 1.0;
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vecdb::Metric;
+
+    fn windows(text: &str) -> (Vec<i32>, i32) {
+        tokenizer::window(text, BUILTIN_SEQ_LEN)
+    }
+
+    #[test]
+    fn two_instances_agree_bit_for_bit() {
+        let a = DeterministicBackend::builtin_pool();
+        let b = DeterministicBackend::builtin_pool();
+        let (tokens, live) = windows("what is the capital of sudan");
+        for v in ["nano", "mini", "large"] {
+            assert_eq!(
+                a.lm_logits(v, &tokens, live).unwrap(),
+                b.lm_logits(v, &tokens, live).unwrap()
+            );
+        }
+        assert_eq!(
+            a.embed_tokens(&tokens, live).unwrap(),
+            b.embed_tokens(&tokens, live).unwrap()
+        );
+    }
+
+    #[test]
+    fn logits_padding_inert_and_vocab_sized() {
+        let be = DeterministicBackend::builtin_pool();
+        let (tokens, live) = windows("a short prompt");
+        let clean = be.lm_logits("nano", &tokens, live).unwrap();
+        assert_eq!(clean.len(), tokenizer::VOCAB as usize);
+        let mut dirty = tokens.clone();
+        for t in dirty.iter_mut().skip(live as usize) {
+            *t = 1234;
+        }
+        assert_eq!(clean, be.lm_logits("nano", &dirty, live).unwrap());
+    }
+
+    #[test]
+    fn variants_diverge_and_unknown_variant_errors() {
+        let be = DeterministicBackend::builtin_pool();
+        let (tokens, live) = windows("tell me about cricket");
+        let nano = be.lm_logits("nano", &tokens, live).unwrap();
+        let large = be.lm_logits("large", &tokens, live).unwrap();
+        let diff: f32 = nano.iter().zip(&large).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1.0, "diff={diff}");
+        assert!(be.lm_logits("gpt-7", &tokens, live).is_err());
+    }
+
+    #[test]
+    fn embeddings_are_normalized_and_lexically_ordered() {
+        let be = DeterministicBackend::builtin_pool();
+        let embed = |text: &str| {
+            let (tokens, live) = windows(text);
+            be.embed_tokens(&tokens, live).unwrap()
+        };
+        let a = embed("tell me about the socc conference");
+        let b = embed("talk to me about socc conference please");
+        let c = embed("recipe for chicken biryani with rice");
+        let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-3);
+        let ab = Metric::Cosine.score(&a, &b);
+        let ac = Metric::Cosine.score(&a, &c);
+        assert!(ab > ac + 0.2, "ab={ab} ac={ac}");
+        // Empty text: fixed unit fallback, no NaNs.
+        let e = embed("");
+        assert!(e.iter().all(|x| x.is_finite()));
+        assert!((e.iter().map(|x| x * x).sum::<f32>().sqrt() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bigger_variants_cost_more_per_step() {
+        // The latency ladder the router's latency-class policy and
+        // `tests/runtime_smoke.rs::larger_model_slower` rely on. The
+        // deterministic part first: per-call work is the weight fold, so
+        // the ladder is exactly the parameter-count ordering.
+        let specs: Vec<usize> = BUILTIN_VARIANTS.iter().map(|v| v.param_count()).collect();
+        assert!(specs.windows(2).all(|w| w[0] < w[1]), "{specs:?}");
+        // Wall-clock corroboration, made preemption-tolerant for shared CI
+        // runners: take the *minimum* of several timed batches per variant
+        // (a scheduler spike inflates a sample, never deflates it), and
+        // large has ~3.6x nano's work, so min-vs-min ordering is stable.
+        let be = DeterministicBackend::builtin_pool();
+        let (tokens, live) = windows("latency probe alpha");
+        let min_time = |variant: &str| {
+            (0..5)
+                .map(|_| {
+                    let t0 = std::time::Instant::now();
+                    for _ in 0..4 {
+                        std::hint::black_box(be.lm_logits(variant, &tokens, live).unwrap());
+                    }
+                    t0.elapsed()
+                })
+                .min()
+                .unwrap()
+        };
+        // Warm up once so first-touch page faults don't skew nano.
+        let _ = min_time("large");
+        let nano = min_time("nano");
+        let large = min_time("large");
+        assert!(
+            large > nano,
+            "large {large:?} must exceed nano {nano:?} (params scale the fold)"
+        );
+    }
+}

@@ -1,18 +1,27 @@
-//! PJRT inference engine — the runtime bridge between the rust coordinator
-//! and the AOT-compiled JAX/Pallas artifacts.
+//! Engine thread + RPC handle, generic over the inference backend.
 //!
-//! [`Engine`] owns a `PjRtClient` plus one compiled executable per
-//! model-pool variant (weights pre-uploaded as device buffers, so the hot
-//! path transfers only the token window). PJRT wrapper types hold raw
-//! pointers and are `!Send`, so the engine runs on a dedicated thread and
-//! the rest of the proxy talks to it through the cloneable, thread-safe
-//! [`EngineHandle`] (mpsc RPC) — the same shape as handing requests to a
-//! GPU-serving process.
+//! [`EngineHandle`] is the cloneable, thread-safe face of inference: the
+//! backend (an [`EmbedBackend`]) runs on a dedicated engine thread and the
+//! rest of the proxy talks to it through mpsc RPC — the same shape as
+//! handing requests to a GPU-serving process. Backends are constructed
+//! *on* that thread, which is what lets the PJRT path work at all: PJRT
+//! wrapper types hold raw pointers and are `!Send`.
+//!
+//! * Default build: [`EngineHandle::spawn_deterministic`] serves from the
+//!   pure-Rust [`DeterministicBackend`] — no native deps, no artifacts.
+//! * `--features pjrt`: `Engine` owns a `PjRtClient` plus one compiled
+//!   executable per model-pool variant (weights pre-uploaded as device
+//!   buffers, so the hot path transfers only the token window), loaded
+//!   from the artifact [`Registry`](super::registry::Registry).
+//!
+//! [`EngineHandle::spawn_from_dir`] picks whichever of the two the build
+//! enables, so `Bridge::open`, the CLI, benches, and tests are
+//! backend-agnostic.
 //!
 //! ## Batching semantics
 //!
 //! The engine thread batches opportunistically: after each blocking
-//! `recv` it drains the queue with `try_recv` (up to [`MAX_DRAIN`]
+//! `recv` it drains the queue with `try_recv` (up to `MAX_DRAIN`
 //! messages) and serves the whole wave in one wake-up. Within a wave,
 //! embed requests are **coalesced single-flight**: identical token
 //! windows — whether they arrive as separate [`EngineHandle::embed_text`]
@@ -34,10 +43,13 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::backend::{DeterministicBackend, EmbedBackend};
+#[cfg(feature = "pjrt")]
 use super::registry::{load_weights, Registry};
 use super::tokenizer;
 
 /// A single compiled LM variant with resident weights.
+#[cfg(feature = "pjrt")]
 struct LoadedLm {
     exe: xla::PjRtLoadedExecutable,
     theta: xla::PjRtBuffer,
@@ -45,7 +57,8 @@ struct LoadedLm {
     vocab: usize,
 }
 
-/// The engine proper. Not `Send` — lives on the engine thread.
+/// The PJRT engine proper. Not `Send` — lives on the engine thread.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     lms: HashMap<String, LoadedLm>,
@@ -55,6 +68,7 @@ pub struct Engine {
     seq_len: usize,
 }
 
+#[cfg(feature = "pjrt")]
 fn compile(client: &xla::PjRtClient, hlo: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
     let proto = xla::HloModuleProto::from_text_file(
         hlo.to_str().context("non-utf8 path")?,
@@ -66,6 +80,7 @@ fn compile(client: &xla::PjRtClient, hlo: &std::path::Path) -> Result<xla::PjRtL
         .map_err(|e| anyhow!("compile {hlo:?}: {e:?}"))
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     pub fn load(registry: &Registry) -> Result<Engine> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
@@ -100,13 +115,24 @@ impl Engine {
             seq_len: registry.seq_len(),
         })
     }
+}
 
-    pub fn seq_len(&self) -> usize {
+#[cfg(feature = "pjrt")]
+impl EmbedBackend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn seq_len(&self) -> usize {
         self.seq_len
     }
 
+    fn embed_dim(&self) -> usize {
+        self.embed_dim
+    }
+
     /// Next-token logits for `tokens[..length]` under `variant`.
-    pub fn lm_logits(&self, variant: &str, tokens: &[i32], length: i32) -> Result<Vec<f32>> {
+    fn lm_logits(&self, variant: &str, tokens: &[i32], length: i32) -> Result<Vec<f32>> {
         let lm = self
             .lms
             .get(variant)
@@ -141,7 +167,7 @@ impl Engine {
     }
 
     /// Text embedding via the embedder artifact.
-    pub fn embed_tokens(&self, tokens: &[i32], length: i32) -> Result<Vec<f32>> {
+    fn embed_tokens(&self, tokens: &[i32], length: i32) -> Result<Vec<f32>> {
         anyhow::ensure!(tokens.len() == self.seq_len, "embed window size");
         let t = self
             .client
@@ -226,10 +252,10 @@ fn intern_embed(
 /// Execute each unique embed job once (micro-batch loop) and fan the
 /// results out to every waiter. Errors are carried as strings internally
 /// because `anyhow::Error` is not `Clone`.
-fn flush_embeds(engine: &Engine, jobs: &[(Vec<i32>, i32)], waiters: Vec<EmbedWaiter>) {
+fn flush_embeds(backend: &dyn EmbedBackend, jobs: &[(Vec<i32>, i32)], waiters: Vec<EmbedWaiter>) {
     let results: Vec<std::result::Result<Vec<f32>, String>> = jobs
         .iter()
-        .map(|(t, l)| engine.embed_tokens(t, *l).map_err(|e| format!("{e:#}")))
+        .map(|(t, l)| backend.embed_tokens(t, *l).map_err(|e| format!("{e:#}")))
         .collect();
     let result_at = |slot: usize| -> Result<Vec<f32>> {
         match &results[slot] {
@@ -270,7 +296,7 @@ fn flush_embeds(engine: &Engine, jobs: &[(Vec<i32>, i32)], waiters: Vec<EmbedWai
 /// executes at the first embed's position, and LM steps that arrived after
 /// it run last. No reply ever waits on an LM step that arrived later; an
 /// LM step only waits on embeds when one arrived ahead of it.
-fn serve_wave(engine: &Engine, wave: Vec<Rpc>) -> bool {
+fn serve_wave(backend: &dyn EmbedBackend, wave: Vec<Rpc>) -> bool {
     let mut shutdown = false;
     let mut jobs: Vec<(Vec<i32>, i32)> = Vec::new();
     let mut slot_of: HashMap<(Vec<i32>, i32), usize> = HashMap::new();
@@ -310,13 +336,13 @@ fn serve_wave(engine: &Engine, wave: Vec<Rpc>) -> bool {
     for (pos, variant, tokens, length, reply) in lms {
         if first_embed_pos.is_some_and(|fp| pos > fp) {
             if let Some(w) = pending.take() {
-                flush_embeds(engine, &jobs, w);
+                flush_embeds(backend, &jobs, w);
             }
         }
-        let _ = reply.send(engine.lm_logits(&variant, &tokens, length));
+        let _ = reply.send(backend.lm_logits(&variant, &tokens, length));
     }
     if let Some(w) = pending.take() {
-        flush_embeds(engine, &jobs, w);
+        flush_embeds(backend, &jobs, w);
     }
     shutdown
 }
@@ -328,6 +354,7 @@ pub struct EngineHandle {
     tx: std::sync::Mutex<mpsc::Sender<Rpc>>,
     seq_len: usize,
     embed_dim: usize,
+    backend: &'static str,
 }
 
 impl Clone for EngineHandle {
@@ -336,22 +363,28 @@ impl Clone for EngineHandle {
             tx: std::sync::Mutex::new(self.tx.lock().unwrap().clone()),
             seq_len: self.seq_len,
             embed_dim: self.embed_dim,
+            backend: self.backend,
         }
     }
 }
 
 impl EngineHandle {
-    /// Spawn the engine thread and load all artifacts from `registry`.
-    pub fn spawn(registry: Registry) -> Result<EngineHandle> {
+    /// Spawn the engine thread over an arbitrary backend. `make` runs *on*
+    /// the engine thread (backends need not be `Send`); a constructor
+    /// error is surfaced here, not swallowed by the thread.
+    pub fn spawn_backend<F>(make: F) -> Result<EngineHandle>
+    where
+        F: FnOnce() -> Result<Box<dyn EmbedBackend>> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Rpc>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize)>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, &'static str)>>();
         std::thread::Builder::new()
             .name("llmbridge-engine".into())
             .spawn(move || {
-                let engine = match Engine::load(&registry) {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok((e.seq_len(), e.embed_dim)));
-                        e
+                let backend = match make() {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok((b.seq_len(), b.embed_dim(), b.name())));
+                        b
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
@@ -370,20 +403,56 @@ impl EngineHandle {
                             Err(_) => break,
                         }
                     }
-                    if serve_wave(&engine, wave) {
+                    if serve_wave(backend.as_ref(), wave) {
                         break;
                     }
                 }
             })
             .context("spawn engine thread")?;
-        let (seq_len, embed_dim) = ready_rx
+        let (seq_len, embed_dim, backend) = ready_rx
             .recv()
             .context("engine thread died during load")??;
         Ok(EngineHandle {
             tx: std::sync::Mutex::new(tx),
             seq_len,
             embed_dim,
+            backend,
         })
+    }
+
+    /// Spawn over the pure-Rust [`DeterministicBackend`] (standard pool
+    /// geometry) — the default build's serving path; needs no artifacts.
+    pub fn spawn_deterministic() -> Result<EngineHandle> {
+        EngineHandle::spawn_backend(|| {
+            Ok(Box::new(DeterministicBackend::builtin_pool()) as Box<dyn EmbedBackend>)
+        })
+    }
+
+    /// Spawn the PJRT engine thread and load all artifacts from `registry`.
+    #[cfg(feature = "pjrt")]
+    pub fn spawn(registry: Registry) -> Result<EngineHandle> {
+        EngineHandle::spawn_backend(move || {
+            Ok(Box::new(Engine::load(&registry)?) as Box<dyn EmbedBackend>)
+        })
+    }
+
+    /// Bring up the serving backend for an artifacts directory: the PJRT
+    /// engine over `Registry::load(dir)` under `--features pjrt`, the
+    /// [`DeterministicBackend`] otherwise (the directory is then not
+    /// consulted — the default build runs on a clean checkout).
+    pub fn spawn_from_dir(dir: impl AsRef<std::path::Path>) -> Result<EngineHandle> {
+        #[cfg(feature = "pjrt")]
+        return EngineHandle::spawn(Registry::load(dir)?);
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = dir.as_ref();
+            EngineHandle::spawn_deterministic()
+        }
+    }
+
+    /// Which backend implementation serves this handle.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend
     }
 
     pub fn seq_len(&self) -> usize {

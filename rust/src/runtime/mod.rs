@@ -1,14 +1,24 @@
-//! Runtime layer: the only place the proxy touches XLA/PJRT.
+//! Runtime layer: tokenization, artifact discovery, and the inference
+//! backends behind the engine thread.
 //!
 //! * [`tokenizer`] — word-hash tokenizer shared bit-for-bit with the python
 //!   build path.
-//! * [`registry`] — locates AOT artifacts via `artifacts/manifest.json`.
-//! * [`engine`] — PJRT CPU client; compiles each `*.hlo.txt` once at load
-//!   and executes them on the request path via a dedicated engine thread.
+//! * [`backend`] — the [`EmbedBackend`] seam: the pure-Rust
+//!   [`DeterministicBackend`] (default build; no native deps) vs the
+//!   PJRT/XLA engine (`--features pjrt`).
+//! * [`registry`] — locates AOT artifacts via `artifacts/manifest.json`
+//!   (consumed by the PJRT path; the deterministic backend needs none).
+//! * [`engine`] — the engine thread + cloneable [`EngineHandle`] RPC
+//!   facade, generic over the backend. Under `--features pjrt` it also
+//!   holds the PJRT client that compiles each `*.hlo.txt` once at load.
 
+pub mod backend;
 pub mod engine;
 pub mod registry;
 pub mod tokenizer;
 
-pub use engine::{Engine, EngineHandle};
+pub use backend::{DeterministicBackend, EmbedBackend};
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
+pub use engine::EngineHandle;
 pub use registry::Registry;

@@ -1,6 +1,7 @@
-//! Utility substrates built from scratch (only `xla` + `anyhow` are
-//! available offline): JSON, deterministic PRNG, CLI parsing, a
-//! criterion-style bench harness, and a property-testing helper.
+//! Utility substrates built from scratch (the crate's only dependency is
+//! `anyhow`; `xla` only under `--features pjrt`): JSON, deterministic
+//! PRNG, CLI parsing, a criterion-style bench harness, and a
+//! property-testing helper.
 
 pub mod bench;
 pub mod cli;

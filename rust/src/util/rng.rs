@@ -88,6 +88,13 @@ pub fn unit_from_seed(seed: u64) -> f64 {
     Rng::new(seed).f64()
 }
 
+/// One stateless SplitMix64 step: `split_mix(k) == Rng::new(k).next_u64()`
+/// by construction, so keyed hashing (the deterministic runtime backend)
+/// and the stream PRNG can never diverge.
+pub fn split_mix(key: u64) -> u64 {
+    Rng::new(key).next_u64()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -40,10 +40,27 @@
 //!
 //! `save`/`load` round-trip the trained state so a cold restore **never
 //! re-trains**: the flat tier writes the LBV2 bulk-row format unchanged,
-//! the IVF tier writes LBV3 — LBV2's geometry plus a trained section
-//! (cell assignments + centroids). `load` accepts both (a pre-adaptive
-//! LBV2 snapshot boots as the flat tier and migrates through the normal
-//! maintenance path).
+//! the IVF tier writes LBV3 — LBV2's geometry plus a trained section.
+//! `load` accepts both (a pre-adaptive LBV2 snapshot boots as the flat
+//! tier and migrates through the normal maintenance path). LBV3 layout:
+//!
+//! ```text
+//! "LBV3"                          4-byte magic
+//! [dim    u32][metric u8]         geometry (as LBV2)
+//! [count  u64]
+//! [nlist  u32][nprobe u32]        trained policy — a restored index keeps
+//!                                 the nprobe it was trained under
+//! [crc    u64]                    FNV-1a over the payload below
+//! [ids         count×u64]         payload: rows …
+//! [rows        count×dim×f32]     … pre-normalized, row-major
+//! [assignments count×u32]         cell per row
+//! [centroids   nlist×dim×f32]     trained coarse quantizer
+//! ```
+//!
+//! The checksum puts LBV3 on par with the persist layer's other durable
+//! artifacts: an in-range payload bit-flip — e.g. an assignment silently
+//! pointing at the wrong cell — must fail the load, not quietly lose
+//! recall.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -8,7 +8,7 @@
 //! Scan layout (the L3 hot path, see `benches/hotpath`):
 //! * Cosine rows are stored **pre-normalized** at insert, so the scan is a
 //!   pure dot product scaled once by the query's inverse norm.
-//! * The scan is **blocked four rows at a time** ([`super::dot4`]) so the
+//! * The scan is **blocked four rows at a time** (`super::dot4`) so the
 //!   query stays in registers while rows stream from memory.
 //! * An id→slot [`HashMap`] makes [`FlatIndex::remove`] O(1) instead of the
 //!   former O(n) `position` scan.

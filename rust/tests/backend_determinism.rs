@@ -1,0 +1,96 @@
+//! Default-backend determinism smoke: the no-`pjrt` build must produce
+//! *fixed vectors for fixed inputs* — bit-identical across engine spawns
+//! and across separate OS processes — and keep the similarity structure
+//! `tests/runtime_smoke.rs` pins. Cross-process coverage drives the real
+//! `llmbridge probe-backend` binary twice (via `CARGO_BIN_EXE_llmbridge`)
+//! and diffs the fingerprints, so a regression to process-seeded state
+//! (map iteration order, ASLR-derived hashes, clocks) cannot hide.
+#![cfg(not(feature = "pjrt"))]
+
+use llmbridge::runtime::{tokenizer, EngineHandle};
+use llmbridge::vecdb::Metric;
+
+#[test]
+fn separate_spawns_are_bit_identical() {
+    let a = EngineHandle::spawn_deterministic().unwrap();
+    let b = EngineHandle::spawn_deterministic().unwrap();
+    assert_eq!(a.backend_name(), "deterministic");
+    assert_eq!(a.seq_len(), b.seq_len());
+    assert_eq!(a.embed_dim(), b.embed_dim());
+    for text in [
+        "alpha beta gamma",
+        "tell me about the socc conference",
+        "",
+        "Tell ME about THE socc CONFERENCE",
+    ] {
+        assert_eq!(a.embed_text(text).unwrap(), b.embed_text(text).unwrap(), "{text:?}");
+    }
+    let (tokens, live) = tokenizer::window("what is the capital of sudan", a.seq_len());
+    for variant in ["nano", "mini", "large"] {
+        assert_eq!(
+            a.lm_logits(variant, tokens.clone(), live).unwrap(),
+            b.lm_logits(variant, tokens.clone(), live).unwrap(),
+            "{variant}"
+        );
+    }
+    a.shutdown();
+    b.shutdown();
+}
+
+#[test]
+fn fingerprint_is_stable_across_processes() {
+    let exe = env!("CARGO_BIN_EXE_llmbridge");
+    let run = || {
+        let out = std::process::Command::new(exe)
+            .args(["probe-backend", "--text", "cross process determinism probe"])
+            .output()
+            .expect("spawn `llmbridge probe-backend`");
+        assert!(
+            out.status.success(),
+            "probe-backend failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8(out.stdout).unwrap()
+    };
+    let first = run();
+    let second = run();
+    assert_eq!(first, second, "two processes must print identical fingerprints");
+    assert!(first.contains("backend deterministic"), "{first}");
+    // The fingerprint is not vacuous: it must match this (third) process's
+    // in-memory embedding, bit for bit.
+    let engine = EngineHandle::spawn_deterministic().unwrap();
+    let emb = engine.embed_text("cross process determinism probe").unwrap();
+    let bits: String = emb.iter().map(|v| format!("{:08x}", v.to_bits())).collect();
+    assert!(
+        first.contains(&bits),
+        "binary fingerprint must contain the in-process embedding bits"
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn similarity_structure_holds_on_default_backend() {
+    // The runtime_smoke contract, re-asserted directly against the default
+    // backend: paraphrases beat unrelated texts by a clear margin, vectors
+    // come back unit-normalized, and padding never leaks.
+    let engine = EngineHandle::spawn_deterministic().unwrap();
+    let a = engine.embed_text("tell me about the socc conference").unwrap();
+    let b = engine
+        .embed_text("talk to me about socc conference please")
+        .unwrap();
+    let c = engine.embed_text("recipe for chicken biryani with rice").unwrap();
+    let sim_ab = Metric::Cosine.score(&a, &b);
+    let sim_ac = Metric::Cosine.score(&a, &c);
+    assert!(sim_ab > sim_ac + 0.2, "ab={sim_ab} ac={sim_ac}");
+    let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+    assert!((norm - 1.0).abs() < 1e-3);
+    // Padding inertia on the lm path (mask correctness).
+    let (tokens, live) = tokenizer::window("padding probe text", engine.seq_len());
+    let clean = engine.lm_logits("nano", tokens.clone(), live).unwrap();
+    let mut dirty = tokens;
+    for t in dirty.iter_mut().skip(live as usize) {
+        *t = 1234;
+    }
+    assert_eq!(clean, engine.lm_logits("nano", dirty, live).unwrap());
+    engine.shutdown();
+}

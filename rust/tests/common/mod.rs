@@ -17,7 +17,7 @@ pub fn bridge() -> Arc<Bridge> {
         .get_or_init(|| {
             Arc::new(
                 Bridge::open_with(artifacts_dir(), BridgeConfig::default())
-                    .expect("run `make artifacts` before cargo test"),
+                    .expect("bring up serving backend (pjrt builds: run `make artifacts`)"),
             )
         })
         .clone()

@@ -1,5 +1,6 @@
-//! Runtime integration: the PJRT engine executes real artifacts and the
-//! generator drives the decode loop deterministically.
+//! Runtime integration: the serving backend (deterministic by default;
+//! PJRT over real artifacts under `--features pjrt`) answers lm/embed
+//! calls and the generator drives the decode loop deterministically.
 
 mod common;
 

@@ -1,0 +1,102 @@
+//! Offline stand-in for the `xla-rs` PJRT bindings.
+//!
+//! The llmbridge `pjrt` feature compiles `runtime::engine::Engine` against
+//! this crate so the engine path always *type-checks* without the XLA
+//! extension library installed. It is a signature-compatible shell, not an
+//! implementation: [`PjRtClient::cpu`] — the first call `Engine::load`
+//! makes — returns an error, so a `pjrt` build that was not relinked
+//! against the real bindings fails fast at engine spawn with a message
+//! pointing at the swap instructions (README.md §PJRT backend), never
+//! deep inside an execute call.
+//!
+//! Every method below mirrors the exact shape `runtime::engine` uses:
+//! keep the two in sync when the engine grows a new PJRT call.
+
+use std::fmt;
+
+const STUB: &str = "xla stub: the `pjrt` feature was compiled against the vendored \
+     API stub (rust/vendor/xla-stub); link the real xla-rs bindings to execute \
+     artifacts — see README.md §PJRT backend";
+
+/// The stub's only error: "this is not the real library".
+#[derive(Debug)]
+pub struct Error(&'static str);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub struct PjRtClient;
+pub struct PjRtLoadedExecutable;
+pub struct PjRtBuffer;
+pub struct Literal;
+pub struct HloModuleProto;
+pub struct XlaComputation;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error(STUB))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error(STUB))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(Error(STUB))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error(STUB))
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error(STUB))
+    }
+}
+
+impl Literal {
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(Error(STUB))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error(STUB))
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(Error(STUB))
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_with_pointer_to_docs() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("README.md"));
+    }
+}

@@ -5,8 +5,12 @@
 #
 # Usage: scripts/ci.sh
 #
-# Steps: cargo build --release && cargo test -q  (the ROADMAP tier-1
-# verify), then cargo fmt --check and cargo clippy -D warnings.
+# Steps: cargo build --release, cargo test --workspace -q (a superset of
+# the ROADMAP tier-1 `cargo test -q`: it also runs the vendored xla-stub
+# member's tests), then cargo fmt --check, cargo clippy --workspace
+# -D warnings, rustdoc with -D warnings (the docs gate — broken intra-doc
+# links and malformed docs fail the build, so module docs can't rot), and
+# a `--features pjrt` type-check of the engine path against the stub.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -32,13 +36,19 @@ cd "$WORKSPACE"
 echo "==> tier-1: cargo build --release"
 cargo build --release
 
-echo "==> tier-1: cargo test -q"
-cargo test -q
+echo "==> tier-1: cargo test -q (workspace: crate + vendored stub)"
+cargo test --workspace -q
 
 echo "==> cargo fmt --check"
 cargo fmt --all -- --check
 
 echo "==> cargo clippy -D warnings"
-cargo clippy --all-targets -- -D warnings
+cargo clippy --workspace --all-targets -- -D warnings
+
+echo "==> cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+echo "==> cargo check --features pjrt (engine path vs the vendored xla stub)"
+cargo check --features pjrt --all-targets
 
 echo "ci.sh: all gates green"
