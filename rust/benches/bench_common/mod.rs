@@ -29,10 +29,41 @@ pub fn bridge(generation: Generation) -> Arc<Bridge> {
 /// Query budget for replay benches: small by default so `cargo bench`
 /// finishes quickly; the `figures` binary regenerates the full-dataset
 /// numbers.
+#[allow(dead_code)] // each bench target compiles its own copy; not all use it
 pub fn query_limit() -> Option<usize> {
     if std::env::var("LLMBRIDGE_BENCH_FULL").map(|v| v == "1").unwrap_or(false) {
         None
     } else {
         Some(40)
     }
+}
+
+// Shared synthetic-prompt shapes for the pipeline benches, so hotpath's
+// cache-hit probe and throughput's traffic mix agree on what a "prefetched
+// answer" looks like (each bench target compiles its own copy of this
+// module; allow the ones it doesn't call).
+
+/// Distinct exact-hit prompts (the WhatsApp prefetch-button path).
+#[allow(dead_code)]
+pub const EXACT_PROMPTS: usize = 64;
+/// Distinct SmartCache topics.
+#[allow(dead_code)]
+pub const TOPICS: usize = 16;
+/// Distinct memoized fixed-model prompts.
+#[allow(dead_code)]
+pub const MEMO_PROMPTS: usize = 16;
+
+#[allow(dead_code)]
+pub fn exact_prompt(n: usize) -> String {
+    format!("prefetched answer number {}", n % EXACT_PROMPTS)
+}
+
+#[allow(dead_code)]
+pub fn memo_prompt(n: usize) -> String {
+    format!("one fixed dispatch question number {}", n % MEMO_PROMPTS)
+}
+
+#[allow(dead_code)]
+pub fn topic_prompt(n: usize) -> String {
+    format!("tell me about topic number {}", n % TOPICS)
 }

@@ -1,8 +1,9 @@
 //! Hot-path micro-benchmarks — the L3 profile the perf pass iterates on
 //! (EXPERIMENTS.md §Perf): tokenizer, embedding, vecdb scan (flat vs IVF
-//! vs the adaptive tier, 20k and 100k rows, incl. migration/retrain cost
-//! and recall@4), JSON, per-execute PJRT latency per variant, batched
-//! embeds, and end-to-end dispatch. Writes the results as JSON to the path
+//! vs the adaptive tier at 20k/100k/1M rows, incl. migration/retrain
+//! cost, recall@4, the quantized i8 tier, and LBV4 mmap cold boot), JSON,
+//! per-execute PJRT latency per variant, batched embeds, and end-to-end
+//! dispatch. Writes the results as JSON to the path
 //! in `LLMBRIDGE_BENCH_JSON` (see scripts/bench.sh). Under
 //! `LLMBRIDGE_BENCH_SMOKE=1` corpora shrink and every bench runs a single
 //! iteration — the CI smoke job's populated-JSON proof, not a perf claim.
@@ -15,6 +16,7 @@ use llmbridge::models::pricing::{Generation, ModelId};
 use llmbridge::persist::wal::{WalOp, WalWriter};
 use llmbridge::runtime::tokenizer;
 use llmbridge::util::bench::{bench, black_box, fast_mode, smoke_mode, BenchReport};
+use llmbridge::util::corpus as synth;
 use llmbridge::util::json::Json;
 use llmbridge::util::rng::Rng;
 use llmbridge::vecdb::adaptive::{AdaptiveConfig, AdaptiveIndex};
@@ -77,16 +79,10 @@ fn main() {
     // Clustered corpus (cached prompts cluster by topic — the regime the
     // ANN tier is built for); queries are perturbed corpus points, so
     // recall@4 against the exact flat scan is meaningful.
-    let mut corpus: Vec<Vec<f32>> = Vec::with_capacity(n100);
-    {
-        let centers: Vec<Vec<f32>> = (0..256)
-            .map(|_| (0..64).map(|_| rng.normal() as f32 * 8.0).collect())
-            .collect();
-        for _ in 0..n100 {
-            let c = rng.choice(&centers).clone();
-            corpus.push(c.iter().map(|x| x + rng.normal() as f32 * 0.5).collect());
-        }
-    }
+    let corpus: Vec<Vec<f32>> = synth::clustered_pairs(3, n100, 64, 256, 8.0, 0.5)
+        .into_iter()
+        .map(|(_, v)| v)
+        .collect();
     let mut flat_c = FlatIndex::new(64, Metric::Cosine);
     let mut adaptive = AdaptiveIndex::new(64, Metric::Cosine, AdaptiveConfig::default());
     for (i, v) in corpus.iter().enumerate() {
@@ -165,6 +161,99 @@ fn main() {
         ]),
     );
 
+    // --- vecdb: quantized i8 tier ----------------------------------------
+    // The same 100k clustered corpus forced onto the IVF-i8 tier
+    // (quantize_threshold: 1): coarse i8-dot scan + f32 rescore vs the
+    // f32 IVF tier above, plus the vector-region bytes/row cut — the two
+    // numbers the quantized tier trades against each other.
+    let mut quant = AdaptiveIndex::new(
+        64,
+        Metric::Cosine,
+        AdaptiveConfig {
+            migrate_threshold: 1000,
+            quantize_threshold: 1,
+            ..AdaptiveConfig::default()
+        },
+    );
+    for (i, v) in corpus.iter().enumerate() {
+        quant.insert(i as u64, v).unwrap();
+    }
+    let plan = quant.rebuild_plan().expect("past the migration threshold");
+    let trained = plan.train();
+    assert!(quant.install(trained), "single-threaded: same instance");
+    assert_eq!(quant.stats().tier, "ivf_i8", "quantize_threshold 1 forces the i8 tier");
+    let quant_res = bench("vecdb/quantized_vs_f32_top4", 10, 300, || {
+        black_box(quant.search(&qc, 4, 0.0));
+    });
+    let quant_speed = adaptive_res.mean.as_secs_f64() / quant_res.mean.as_secs_f64().max(1e-12);
+    report.record(&quant_res);
+    let (fs, qs) = (adaptive.stats(), quant.stats());
+    report.push(
+        "vecdb/bytes_per_row",
+        Json::obj(vec![
+            ("rows", Json::num(fs.rows as f64)),
+            (
+                "f32_bytes_per_row",
+                Json::num(fs.vector_bytes as f64 / fs.rows.max(1) as f64),
+            ),
+            (
+                "i8_bytes_per_row",
+                Json::num(qs.vector_bytes as f64 / qs.rows.max(1) as f64),
+            ),
+            (
+                "cut",
+                Json::num(fs.vector_bytes as f64 / qs.vector_bytes.max(1) as f64),
+            ),
+            ("speed_vs_f32_ivf", Json::num(quant_speed)),
+        ]),
+    );
+
+    // --- vecdb: adaptive tier at 1M rows ----------------------------------
+    // The million-row regime the i8 tier exists for. Smoke/fast runs shrink
+    // the corpus so CI stays quick; the full run is the headline number.
+    let n1m = if smoke {
+        50_000
+    } else if fast_mode() {
+        200_000
+    } else {
+        1_000_000
+    };
+    // Row-major flat buffer: one allocation for the staging corpus.
+    let big_rows = synth::clustered_rows(11, n1m, 64, 512, 8.0, 0.5);
+    let mid = (n1m / 2) * 64;
+    let q1m: Vec<f32> = big_rows[mid..mid + 64].iter().map(|x| x + 0.01).collect();
+    let mut a1m = AdaptiveIndex::new(
+        64,
+        Metric::Cosine,
+        AdaptiveConfig {
+            migrate_threshold: 1000,
+            quantize_threshold: 1,
+            ..AdaptiveConfig::default()
+        },
+    );
+    for (i, v) in big_rows.chunks(64).enumerate() {
+        a1m.insert(i as u64, v).unwrap();
+    }
+    // Free the f32 staging corpus before timing: past this point only the
+    // index's own storage is live (flat f32 rows until install, i8 after).
+    drop(big_rows);
+    let t0 = std::time::Instant::now();
+    let plan = a1m.rebuild_plan().expect("past the migration threshold");
+    let trained = plan.train();
+    let train_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert!(a1m.install(trained), "single-threaded: same instance");
+    assert_eq!(a1m.stats().tier, "ivf_i8");
+    report.push(
+        "vecdb/adaptive_migrate_1m",
+        Json::obj(vec![
+            ("rows", Json::num(n1m as f64)),
+            ("train_ms", Json::num(train_ms)),
+        ]),
+    );
+    report.record(&bench("vecdb/adaptive_top4_1m", 5, 200, || {
+        black_box(a1m.search(&q1m, 4, 0.0));
+    }));
+
     // --- JSON substrate ---------------------------------------------------
     let body = r#"{"user":"u1","conversation":"c1","prompt":"tell me about dates and mangoes",
         "service_type":{"name":"model_selector","threshold":8},"update_context":true}"#;
@@ -230,6 +319,24 @@ fn main() {
         let back = SemanticCache::restore_from_dir(&pdir, 64).unwrap();
         black_box(back.len_keys());
     }));
+    // LBV4 mmap cold boot: save the quantized 100k index, then time load +
+    // one top-4 query. The unix load path maps the i8 code region instead
+    // of reading it, so this measures restore-to-first-answer (metadata
+    // parse + one probe's worth of page faults), not snapshot size.
+    let vpath = pdir.join("bench_quant.lbv4");
+    quant.save(&vpath).unwrap();
+    report.record(&bench("persist/restore_to_first_query", 1, 20, || {
+        let back = AdaptiveIndex::load(
+            &vpath,
+            AdaptiveConfig {
+                migrate_threshold: 1000,
+                quantize_threshold: 1,
+                ..AdaptiveConfig::default()
+            },
+        )
+        .unwrap();
+        black_box(back.search(&qc, 4, 0.0));
+    }));
 
     // --- engine: per-execute latency by variant (serving backend) ---------
     let engine = bench_common::engine();
@@ -254,9 +361,11 @@ fn main() {
 
     // --- end-to-end dispatch (cache hit path = pure L3 overhead) ----------
     let bridge = bench_common::bridge(Generation::New);
-    bridge.cache().put_exact("hotpath probe", "cached answer");
+    // Same prompt shape as throughput.rs's exact-hit mix (bench_common).
+    let probe = bench_common::exact_prompt(0);
+    bridge.cache().put_exact(&probe, "cached answer");
     report.record(&bench("pipeline/exact_cache_hit", 10, 500, || {
-        let req = Request::new("hp", "c", "hotpath probe").service_type(ServiceType::Cost);
+        let req = Request::new("hp", "c", &probe).service_type(ServiceType::Cost);
         black_box(bridge.handle(req).unwrap());
     }));
     // Full request (memoized generation: measures proxy overhead + memo).

@@ -21,21 +21,7 @@ use llmbridge::models::pricing::{Generation, ModelId};
 use llmbridge::util::bench::{fast_mode, BenchReport};
 use llmbridge::util::json::Json;
 
-const EXACT_PROMPTS: usize = 64;
-const TOPICS: usize = 16;
-const MEMO_PROMPTS: usize = 16;
-
-fn exact_prompt(n: usize) -> String {
-    format!("prefetched answer number {}", n % EXACT_PROMPTS)
-}
-
-fn memo_prompt(n: usize) -> String {
-    format!("one fixed dispatch question number {}", n % MEMO_PROMPTS)
-}
-
-fn topic_prompt(n: usize) -> String {
-    format!("tell me about topic number {}", n % TOPICS)
-}
+use bench_common::{exact_prompt, memo_prompt, topic_prompt, EXACT_PROMPTS, MEMO_PROMPTS, TOPICS};
 
 fn request_for(thread: usize, i: usize) -> Request {
     let user = format!("worker{thread}");

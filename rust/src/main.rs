@@ -139,6 +139,9 @@ fn main() -> Result<()> {
             let engine = EngineHandle::spawn_from_dir(args.get_or("artifacts", "artifacts"))?;
             let text = args.get_or("text", "backend determinism probe");
             println!("backend {}", engine.backend_name());
+            // Which dot-product kernel the vecdb hot path dispatched to
+            // (avx2/neon/scalar; LLMBRIDGE_FORCE_SCALAR=1 pins scalar).
+            println!("kernel {}", llmbridge::vecdb::kernel::active_variant().name());
             let bits: Vec<String> = engine
                 .embed_text(text)?
                 .iter()

@@ -10,8 +10,10 @@
 //!   vecdb.bin      AdaptiveIndex::save — bulk rows (pre-normalized):
 //!                  LBV2 on the flat tier; LBV3 (rows + cell assignments
 //!                  + trained centroids) on the IVF tier, so a restore of
-//!                  a migrated cache never re-runs k-means. LBV2 dirs
-//!                  written before the adaptive tier keep loading.
+//!                  a migrated cache never re-runs k-means; LBV4 on the
+//!                  quantized tier (i8 codes, mmap'd lazily at boot).
+//!                  LBV2 dirs written before the adaptive tier keep
+//!                  loading.
 //!   cache.jsonl    SemanticCache::snapshot_into — objects/keys/exact/meta
 //!   state.jsonl    quota rows + exchange rows
 //! wal-N.log        mutations since snap-N
@@ -24,7 +26,7 @@
 //! stale `snap-tmp` / next-generation leftovers are clobbered by the next
 //! attempt and GC'd at boot.
 //!
-//! ## vecdb.bin: LBV2 vs LBV3
+//! ## vecdb.bin: LBV2 vs LBV3 vs LBV4
 //!
 //! The vector file is written by the adaptive index's `save`:
 //!
@@ -35,9 +37,37 @@
 //!   assignments + centroids) and an FNV-1a payload checksum, so a
 //!   migrated cache restores **without re-running k-means**. See
 //!   [`crate::vecdb::adaptive`] for the exact layout.
+//! * **LBV4** (quantized IVF tier, at/above the cache's quantize
+//!   threshold): the trained section with rows stored as i8 codes + one
+//!   f32 scale per row. Byte layout:
 //!
-//! Either version loads: an LBV2 file from an older generation boots as
-//! the flat tier and re-migrates through normal maintenance.
+//!   ```text
+//!   "LBV4"                          4-byte magic
+//!   [dim       u32][metric u8]     geometry (as LBV2/LBV3)
+//!   [count     u64]
+//!   [nlist     u32][nprobe u32]    trained policy (as LBV3)
+//!   [codes_off u64]                4096-aligned start of the code region
+//!   [meta_crc  u64]                FNV-1a over ids…centroids below
+//!   [codes_crc u64]                FNV-1a over the code region
+//!   [ids         count×u64]        cell-grouped …
+//!   [assignments count×u32]        … non-decreasing cell per row
+//!   [scales      count×f32]        per-row dequantization scale
+//!   [centroids   nlist×dim×f32]    trained coarse quantizer
+//!   [zero-pad    to codes_off]
+//!   [codes       count×dim×i8]     row-major, cell-contiguous
+//!   ```
+//!
+//!   The code region — the bulk of the file — is **mmap'd, not read**, on
+//!   unix: `restore_from_dir` returns after parsing + checksumming only
+//!   the metadata, and queries fault code pages in on demand. `meta_crc`
+//!   is verified on every load; `codes_crc` only where the bytes are read
+//!   anyway (the non-unix eager fallback), since hashing the region at
+//!   boot would defeat the laziness it exists for.
+//!
+//! Every version loads: an LBV2 file from an older generation boots as
+//! the flat tier and re-migrates through normal maintenance; LBV4 is only
+//! written once a corpus crosses the quantize threshold, so pre-LBV4
+//! deployments keep producing snapshots older binaries can read.
 //!
 //! ## Capture consistency and restore validation
 //!

@@ -1,0 +1,148 @@
+//! Shared synthetic-corpus generators for benches and tests.
+//!
+//! Cached prompts cluster by topic, so every vecdb bench/test wants the
+//! same workload shape: points scattered around well-separated centers.
+//! This module is the single home of that generator — `benches/hotpath.rs`
+//! (up to the million-row tier), the in-crate vecdb tests, and the
+//! persistence integration suite all call it instead of carrying copies.
+//! Deterministic for a given seed, so corpora are reproducible across
+//! processes and PRs.
+
+use crate::util::rng::Rng;
+
+/// Row-major clustered corpus: `n` points of dimension `dim` around
+/// `centers` centers. Center coordinates are drawn from N(0, spread²),
+/// each point is its center plus per-coordinate N(0, noise²) jitter.
+/// Memory is the only scale limit — `n = 1_000_000, dim = 64` is ~256 MB.
+pub fn clustered_rows(
+    seed: u64,
+    n: usize,
+    dim: usize,
+    centers: usize,
+    spread: f32,
+    noise: f32,
+) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let cs: Vec<Vec<f32>> = (0..centers.max(1))
+        .map(|_| (0..dim).map(|_| rng.normal() as f32 * spread).collect())
+        .collect();
+    let mut rows = Vec::with_capacity(n * dim);
+    for _ in 0..n {
+        let c = &cs[rng.below(cs.len())];
+        rows.extend(c.iter().map(|x| x + rng.normal() as f32 * noise));
+    }
+    rows
+}
+
+/// [`clustered_rows`] as `(id, vector)` pairs with ids `0..n` — the shape
+/// the index tests insert from.
+pub fn clustered_pairs(
+    seed: u64,
+    n: usize,
+    dim: usize,
+    centers: usize,
+    spread: f32,
+    noise: f32,
+) -> Vec<(u64, Vec<f32>)> {
+    clustered_rows(seed, n, dim, centers, spread, noise)
+        .chunks(dim)
+        .enumerate()
+        .map(|(i, row)| (i as u64, row.to_vec()))
+        .collect()
+}
+
+/// Balanced clustered corpus: exactly `per_cluster` points around each of
+/// `clusters` centers, ids sequential in generation order (cluster `c`
+/// owns ids `c*per_cluster..(c+1)*per_cluster`).
+///
+/// Recall gates against exact f32 ground truth want this shape rather
+/// than [`clustered_pairs`]: with `per_cluster == k`, the true top-k of a
+/// query near a center is the *entire* cluster — membership is separated
+/// from every other point by a wide score gap, so the assertion measures
+/// whether the index finds the right neighborhood instead of how it
+/// tie-breaks near-equal neighbors (which quantization legitimately
+/// reorders within its error bound).
+pub fn balanced_clustered_pairs(
+    seed: u64,
+    clusters: usize,
+    per_cluster: usize,
+    dim: usize,
+    spread: f32,
+    noise: f32,
+) -> Vec<(u64, Vec<f32>)> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(clusters * per_cluster);
+    for _ in 0..clusters {
+        let center: Vec<f32> = (0..dim).map(|_| rng.normal() as f32 * spread).collect();
+        for _ in 0..per_cluster {
+            let v: Vec<f32> = center
+                .iter()
+                .map(|x| x + rng.normal() as f32 * noise)
+                .collect();
+            out.push((out.len() as u64, v));
+        }
+    }
+    out
+}
+
+/// A query near `base`: per-coordinate N(0, noise²) perturbation — recall
+/// probes are corpus points nudged off their stored position.
+pub fn perturbed(rng: &mut Rng, base: &[f32], noise: f32) -> Vec<f32> {
+    base.iter().map(|x| x + rng.normal() as f32 * noise).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sized() {
+        let a = clustered_rows(42, 100, 16, 8, 8.0, 0.4);
+        let b = clustered_rows(42, 100, 16, 8, 8.0, 0.4);
+        assert_eq!(a.len(), 100 * 16);
+        assert_eq!(a, b);
+        let c = clustered_rows(43, 100, 16, 8, 8.0, 0.4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn pairs_match_rows() {
+        let rows = clustered_rows(7, 50, 8, 4, 8.0, 0.4);
+        let pairs = clustered_pairs(7, 50, 8, 4, 8.0, 0.4);
+        assert_eq!(pairs.len(), 50);
+        assert_eq!(pairs[0].0, 0);
+        assert_eq!(pairs[49].0, 49);
+        for (i, (_, v)) in pairs.iter().enumerate() {
+            assert_eq!(&rows[i * 8..(i + 1) * 8], &v[..]);
+        }
+    }
+
+    #[test]
+    fn balanced_is_deterministic_and_grouped() {
+        let a = balanced_clustered_pairs(11, 20, 4, 8, 8.0, 0.4);
+        let b = balanced_clustered_pairs(11, 20, 4, 8, 8.0, 0.4);
+        assert_eq!(a.len(), 80);
+        assert_eq!(a, b);
+        assert_eq!(a[79].0, 79);
+        // Points 4c..4c+4 share a cluster: pairwise distance within a
+        // cluster is noise-scale, far below the spread-scale centers.
+        for c in 0..20 {
+            for m in 1..4 {
+                let d2: f32 = a[c * 4].1.iter().zip(&a[c * 4 + m].1)
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                assert!(d2 < 8.0 * 8.0, "cluster {c} member {m} strayed: {d2}");
+            }
+        }
+    }
+
+    #[test]
+    fn perturbed_stays_near_base() {
+        let mut rng = Rng::new(9);
+        let base = vec![1.0f32; 32];
+        let q = perturbed(&mut rng, &base, 0.1);
+        assert_eq!(q.len(), 32);
+        let d2: f32 = q.iter().zip(&base).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!(d2 < 32.0 * 0.1 * 0.1 * 16.0, "perturbation too large: {d2}");
+    }
+}

@@ -1,0 +1,151 @@
+//! Minimal read-only file mapping — raw `mmap(2)`/`munmap(2)` through the
+//! C runtime std already links on unix, honoring the anyhow-only
+//! dependency policy (no `memmap2`/`libc` crates).
+//!
+//! The one consumer is the LBV4 snapshot loader: the vector-code region of
+//! a million-row index is mapped, not read, so `restore_from_dir` returns
+//! before the codes are resident and first queries fault pages in on
+//! demand. Maps are whole-file from offset 0 — region offsets are plain
+//! slice arithmetic on [`MmapRegion::as_bytes`], which sidesteps
+//! page-alignment rules across 4k/16k/64k-page systems.
+//!
+//! Caveat (inherent to file mappings): truncating the snapshot file while
+//! a map is live turns later faults into SIGBUS. Snapshot files are
+//! replace-by-rename, never truncated in place, so the window does not
+//! arise in this codebase.
+
+use std::fs::File;
+use std::os::raw::c_void;
+use std::os::unix::io::AsRawFd;
+
+use anyhow::{bail, Result};
+
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    // The 64-bit unix ABI this crate targets (x86_64/aarch64 linux + mac)
+    // has `off_t == i64`; 32-bit targets without large-file offsets would
+    // need `mmap64` instead.
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// A whole-file, read-only, private mapping. Dropping it unmaps.
+pub struct MmapRegion {
+    ptr: *mut c_void,
+    len: usize,
+}
+
+// Safety: the mapping is PROT_READ + MAP_PRIVATE for its whole lifetime —
+// immutable shared bytes, like an `Arc<[u8]>` whose storage is the page
+// cache. No interior mutability, no aliasing writes.
+unsafe impl Send for MmapRegion {}
+unsafe impl Sync for MmapRegion {}
+
+impl MmapRegion {
+    /// Map the whole of `file` read-only. Nothing is read at map time; the
+    /// kernel faults pages in as [`MmapRegion::as_bytes`] is dereferenced.
+    pub fn map_file(file: &File) -> Result<MmapRegion> {
+        let len = file.metadata()?.len();
+        if len == 0 {
+            bail!("mmap: refusing to map an empty file");
+        }
+        let len = usize::try_from(len)
+            .map_err(|_| anyhow::anyhow!("mmap: {len}-byte file exceeds the address space"))?;
+        // Safety: fd is a live file we hold open; the kernel validates the
+        // request and we check for MAP_FAILED (-1) below.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            bail!("mmap of {len} bytes failed");
+        }
+        Ok(MmapRegion { ptr, len })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The mapped bytes (page-faulted on first touch).
+    pub fn as_bytes(&self) -> &[u8] {
+        // Safety: ptr..ptr+len is a live PROT_READ mapping owned by self;
+        // the borrow cannot outlive the unmap in Drop.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        // Safety: unmapping exactly the region this value mapped; the
+        // result is ignored because failure leaves us no recovery beyond
+        // leaking the mapping.
+        unsafe {
+            sys::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+impl std::fmt::Debug for MmapRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapRegion").field("len", &self.len).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn maps_file_contents_and_unmaps() {
+        let path = std::env::temp_dir().join(format!("llmbridge_mmap_{}", std::process::id()));
+        let payload: Vec<u8> = (0..10_000u32).flat_map(|i| i.to_le_bytes()).collect();
+        {
+            let mut f = File::create(&path).unwrap();
+            f.write_all(&payload).unwrap();
+            f.sync_all().unwrap();
+        }
+        {
+            let f = File::open(&path).unwrap();
+            let map = MmapRegion::map_file(&f).unwrap();
+            assert_eq!(map.len(), payload.len());
+            assert!(!map.is_empty());
+            assert_eq!(map.as_bytes(), &payload[..]);
+        }
+        // Map dropped; the file is independently removable.
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_empty_file() {
+        let path = std::env::temp_dir().join(format!("llmbridge_mmap_e_{}", std::process::id()));
+        File::create(&path).unwrap().sync_all().unwrap();
+        let f = File::open(&path).unwrap();
+        assert!(MmapRegion::map_file(&f).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,11 +1,15 @@
 //! Utility substrates built from scratch (the crate's only dependency is
 //! `anyhow`; `xla` only under `--features pjrt`): JSON, deterministic
-//! PRNG, CLI parsing, a criterion-style bench harness, and a
-//! property-testing helper.
+//! PRNG, CLI parsing, a criterion-style bench harness, a property-testing
+//! helper, shared bench/test corpus generators, and a raw-syscall mmap
+//! shim for the snapshot cold-boot path.
 
 pub mod bench;
 pub mod cli;
+pub mod corpus;
 pub mod json;
+#[cfg(unix)]
+pub mod mmap;
 pub mod prop;
 pub mod rng;
 

@@ -14,6 +14,13 @@
 //!   cache's over-fetch GET via [`AdaptiveIndex::search_effort`] so recall
 //!   escalates (up to an exhaustive all-cells probe) before a miss is
 //!   declared.
+//! * **Quantized IVF tier** (at/above
+//!   [`AdaptiveConfig::quantize_threshold`] rows): the same coarse
+//!   structure over i8-quantized rows ([`QuantIvfIndex`]) — `dim + 4`
+//!   bytes/row instead of `4·dim`, an i8 coarse scan with f32 rescore, and
+//!   recall@4 ≥ 0.95 gated by the same clustered-corpus property test as
+//!   the f32 tier. Promotion rides the identical plan/train/install
+//!   machinery, so the requantization never blocks the read path either.
 //!
 //! ## Retraining off the read path
 //!
@@ -61,14 +68,28 @@
 //! artifacts: an in-range payload bit-flip — e.g. an assignment silently
 //! pointing at the wrong cell — must fail the load, not quietly lose
 //! recall.
+//!
+//! The quantized tier writes **LBV4**, designed so a cold boot maps the
+//! code region instead of reading it — `load` returns before the corpus
+//! is resident and first queries fault pages in on demand (see the layout
+//! diagram at `LBV4_HEADER` and the byte-level walkthrough in
+//! `persist::snapshot`). `load` accepts all three generations; LBV4 is
+//! only *written* once the corpus has actually crossed the quantize
+//! threshold, so pre-quantization deployments keep producing snapshots
+//! their older binaries can read back.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+#[cfg(unix)]
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use super::flat::FlatIndex;
 use super::ivf::{kmeans_centroids, nearest_centroid, IvfIndex};
+use super::quant::{codes_as_bytes, CodesSource, QuantIvfIndex};
 use super::{Hit, Metric, VectorIndex};
+#[cfg(unix)]
+use crate::util::mmap::MmapRegion;
 use crate::util::rng::Rng;
 
 /// Process-unique identity per [`AdaptiveIndex`] value. A [`RebuildPlan`]
@@ -92,12 +113,57 @@ const LBV3_MAGIC: &[u8; 4] = b"LBV3";
 /// not quietly lose recall.
 const LBV3_HEADER: usize = 4 + 4 + 1 + 8 + 4 + 4 + 8;
 
+/// LBV4 snapshot magic: LBV3's trained section, rows i8-quantized, code
+/// region mmap-aligned for lazy cold boot.
+const LBV4_MAGIC: &[u8; 4] = b"LBV4";
+/// LBV4 layout:
+///
+/// ```text
+/// "LBV4"                          4-byte magic
+/// [dim       u32][metric u8]      geometry (as LBV2/LBV3)
+/// [count     u64]
+/// [nlist     u32][nprobe u32]     trained policy (as LBV3)
+/// [codes_off u64]                 file offset of the code region,
+///                                 4096-aligned: header+metadata faults
+///                                 stay off the code pages on 4k systems
+/// [meta_crc  u64]                 FNV-1a over the metadata payload
+/// [codes_crc u64]                 FNV-1a over the code region
+/// [ids         count×u64]         metadata payload: cell-grouped rows …
+/// [assignments count×u32]         … non-decreasing cell per row
+/// [scales      count×f32]         per-row dequantization scale
+/// [centroids   nlist×dim×f32]     trained coarse quantizer
+/// [zero-pad    to codes_off]
+/// [codes       count×dim×i8]      row-major, cell-contiguous
+/// ```
+///
+/// The split checksum is what makes the lazy boot sound: `meta_crc` is
+/// verified eagerly on every load (metadata is a few pages), while
+/// `codes_crc` covers the region the mapped path deliberately does *not*
+/// read — it is verified on the eager (non-unix / in-memory) path, and
+/// kept in the header so any reader *can* audit a suspect file.
+const LBV4_HEADER: usize = 4 + 4 + 1 + 8 + 4 + 4 + 8 + 8 + 8;
+
+/// Align the code region to 4096 bytes. The map itself is whole-file from
+/// offset 0 (no mmap alignment constraint), but keeping codes on their own
+/// 4k pages means the eager metadata parse on load faults no code page on
+/// the common 4k-page systems — the laziness the format exists for.
+fn align_up_4k(n: usize) -> usize {
+    (n + 4095) & !4095
+}
+
 /// Tier/retrain policy knobs (defaults are the cache's production shape).
 #[derive(Clone, Debug)]
 pub struct AdaptiveConfig {
     /// Row count at/above which the flat tier migrates to IVF. Below it a
     /// flat scan is both faster and exact.
     pub migrate_threshold: usize,
+    /// Row count at/above which a (re)train builds the i8-quantized IVF
+    /// tier instead of the f32 one — `dim + 4` bytes/row instead of
+    /// `4·dim`, coarse-i8 scan + f32 rescore. The default keeps corpora
+    /// under ~a quarter-million rows on exact f32 arithmetic; above that,
+    /// memory-bandwidth wins dominate the quantization error (recall@4
+    /// stays ≥ 0.95 on clustered corpora — gated by test).
+    pub quantize_threshold: usize,
     /// Cells probed per query at effort 0; each over-fetch widening step
     /// doubles it (capped at an exhaustive all-cells probe). This is the
     /// value a (re)train stamps onto the IVF tier — the live tier's own
@@ -121,6 +187,7 @@ impl Default for AdaptiveConfig {
     fn default() -> AdaptiveConfig {
         AdaptiveConfig {
             migrate_threshold: 8192,
+            quantize_threshold: 262_144,
             nprobe: 8,
             kmeans_iters: 4,
             train_sample: 16384,
@@ -141,19 +208,24 @@ impl AdaptiveConfig {
 enum Tier {
     Flat(FlatIndex),
     Ivf(IvfIndex),
+    IvfQ(QuantIvfIndex),
 }
 
 /// Diagnostics surfaced through `SemanticCache::index_stats` (tests, the
 /// persistence suite's "restored without retraining" assertion, ops).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct IndexStats {
-    /// `"flat"` or `"ivf"`.
+    /// `"flat"`, `"ivf"`, or `"ivf_i8"`.
     pub tier: &'static str,
     pub rows: usize,
     /// Whether the IVF tier holds trained centroids (always false on flat).
     pub trained: bool,
     /// Coarse cells (0 on flat).
     pub nlist: usize,
+    /// Logical bytes of the scanned vector region: `rows·dim·4` on the f32
+    /// tiers, `rows·(dim+4)` on the quantized tier — what the ≥ 3.5x
+    /// memory-cut acceptance gate measures.
+    pub vector_bytes: usize,
 }
 
 /// Everything a trainer needs, exported under the read lock: row snapshot
@@ -169,9 +241,56 @@ pub struct RebuildPlan {
     epoch: u64,
 }
 
-/// A trained IVF tier ready to [`AdaptiveIndex::install`].
+/// Which index a (re)train produced — f32 IVF below the quantize
+/// threshold, i8 IVF at/above it. Both expose the same reconcile surface
+/// (contains / insert_stored / remove / for_each_row), which is all
+/// [`AdaptiveIndex::install`] needs.
+enum TrainedKind {
+    Ivf(IvfIndex),
+    IvfQ(QuantIvfIndex),
+}
+
+impl TrainedKind {
+    fn len(&self) -> usize {
+        match self {
+            TrainedKind::Ivf(i) => i.len(),
+            TrainedKind::IvfQ(q) => q.len(),
+        }
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        match self {
+            TrainedKind::Ivf(i) => i.contains(id),
+            TrainedKind::IvfQ(q) => q.contains(id),
+        }
+    }
+
+    fn insert_stored(&mut self, id: u64, row: &[f32]) -> Result<()> {
+        match self {
+            TrainedKind::Ivf(i) => i.insert_stored(id, row),
+            TrainedKind::IvfQ(q) => q.insert_stored(id, row),
+        }
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        match self {
+            TrainedKind::Ivf(i) => i.remove(id),
+            TrainedKind::IvfQ(q) => q.remove(id),
+        }
+    }
+
+    fn for_each_row(&self, f: impl FnMut(u64, &[f32])) {
+        match self {
+            TrainedKind::Ivf(i) => i.for_each_row(f),
+            TrainedKind::IvfQ(q) => q.for_each_row(f),
+        }
+    }
+}
+
+/// A trained IVF tier (f32 or quantized) ready to
+/// [`AdaptiveIndex::install`].
 pub struct TrainedTier {
-    ivf: IvfIndex,
+    kind: TrainedKind,
     instance: u64,
     epoch: u64,
 }
@@ -211,18 +330,37 @@ impl RebuildPlan {
                 ) as u32
             })
             .collect();
-        let ivf = IvfIndex::from_trained_parts(
-            self.dim,
-            self.metric,
-            self.cfg.nprobe,
-            centroids,
-            self.ids,
-            self.rows,
-            &assignments,
-        )
-        .expect("self-built trained parts are consistent");
+        // At/above the quantize threshold the trained tier stores i8 codes
+        // instead of f32 rows — same centroids, same assignments.
+        let kind = if n >= self.cfg.quantize_threshold {
+            TrainedKind::IvfQ(
+                QuantIvfIndex::from_trained_parts(
+                    self.dim,
+                    self.metric,
+                    self.cfg.nprobe,
+                    centroids,
+                    self.ids,
+                    &self.rows,
+                    &assignments,
+                )
+                .expect("self-built trained parts are consistent"),
+            )
+        } else {
+            TrainedKind::Ivf(
+                IvfIndex::from_trained_parts(
+                    self.dim,
+                    self.metric,
+                    self.cfg.nprobe,
+                    centroids,
+                    self.ids,
+                    self.rows,
+                    &assignments,
+                )
+                .expect("self-built trained parts are consistent"),
+            )
+        };
         TrainedTier {
-            ivf,
+            kind,
             instance: self.instance,
             epoch: self.epoch,
         }
@@ -272,14 +410,26 @@ impl AdaptiveIndex {
         match &self.tier {
             Tier::Flat(f) => f.metric(),
             Tier::Ivf(i) => i.metric(),
+            Tier::IvfQ(q) => q.metric(),
         }
     }
 
-    /// Whether `id` has a row (O(1) on both tiers).
+    /// Whether `id` has a row (O(1) on every tier).
     pub fn contains(&self, id: u64) -> bool {
         match &self.tier {
             Tier::Flat(f) => f.contains(id),
             Tier::Ivf(i) => i.contains(id),
+            Tier::IvfQ(q) => q.contains(id),
+        }
+    }
+
+    /// Cells of the quantized tier still backed by lazy mmap views of an
+    /// LBV4 snapshot (0 on other tiers, or once churn has materialized
+    /// everything) — what the boot-laziness tests observe.
+    pub fn lazy_cells(&self) -> usize {
+        match &self.tier {
+            Tier::IvfQ(q) => q.mapped_cells(),
+            _ => 0,
         }
     }
 
@@ -290,12 +440,21 @@ impl AdaptiveIndex {
                 rows: f.len(),
                 trained: false,
                 nlist: 0,
+                vector_bytes: f.len() * f.dim() * 4,
             },
             Tier::Ivf(i) => IndexStats {
                 tier: "ivf",
                 rows: i.len(),
                 trained: i.is_trained(),
                 nlist: i.nlist(),
+                vector_bytes: i.len() * i.dim() * 4,
+            },
+            Tier::IvfQ(q) => IndexStats {
+                tier: "ivf_i8",
+                rows: q.len(),
+                trained: true,
+                nlist: q.nlist(),
+                vector_bytes: q.vector_bytes(),
             },
         }
     }
@@ -333,19 +492,36 @@ impl AdaptiveIndex {
                     probes >= i.nlist(),
                 )
             }
+            Tier::IvfQ(q) => {
+                // Same widening policy as the f32 IVF tier. "Exhaustive"
+                // here means every cell was probed — scores are still
+                // rescored-exact, so a full probe is as good as flat for
+                // the caller's miss decision.
+                let probes = q
+                    .nprobe
+                    .max(1)
+                    .saturating_mul(1usize << effort.min(20))
+                    .min(q.nlist());
+                (
+                    q.search_probes(query, k, min_score, probes),
+                    probes >= q.nlist(),
+                )
+            }
         }
     }
 
     /// Does the index want a (re)train? Flat: the corpus outgrew the
     /// migration threshold. IVF: churn since the last train exceeds the
-    /// drift fraction.
+    /// drift fraction, or the corpus outgrew the quantize threshold (the
+    /// next train then produces the i8 tier). Quantized IVF: churn drift
+    /// only — there is no further tier to promote to.
     pub fn needs_rebuild(&self) -> bool {
+        let drifted = self.churn_since_train as f64
+            >= self.cfg.retrain_fraction * self.trained_rows.max(1) as f64;
         match &self.tier {
             Tier::Flat(f) => !f.is_empty() && f.len() >= self.cfg.migrate_threshold,
-            Tier::Ivf(_) => {
-                self.churn_since_train as f64
-                    >= self.cfg.retrain_fraction * self.trained_rows.max(1) as f64
-            }
+            Tier::Ivf(i) => drifted || i.len() >= self.cfg.quantize_threshold,
+            Tier::IvfQ(_) => drifted,
         }
     }
 
@@ -360,6 +536,18 @@ impl AdaptiveIndex {
             Tier::Flat(f) => (f.ids().to_vec(), f.rows().to_vec()),
             Tier::Ivf(i) => {
                 let (ids, rows, _) = i.export_parts();
+                (ids, rows)
+            }
+            Tier::IvfQ(q) => {
+                // Export dequantized rows: re-quantization is idempotent
+                // (see `quant`), so a retrain over these rows reproduces
+                // the codes rather than compounding quantization error.
+                let mut ids = Vec::with_capacity(q.len());
+                let mut rows = Vec::with_capacity(q.len() * q.dim());
+                q.for_each_row(|id, row| {
+                    ids.push(id);
+                    rows.extend_from_slice(row);
+                });
                 (ids, rows)
             }
         };
@@ -393,43 +581,48 @@ impl AdaptiveIndex {
         if trained.instance != self.instance {
             return false;
         }
-        let mut ivf = trained.ivf;
+        let mut kind = trained.kind;
         if trained.epoch != self.epoch {
             // Additions: in the live tier but unknown to the trained one.
             let mut added: Vec<(u64, Vec<f32>)> = Vec::new();
             self.for_each_row(|id, row| {
-                if !ivf.contains(id) {
+                if !kind.contains(id) {
                     added.push((id, row.to_vec()));
                 }
             });
             // Removals: trained from a row that has since been deleted.
             let mut removed: Vec<u64> = Vec::new();
-            ivf.for_each_row(|id, _| {
+            kind.for_each_row(|id, _| {
                 if !self.contains(id) {
                     removed.push(id);
                 }
             });
             for (id, row) in added {
                 // Rows are already in stored (normalized) form.
-                ivf.insert_stored(id, &row)
+                kind.insert_stored(id, &row)
                     .expect("reconciled row has the index's dim");
             }
             for id in removed {
-                ivf.remove(id);
+                kind.remove(id);
             }
         }
-        debug_assert_eq!(ivf.len(), self.len());
-        self.trained_rows = ivf.len();
+        debug_assert_eq!(kind.len(), self.len());
+        self.trained_rows = kind.len();
         self.churn_since_train = 0;
-        self.tier = Tier::Ivf(ivf);
+        self.tier = match kind {
+            TrainedKind::Ivf(i) => Tier::Ivf(i),
+            TrainedKind::IvfQ(q) => Tier::IvfQ(q),
+        };
         true
     }
 
-    /// Visit every `(id, row)` pair in stored form.
+    /// Visit every `(id, row)` pair in stored form (quantized tier rows
+    /// are dequantized on the fly).
     pub(crate) fn for_each_row(&self, f: impl FnMut(u64, &[f32])) {
         match &self.tier {
             Tier::Flat(fl) => fl.for_each_row(f),
             Tier::Ivf(i) => i.for_each_row(f),
+            Tier::IvfQ(q) => q.for_each_row(f),
         }
     }
 
@@ -437,10 +630,54 @@ impl AdaptiveIndex {
 
     /// Durable image: the flat tier writes LBV2 unchanged (old readers
     /// keep working); the IVF tier writes LBV3 so a restore skips
-    /// training. Both are written + fsynced like [`FlatIndex::save`].
+    /// training; the quantized tier writes LBV4 so a restore additionally
+    /// skips *reading the corpus* (the code region is mmap'd lazily on
+    /// unix). All are written + fsynced like [`FlatIndex::save`].
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
         match &self.tier {
             Tier::Flat(f) => f.save(path),
+            Tier::IvfQ(q) => {
+                let (ids, scales, assignments, codes) = q.export_quantized_parts();
+                let dim = q.dim();
+                let centroids = q.centroids();
+                let mut meta: Vec<u8> =
+                    Vec::with_capacity(ids.len() * 16 + centroids.len() * 4);
+                for id in &ids {
+                    meta.extend_from_slice(&id.to_le_bytes());
+                }
+                for a in &assignments {
+                    meta.extend_from_slice(&a.to_le_bytes());
+                }
+                for s in &scales {
+                    meta.extend_from_slice(&s.to_le_bytes());
+                }
+                for c in centroids {
+                    meta.extend_from_slice(&c.to_le_bytes());
+                }
+                let codes_off = align_up_4k(LBV4_HEADER + meta.len());
+                let code_bytes = codes_as_bytes(&codes);
+                let mut out: Vec<u8> = Vec::with_capacity(codes_off + code_bytes.len());
+                out.extend_from_slice(LBV4_MAGIC);
+                out.extend((dim as u32).to_le_bytes());
+                out.push(match q.metric() {
+                    Metric::Cosine => 0,
+                    Metric::Dot => 1,
+                    Metric::L2 => 2,
+                });
+                out.extend((ids.len() as u64).to_le_bytes());
+                out.extend((q.nlist() as u32).to_le_bytes());
+                out.extend((q.nprobe as u32).to_le_bytes());
+                out.extend((codes_off as u64).to_le_bytes());
+                out.extend(crate::util::fnv1a(&meta).to_le_bytes());
+                out.extend(crate::util::fnv1a(code_bytes).to_le_bytes());
+                out.extend_from_slice(&meta);
+                out.resize(codes_off, 0);
+                out.extend_from_slice(code_bytes);
+                let mut f = std::fs::File::create(path)?;
+                std::io::Write::write_all(&mut f, &out)?;
+                f.sync_all()?;
+                Ok(())
+            }
             Tier::Ivf(i) => {
                 let (ids, rows, assignments) = i.export_parts();
                 let dim = i.dim();
@@ -484,12 +721,32 @@ impl AdaptiveIndex {
 
     /// Load a snapshot written by [`AdaptiveIndex::save`] — or by the
     /// pre-adaptive [`FlatIndex::save`] (LBV2 boots as the flat tier).
+    ///
+    /// LBV2/LBV3 are read whole; an LBV4 file is **mapped** on unix — only
+    /// the 4-byte magic and the metadata pages are actually read before
+    /// this returns, the code region stays non-resident until queried.
     pub fn load(path: &std::path::Path, cfg: AdaptiveConfig) -> Result<AdaptiveIndex> {
+        let mut magic = [0u8; 4];
+        let has_magic = {
+            let mut f = std::fs::File::open(path)?;
+            std::io::Read::read_exact(&mut f, &mut magic).is_ok()
+        };
+        if has_magic && &magic == LBV4_MAGIC {
+            #[cfg(unix)]
+            {
+                return Self::load_lbv4_mapped(path, cfg);
+            }
+        }
+        // LBV2/LBV3 (and sub-4-byte files, which fail with the LBV2
+        // reader's own error) — plus LBV4 on non-unix, read eagerly.
         let bytes = std::fs::read(path)?;
         Self::from_snapshot_bytes(&bytes, cfg)
     }
 
     pub(crate) fn from_snapshot_bytes(bytes: &[u8], cfg: AdaptiveConfig) -> Result<AdaptiveIndex> {
+        if bytes.len() >= 4 && &bytes[0..4] == LBV4_MAGIC {
+            return Self::from_lbv4_bytes(bytes, cfg);
+        }
         if bytes.len() >= 4 && &bytes[0..4] == LBV3_MAGIC {
             return Self::from_lbv3_bytes(bytes, cfg);
         }
@@ -574,6 +831,170 @@ impl AdaptiveIndex {
             churn_since_train: 0,
         })
     }
+
+    /// Eager LBV4 reader: all bytes in memory, **both** checksums verified
+    /// (the non-unix fallback, and what the corruption tests exercise).
+    fn from_lbv4_bytes(bytes: &[u8], cfg: AdaptiveConfig) -> Result<AdaptiveIndex> {
+        let meta = Lbv4Meta::parse(bytes)?;
+        if crate::util::fnv1a(&bytes[meta.codes_off..]) != meta.codes_crc {
+            bail!("corrupt LBV4 snapshot: codes checksum mismatch");
+        }
+        let codes_off = meta.codes_off;
+        Self::from_lbv4_meta(meta, CodesSource::Eager(&bytes[codes_off..]), cfg)
+    }
+
+    /// Lazy LBV4 reader: maps the file, parses + checksums the metadata
+    /// pages only, and hands the quantized tier mmap-backed cells. Returns
+    /// before any code byte is resident; `codes_crc` stays unverified by
+    /// design (reading the region to hash it would defeat the laziness —
+    /// it is in the header for offline audits and the eager path).
+    #[cfg(unix)]
+    fn load_lbv4_mapped(path: &std::path::Path, cfg: AdaptiveConfig) -> Result<AdaptiveIndex> {
+        let f = std::fs::File::open(path)?;
+        let map = Arc::new(MmapRegion::map_file(&f)?);
+        let meta = Lbv4Meta::parse(map.as_bytes())?;
+        let codes_off = meta.codes_off;
+        Self::from_lbv4_meta(
+            meta,
+            CodesSource::Mapped {
+                map: Arc::clone(&map),
+                codes_off,
+            },
+            cfg,
+        )
+    }
+
+    fn from_lbv4_meta(
+        meta: Lbv4Meta,
+        codes: CodesSource<'_>,
+        cfg: AdaptiveConfig,
+    ) -> Result<AdaptiveIndex> {
+        let q = QuantIvfIndex::from_grouped_parts(
+            meta.dim,
+            meta.metric,
+            meta.nprobe,
+            meta.centroids,
+            meta.ids,
+            meta.scales,
+            &meta.assignments,
+            codes,
+        )?;
+        let trained_rows = q.len();
+        Ok(AdaptiveIndex {
+            cfg,
+            tier: Tier::IvfQ(q),
+            instance: fresh_instance(),
+            epoch: 0,
+            trained_rows,
+            churn_since_train: 0,
+        })
+    }
+}
+
+/// Parsed LBV4 header + metadata payload (everything except the codes).
+struct Lbv4Meta {
+    dim: usize,
+    metric: Metric,
+    nprobe: usize,
+    codes_off: usize,
+    codes_crc: u64,
+    ids: Vec<u64>,
+    scales: Vec<f32>,
+    assignments: Vec<u32>,
+    centroids: Vec<f32>,
+}
+
+impl Lbv4Meta {
+    /// Parse and validate header + metadata from the whole file image
+    /// (owned bytes or an mmap — on a map, only metadata pages fault in).
+    /// Checks: section arithmetic (overflow-safe), the stored `codes_off`
+    /// against the one the geometry implies, exact total file size, and
+    /// the metadata checksum. Code bytes are *not* touched.
+    fn parse(bytes: &[u8]) -> Result<Lbv4Meta> {
+        if bytes.len() < LBV4_HEADER {
+            bail!(
+                "truncated LBV4 snapshot: {} bytes, header is {LBV4_HEADER}",
+                bytes.len()
+            );
+        }
+        let dim = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+        let metric = match bytes[8] {
+            0 => Metric::Cosine,
+            1 => Metric::Dot,
+            2 => Metric::L2,
+            m => bail!("bad metric tag {m}"),
+        };
+        let count = u64::from_le_bytes(bytes[9..17].try_into()?) as usize;
+        let nlist = u32::from_le_bytes(bytes[17..21].try_into()?) as usize;
+        let nprobe = u32::from_le_bytes(bytes[21..25].try_into()?) as usize;
+        let codes_off = u64::from_le_bytes(bytes[25..33].try_into()?);
+        let meta_crc = u64::from_le_bytes(bytes[33..41].try_into()?);
+        let codes_crc = u64::from_le_bytes(bytes[41..49].try_into()?);
+        let (meta_len, codes_len) = (|| {
+            let ids = count.checked_mul(8)?;
+            let assigns = count.checked_mul(4)?;
+            let scales = count.checked_mul(4)?;
+            let cents = nlist.checked_mul(dim)?.checked_mul(4)?;
+            let meta_len = ids.checked_add(assigns)?.checked_add(scales)?.checked_add(cents)?;
+            let codes_len = count.checked_mul(dim)?;
+            Some((meta_len, codes_len))
+        })()
+        .ok_or_else(|| {
+            anyhow::anyhow!("LBV4 snapshot header overflows: count={count} dim={dim} nlist={nlist}")
+        })?;
+        let want_off = LBV4_HEADER
+            .checked_add(meta_len)
+            .map(align_up_4k)
+            .ok_or_else(|| anyhow::anyhow!("LBV4 snapshot header overflows: meta={meta_len}"))?;
+        if codes_off != want_off as u64 {
+            bail!("corrupt LBV4 snapshot: codes_off {codes_off}, geometry implies {want_off}");
+        }
+        let codes_off = want_off;
+        let want_total = codes_off.checked_add(codes_len).ok_or_else(|| {
+            anyhow::anyhow!("LBV4 snapshot header overflows: codes_off={codes_off}")
+        })?;
+        if bytes.len() != want_total {
+            bail!(
+                "corrupt LBV4 snapshot: {} bytes for count={count} dim={dim} nlist={nlist} \
+                 (expected {want_total})",
+                bytes.len()
+            );
+        }
+        let meta_bytes = &bytes[LBV4_HEADER..LBV4_HEADER + meta_len];
+        if crate::util::fnv1a(meta_bytes) != meta_crc {
+            bail!("corrupt LBV4 snapshot: metadata checksum mismatch");
+        }
+        let ids_end = count * 8;
+        let assigns_end = ids_end + count * 4;
+        let scales_end = assigns_end + count * 4;
+        let mut ids = Vec::with_capacity(count);
+        for c in meta_bytes[..ids_end].chunks_exact(8) {
+            ids.push(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let mut assignments = Vec::with_capacity(count);
+        for c in meta_bytes[ids_end..assigns_end].chunks_exact(4) {
+            assignments.push(u32::from_le_bytes(c.try_into().unwrap()));
+        }
+        let mut scales = Vec::with_capacity(count);
+        for c in meta_bytes[assigns_end..scales_end].chunks_exact(4) {
+            scales.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        let mut centroids = Vec::with_capacity(nlist * dim);
+        for c in meta_bytes[scales_end..].chunks_exact(4) {
+            centroids.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(Lbv4Meta {
+            dim,
+            metric,
+            nprobe,
+            codes_off,
+            codes_crc,
+            ids,
+            scales,
+            assignments,
+            centroids,
+        })
+    }
 }
 
 impl VectorIndex for AdaptiveIndex {
@@ -581,6 +1002,7 @@ impl VectorIndex for AdaptiveIndex {
         match &self.tier {
             Tier::Flat(f) => f.dim(),
             Tier::Ivf(i) => i.dim(),
+            Tier::IvfQ(q) => q.dim(),
         }
     }
 
@@ -588,6 +1010,7 @@ impl VectorIndex for AdaptiveIndex {
         match &self.tier {
             Tier::Flat(f) => f.len(),
             Tier::Ivf(i) => i.len(),
+            Tier::IvfQ(q) => q.len(),
         }
     }
 
@@ -595,6 +1018,7 @@ impl VectorIndex for AdaptiveIndex {
         match &mut self.tier {
             Tier::Flat(f) => f.insert(id, vector)?,
             Tier::Ivf(i) => i.insert(id, vector)?,
+            Tier::IvfQ(q) => q.insert(id, vector)?,
         }
         self.epoch += 1;
         self.churn_since_train += 1;
@@ -605,6 +1029,7 @@ impl VectorIndex for AdaptiveIndex {
         let removed = match &mut self.tier {
             Tier::Flat(f) => f.remove(id),
             Tier::Ivf(i) => i.remove(id),
+            Tier::IvfQ(q) => q.remove(id),
         };
         if removed {
             self.epoch += 1;
@@ -621,11 +1046,15 @@ impl VectorIndex for AdaptiveIndex {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::corpus;
     use crate::util::prop::forall;
 
     fn small_cfg(threshold: usize) -> AdaptiveConfig {
         AdaptiveConfig {
             migrate_threshold: threshold,
+            // Out of reach: existing tests exercise the f32 IVF tier; the
+            // quantized-tier tests below override this explicitly.
+            quantize_threshold: usize::MAX,
             nprobe: 8,
             kmeans_iters: 3,
             train_sample: 4096,
@@ -639,19 +1068,11 @@ mod tests {
     }
 
     /// Points around well-separated centers — the workload shape IVF is
-    /// built for (cached prompts cluster by topic).
+    /// built for (cached prompts cluster by topic). Same RNG call sequence
+    /// as the pre-PR-6 inline generator, so seeded corpora (and the recall
+    /// numbers gated on them) are bit-identical.
     fn clustered(seed: u64, n: usize, dim: usize, centers: usize) -> Vec<(u64, Vec<f32>)> {
-        let mut rng = Rng::new(seed);
-        let cs: Vec<Vec<f32>> = (0..centers)
-            .map(|_| (0..dim).map(|_| rng.normal() as f32 * 8.0).collect())
-            .collect();
-        (0..n)
-            .map(|i| {
-                let c = rng.choice(&cs).clone();
-                let v = c.iter().map(|x| x + rng.normal() as f32 * 0.4).collect();
-                (i as u64, v)
-            })
-            .collect()
+        corpus::clustered_pairs(seed, n, dim, centers, 8.0, 0.4)
     }
 
     fn migrated(data: &[(u64, Vec<f32>)], dim: usize, cfg: AdaptiveConfig) -> AdaptiveIndex {
@@ -984,5 +1405,209 @@ mod tests {
         // Shorter than the LBV3 header falls through to the LBV2 reader's
         // validation (bad magic / truncated).
         assert!(AdaptiveIndex::from_snapshot_bytes(&good[..3], small_cfg(300)).is_err());
+    }
+
+    /// The corpus climbs all three tiers through the normal maintenance
+    /// path: flat below migrate_threshold, f32 IVF between the thresholds,
+    /// i8 IVF once it outgrows quantize_threshold — and the promotion is
+    /// armed by size alone, not churn drift.
+    #[test]
+    fn promotes_flat_to_ivf_to_quantized() {
+        let dim = 16;
+        let mut cfg = small_cfg(300);
+        cfg.quantize_threshold = 900;
+        // Drift can't fire: promotions below must come from the size arms.
+        cfg.retrain_fraction = 100.0;
+        let data = clustered(0x9A7, 1200, dim, 8);
+        let mut adaptive = AdaptiveIndex::new(dim, Metric::Cosine, cfg);
+        for (id, v) in data.iter().take(400) {
+            adaptive.insert(*id, v).unwrap();
+        }
+        assert!(adaptive.needs_rebuild(), "flat past migrate_threshold");
+        let plan = adaptive.rebuild_plan().unwrap();
+        assert!(adaptive.install(plan.train()));
+        assert_eq!(adaptive.stats().tier, "ivf", "below quantize_threshold");
+        assert!(!adaptive.needs_rebuild());
+
+        for (id, v) in data.iter().skip(400) {
+            adaptive.insert(*id, v).unwrap();
+        }
+        assert!(adaptive.needs_rebuild(), "ivf past quantize_threshold");
+        let plan = adaptive.rebuild_plan().unwrap();
+        assert!(adaptive.install(plan.train()));
+        let stats = adaptive.stats();
+        assert_eq!(stats.tier, "ivf_i8");
+        assert!(stats.trained);
+        assert_eq!(stats.rows, 1200);
+        assert_eq!(stats.vector_bytes, 1200 * (dim + 4));
+        assert!(!adaptive.needs_rebuild(), "freshly promoted: no drift");
+        assert_eq!(adaptive.lazy_cells(), 0, "built in memory, not mapped");
+        // The tier stays functional under churn and keeps O(1) contains.
+        assert!(adaptive.remove(data[0].0));
+        assert!(!adaptive.contains(data[0].0));
+        adaptive.insert(data[0].0, &data[0].1).unwrap();
+        assert!(adaptive.contains(data[0].0));
+    }
+
+    /// The acceptance gate for the quantized tier: on a 20k clustered
+    /// corpus, recall@4 against exact f32 flat ground truth stays ≥ 0.95
+    /// while the vector region shrinks ≥ 3.5x versus f32 rows. 4 points
+    /// per cluster makes the true top-4 a whole, well-separated cluster —
+    /// see `util::corpus::balanced_clustered_pairs`.
+    #[test]
+    fn quantized_recall_at_4_and_bytes_cut_clustered_20k() {
+        let dim = 32;
+        let data = corpus::balanced_clustered_pairs(0xC0FFEE, 5000, 4, dim, 8.0, 0.4);
+        let mut flat = FlatIndex::new(dim, Metric::Cosine);
+        for (id, v) in &data {
+            flat.insert(*id, v).unwrap();
+        }
+        let mut cfg = small_cfg(1000);
+        cfg.quantize_threshold = 1000;
+        let adaptive = migrated_quantized(&data, dim, cfg);
+        let stats = adaptive.stats();
+        let cut = (stats.rows * dim * 4) as f64 / stats.vector_bytes as f64;
+        assert!(cut >= 3.5, "vector-region cut only {cut:.2}x");
+
+        let mut rng = Rng::new(0xFACE);
+        let mut found = 0usize;
+        let mut total = 0usize;
+        for _ in 0..60 {
+            let (_, base) = &data[rng.below(data.len())];
+            let q = corpus::perturbed(&mut rng, base, 0.1);
+            let truth: Vec<u64> = flat.search(&q, 4, f32::MIN).iter().map(|h| h.id).collect();
+            let got: Vec<u64> = adaptive.search(&q, 4, f32::MIN).iter().map(|h| h.id).collect();
+            total += truth.len();
+            found += truth.iter().filter(|t| got.contains(t)).count();
+        }
+        let recall = found as f64 / total as f64;
+        assert!(recall >= 0.95, "recall@4={recall}");
+    }
+
+    /// Like [`migrated`] but with the quantize threshold set so the train
+    /// lands on the i8 tier directly.
+    fn migrated_quantized(
+        data: &[(u64, Vec<f32>)],
+        dim: usize,
+        cfg: AdaptiveConfig,
+    ) -> AdaptiveIndex {
+        let mut adaptive = AdaptiveIndex::new(dim, Metric::Cosine, cfg);
+        for (id, v) in data {
+            adaptive.insert(*id, v).unwrap();
+        }
+        let plan = adaptive.rebuild_plan().expect("above threshold");
+        assert!(adaptive.install(plan.train()));
+        assert_eq!(adaptive.stats().tier, "ivf_i8");
+        adaptive
+    }
+
+    /// LBV4 round-trip: a quantized index restores bit-identically. On
+    /// unix the restore is lazy — cells stay mmap-backed until churn
+    /// materializes them one at a time.
+    #[test]
+    fn snapshot_roundtrip_lbv4() {
+        let dim = 16;
+        let dir = std::env::temp_dir().join("llmbridge_adaptive_snap");
+        std::fs::create_dir_all(&dir).unwrap();
+        let data = corpus::balanced_clustered_pairs(0x1CE4, 400, 4, dim, 8.0, 0.4);
+        let mut cfg = small_cfg(500);
+        cfg.quantize_threshold = 500;
+        let adaptive = migrated_quantized(&data, dim, cfg.clone());
+        let path = dir.join("adaptive.lbv4.bin");
+        adaptive.save(&path).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(&raw[0..4], LBV4_MAGIC);
+        let back = AdaptiveIndex::load(&path, cfg).unwrap();
+        assert_eq!(back.stats(), adaptive.stats());
+        #[cfg(unix)]
+        {
+            assert!(
+                back.lazy_cells() > 0,
+                "unix load should leave cells mmap-backed"
+            );
+        }
+        // Same i8 codes + scales + centroids → identical probe order and
+        // rescore arithmetic: hits are bit-exact live vs restored.
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let q = rand_vec(&mut rng, dim);
+            let a = adaptive.search(&q, 5, f32::MIN);
+            let b = back.search(&q, 5, f32::MIN);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
+        // Copy-on-write: one insert materializes exactly the touched cell.
+        let mut back = back;
+        let before = back.lazy_cells();
+        back.insert(999_999, &data[0].1).unwrap();
+        #[cfg(unix)]
+        {
+            assert!(back.lazy_cells() < before, "insert must materialize its cell");
+            assert!(back.lazy_cells() >= before - 1, "… and only its cell");
+        }
+        assert!(back.contains(999_999));
+        assert!(back.remove(999_999));
+        let _ = before;
+    }
+
+    #[test]
+    fn load_rejects_corrupt_lbv4() {
+        let dim = 8;
+        let dir = std::env::temp_dir().join("llmbridge_adaptive_snap");
+        std::fs::create_dir_all(&dir).unwrap();
+        let data = corpus::balanced_clustered_pairs(0xBAD4, 150, 4, dim, 8.0, 0.4);
+        let mut cfg = small_cfg(300);
+        cfg.quantize_threshold = 300;
+        let adaptive = migrated_quantized(&data, dim, cfg.clone());
+        let path = dir.join("corrupt.lbv4.bin");
+        adaptive.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        assert_eq!(&good[0..4], LBV4_MAGIC);
+        let count = adaptive.len();
+
+        // Truncated: code region short.
+        let err = AdaptiveIndex::from_snapshot_bytes(&good[..good.len() - 3], small_cfg(300))
+            .unwrap_err();
+        assert!(err.to_string().contains("corrupt LBV4"), "{err}");
+        // Trailing garbage.
+        let mut trailing = good.clone();
+        trailing.extend_from_slice(&[1, 2, 3]);
+        assert!(AdaptiveIndex::from_snapshot_bytes(&trailing, small_cfg(300)).is_err());
+        // Metadata bit-flip (an id byte) → metadata checksum.
+        let mut bad = good.clone();
+        bad[LBV4_HEADER + 1] ^= 0x01;
+        let err = AdaptiveIndex::from_snapshot_bytes(&bad, small_cfg(300)).unwrap_err();
+        assert!(err.to_string().contains("metadata checksum"), "{err}");
+        // Code-region bit-flip → codes checksum (eager path).
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 1] ^= 0x10;
+        let err = AdaptiveIndex::from_snapshot_bytes(&bad, small_cfg(300)).unwrap_err();
+        assert!(err.to_string().contains("codes checksum"), "{err}");
+        // Un-grouped assignments with a *recomputed* checksum: structural
+        // validation must reject what the crc can no longer catch. Set the
+        // first row's cell to the last cell id, breaking monotonicity.
+        let nlist = adaptive.stats().nlist;
+        assert!(nlist > 1);
+        let mut bad = good.clone();
+        let assigns_start = LBV4_HEADER + count * 8;
+        bad[assigns_start..assigns_start + 4]
+            .copy_from_slice(&((nlist - 1) as u32).to_le_bytes());
+        let meta_len = count * 8 + count * 4 + count * 4 + nlist * dim * 4;
+        let crc = crate::util::fnv1a(&bad[LBV4_HEADER..LBV4_HEADER + meta_len]);
+        bad[33..41].copy_from_slice(&crc.to_le_bytes());
+        let err = AdaptiveIndex::from_snapshot_bytes(&bad, small_cfg(300)).unwrap_err();
+        assert!(err.to_string().contains("not cell-grouped"), "{err}");
+        // The mapped path (load from a file) rejects metadata corruption
+        // too — write the flipped-id image out and load it.
+        let mut bad = good.clone();
+        bad[LBV4_HEADER + 1] ^= 0x01;
+        let bad_path = dir.join("corrupt_mapped.lbv4.bin");
+        std::fs::write(&bad_path, &bad).unwrap();
+        let err = AdaptiveIndex::load(&bad_path, small_cfg(300)).unwrap_err();
+        assert!(err.to_string().contains("metadata checksum"), "{err}");
     }
 }

@@ -64,6 +64,24 @@ pub(crate) fn nearest_centroid(metric: Metric, centroids: &[f32], dim: usize, v:
     best
 }
 
+/// The `n` cells with the best centroid score for `v`, best first — the
+/// probe order both IVF tiers (f32 and quantized) share.
+pub(crate) fn nearest_cells(
+    metric: Metric,
+    centroids: &[f32],
+    dim: usize,
+    v: &[f32],
+    n: usize,
+) -> Vec<usize> {
+    let nlist = centroids.len() / dim;
+    let mut scored: Vec<(usize, f32)> = (0..nlist)
+        .map(|c| (c, metric.score(v, &centroids[c * dim..(c + 1) * dim])))
+        .collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    scored.truncate(n);
+    scored.into_iter().map(|(c, _)| c).collect()
+}
+
 /// Lloyd's k-means over contiguous row-major `rows` (fixed iterations,
 /// random distinct seeding). Returns `min(k, n) * dim` centroids. Shared by
 /// [`IvfIndex::train`] and the adaptive tier's off-read-path retrain.
@@ -174,18 +192,7 @@ impl IvfIndex {
 
     /// The `n` cells with the best centroid score for `v`, best first.
     fn nearest_cells(&self, v: &[f32], n: usize) -> Vec<usize> {
-        let mut scored: Vec<(usize, f32)> = (0..self.nlist)
-            .map(|c| {
-                (
-                    c,
-                    self.metric
-                        .score(v, &self.centroids[c * self.dim..(c + 1) * self.dim]),
-                )
-            })
-            .collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        scored.truncate(n);
-        scored.into_iter().map(|(c, _)| c).collect()
+        nearest_cells(self.metric, &self.centroids, self.dim, v, n)
     }
 
     /// Insert a vector that is already in stored form (cosine rows

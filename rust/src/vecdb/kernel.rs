@@ -1,0 +1,540 @@
+//! Runtime-dispatched dot-product kernels: portable scalar, x86_64 AVX2,
+//! and aarch64 NEON — `std::arch` only, per the anyhow-only dependency
+//! policy (no `wide`/`packed_simd`).
+//!
+//! ## Bit-exactness contract
+//!
+//! Every SIMD variant computes the **same arithmetic in the same order**
+//! as the scalar kernel, so switching variants never changes a score bit:
+//!
+//! * f32 kernels accumulate 8 independent lanes over `chunks_exact(8)`
+//!   (AVX2: one 256-bit register; NEON: two 128-bit registers), multiply
+//!   and add as separate IEEE-rounded ops (**no FMA**), reduce the lanes
+//!   with an ordered left fold `l0 + l1 + … + l7`, then fold the scalar
+//!   remainder in element order.
+//! * i8 kernels widen to i32 and accumulate in i32 — integer addition is
+//!   associative, so any reduction shape matches the scalar loop exactly.
+//!
+//! The property tests at the bottom pin this contract per variant with
+//! `f32::to_bits` equality; `scripts/ci.sh` additionally re-runs the whole
+//! suite with [`FORCE_SCALAR_ENV`] set so the fallback path stays green on
+//! machines without AVX2/NEON.
+//!
+//! Dispatch is decided once per process ([`active_variant`], cached) and
+//! can be pinned to the fallback with `LLMBRIDGE_FORCE_SCALAR=1` —
+//! `llmbridge probe-backend` reports the decision.
+
+use std::sync::OnceLock;
+
+/// Environment variable that pins dispatch to the scalar fallback when set
+/// to `1` (read once, at the first kernel call).
+pub const FORCE_SCALAR_ENV: &str = "LLMBRIDGE_FORCE_SCALAR";
+
+/// Which kernel implementation the dispatchers run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelVariant {
+    /// Portable chunked-scalar kernels — the shape the SIMD variants mirror.
+    Scalar,
+    /// x86_64 AVX2 (256-bit lanes; mul + add, never FMA).
+    Avx2,
+    /// aarch64 NEON (two 128-bit registers emulating the 8-lane shape).
+    Neon,
+}
+
+impl KernelVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelVariant::Scalar => "scalar",
+            KernelVariant::Avx2 => "avx2",
+            KernelVariant::Neon => "neon",
+        }
+    }
+}
+
+/// The SIMD variant this host supports, ignoring the force-scalar override
+/// (`None` when the host has neither AVX2 nor NEON). The parity tests use
+/// this directly so they stay meaningful under the override.
+pub fn simd_variant() -> Option<KernelVariant> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            return Some(KernelVariant::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Some(KernelVariant::Neon);
+        }
+    }
+    None
+}
+
+/// The variant the public dispatchers use: hardware-detected once per
+/// process, pinned to [`KernelVariant::Scalar`] when [`FORCE_SCALAR_ENV`]
+/// is `1`.
+pub fn active_variant() -> KernelVariant {
+    static ACTIVE: OnceLock<KernelVariant> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        if std::env::var_os(FORCE_SCALAR_ENV).is_some_and(|v| v == "1") {
+            KernelVariant::Scalar
+        } else {
+            simd_variant().unwrap_or(KernelVariant::Scalar)
+        }
+    })
+}
+
+// ------------------------------------------------------------ dispatchers
+
+/// f32 dot product (runtime-dispatched).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_with(active_variant(), a, b)
+}
+
+/// One query against four consecutive row-major rows (runtime-dispatched).
+/// Each output is bit-identical to `dot(q, row_j)` in the same variant.
+#[inline]
+pub fn dot4(q: &[f32], rows: &[f32], dim: usize) -> [f32; 4] {
+    dot4_with(active_variant(), q, rows, dim)
+}
+
+/// i8 dot product, widened to i32 (runtime-dispatched; exact in any
+/// variant — integer accumulation has no rounding).
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    dot_i8_with(active_variant(), a, b)
+}
+
+/// One i8 query against four consecutive i8 rows (runtime-dispatched).
+#[inline]
+pub fn dot4_i8(q: &[i8], rows: &[i8], dim: usize) -> [i32; 4] {
+    dot4_i8_with(active_variant(), q, rows, dim)
+}
+
+/// Variant-explicit [`dot`] — the parity tests drive each variant directly.
+pub fn dot_with(variant: KernelVariant, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match variant {
+        KernelVariant::Scalar => dot_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: Avx2 is only handed out by detection on this host.
+        KernelVariant::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: Neon is only handed out by detection on this host.
+        KernelVariant::Neon => unsafe { neon::dot(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// Variant-explicit [`dot4`].
+pub fn dot4_with(variant: KernelVariant, q: &[f32], rows: &[f32], dim: usize) -> [f32; 4] {
+    debug_assert_eq!(q.len(), dim);
+    debug_assert_eq!(rows.len(), 4 * dim);
+    match variant {
+        KernelVariant::Scalar => dot4_scalar(q, rows, dim),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: Avx2 is only handed out by detection on this host.
+        KernelVariant::Avx2 => unsafe { avx2::dot4(q, rows, dim) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: Neon is only handed out by detection on this host.
+        KernelVariant::Neon => unsafe { neon::dot4(q, rows, dim) },
+        _ => dot4_scalar(q, rows, dim),
+    }
+}
+
+/// Variant-explicit [`dot_i8`].
+pub fn dot_i8_with(variant: KernelVariant, a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    match variant {
+        KernelVariant::Scalar => dot_i8_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: Avx2 is only handed out by detection on this host.
+        KernelVariant::Avx2 => unsafe { avx2::dot_i8(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: Neon is only handed out by detection on this host.
+        KernelVariant::Neon => unsafe { neon::dot_i8(a, b) },
+        _ => dot_i8_scalar(a, b),
+    }
+}
+
+/// Variant-explicit [`dot4_i8`].
+pub fn dot4_i8_with(variant: KernelVariant, q: &[i8], rows: &[i8], dim: usize) -> [i32; 4] {
+    debug_assert_eq!(q.len(), dim);
+    debug_assert_eq!(rows.len(), 4 * dim);
+    match variant {
+        KernelVariant::Scalar => dot4_i8_scalar(q, rows, dim),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: Avx2 is only handed out by detection on this host.
+        KernelVariant::Avx2 => unsafe { avx2::dot4_i8(q, rows, dim) },
+        #[cfg(target_arch = "aarch64")]
+        // Safety: Neon is only handed out by detection on this host.
+        KernelVariant::Neon => unsafe { neon::dot4_i8(q, rows, dim) },
+        _ => dot4_i8_scalar(q, rows, dim),
+    }
+}
+
+// ------------------------------------------------------------ scalar
+
+/// Chunked multi-accumulator scalar kernel: `chunks_exact` removes the
+/// bounds checks that block auto-vectorization, and the 8 independent
+/// accumulators are exactly the lane shape of the AVX2/NEON variants —
+/// the ordered left-fold reduction is what makes them bit-exact peers.
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for j in 0..8 {
+            acc[j] += xa[j] * xb[j];
+        }
+    }
+    let mut s = acc[0];
+    for &l in &acc[1..] {
+        s += l;
+    }
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+fn dot4_scalar(q: &[f32], rows: &[f32], dim: usize) -> [f32; 4] {
+    [
+        dot_scalar(q, &rows[..dim]),
+        dot_scalar(q, &rows[dim..2 * dim]),
+        dot_scalar(q, &rows[2 * dim..3 * dim]),
+        dot_scalar(q, &rows[3 * dim..4 * dim]),
+    ]
+}
+
+fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    a.iter().zip(b).map(|(&x, &y)| x as i32 * y as i32).sum()
+}
+
+fn dot4_i8_scalar(q: &[i8], rows: &[i8], dim: usize) -> [i32; 4] {
+    [
+        dot_i8_scalar(q, &rows[..dim]),
+        dot_i8_scalar(q, &rows[dim..2 * dim]),
+        dot_i8_scalar(q, &rows[2 * dim..3 * dim]),
+        dot_i8_scalar(q, &rows[3 * dim..4 * dim]),
+    ]
+}
+
+// ------------------------------------------------------------ x86_64 AVX2
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Safety (all fns here): the caller must have verified AVX2 support
+    /// via runtime detection before calling.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let va = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(c * 8));
+            // mul then add, separately rounded — bit-exact vs scalar.
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s = lanes[0];
+        for &l in &lanes[1..] {
+            s += l;
+        }
+        for (x, y) in a[chunks * 8..].iter().zip(&b[chunks * 8..]) {
+            s += x * y;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot4(q: &[f32], rows: &[f32], dim: usize) -> [f32; 4] {
+        let chunks = dim / 8;
+        let mut acc = [_mm256_setzero_ps(); 4];
+        for c in 0..chunks {
+            // One query load serves all four rows — the register-blocked
+            // form of the flat-scan hot loop.
+            let vq = _mm256_loadu_ps(q.as_ptr().add(c * 8));
+            for (r, a) in acc.iter_mut().enumerate() {
+                let vr = _mm256_loadu_ps(rows.as_ptr().add(r * dim + c * 8));
+                *a = _mm256_add_ps(*a, _mm256_mul_ps(vq, vr));
+            }
+        }
+        let mut out = [0.0f32; 4];
+        for (r, o) in out.iter_mut().enumerate() {
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), acc[r]);
+            let mut s = lanes[0];
+            for &l in &lanes[1..] {
+                s += l;
+            }
+            let row = &rows[r * dim..(r + 1) * dim];
+            for (x, y) in q[chunks * 8..].iter().zip(&row[chunks * 8..]) {
+                s += x * y;
+            }
+            *o = s;
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len();
+        let chunks = n / 16;
+        let mut acc = _mm256_setzero_si256();
+        for c in 0..chunks {
+            // 16 i8 → 16 i16, pairwise multiply-add to 8 i32 lanes.
+            let va = _mm_loadu_si128(a.as_ptr().add(c * 16) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(c * 16) as *const __m128i);
+            let prod = _mm256_madd_epi16(_mm256_cvtepi8_epi16(va), _mm256_cvtepi8_epi16(vb));
+            acc = _mm256_add_epi32(acc, prod);
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut s: i32 = lanes.iter().sum();
+        for (x, y) in a[chunks * 16..].iter().zip(&b[chunks * 16..]) {
+            s += *x as i32 * *y as i32;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot4_i8(q: &[i8], rows: &[i8], dim: usize) -> [i32; 4] {
+        [
+            dot_i8(q, &rows[..dim]),
+            dot_i8(q, &rows[dim..2 * dim]),
+            dot_i8(q, &rows[2 * dim..3 * dim]),
+            dot_i8(q, &rows[3 * dim..4 * dim]),
+        ]
+    }
+}
+
+// ------------------------------------------------------------ aarch64 NEON
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Safety (all fns here): the caller must have verified NEON support
+    /// via runtime detection before calling.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        // Two 128-bit accumulators emulate the scalar kernel's 8 lanes.
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let pa = a.as_ptr().add(c * 8);
+            let pb = b.as_ptr().add(c * 8);
+            // mul then add, separately rounded — bit-exact vs scalar.
+            acc_lo = vaddq_f32(acc_lo, vmulq_f32(vld1q_f32(pa), vld1q_f32(pb)));
+            acc_hi = vaddq_f32(acc_hi, vmulq_f32(vld1q_f32(pa.add(4)), vld1q_f32(pb.add(4))));
+        }
+        let mut lanes = [0.0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc_lo);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc_hi);
+        let mut s = lanes[0];
+        for &l in &lanes[1..] {
+            s += l;
+        }
+        for (x, y) in a[chunks * 8..].iter().zip(&b[chunks * 8..]) {
+            s += x * y;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot4(q: &[f32], rows: &[f32], dim: usize) -> [f32; 4] {
+        let chunks = dim / 8;
+        let mut lo = [vdupq_n_f32(0.0); 4];
+        let mut hi = [vdupq_n_f32(0.0); 4];
+        for c in 0..chunks {
+            let pq = q.as_ptr().add(c * 8);
+            let q_lo = vld1q_f32(pq);
+            let q_hi = vld1q_f32(pq.add(4));
+            for r in 0..4 {
+                let pr = rows.as_ptr().add(r * dim + c * 8);
+                lo[r] = vaddq_f32(lo[r], vmulq_f32(q_lo, vld1q_f32(pr)));
+                hi[r] = vaddq_f32(hi[r], vmulq_f32(q_hi, vld1q_f32(pr.add(4))));
+            }
+        }
+        let mut out = [0.0f32; 4];
+        for (r, o) in out.iter_mut().enumerate() {
+            let mut lanes = [0.0f32; 8];
+            vst1q_f32(lanes.as_mut_ptr(), lo[r]);
+            vst1q_f32(lanes.as_mut_ptr().add(4), hi[r]);
+            let mut s = lanes[0];
+            for &l in &lanes[1..] {
+                s += l;
+            }
+            let row = &rows[r * dim..(r + 1) * dim];
+            for (x, y) in q[chunks * 8..].iter().zip(&row[chunks * 8..]) {
+                s += x * y;
+            }
+            *o = s;
+        }
+        out
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len();
+        let chunks = n / 16;
+        let mut acc = vdupq_n_s32(0);
+        for c in 0..chunks {
+            let va = vld1q_s8(a.as_ptr().add(c * 16));
+            let vb = vld1q_s8(b.as_ptr().add(c * 16));
+            // Widening multiplies (i8×i8 → i16), pairwise-accumulated into
+            // i32 lanes — exact, like every integer reduction shape.
+            let p_lo = vmull_s8(vget_low_s8(va), vget_low_s8(vb));
+            let p_hi = vmull_s8(vget_high_s8(va), vget_high_s8(vb));
+            acc = vpadalq_s16(acc, p_lo);
+            acc = vpadalq_s16(acc, p_hi);
+        }
+        let mut s = vaddvq_s32(acc);
+        for (x, y) in a[chunks * 16..].iter().zip(&b[chunks * 16..]) {
+            s += *x as i32 * *y as i32;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot4_i8(q: &[i8], rows: &[i8], dim: usize) -> [i32; 4] {
+        [
+            dot_i8(q, &rows[..dim]),
+            dot_i8(q, &rows[dim..2 * dim]),
+            dot_i8(q, &rows[2 * dim..3 * dim]),
+            dot_i8(q, &rows[3 * dim..4 * dim]),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Lengths covering empty, sub-chunk, chunk-aligned, and remainders
+    /// for both the 8-lane f32 and 16-lane i8 chunk shapes.
+    const LENS: &[usize] = &[0, 1, 7, 8, 9, 15, 16, 17, 31, 32, 63, 64, 65, 127, 128];
+
+    fn f32_vec(r: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| r.normal() as f32).collect()
+    }
+
+    fn i8_vec(r: &mut Rng, len: usize) -> Vec<i8> {
+        (0..len).map(|_| (r.below(255) as i32 - 127) as i8).collect()
+    }
+
+    #[test]
+    fn scalar_dot_matches_naive() {
+        let mut r = Rng::new(5);
+        for &len in LENS {
+            let a = f32_vec(&mut r, len);
+            let b = f32_vec(&mut r, len);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!(
+                (dot_with(KernelVariant::Scalar, &a, &b) - naive).abs() < 1e-3,
+                "len={len}"
+            );
+        }
+    }
+
+    #[test]
+    fn scalar_dot_i8_matches_naive() {
+        let mut r = Rng::new(6);
+        for &len in LENS {
+            let a = i8_vec(&mut r, len);
+            let b = i8_vec(&mut r, len);
+            let naive: i32 = a.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+            assert_eq!(dot_i8_with(KernelVariant::Scalar, &a, &b), naive, "len={len}");
+        }
+    }
+
+    /// The load-bearing parity property: on hosts with a SIMD unit, every
+    /// kernel is bit-exact against its scalar twin (f32 via `to_bits`,
+    /// i8 exactly). Probes the hardware variant directly, so this stays
+    /// meaningful when CI re-runs the suite under LLMBRIDGE_FORCE_SCALAR=1.
+    #[test]
+    fn prop_simd_kernels_bit_exact_vs_scalar() {
+        let Some(v) = simd_variant() else {
+            // No AVX2/NEON on this host: dispatch is scalar-only and the
+            // parity claim is vacuous here.
+            return;
+        };
+        let mut r = Rng::new(0xD07);
+        for &len in LENS {
+            for _ in 0..8 {
+                let a = f32_vec(&mut r, len);
+                let b = f32_vec(&mut r, len);
+                let s = dot_with(KernelVariant::Scalar, &a, &b);
+                let w = dot_with(v, &a, &b);
+                assert_eq!(s.to_bits(), w.to_bits(), "dot len={len} {}", v.name());
+
+                let ia = i8_vec(&mut r, len);
+                let ib = i8_vec(&mut r, len);
+                assert_eq!(
+                    dot_i8_with(KernelVariant::Scalar, &ia, &ib),
+                    dot_i8_with(v, &ia, &ib),
+                    "dot_i8 len={len} {}",
+                    v.name()
+                );
+            }
+        }
+    }
+
+    /// dot4 parity per variant, and the cross-kernel invariant that makes
+    /// flat-scan scores layout-independent: dot4(q, rows)[j] is
+    /// bit-identical to dot(q, row_j) in the same variant.
+    #[test]
+    fn prop_dot4_bit_exact_vs_per_row_dot() {
+        let variants: Vec<KernelVariant> =
+            std::iter::once(KernelVariant::Scalar).chain(simd_variant()).collect();
+        let mut r = Rng::new(0xB10C);
+        for &dim in &[1usize, 4, 7, 8, 9, 16, 32, 63, 64, 96] {
+            let q = f32_vec(&mut r, dim);
+            let rows = f32_vec(&mut r, 4 * dim);
+            let iq = i8_vec(&mut r, dim);
+            let irows = i8_vec(&mut r, 4 * dim);
+            for &v in &variants {
+                let block = dot4_with(v, &q, &rows, dim);
+                let iblock = dot4_i8_with(v, &iq, &irows, dim);
+                for j in 0..4 {
+                    let row = &rows[j * dim..(j + 1) * dim];
+                    assert_eq!(
+                        block[j].to_bits(),
+                        dot_with(v, &q, row).to_bits(),
+                        "dot4 dim={dim} row={j} {}",
+                        v.name()
+                    );
+                    let irow = &irows[j * dim..(j + 1) * dim];
+                    assert_eq!(
+                        iblock[j],
+                        dot_i8_with(v, &iq, irow),
+                        "dot4_i8 dim={dim} row={j} {}",
+                        v.name()
+                    );
+                }
+                // And across variants: scalar vs v (vacuous when v is
+                // Scalar, the bit-exact contract when v is SIMD).
+                let sblock = dot4_with(KernelVariant::Scalar, &q, &rows, dim);
+                for j in 0..4 {
+                    assert_eq!(block[j].to_bits(), sblock[j].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn active_variant_is_stable_and_named() {
+        let v = active_variant();
+        assert_eq!(v, active_variant());
+        assert!(["scalar", "avx2", "neon"].contains(&v.name()));
+    }
+}

@@ -1,0 +1,826 @@
+//! Quantized IVF tier: posting-list rows stored as i8 codes with one f32
+//! scale per row — the million-row memory tier of
+//! [`super::adaptive::AdaptiveIndex`].
+//!
+//! ## Quantization (per-row, symmetric)
+//!
+//! A stored row `r` becomes `codes[i] = round(r[i] * 127 / max|r|)` with
+//! `scale = max|r| / 127`, so `codes[i] * scale ≈ r[i]` with error at most
+//! `scale / 2` per coordinate. The vector region shrinks from `dim * 4`
+//! bytes/row to `dim + 4` — 3.76x at dim 64 (the cache's embedding dim).
+//! The element at `max|r|` always quantizes to ±127, which makes the
+//! mapping idempotent on dequantized rows: a retrain that exports
+//! dequantized rows and re-quantizes them reproduces the same codes.
+//!
+//! ## Search (coarse i8 scan + f32 rescore)
+//!
+//! A query is quantized once, probed cells are scanned with the blocked
+//! [`kernel::dot4_i8`] kernel (`approx = i32dot · q_scale · row_scale`),
+//! and the top `4·k` survivors — kept **unthresholded**, since the coarse
+//! score is approximate — are rescored as `dot(query, dequantize(row))`
+//! with `min_score` applied only there. Recall@4 against the exact flat
+//! scan is gated ≥ 0.95 by the adaptive-tier property tests.
+//!
+//! ## Cold boot (per-cell copy-on-write codes)
+//!
+//! The LBV4 snapshot loader hands cells *views into an mmap* instead of
+//! owned buffers: restore returns before any code byte is read, queries
+//! fault pages in on demand, and the first **mutation** of a cell
+//! materializes only that cell (`CodeStore`) — a WAL-tail replay after
+//! restore touches a handful of cells and keeps the rest lazy.
+
+use std::collections::HashMap;
+#[cfg(unix)]
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::ivf::{nearest_cells, nearest_centroid};
+use super::kernel;
+use super::{dot, normalize_in_place, push_topk, Hit, Metric, VectorIndex};
+#[cfg(unix)]
+use crate::util::mmap::MmapRegion;
+
+/// Quantize one row to i8 codes + per-row scale. Zero/degenerate rows
+/// (including non-finite maxima) become all-zero codes with scale 0.
+pub(crate) fn quantize_row(row: &[f32]) -> (Vec<i8>, f32) {
+    let mut max_abs = 0.0f32;
+    for &x in row {
+        max_abs = max_abs.max(x.abs());
+    }
+    if max_abs == 0.0 || !max_abs.is_finite() {
+        return (vec![0i8; row.len()], 0.0);
+    }
+    let scale = max_abs / 127.0;
+    let inv = 127.0 / max_abs;
+    let codes = row
+        .iter()
+        .map(|&x| (x * inv).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (codes, scale)
+}
+
+/// View i8 codes as the raw bytes the snapshot writer stores.
+pub(crate) fn codes_as_bytes(codes: &[i8]) -> &[u8] {
+    // Safety: i8 and u8 share size, alignment, and validity.
+    unsafe { std::slice::from_raw_parts(codes.as_ptr() as *const u8, codes.len()) }
+}
+
+/// Reconstruct `codes[i] * scale` into `out`.
+pub(crate) fn dequantize_row(codes: &[i8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = c as f32 * scale;
+    }
+}
+
+/// One cell's code bytes: owned, or a lazy view into the LBV4 mmap that
+/// is materialized (copy-on-write) the first time the cell mutates.
+#[derive(Debug)]
+enum CodeStore {
+    Owned(Vec<i8>),
+    #[cfg(unix)]
+    Mapped {
+        map: Arc<MmapRegion>,
+        /// Byte offset of this cell's first code within the map.
+        offset: usize,
+        /// Code count (= rows · dim).
+        len: usize,
+    },
+}
+
+impl CodeStore {
+    fn as_codes(&self) -> &[i8] {
+        match self {
+            CodeStore::Owned(v) => v,
+            #[cfg(unix)]
+            CodeStore::Mapped { map, offset, len } => {
+                let bytes = &map.as_bytes()[*offset..*offset + *len];
+                // Safety: i8 and u8 share size, alignment, and validity.
+                unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const i8, bytes.len()) }
+            }
+        }
+    }
+
+    fn is_mapped(&self) -> bool {
+        !matches!(self, CodeStore::Owned(_))
+    }
+
+    /// Copy-on-write: materialize (if mapped) and return the owned buffer.
+    fn make_owned(&mut self) -> &mut Vec<i8> {
+        if self.is_mapped() {
+            *self = CodeStore::Owned(self.as_codes().to_vec());
+        }
+        match self {
+            CodeStore::Owned(v) => v,
+            #[cfg(unix)]
+            CodeStore::Mapped { .. } => unreachable!("materialized above"),
+        }
+    }
+}
+
+/// Where [`QuantIvfIndex::from_grouped_parts`] takes its code bytes from.
+pub(crate) enum CodesSource<'a> {
+    /// A contiguous `count * dim` byte region, copied into owned cells
+    /// (the from-bytes loader and the non-unix fallback).
+    Eager(&'a [u8]),
+    /// A whole-file map; cells become lazy views at `codes_off`.
+    #[cfg(unix)]
+    Mapped { map: Arc<MmapRegion>, codes_off: usize },
+}
+
+/// IVF index over i8-quantized rows. Always trained (it is only ever
+/// built from a trained plan or a snapshot); inserts after construction
+/// land in the nearest cell like the f32 IVF tier.
+#[derive(Debug)]
+pub struct QuantIvfIndex {
+    dim: usize,
+    metric: Metric,
+    nlist: usize,
+    pub nprobe: usize,
+    /// nlist x dim, f32 — centroids stay unquantized (they are nlist·dim
+    /// floats, negligible next to the corpus).
+    centroids: Vec<f32>,
+    /// Per-cell ids, parallel to scales/codes slots.
+    list_ids: Vec<Vec<u64>>,
+    /// Per-cell per-row dequantization scales.
+    list_scales: Vec<Vec<f32>>,
+    /// Per-cell contiguous row-major i8 codes (owned or mmap views).
+    list_codes: Vec<CodeStore>,
+    /// id → (cell, slot); O(1) remove/contains like the other tiers.
+    locs: HashMap<u64, (u32, u32)>,
+}
+
+impl QuantIvfIndex {
+    /// Build from a trained plan: f32 rows (already in stored form — cosine
+    /// rows pre-normalized) are quantized on the way into their assigned
+    /// cells. Validation mirrors [`super::ivf::IvfIndex::from_trained_parts`].
+    pub fn from_trained_parts(
+        dim: usize,
+        metric: Metric,
+        nprobe: usize,
+        centroids: Vec<f32>,
+        ids: Vec<u64>,
+        rows: &[f32],
+        assignments: &[u32],
+    ) -> Result<QuantIvfIndex> {
+        if dim == 0 {
+            bail!("quant snapshot: dim must be positive");
+        }
+        if centroids.is_empty() || centroids.len() % dim != 0 {
+            bail!(
+                "quant snapshot: {} centroid floats is not a positive multiple of dim {dim}",
+                centroids.len()
+            );
+        }
+        if rows.len() != ids.len() * dim {
+            bail!(
+                "quant snapshot: {} row floats for {} ids at dim {dim}",
+                rows.len(),
+                ids.len()
+            );
+        }
+        if assignments.len() != ids.len() {
+            bail!(
+                "quant snapshot: {} assignments for {} ids",
+                assignments.len(),
+                ids.len()
+            );
+        }
+        let nlist = centroids.len() / dim;
+        let mut idx = QuantIvfIndex {
+            dim,
+            metric,
+            nlist,
+            nprobe: nprobe.max(1),
+            centroids,
+            list_ids: vec![Vec::new(); nlist],
+            list_scales: vec![Vec::new(); nlist],
+            list_codes: (0..nlist).map(|_| CodeStore::Owned(Vec::new())).collect(),
+            locs: HashMap::with_capacity(ids.len()),
+        };
+        for (i, (&id, &cell)) in ids.iter().zip(assignments).enumerate() {
+            let c = cell as usize;
+            if c >= nlist {
+                bail!("quant snapshot: row {i} assigned to cell {c} of {nlist}");
+            }
+            let (codes, scale) = quantize_row(&rows[i * dim..(i + 1) * dim]);
+            let slot = idx.list_ids[c].len() as u32;
+            idx.list_ids[c].push(id);
+            idx.list_scales[c].push(scale);
+            idx.list_codes[c].make_owned().extend_from_slice(&codes);
+            if idx.locs.insert(id, (cell, slot)).is_some() {
+                bail!("quant snapshot: duplicate id {id}");
+            }
+        }
+        Ok(idx)
+    }
+
+    /// Build from already-quantized, **cell-grouped** parts — the LBV4
+    /// restore path. `assignments` must be non-decreasing (the writer
+    /// groups cells), which is what lets mapped cells be contiguous views;
+    /// a violation means the snapshot is corrupt.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_grouped_parts(
+        dim: usize,
+        metric: Metric,
+        nprobe: usize,
+        centroids: Vec<f32>,
+        ids: Vec<u64>,
+        scales: Vec<f32>,
+        assignments: &[u32],
+        codes: CodesSource<'_>,
+    ) -> Result<QuantIvfIndex> {
+        if dim == 0 {
+            bail!("quant snapshot: dim must be positive");
+        }
+        if centroids.is_empty() || centroids.len() % dim != 0 {
+            bail!(
+                "quant snapshot: {} centroid floats is not a positive multiple of dim {dim}",
+                centroids.len()
+            );
+        }
+        let nlist = centroids.len() / dim;
+        let count = ids.len();
+        if scales.len() != count || assignments.len() != count {
+            bail!(
+                "quant snapshot: {} scales / {} assignments for {count} ids",
+                scales.len(),
+                assignments.len()
+            );
+        }
+        let codes_len = match &codes {
+            CodesSource::Eager(bytes) => bytes.len(),
+            #[cfg(unix)]
+            CodesSource::Mapped { map, codes_off } => map.len().saturating_sub(*codes_off),
+        };
+        if codes_len != count * dim {
+            bail!(
+                "quant snapshot: {codes_len} code bytes for {count} rows at dim {dim}",
+            );
+        }
+        let mut idx = QuantIvfIndex {
+            dim,
+            metric,
+            nlist,
+            nprobe: nprobe.max(1),
+            centroids,
+            list_ids: Vec::with_capacity(nlist),
+            list_scales: Vec::with_capacity(nlist),
+            list_codes: Vec::with_capacity(nlist),
+            locs: HashMap::with_capacity(count),
+        };
+        // Cell boundaries from the grouped (non-decreasing) assignments.
+        let mut starts = vec![count; nlist + 1];
+        let mut prev: i64 = -1;
+        for (i, &cell) in assignments.iter().enumerate() {
+            let c = cell as usize;
+            if c >= nlist {
+                bail!("quant snapshot: row {i} assigned to cell {c} of {nlist}");
+            }
+            if (c as i64) < prev {
+                bail!("quant snapshot: assignments not cell-grouped at row {i}");
+            }
+            if c as i64 > prev {
+                // Mark the start of every cell in (prev, c].
+                for s in &mut starts[(prev + 1) as usize..=c] {
+                    *s = i;
+                }
+                prev = c as i64;
+            }
+        }
+        for s in &mut starts[(prev + 1) as usize..] {
+            *s = count;
+        }
+        for c in 0..nlist {
+            let (start, end) = (starts[c], starts[c + 1]);
+            for (slot, &id) in ids[start..end].iter().enumerate() {
+                if idx
+                    .locs
+                    .insert(id, (c as u32, slot as u32))
+                    .is_some()
+                {
+                    bail!("quant snapshot: duplicate id {id}");
+                }
+            }
+            idx.list_ids.push(ids[start..end].to_vec());
+            idx.list_scales.push(scales[start..end].to_vec());
+            idx.list_codes.push(match &codes {
+                CodesSource::Eager(bytes) => {
+                    let region = &bytes[start * dim..end * dim];
+                    // Safety: i8 and u8 share size, alignment, validity.
+                    let as_i8 = unsafe {
+                        std::slice::from_raw_parts(region.as_ptr() as *const i8, region.len())
+                    };
+                    CodeStore::Owned(as_i8.to_vec())
+                }
+                #[cfg(unix)]
+                CodesSource::Mapped { map, codes_off } => CodeStore::Mapped {
+                    map: Arc::clone(map),
+                    offset: codes_off + start * dim,
+                    len: (end - start) * dim,
+                },
+            });
+        }
+        Ok(idx)
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    pub fn nlist(&self) -> usize {
+        self.nlist
+    }
+
+    pub fn centroids(&self) -> &[f32] {
+        &self.centroids
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.locs.contains_key(&id)
+    }
+
+    /// Logical bytes of the scan region: i8 codes + one f32 scale per row
+    /// (vs `dim * 4` for an f32 tier).
+    pub fn vector_bytes(&self) -> usize {
+        self.locs.len() * (self.dim + 4)
+    }
+
+    /// Cells still backed by lazy mmap views (0 once fully materialized,
+    /// or on an index that was never restored from LBV4).
+    pub fn mapped_cells(&self) -> usize {
+        self.list_codes.iter().filter(|c| c.is_mapped()).count()
+    }
+
+    /// Insert a row already in stored form (cosine rows pre-normalized) —
+    /// quantizes on the way in. The migration/reconcile path.
+    pub(crate) fn insert_stored(&mut self, id: u64, v: &[f32]) -> Result<()> {
+        if v.len() != self.dim {
+            bail!("dim mismatch: got {}, want {}", v.len(), self.dim);
+        }
+        let c = nearest_centroid(self.metric, &self.centroids, self.dim, v);
+        let (codes, scale) = quantize_row(v);
+        let slot = self.list_ids[c].len() as u32;
+        self.list_ids[c].push(id);
+        self.list_scales[c].push(scale);
+        self.list_codes[c].make_owned().extend_from_slice(&codes);
+        self.locs.insert(id, (c as u32, slot));
+        Ok(())
+    }
+
+    /// Visit every `(id, dequantized row)` pair — the export shape the
+    /// rebuild/reconcile machinery shares across tiers. Rows are
+    /// reconstructed into a scratch buffer (`codes[i] * scale`).
+    pub(crate) fn for_each_row(&self, mut f: impl FnMut(u64, &[f32])) {
+        let mut row = vec![0.0f32; self.dim];
+        for c in 0..self.nlist {
+            let codes = self.list_codes[c].as_codes();
+            for (i, &id) in self.list_ids[c].iter().enumerate() {
+                dequantize_row(
+                    &codes[i * self.dim..(i + 1) * self.dim],
+                    self.list_scales[c][i],
+                    &mut row,
+                );
+                f(id, &row);
+            }
+        }
+    }
+
+    /// Slot-ordered `(ids, scales, assignments, codes)` grouped by cell —
+    /// the LBV4 payload. Codes are cell-contiguous, which is what lets the
+    /// mmap loader adopt them in place.
+    pub(crate) fn export_quantized_parts(&self) -> (Vec<u64>, Vec<f32>, Vec<u32>, Vec<i8>) {
+        let n = self.locs.len();
+        let mut ids = Vec::with_capacity(n);
+        let mut scales = Vec::with_capacity(n);
+        let mut assignments = Vec::with_capacity(n);
+        let mut codes = Vec::with_capacity(n * self.dim);
+        for c in 0..self.nlist {
+            ids.extend_from_slice(&self.list_ids[c]);
+            scales.extend_from_slice(&self.list_scales[c]);
+            assignments.extend(std::iter::repeat(c as u32).take(self.list_ids[c].len()));
+            codes.extend_from_slice(self.list_codes[c].as_codes());
+        }
+        (ids, scales, assignments, codes)
+    }
+
+    /// Top-k over the `probes` nearest cells — same widening knob as the
+    /// f32 IVF tier. Cosine/Dot run the coarse-i8 + f32-rescore pipeline;
+    /// other metrics score dequantized rows directly.
+    pub fn search_probes(
+        &self,
+        query: &[f32],
+        k: usize,
+        min_score: f32,
+        probes: usize,
+    ) -> Vec<Hit> {
+        let mut top: Vec<Hit> = Vec::with_capacity(k + 1);
+        if k == 0 || self.locs.is_empty() {
+            return top;
+        }
+        let probes = probes.max(1);
+        match self.metric {
+            Metric::Cosine | Metric::Dot => {
+                self.search_coarse_rescore(query, k, min_score, probes, &mut top)
+            }
+            Metric::L2 => self.search_dequantized(query, k, min_score, probes, &mut top),
+        }
+        top
+    }
+
+    fn search_coarse_rescore(
+        &self,
+        query: &[f32],
+        k: usize,
+        min_score: f32,
+        probes: usize,
+        top: &mut Vec<Hit>,
+    ) {
+        // Stored cosine rows are unit-normalized: score = dot / |q|.
+        let q_inv = if self.metric == Metric::Cosine {
+            let n = dot(query, query).sqrt();
+            if n == 0.0 {
+                0.0
+            } else {
+                1.0 / n
+            }
+        } else {
+            1.0
+        };
+        let (q_codes, q_scale) = quantize_row(query);
+        // Coarse shortlist: top 4·k by approximate score, unthresholded —
+        // min_score is in exact-score units and must wait for the rescore.
+        let shortlist = k.saturating_mul(4).max(k);
+        let mut cand: Vec<Hit> = Vec::with_capacity(shortlist + 1);
+        for c in nearest_cells(self.metric, &self.centroids, self.dim, query, probes) {
+            let ids = &self.list_ids[c];
+            let scales = &self.list_scales[c];
+            let codes = self.list_codes[c].as_codes();
+            let n = ids.len();
+            let blocks = n / 4;
+            for b in 0..blocks {
+                let i = b * 4;
+                let raw = kernel::dot4_i8(
+                    &q_codes,
+                    &codes[i * self.dim..(i + 4) * self.dim],
+                    self.dim,
+                );
+                for (j, &r) in raw.iter().enumerate() {
+                    let approx = r as f32 * q_scale * scales[i + j];
+                    push_topk(
+                        &mut cand,
+                        Hit {
+                            id: ids[i + j],
+                            score: approx,
+                        },
+                        shortlist,
+                    );
+                }
+            }
+            for i in blocks * 4..n {
+                let r = kernel::dot_i8(&q_codes, &codes[i * self.dim..(i + 1) * self.dim]);
+                let approx = r as f32 * q_scale * scales[i];
+                push_topk(
+                    &mut cand,
+                    Hit {
+                        id: ids[i],
+                        score: approx,
+                    },
+                    shortlist,
+                );
+            }
+        }
+        // Rescore survivors in f32 against the dequantized row; apply
+        // min_score only on the exact score.
+        let mut row = vec![0.0f32; self.dim];
+        for h in &cand {
+            let (cell, slot) = self.locs[&h.id];
+            let (c, i) = (cell as usize, slot as usize);
+            let codes = self.list_codes[c].as_codes();
+            dequantize_row(
+                &codes[i * self.dim..(i + 1) * self.dim],
+                self.list_scales[c][i],
+                &mut row,
+            );
+            let s = if self.metric == Metric::Cosine {
+                dot(query, &row) * q_inv
+            } else {
+                dot(query, &row)
+            };
+            if s >= min_score {
+                push_topk(top, Hit { id: h.id, score: s }, k);
+            }
+        }
+    }
+
+    /// Generic-metric fallback (L2): score every probed row against its
+    /// dequantized form — correct, without the coarse-i8 speedup.
+    fn search_dequantized(
+        &self,
+        query: &[f32],
+        k: usize,
+        min_score: f32,
+        probes: usize,
+        top: &mut Vec<Hit>,
+    ) {
+        let mut row = vec![0.0f32; self.dim];
+        for c in nearest_cells(self.metric, &self.centroids, self.dim, query, probes) {
+            let codes = self.list_codes[c].as_codes();
+            for (i, &id) in self.list_ids[c].iter().enumerate() {
+                dequantize_row(
+                    &codes[i * self.dim..(i + 1) * self.dim],
+                    self.list_scales[c][i],
+                    &mut row,
+                );
+                let s = self.metric.score(query, &row);
+                if s >= min_score {
+                    push_topk(top, Hit { id, score: s }, k);
+                }
+            }
+        }
+    }
+}
+
+impl VectorIndex for QuantIvfIndex {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.locs.len()
+    }
+
+    fn insert(&mut self, id: u64, vector: &[f32]) -> Result<()> {
+        if vector.len() != self.dim {
+            bail!("dim mismatch: got {}, want {}", vector.len(), self.dim);
+        }
+        let mut v = vector.to_vec();
+        if self.metric == Metric::Cosine {
+            normalize_in_place(&mut v);
+        }
+        self.insert_stored(id, &v)
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        let Some((cell, slot)) = self.locs.remove(&id) else {
+            return false;
+        };
+        let c = cell as usize;
+        let slot = slot as usize;
+        let last = self.list_ids[c].len() - 1;
+        self.list_ids[c].swap(slot, last);
+        self.list_ids[c].pop();
+        self.list_scales[c].swap(slot, last);
+        self.list_scales[c].pop();
+        let dim = self.dim;
+        let codes = self.list_codes[c].make_owned();
+        if slot != last {
+            let (head, tail) = codes.split_at_mut(last * dim);
+            head[slot * dim..(slot + 1) * dim].copy_from_slice(&tail[..dim]);
+        }
+        codes.truncate(last * dim);
+        if slot != last {
+            let moved = self.list_ids[c][slot];
+            self.locs.insert(moved, (cell, slot as u32));
+        }
+        true
+    }
+
+    fn search(&self, query: &[f32], k: usize, min_score: f32) -> Vec<Hit> {
+        self.search_probes(query, k, min_score, self.nprobe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::corpus::{balanced_clustered_pairs, clustered_pairs, perturbed};
+    use crate::util::rng::Rng;
+    use crate::vecdb::flat::FlatIndex;
+    use crate::vecdb::ivf::kmeans_centroids;
+
+    fn trained_over(
+        data: &[(u64, Vec<f32>)],
+        dim: usize,
+        nlist: usize,
+        nprobe: usize,
+    ) -> QuantIvfIndex {
+        // Stored form: cosine rows pre-normalized (what the rebuild plan
+        // exports).
+        let mut rows = Vec::with_capacity(data.len() * dim);
+        for (_, v) in data {
+            let mut r = v.clone();
+            normalize_in_place(&mut r);
+            rows.extend_from_slice(&r);
+        }
+        let mut rng = Rng::new(0x5EED);
+        let centroids = kmeans_centroids(&mut rng, Metric::Cosine, &rows, dim, nlist, 4);
+        let assignments: Vec<u32> = (0..data.len())
+            .map(|i| {
+                nearest_centroid(Metric::Cosine, &centroids, dim, &rows[i * dim..(i + 1) * dim])
+                    as u32
+            })
+            .collect();
+        let ids: Vec<u64> = data.iter().map(|(id, _)| *id).collect();
+        QuantIvfIndex::from_trained_parts(
+            dim,
+            Metric::Cosine,
+            nprobe,
+            centroids,
+            ids,
+            &rows,
+            &assignments,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bound_and_idempotence() {
+        let mut rng = Rng::new(21);
+        for _ in 0..50 {
+            let row: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+            let (codes, scale) = quantize_row(&row);
+            assert!(codes.iter().all(|&c| (-127..=127).contains(&(c as i32))));
+            let mut back = vec![0.0f32; 64];
+            dequantize_row(&codes, scale, &mut back);
+            // Error bound: half a quantization step per coordinate.
+            for (x, y) in row.iter().zip(&back) {
+                assert!((x - y).abs() <= scale * 0.5 + 1e-6, "err {} step {scale}", x - y);
+            }
+            // Idempotence: re-quantizing the dequantized row reproduces
+            // the codes exactly (scale to 1-ulp tolerance).
+            let (codes2, scale2) = quantize_row(&back);
+            assert_eq!(codes, codes2);
+            assert!((scale - scale2).abs() <= scale * 1e-6);
+        }
+    }
+
+    #[test]
+    fn quantize_zero_and_degenerate_rows() {
+        let (codes, scale) = quantize_row(&[0.0; 8]);
+        assert_eq!(codes, vec![0i8; 8]);
+        assert_eq!(scale, 0.0);
+        let (codes, scale) = quantize_row(&[f32::INFINITY, 1.0]);
+        assert_eq!(codes, vec![0i8; 2]);
+        assert_eq!(scale, 0.0);
+    }
+
+    #[test]
+    fn bytes_per_row_cut_at_least_3_5x() {
+        let dim = 64;
+        let data = clustered_pairs(0xB17E, 2000, dim, 16, 8.0, 0.4);
+        let q = trained_over(&data, dim, 16, 4);
+        let f32_bytes = data.len() * dim * 4;
+        let ratio = f32_bytes as f64 / q.vector_bytes() as f64;
+        assert!(ratio >= 3.5, "vector-region cut only {ratio:.2}x");
+    }
+
+    #[test]
+    fn recall_at_4_vs_flat_on_clustered_corpus() {
+        // 4 points per cluster: the exact top-4 of a query near a stored
+        // point is its whole cluster, separated from everything else by a
+        // spread-scale score gap — so a miss means the index lost the
+        // neighborhood (bad probe or coarse scan), not that quantization
+        // tie-broke near-equal neighbors differently.
+        let dim = 64;
+        let data = balanced_clustered_pairs(0xACE, 2000, 4, dim, 8.0, 0.4);
+        let mut flat = FlatIndex::new(dim, Metric::Cosine);
+        for (id, v) in &data {
+            flat.insert(*id, v).unwrap();
+        }
+        let q = trained_over(&data, dim, 64, 8);
+        let mut rng = Rng::new(0xFACE);
+        let (mut found, mut total) = (0usize, 0usize);
+        for _ in 0..50 {
+            let (_, base) = &data[rng.below(data.len())];
+            let probe = perturbed(&mut rng, base, 0.1);
+            let truth: Vec<u64> = flat.search(&probe, 4, f32::MIN).iter().map(|h| h.id).collect();
+            let got: Vec<u64> = q.search(&probe, 4, f32::MIN).iter().map(|h| h.id).collect();
+            total += truth.len();
+            found += truth.iter().filter(|t| got.contains(t)).count();
+        }
+        let recall = found as f64 / total as f64;
+        assert!(recall >= 0.95, "recall@4={recall}");
+    }
+
+    #[test]
+    fn insert_remove_churn_keeps_locs_consistent() {
+        let dim = 16;
+        let data = clustered_pairs(0xC4A7, 600, dim, 8, 8.0, 0.4);
+        let mut q = trained_over(&data, dim, 8, 8);
+        let mut rng = Rng::new(31);
+        let mut live: Vec<u64> = data.iter().map(|(id, _)| *id).collect();
+        for round in 0..400 {
+            if !live.is_empty() && rng.chance(0.5) {
+                let pick = rng.below(live.len());
+                let id = live.swap_remove(pick);
+                assert!(q.remove(id), "round {round}: remove({id})");
+                assert!(!q.contains(id));
+            } else {
+                let id = 10_000 + round as u64;
+                let v = data[rng.below(data.len())].1.clone();
+                q.insert(id, &v).unwrap();
+                live.push(id);
+            }
+            assert_eq!(q.len(), live.len());
+        }
+        for id in &live {
+            assert!(q.contains(*id));
+        }
+        // Exhaustive probe sees exactly the live set.
+        let got: std::collections::HashSet<u64> = q
+            .search_probes(&data[0].1, live.len(), f32::MIN, q.nlist())
+            .iter()
+            .map(|h| h.id)
+            .collect();
+        assert_eq!(got.len(), live.len());
+    }
+
+    #[test]
+    fn grouped_parts_roundtrip_bit_exact() {
+        let dim = 32;
+        let data = clustered_pairs(0x909, 1200, dim, 12, 8.0, 0.4);
+        let q = trained_over(&data, dim, 12, 6);
+        let (ids, scales, assignments, codes) = q.export_quantized_parts();
+        // i8 → u8 byte view, as the snapshot writer stores it.
+        let code_bytes: Vec<u8> = codes.iter().map(|&c| c as u8).collect();
+        let back = QuantIvfIndex::from_grouped_parts(
+            dim,
+            Metric::Cosine,
+            q.nprobe,
+            q.centroids().to_vec(),
+            ids,
+            scales,
+            &assignments,
+            CodesSource::Eager(&code_bytes),
+        )
+        .unwrap();
+        assert_eq!(back.len(), q.len());
+        assert_eq!(back.nlist(), q.nlist());
+        assert_eq!(back.mapped_cells(), 0);
+        let mut rng = Rng::new(23);
+        for _ in 0..20 {
+            let (_, base) = &data[rng.below(data.len())];
+            let probe = perturbed(&mut rng, base, 0.1);
+            let a = q.search(&probe, 6, f32::MIN);
+            let b = back.search(&probe, 6, f32::MIN);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits(), "score drifted");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_parts_rejects_ungrouped_or_bad_assignments() {
+        let dim = 4;
+        let centroids = vec![0.0f32; 2 * dim];
+        let ids = vec![1u64, 2];
+        let scales = vec![0.1f32, 0.1];
+        let codes = vec![0u8; 2 * dim];
+        let build = |ids: Vec<u64>, assignments: &[u32], code_bytes: &[u8]| {
+            QuantIvfIndex::from_grouped_parts(
+                dim,
+                Metric::Cosine,
+                2,
+                centroids.clone(),
+                ids,
+                scales.clone(),
+                assignments,
+                CodesSource::Eager(code_bytes),
+            )
+        };
+        // Valid grouped baseline.
+        assert!(build(ids.clone(), &[0, 1], &codes).is_ok());
+        // Not cell-grouped (decreasing).
+        assert!(build(ids.clone(), &[1, 0], &codes).is_err());
+        // Out-of-range cell.
+        assert!(build(ids.clone(), &[0, 2], &codes).is_err());
+        // Duplicate id.
+        assert!(build(vec![1, 1], &[0, 1], &codes).is_err());
+        // Code region size mismatch.
+        assert!(build(ids, &[0, 1], &codes[..7]).is_err());
+    }
+
+    #[test]
+    fn min_score_applies_to_exact_not_coarse_score() {
+        let dim = 16;
+        let data = balanced_clustered_pairs(0x3C0, 125, 4, dim, 8.0, 0.4);
+        let q = trained_over(&data, dim, 8, 8);
+        let (_, base) = &data[0];
+        let mut probe = base.clone();
+        normalize_in_place(&mut probe);
+        // With a threshold nothing clears, the result is empty even though
+        // coarse candidates existed.
+        assert!(q.search_probes(&probe, 4, 2.0, q.nlist()).is_empty());
+        // With no threshold, the probe's own cluster (ids 0..4) is the
+        // top-4, each rescored well above any cross-cluster score.
+        let hits = q.search_probes(&probe, 4, f32::MIN, q.nlist());
+        let mut got: Vec<u64> = hits.iter().map(|h| h.id).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert!(hits.iter().all(|h| h.score > 0.9), "{hits:?}");
+    }
+}

@@ -522,6 +522,7 @@ fn no_data_dir_means_no_persistence_machinery() {
 #[test]
 fn migrated_cache_restores_without_retraining() {
     use llmbridge::cache::{CacheObject, SemanticCache};
+    use llmbridge::util::corpus;
     use llmbridge::vecdb::adaptive::AdaptiveConfig;
 
     let dim = 16;
@@ -531,7 +532,7 @@ fn migrated_cache_restores_without_retraining() {
         .collect();
     let clustered = |r: &mut Rng| -> Vec<f32> {
         let c = r.choice(&centers).clone();
-        c.iter().map(|x| x + r.normal() as f32 * 0.3).collect()
+        corpus::perturbed(r, &c, 0.3)
     };
     // Low threshold so 2400 typed keys are enough to migrate; everything
     // else is the production policy.
@@ -612,4 +613,112 @@ fn migrated_cache_restores_without_retraining() {
     assert_eq!(restored.index_stats().rows, 2401);
     let hits = restored.search_raw(&tail_vec, 1, f32::MIN);
     assert_eq!(hits[0].id, 9002, "replayed row lands in a probed cell");
+}
+
+// ---------------------------------------------------------------------
+// Quantized index tier (PR 6): a cache past the quantize threshold
+// snapshots its i8 tier as LBV4, a kill-and-restore round-trip boots it
+// mapped (metadata parsed eagerly, the code region left to fault in)
+// serving bit-identical raw hits, WAL-tail replay still lands in the
+// restored tier, and a corrupted LBV4 refuses to boot.
+// ---------------------------------------------------------------------
+
+#[test]
+fn quantized_cache_restores_lbv4_and_rejects_corruption() {
+    use llmbridge::cache::{CacheObject, SemanticCache};
+    use llmbridge::util::corpus;
+    use llmbridge::vecdb::adaptive::AdaptiveConfig;
+
+    let dim = 16;
+    let mut r = Rng::new(0x1B44);
+    // 2400 typed keys in 600 tight 4-point clusters — past both
+    // thresholds, and balanced so score gaps dwarf i8 rounding noise.
+    let vecs: Vec<Vec<f32>> = corpus::balanced_clustered_pairs(0x1B44, 600, 4, dim, 6.0, 0.3)
+        .into_iter()
+        .map(|(_, v)| v)
+        .collect();
+    let cfg = AdaptiveConfig {
+        migrate_threshold: 1500,
+        quantize_threshold: 2000,
+        train_sample: 2048,
+        kmeans_iters: 3,
+        ..AdaptiveConfig::default()
+    };
+    let cache = SemanticCache::with_index_config(dim, cfg);
+    for i in 0..1200usize {
+        let base = i as u64 * 3 + 1;
+        cache
+            .apply_logged_put(
+                CacheObject {
+                    id: base,
+                    text: format!("text {i}"),
+                    origin: format!("origin {i}"),
+                    is_document: false,
+                },
+                &[
+                    (base + 1, CachedType::Prompt, vecs[2 * i].clone()),
+                    (base + 2, CachedType::Response, vecs[2 * i + 1].clone()),
+                ],
+            )
+            .unwrap();
+    }
+    assert!(cache.maybe_rebuild_index(), "2400 keys cross both thresholds");
+    let stats = cache.index_stats();
+    assert_eq!(stats.tier, "ivf_i8", "rebuild lands on the quantized tier");
+    assert_eq!(stats.rows, 2400);
+    assert_eq!(stats.vector_bytes, 2400 * (dim + 4), "i8 codes + one f32 scale per row");
+
+    // Kill-and-restore through the snapshot (vecdb.bin is LBV4 now).
+    let dir = fresh_dir("quant_snap");
+    cache.snapshot_into(&dir).unwrap();
+    let restored = SemanticCache::restore_from_dir(&dir, dim).unwrap();
+    assert_eq!(restored.index_stats(), stats, "boots trained: same tier, rows, bytes");
+
+    // Raw probes bit-identical: LBV4 restores codes/scales/centroids
+    // exactly, so the coarse i8 order and the f32 rescore both round the
+    // same way live and restored.
+    for _ in 0..20 {
+        let q: Vec<f32> = (0..dim).map(|_| r.normal() as f32).collect();
+        let a = cache.search_raw(&q, 6, f32::MIN);
+        let b = restored.search_raw(&q, 6, f32::MIN);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
+    }
+
+    // A WAL-tail op replayed on the restored snapshot inserts into the
+    // live quantized tier. The vector sits far from every trained
+    // cluster, so its self-match outscores everything by a wide margin
+    // even through i8 rounding.
+    let tail_vec: Vec<f32> = (0..dim).map(|_| r.normal() as f32 * 6.0).collect();
+    restored
+        .apply_logged_put(
+            CacheObject {
+                id: 9001,
+                text: "wal tail".into(),
+                origin: "tail".into(),
+                is_document: false,
+            },
+            &[(9002, CachedType::Prompt, tail_vec.clone())],
+        )
+        .unwrap();
+    assert_eq!(restored.index_stats().rows, 2401);
+    let hits = restored.search_raw(&tail_vec, 1, f32::MIN);
+    assert_eq!(hits[0].id, 9002, "replayed row lands in a probed cell");
+
+    // Corruption: flip one metadata byte (inside the ids region) — the
+    // eagerly-verified metadata checksum refuses the snapshot at boot
+    // instead of serving wrong ids off a mapped region.
+    let vecdb = dir.join("vecdb.bin");
+    let mut bytes = std::fs::read(&vecdb).unwrap();
+    assert_eq!(&bytes[..4], b"LBV4", "snapshot uses the quantized format");
+    bytes[52] ^= 0x01;
+    std::fs::write(&vecdb, &bytes).unwrap();
+    let err = SemanticCache::restore_from_dir(&dir, dim).unwrap_err();
+    assert!(
+        err.to_string().contains("checksum"),
+        "corrupt LBV4 must fail loudly, got: {err}"
+    );
 }

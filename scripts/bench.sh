@@ -4,10 +4,14 @@
 # repo root so successive PRs have a comparable baseline.
 #
 # The hotpath bench includes the persist micro-benches
-# (persist/wal_append_interaction, persist/cold_restore_20k) and the
+# (persist/wal_append_interaction, persist/cold_restore_20k, and
+# persist/restore_to_first_query — the LBV4 mmap cold-boot probe) and the
 # adaptive vector-index benches (vecdb/adaptive_top4_100k, migration +
-# retrain cost, recall@4) so WAL throughput, cold-restore time, and the
-# ANN tier all ride the same trajectory file.
+# retrain cost, recall@4, plus the quantized-tier pair
+# vecdb/quantized_vs_f32_top4 / vecdb/bytes_per_row and the million-row
+# vecdb/adaptive_top4_1m, which smoke/fast modes shrink to 50k/200k rows)
+# so WAL throughput, cold-restore time, and the ANN tier all ride the
+# same trajectory file.
 #
 # Usage: scripts/bench.sh [--fast|--smoke]
 #   --fast    shrink iteration counts (LLMBRIDGE_BENCH_FAST=1).

@@ -7,10 +7,14 @@
 #
 # Steps: cargo build --release, cargo test --workspace -q (a superset of
 # the ROADMAP tier-1 `cargo test -q`: it also runs the vendored xla-stub
-# member's tests), then cargo fmt --check, cargo clippy --workspace
-# -D warnings, rustdoc with -D warnings (the docs gate — broken intra-doc
-# links and malformed docs fail the build, so module docs can't rot), and
-# a `--features pjrt` type-check of the engine path against the stub.
+# member's tests), the same test suite again under
+# LLMBRIDGE_FORCE_SCALAR=1 (pins the vecdb dot kernels to the scalar
+# path, so the SIMD parity tests prove bit-exactness against the fallback
+# the runtime would actually use on a machine without AVX2/NEON), then
+# cargo fmt --check, cargo clippy --workspace -D warnings, rustdoc with
+# -D warnings (the docs gate — broken intra-doc links and malformed docs
+# fail the build, so module docs can't rot), and a `--features pjrt`
+# type-check of the engine path against the stub.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -38,6 +42,9 @@ cargo build --release
 
 echo "==> tier-1: cargo test -q (workspace: crate + vendored stub)"
 cargo test --workspace -q
+
+echo "==> force-scalar: LLMBRIDGE_FORCE_SCALAR=1 cargo test -q (kernel fallback gate)"
+LLMBRIDGE_FORCE_SCALAR=1 cargo test --workspace -q
 
 echo "==> cargo fmt --check"
 cargo fmt --all -- --check
