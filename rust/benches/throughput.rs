@@ -9,15 +9,26 @@
 //! Traffic mix per 8 requests: 5 exact hits (the WhatsApp prefetch-button
 //! path), 2 memoized fixed-model generations (proxy overhead + memo), and
 //! 1 SmartCache request (embed + cache-LLM relevance + grounded reply).
+//!
+//! A second, **open-loop** section drives a real evented `Server` over
+//! loopback with keep-alive connections on a fixed arrival schedule —
+//! latency measured from the *scheduled* arrival (no coordinated
+//! omission) — at ~0.6× and ~1.5× of the server's own closed-loop HTTP
+//! capacity. The overload leg shows admission-control shedding (429s)
+//! keeping tail latency bounded instead of queues melting; both legs
+//! land in BENCH_throughput.json (`throughput/open_loop_*`).
 
 mod bench_common;
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use llmbridge::api::{CachePolicy, Request, ServiceType};
 use llmbridge::coordinator::Bridge;
 use llmbridge::models::pricing::{Generation, ModelId};
+use llmbridge::server::{Server, ServerBackend, ServerConfig};
 use llmbridge::util::bench::{fast_mode, BenchReport};
 use llmbridge::util::json::Json;
 
@@ -86,6 +97,172 @@ fn run_closed_loop(bridge: &Arc<Bridge>, threads: usize, per_thread: usize) -> (
         percentile(&all, 0.50),
         percentile(&all, 0.99),
     )
+}
+
+/// Minimal keep-alive HTTP client framing responses by Content-Length.
+struct OlClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl OlClient {
+    fn connect(addr: std::net::SocketAddr) -> OlClient {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        OlClient {
+            stream,
+            buf: Vec::new(),
+        }
+    }
+
+    /// POST /v1/request on the persistent connection; returns the status.
+    fn roundtrip(&mut self, user: &str, prompt: &str) -> u16 {
+        let body = format!(
+            r#"{{"user":"{user}","conversation":"ol","prompt":"{prompt}",
+                "service_type":{{"name":"cost"}}}}"#
+        );
+        let msg = format!(
+            "POST /v1/request HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.stream.write_all(msg.as_bytes()).unwrap();
+        let head_end = loop {
+            if let Some(p) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break p + 4;
+            }
+            let mut tmp = [0u8; 4096];
+            let n = self.stream.read(&mut tmp).expect("server closed mid-bench");
+            assert!(n > 0, "server closed mid-bench");
+            self.buf.extend_from_slice(&tmp[..n]);
+        };
+        let head = std::str::from_utf8(&self.buf[..head_end]).unwrap();
+        let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let clen: usize = head
+            .lines()
+            .find_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                if k.eq_ignore_ascii_case("content-length") {
+                    v.trim().parse().ok()
+                } else {
+                    None
+                }
+            })
+            .unwrap_or(0);
+        while self.buf.len() < head_end + clen {
+            let mut tmp = [0u8; 4096];
+            let n = self.stream.read(&mut tmp).expect("server closed mid-body");
+            assert!(n > 0, "server closed mid-body");
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+        self.buf.drain(..head_end + clen);
+        status
+    }
+}
+
+struct OpenLoopResult {
+    offered_rps: f64,
+    served: usize,
+    shed: usize,
+    p50_us: u64,
+    p99_us: u64,
+}
+
+impl OpenLoopResult {
+    fn shed_rate(&self) -> f64 {
+        self.shed as f64 / (self.served + self.shed).max(1) as f64
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offered_rps", Json::num(self.offered_rps)),
+            ("served", Json::num(self.served as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("shed_rate", Json::num(self.shed_rate())),
+            ("p50_us", Json::num(self.p50_us as f64)),
+            ("p99_us", Json::num(self.p99_us as f64)),
+        ])
+    }
+}
+
+/// Closed-loop HTTP calibration: `conns` keep-alive connections hammer
+/// back-to-back; returns the server's req/s ceiling for this machine.
+fn http_closed_loop_rps(addr: std::net::SocketAddr, conns: usize, per_conn: usize) -> f64 {
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..conns {
+            s.spawn(move || {
+                let mut c = OlClient::connect(addr);
+                let user = format!("ol-u{t}");
+                for i in 0..per_conn {
+                    c.roundtrip(&user, &exact_prompt((t * 31 + i) % EXACT_PROMPTS));
+                }
+            });
+        }
+    });
+    (conns * per_conn) as f64 / start.elapsed().as_secs_f64().max(1e-9)
+}
+
+/// Open loop: requests arrive on a fixed global schedule (`offered_rps`),
+/// round-robin across `conns` keep-alive connections, one user per
+/// connection (per-user serialization stays out of the way). Latency is
+/// measured from the **scheduled** arrival time, so a server that falls
+/// behind pays its queueing delay in the percentiles.
+fn run_open_loop(
+    addr: std::net::SocketAddr,
+    conns: usize,
+    offered_rps: f64,
+    duration: Duration,
+) -> OpenLoopResult {
+    let total = (offered_rps * duration.as_secs_f64()).ceil() as usize;
+    let interval = Duration::from_secs_f64(1.0 / offered_rps.max(1.0));
+    let t0 = Instant::now() + Duration::from_millis(50);
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    let mut all: Vec<u64> = Vec::with_capacity(total);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|t| {
+                s.spawn(move || {
+                    let mut c = OlClient::connect(addr);
+                    let user = format!("ol-u{t}");
+                    let mut samples: Vec<(u64, bool)> = Vec::new();
+                    let mut k = t;
+                    while k < total {
+                        let sched = t0 + interval.mul_f64(k as f64);
+                        if let Some(wait) = sched.checked_duration_since(Instant::now()) {
+                            std::thread::sleep(wait);
+                        }
+                        let status =
+                            c.roundtrip(&user, &exact_prompt((t * 31 + k) % EXACT_PROMPTS));
+                        let lat = Instant::now().duration_since(sched).as_micros() as u64;
+                        samples.push((lat, status == 200));
+                        k += conns;
+                    }
+                    samples
+                })
+            })
+            .collect();
+        for h in handles {
+            for (lat, ok) in h.join().unwrap() {
+                if ok {
+                    served += 1;
+                    all.push(lat);
+                } else {
+                    shed += 1;
+                }
+            }
+        }
+    });
+    all.sort_unstable();
+    OpenLoopResult {
+        offered_rps,
+        served,
+        shed,
+        p50_us: percentile(&all, 0.50),
+        p99_us: percentile(&all, 0.99),
+    }
 }
 
 fn main() {
@@ -167,5 +344,63 @@ fn main() {
             Json::obj(vec![("ratio", Json::num(scaling))]),
         );
     }
+
+    // ---- open-loop section: a real server over loopback -----------------
+    // Calibrate the server's closed-loop HTTP ceiling, then offer fixed
+    // arrival rates at 0.6× (healthy) and 1.5× (overload). The shed
+    // watermark sits below the connection count so the overload leg
+    // exercises admission control rather than just client-side queueing.
+    let backend = if cfg!(target_os = "linux") {
+        ServerBackend::Evented
+    } else {
+        ServerBackend::Threaded
+    };
+    let server = Server::start_with(
+        Arc::clone(&bridge),
+        "127.0.0.1:0",
+        ServerConfig {
+            workers: 4,
+            shed_watermark: 8,
+            backend,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("start server for open-loop bench");
+    let conns = 32;
+    let (cal_per_conn, leg_secs) = if fast_mode() { (20, 1.0) } else { (100, 3.0) };
+    let cap = http_closed_loop_rps(server.addr, conns, cal_per_conn);
+    println!(
+        "open-loop calibration: {cap:>9.0} req/s closed-loop over HTTP ({conns} keep-alive conns)"
+    );
+    let legs = [("0.6x", 0.6), ("1.5x", 1.5)].map(|(label, frac)| {
+        let r = run_open_loop(
+            server.addr,
+            conns,
+            cap * frac,
+            Duration::from_secs_f64(leg_secs),
+        );
+        println!(
+            "open_loop {label}  offered {:>8.0} req/s  served {:>6}  shed {:>5} ({:>4.1}%)  p50 {:>7} us  p99 {:>7} us",
+            r.offered_rps,
+            r.served,
+            r.shed,
+            r.shed_rate() * 100.0,
+            r.p50_us,
+            r.p99_us
+        );
+        report.push(&format!("throughput/open_loop_{label}"), r.to_json());
+        r
+    });
+    report.push(
+        "throughput/open_loop_p99",
+        Json::obj(vec![
+            ("calibrated_rps", Json::num(cap)),
+            ("underload_p99_us", Json::num(legs[0].p99_us as f64)),
+            ("overload_p99_us", Json::num(legs[1].p99_us as f64)),
+            ("overload_shed_rate", Json::num(legs[1].shed_rate())),
+        ]),
+    );
+    server.stop();
+
     report.write_env("LLMBRIDGE_BENCH_JSON");
 }

@@ -4,6 +4,10 @@
 //! llmbridge serve   [--bind 127.0.0.1:8080] [--workers 4] [--artifacts DIR]
 //!                   [--prefetch] [--generation old|new]
 //!                   [--data-dir DIR] [--compact-wal-bytes N]
+//!                   [--backend auto|evented|threaded] [--max-conns 4096]
+//!                   [--shed-watermark 512] [--user-queue-cap 32]
+//!                   [--keepalive-secs 30] [--request-deadline-secs 10]
+//!                   [--drain-secs 5]
 //! llmbridge ask     --prompt "..." [--service TYPE] [--user u] [--artifacts DIR]
 //! llmbridge warm    [--artifacts DIR]        # load corpus into the cache
 //! llmbridge models                            # print the model pool
@@ -21,10 +25,66 @@ use anyhow::{bail, Result};
 use llmbridge::api::{Request, ServiceType};
 use llmbridge::coordinator::{Bridge, BridgeConfig};
 use llmbridge::models::pricing::{Generation, ModelId, POOL};
-use llmbridge::server::Server;
+use llmbridge::server::{Server, ServerBackend, ServerConfig};
 use llmbridge::util::cli::Args;
 use llmbridge::util::json::Json;
 use llmbridge::workload::corpus;
+
+/// SIGINT/SIGTERM → a latch the serve loop polls, so Ctrl-C runs the
+/// graceful path ([`Server::stop`]: drain + WAL flush) instead of
+/// killing the process mid-write. Raw `signal(2)` through the C runtime
+/// (same no-new-deps policy as the epoll shim); the handler body is a
+/// single relaxed store — async-signal-safe.
+#[cfg(unix)]
+mod shutdown {
+    use std::os::raw::c_int;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: c_int = 2;
+    const SIGTERM: c_int = 15;
+
+    extern "C" {
+        fn signal(signum: c_int, handler: extern "C" fn(c_int)) -> usize;
+    }
+
+    extern "C" fn on_signal(_sig: c_int) {
+        REQUESTED.store(true, Ordering::Relaxed);
+    }
+
+    pub fn install() {
+        // Safety: installing an async-signal-safe handler; the prior
+        // disposition (default) needs no restoration.
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn requested() -> bool {
+        REQUESTED.load(Ordering::Relaxed)
+    }
+}
+
+fn server_config_from(args: &Args) -> Result<ServerConfig> {
+    let d = ServerConfig::default();
+    Ok(ServerConfig {
+        workers: args.usize_or("workers", d.workers),
+        max_conns: args.usize_or("max-conns", d.max_conns),
+        shed_watermark: args.usize_or("shed-watermark", d.shed_watermark),
+        per_user_queue_cap: args.usize_or("user-queue-cap", d.per_user_queue_cap),
+        keepalive_timeout: std::time::Duration::from_secs(args.u64_or("keepalive-secs", 30)),
+        request_deadline: std::time::Duration::from_secs(args.u64_or("request-deadline-secs", 10)),
+        drain_deadline: std::time::Duration::from_secs(args.u64_or("drain-secs", 5)),
+        backend: match args.get_or("backend", "auto") {
+            "auto" => ServerBackend::Auto,
+            "evented" => ServerBackend::Evented,
+            "threaded" => ServerBackend::Threaded,
+            other => bail!("unknown --backend '{other}' (auto|evented|threaded)"),
+        },
+    })
+}
 
 fn config_from(args: &Args) -> BridgeConfig {
     BridgeConfig {
@@ -96,9 +156,24 @@ fn main() -> Result<()> {
                 eprintln!("warmed cache with {n} corpus chunks");
             }
             let bind = args.get_or("bind", "127.0.0.1:8080");
-            let workers = args.usize_or("workers", 4);
-            let server = Server::start(bridge, bind, workers)?;
-            eprintln!("llmbridge serving on {} ({workers} workers); Ctrl-C to stop", server.addr);
+            let config = server_config_from(&args)?;
+            let workers = config.workers;
+            let server = Server::start_with(bridge, bind, config)?;
+            eprintln!(
+                "llmbridge serving on {} ({workers} workers); Ctrl-C drains and stops",
+                server.addr
+            );
+            #[cfg(unix)]
+            {
+                shutdown::install();
+                while !shutdown::requested() {
+                    std::thread::sleep(std::time::Duration::from_millis(100));
+                }
+                eprintln!("llmbridge: signal received — draining connections, flushing WAL");
+                server.stop();
+                eprintln!("llmbridge: stopped cleanly");
+            }
+            #[cfg(not(unix))]
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
@@ -180,7 +255,9 @@ fn main() -> Result<()> {
                 "usage: llmbridge <serve|ask|warm|models|probe-backend> [--artifacts DIR] \
                  [--service TYPE] [--prompt TEXT] [--bind ADDR] [--workers N] \
                  [--generation old|new] [--prefetch] [--warm] \
-                 [--data-dir DIR] [--compact-wal-bytes N]"
+                 [--data-dir DIR] [--compact-wal-bytes N] \
+                 [--backend auto|evented|threaded] [--max-conns N] [--shed-watermark N] \
+                 [--user-queue-cap N] [--keepalive-secs N] [--drain-secs N]"
             );
         }
     }

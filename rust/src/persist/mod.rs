@@ -333,6 +333,12 @@ impl Persistence {
         self.writer.lock().unwrap().wal.append_best_effort(op)
     }
 
+    /// Fsync the WAL — the graceful-shutdown flush (appends are
+    /// page-cache only; see [`WalWriter::sync`]).
+    pub fn sync_wal(&self) -> std::io::Result<()> {
+        self.writer.lock().unwrap().wal.sync()
+    }
+
     /// Current WAL size — the compaction trigger input.
     pub fn wal_len(&self) -> u64 {
         self.writer.lock().unwrap().wal.len()

@@ -386,6 +386,13 @@ impl WalWriter {
         Ok(())
     }
 
+    /// Flush appended records to stable storage. Appends are page-cache
+    /// only by design (a torn tail is recoverable); graceful shutdown
+    /// calls this so a clean exit loses nothing.
+    pub fn sync(&self) -> std::io::Result<()> {
+        self.file.lock().unwrap().sync_all()
+    }
+
     /// Append, counting (and warning once about) failures instead of
     /// surfacing them — for mutation paths with `()` signatures
     /// (`put_exact`, `clear`, quota charges) where durability is

@@ -75,6 +75,42 @@ impl<T> FifoQueue<T> {
         id
     }
 
+    /// Bounded enqueue — the backpressure primitive of the evented
+    /// server's admission control. Refuses (returning the payload to the
+    /// caller, who sheds with a 429) when the group already holds `cap`
+    /// messages including the in-flight one, so one user's burst can
+    /// never grow their queue without bound while the per-user
+    /// serialization guarantee drains it one request at a time.
+    pub fn push_bounded(&self, group: &str, payload: T, cap: usize) -> Result<u64, T> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.groups.get(group).map_or(0, |g| g.messages.len()) >= cap {
+            return Err(payload);
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner
+            .groups
+            .entry(group.to_string())
+            .or_insert_with(|| GroupQueue {
+                messages: VecDeque::new(),
+                in_flight: false,
+            })
+            .messages
+            .push_back(QueuedMessage {
+                id,
+                group: group.to_string(),
+                payload,
+            });
+        self.cond.notify_one();
+        Ok(id)
+    }
+
+    /// Queued (including in-flight) messages in one group.
+    pub fn group_len(&self, group: &str) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.groups.get(group).map_or(0, |g| g.messages.len())
+    }
+
     /// Blocking pop: returns the next deliverable message, or None if the
     /// queue is closed and fully drained.
     pub fn pop(&self) -> Option<QueuedMessage<T>>
@@ -215,6 +251,24 @@ mod tests {
         assert!(!q.ack(m.id + 999, "u1"));
         assert!(!q.ack(m.id, "u2"));
         assert!(q.ack(m.id, "u1"));
+    }
+
+    #[test]
+    fn push_bounded_sheds_at_cap_including_in_flight() {
+        let q = FifoQueue::new();
+        assert!(q.push_bounded("u1", 1, 2).is_ok());
+        assert!(q.push_bounded("u1", 2, 2).is_ok());
+        // At cap: the payload comes back to the caller.
+        assert_eq!(q.push_bounded("u1", 3, 2), Err(3));
+        assert_eq!(q.group_len("u1"), 2);
+        // Other groups have their own budget.
+        assert!(q.push_bounded("u2", 9, 2).is_ok());
+        // In-flight still counts toward the cap...
+        let m = q.try_pop().unwrap();
+        assert_eq!(q.push_bounded(&m.group, 4, 2), Err(4));
+        // ...and acking frees a slot.
+        assert!(q.ack(m.id, &m.group));
+        assert!(q.push_bounded("u1", 4, 2).is_ok());
     }
 
     #[test]

@@ -1,0 +1,538 @@
+//! Per-connection machinery for the server: an **incremental** HTTP/1.1
+//! request parser and the nonblocking connection state machine the
+//! evented loop drives.
+//!
+//! [`RequestParser`] is pure (bytes in, requests out) and shared by both
+//! server paths: the evented loop feeds it whatever `read(2)` returned
+//! and asks for complete requests; the blocking fallback wraps it in a
+//! deadline-armed read loop ([`crate::server::read_request_deadline`]).
+//! Because the parser drains exactly one request's bytes per yield,
+//! back-to-back pipelined requests on one keep-alive connection fall out
+//! naturally: leftover bytes stay buffered until the current response is
+//! written and the loop asks for the next request.
+//!
+//! Framing limits are enforced *before* buffering the offending bytes: a
+//! head that exceeds [`MAX_HEAD_BYTES`] without terminating fails with
+//! [`ParseError::HeadTooLarge`] (HTTP 400), a declared body length over
+//! [`MAX_BODY_BYTES`] fails with [`ParseError::BodyTooLarge`] (HTTP 413)
+//! without waiting for the body to arrive, and a malformed or non-numeric
+//! `Content-Length` is rejected rather than silently read as zero (which
+//! would desync the keep-alive framing and misparse body bytes as the
+//! next request line).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// Heads larger than this are rejected (connection closed after a 400).
+pub const MAX_HEAD_BYTES: usize = 64 * 1024;
+/// Declared body lengths larger than this are rejected with a 413.
+pub const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+/// One `fill` call reads at most this many bytes, so a single hot
+/// connection cannot monopolize the event loop; level-triggered epoll
+/// re-reports the remainder on the next tick.
+const FILL_QUANTUM: usize = 256 * 1024;
+
+/// A parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+    /// Whether the connection may serve another request after this one
+    /// (HTTP/1.1 default true, HTTP/1.0 default false, `Connection`
+    /// header overrides either way).
+    pub keep_alive: bool,
+}
+
+/// Why a connection's byte stream could not be framed into a request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParseError {
+    /// No header terminator within [`MAX_HEAD_BYTES`].
+    HeadTooLarge,
+    /// `Content-Length` declared more than [`MAX_BODY_BYTES`].
+    BodyTooLarge(usize),
+    /// Anything else: bad request line, non-utf8 head or body, unparsable
+    /// `Content-Length`.
+    Malformed(String),
+}
+
+impl ParseError {
+    /// The response status the connection gets before closing.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ParseError::BodyTooLarge(_) => 413,
+            _ => 400,
+        }
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::HeadTooLarge => write!(f, "headers too large (> {MAX_HEAD_BYTES} bytes)"),
+            ParseError::BodyTooLarge(n) => {
+                write!(f, "declared body of {n} bytes exceeds {MAX_BODY_BYTES}")
+            }
+            ParseError::Malformed(m) => write!(f, "malformed request: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A fully parsed head still waiting for its body bytes.
+#[derive(Debug)]
+struct PendingHead {
+    method: String,
+    path: String,
+    content_length: usize,
+    keep_alive: bool,
+}
+
+/// Incremental request framer. Feed bytes as they arrive; [`next`]
+/// yields at most one complete request per call and drains exactly that
+/// request's bytes, leaving pipelined successors buffered.
+///
+/// [`next`]: RequestParser::next
+#[derive(Debug, Default)]
+pub struct RequestParser {
+    buf: Vec<u8>,
+    /// Bytes of `buf` already scanned for a head terminator, so a
+    /// byte-dribbling client costs O(n), not O(n²).
+    scanned: usize,
+    head: Option<PendingHead>,
+}
+
+fn find_bytes(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    if haystack.len() < needle.len() {
+        return None;
+    }
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+impl RequestParser {
+    pub fn new() -> RequestParser {
+        RequestParser::default()
+    }
+
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a yielded request.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing is mid-parse: no buffered bytes, no pending
+    /// head. A connection closing in this state saw a clean boundary.
+    pub fn is_idle(&self) -> bool {
+        self.buf.is_empty() && self.head.is_none()
+    }
+
+    /// Locate the head terminator (CRLFCRLF per spec; bare LFLF tolerated
+    /// like the original line-based parser), whichever occurs first.
+    fn find_head_end(&mut self) -> Option<(usize, usize)> {
+        // Re-scan a 3-byte overlap in case the terminator straddled feeds.
+        let from = self.scanned.saturating_sub(3);
+        let window = &self.buf[from..];
+        let crlf = find_bytes(window, b"\r\n\r\n").map(|p| (from + p, 4));
+        let lf = find_bytes(window, b"\n\n").map(|p| (from + p, 2));
+        self.scanned = self.buf.len();
+        match (crlf, lf) {
+            (Some(a), Some(b)) => Some(if a.0 <= b.0 { a } else { b }),
+            (a, b) => a.or(b),
+        }
+    }
+
+    fn parse_head(&mut self, head_end: usize, sep_len: usize) -> Result<PendingHead, ParseError> {
+        let head = std::str::from_utf8(&self.buf[..head_end])
+            .map_err(|_| ParseError::Malformed("non-utf8 headers".into()))?;
+        let mut lines = head.split('\n').map(|l| l.trim_end_matches('\r'));
+        let request_line = lines
+            .next()
+            .ok_or_else(|| ParseError::Malformed("missing request line".into()))?;
+        let mut parts = request_line.split_whitespace();
+        let method = parts
+            .next()
+            .ok_or_else(|| ParseError::Malformed("missing method".into()))?
+            .to_string();
+        let path = parts
+            .next()
+            .ok_or_else(|| ParseError::Malformed("missing path".into()))?
+            .to_string();
+        // HTTP/1.1 (and anything unversioned) defaults to keep-alive;
+        // HTTP/1.0 defaults to close; Connection overrides both.
+        let mut keep_alive = parts.next() != Some("HTTP/1.0");
+        let mut content_length = 0usize;
+        for header in lines {
+            if let Some((k, v)) = header.split_once(':') {
+                let v = v.trim();
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_length = v.parse().map_err(|_| {
+                        ParseError::Malformed(format!("unparsable content-length '{v}'"))
+                    })?;
+                } else if k.eq_ignore_ascii_case("connection") {
+                    if v.eq_ignore_ascii_case("close") {
+                        keep_alive = false;
+                    } else if v.eq_ignore_ascii_case("keep-alive") {
+                        keep_alive = true;
+                    }
+                }
+            }
+        }
+        if content_length > MAX_BODY_BYTES {
+            return Err(ParseError::BodyTooLarge(content_length));
+        }
+        self.buf.drain(..head_end + sep_len);
+        self.scanned = 0;
+        Ok(PendingHead {
+            method,
+            path,
+            content_length,
+            keep_alive,
+        })
+    }
+
+    /// Yield the next complete request, `Ok(None)` when more bytes are
+    /// needed. After an `Err` the stream is unframeable — respond with
+    /// [`ParseError::http_status`] and close.
+    pub fn next(&mut self) -> Result<Option<HttpRequest>, ParseError> {
+        if self.head.is_none() {
+            let Some((head_end, sep_len)) = self.find_head_end() else {
+                if self.buf.len() > MAX_HEAD_BYTES {
+                    return Err(ParseError::HeadTooLarge);
+                }
+                return Ok(None);
+            };
+            if head_end > MAX_HEAD_BYTES {
+                return Err(ParseError::HeadTooLarge);
+            }
+            self.head = Some(self.parse_head(head_end, sep_len)?);
+        }
+        let need = self.head.as_ref().map(|h| h.content_length).unwrap_or(0);
+        if self.buf.len() < need {
+            return Ok(None);
+        }
+        let h = self.head.take().expect("checked above");
+        let body: Vec<u8> = self.buf.drain(..h.content_length).collect();
+        self.scanned = 0;
+        let body = String::from_utf8(body)
+            .map_err(|_| ParseError::Malformed("non-utf8 body".into()))?;
+        Ok(Some(HttpRequest {
+            method: h.method,
+            path: h.path,
+            body,
+            keep_alive: h.keep_alive,
+        }))
+    }
+}
+
+/// Where a connection sits in the evented loop's lifecycle. Interest
+/// masks follow the state: `Reading` watches readable, `Dispatched`
+/// watches nothing (kernel socket buffer absorbs pipelined bytes — TCP
+/// backpressure), `Writing` watches writable.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ConnState {
+    /// Accumulating request bytes.
+    Reading,
+    /// A parsed request is queued or in a worker; reads are paused.
+    Dispatched,
+    /// A response is being flushed.
+    Writing,
+}
+
+/// What a `fill` pass observed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FillOutcome {
+    /// Read some bytes (peer may also have half-closed afterward).
+    Progress,
+    /// Nothing to read right now (`EWOULDBLOCK` immediately).
+    Idle,
+    /// Clean EOF with no new bytes.
+    Eof,
+    /// Hard I/O error — close the connection.
+    Error,
+}
+
+/// What a `flush_write` pass achieved.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WriteOutcome {
+    /// Outbox fully flushed.
+    Done,
+    /// Socket buffer full — wait for writability.
+    Blocked,
+    /// Hard I/O error — close the connection.
+    Error,
+}
+
+/// One nonblocking connection: socket + parser + response outbox.
+#[derive(Debug)]
+pub struct Conn {
+    pub stream: TcpStream,
+    pub parser: RequestParser,
+    pub state: ConnState,
+    /// Set when EOF was observed; the connection closes once the
+    /// in-flight response (if any) is flushed.
+    pub peer_closed: bool,
+    /// Whether the connection survives the current response.
+    pub keep_alive_after_write: bool,
+    /// Idle-sweep clock: bumped on every read/write progress.
+    pub last_activity: Instant,
+    /// Anti-slowloris clock: set at the first byte of a request, cleared
+    /// when one completes. Unlike `last_activity`, dribbled bytes do
+    /// **not** reset it, so a request must fully arrive within the
+    /// server's request deadline.
+    pub reading_since: Option<Instant>,
+    /// Requests fully served on this connection (keep-alive reuse count
+    /// is `served - 1` at close).
+    pub served: u64,
+    outbox: Vec<u8>,
+    written: usize,
+}
+
+impl Conn {
+    /// Wrap an accepted stream (caller has already set nonblocking).
+    pub fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            parser: RequestParser::new(),
+            state: ConnState::Reading,
+            peer_closed: false,
+            keep_alive_after_write: false,
+            last_activity: Instant::now(),
+            reading_since: None,
+            served: 0,
+            outbox: Vec::new(),
+            written: 0,
+        }
+    }
+
+    /// Read until `EWOULDBLOCK`, EOF, error, or the fairness quantum,
+    /// feeding the parser.
+    pub fn fill(&mut self) -> FillOutcome {
+        let mut tmp = [0u8; 16 * 1024];
+        let mut total = 0usize;
+        loop {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    self.peer_closed = true;
+                    return if total > 0 {
+                        FillOutcome::Progress
+                    } else {
+                        FillOutcome::Eof
+                    };
+                }
+                Ok(n) => {
+                    self.parser.feed(&tmp[..n]);
+                    self.last_activity = Instant::now();
+                    if self.reading_since.is_none() {
+                        self.reading_since = Some(self.last_activity);
+                    }
+                    total += n;
+                    if total >= FILL_QUANTUM {
+                        return FillOutcome::Progress;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return if total > 0 {
+                        FillOutcome::Progress
+                    } else {
+                        FillOutcome::Idle
+                    };
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return FillOutcome::Error,
+            }
+        }
+    }
+
+    /// Arm a response for flushing and enter `Writing`.
+    pub fn start_write(&mut self, bytes: Vec<u8>, keep_alive_after: bool) {
+        debug_assert!(self.outbox.is_empty(), "one response in flight per conn");
+        self.outbox = bytes;
+        self.written = 0;
+        self.keep_alive_after_write = keep_alive_after;
+        self.state = ConnState::Writing;
+    }
+
+    /// Write until done or `EWOULDBLOCK`.
+    pub fn flush_write(&mut self) -> WriteOutcome {
+        while self.written < self.outbox.len() {
+            match self.stream.write(&self.outbox[self.written..]) {
+                Ok(0) => return WriteOutcome::Error,
+                Ok(n) => {
+                    self.written += n;
+                    self.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return WriteOutcome::Blocked;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return WriteOutcome::Error,
+            }
+        }
+        self.outbox = Vec::new();
+        self.written = 0;
+        WriteOutcome::Done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_all(parser: &mut RequestParser) -> Vec<HttpRequest> {
+        let mut out = Vec::new();
+        while let Ok(Some(r)) = parser.next() {
+            out.push(r);
+        }
+        out
+    }
+
+    #[test]
+    fn single_request_byte_at_a_time() {
+        let raw = b"POST /v1/request HTTP/1.1\r\nContent-Length: 13\r\n\r\n{\"user\":\"u1\"}";
+        let mut p = RequestParser::new();
+        for (i, b) in raw.iter().enumerate() {
+            assert!(p.next().unwrap().is_none(), "yielded early at byte {i}");
+            p.feed(&[*b]);
+        }
+        let req = p.next().unwrap().expect("complete request");
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/request");
+        assert_eq!(req.body, "{\"user\":\"u1\"}");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert!(p.is_idle());
+    }
+
+    #[test]
+    fn pipelined_requests_drain_one_at_a_time() {
+        let mut p = RequestParser::new();
+        p.feed(
+            b"POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi\
+              GET /b HTTP/1.1\r\n\r\n",
+        );
+        let reqs = parse_all(&mut p);
+        assert_eq!(reqs.len(), 2);
+        assert_eq!((reqs[0].method.as_str(), reqs[0].body.as_str()), ("POST", "hi"));
+        assert_eq!((reqs[1].method.as_str(), reqs[1].path.as_str()), ("GET", "/b"));
+        assert!(p.is_idle());
+    }
+
+    #[test]
+    fn keep_alive_negotiation() {
+        let cases: &[(&[u8], bool)] = &[
+            (b"GET / HTTP/1.1\r\n\r\n", true),
+            (b"GET / HTTP/1.0\r\n\r\n", false),
+            (b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n", false),
+            (b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n", true),
+        ];
+        for (raw, want) in cases {
+            let mut p = RequestParser::new();
+            p.feed(raw);
+            let req = p.next().unwrap().unwrap();
+            assert_eq!(req.keep_alive, *want, "{}", String::from_utf8_lossy(raw));
+        }
+    }
+
+    #[test]
+    fn bare_lf_separator_tolerated() {
+        let mut p = RequestParser::new();
+        p.feed(b"GET /health HTTP/1.1\n\n");
+        assert_eq!(p.next().unwrap().unwrap().path, "/health");
+    }
+
+    #[test]
+    fn oversized_head_rejected_without_terminator() {
+        let mut p = RequestParser::new();
+        p.feed(b"GET / HTTP/1.1\r\nX-Pad: ");
+        p.feed(&vec![b'a'; MAX_HEAD_BYTES + 10]);
+        assert_eq!(p.next(), Err(ParseError::HeadTooLarge));
+        assert_eq!(ParseError::HeadTooLarge.http_status(), 400);
+    }
+
+    #[test]
+    fn oversized_declared_body_rejected_before_body_arrives() {
+        let mut p = RequestParser::new();
+        let n = MAX_BODY_BYTES + 1;
+        p.feed(format!("POST / HTTP/1.1\r\nContent-Length: {n}\r\n\r\n").as_bytes());
+        let err = p.next().unwrap_err();
+        assert_eq!(err, ParseError::BodyTooLarge(n));
+        assert_eq!(err.http_status(), 413);
+    }
+
+    #[test]
+    fn unparsable_content_length_rejected() {
+        let mut p = RequestParser::new();
+        p.feed(b"POST / HTTP/1.1\r\nContent-Length: banana\r\n\r\n");
+        assert!(matches!(p.next(), Err(ParseError::Malformed(_))));
+    }
+
+    #[test]
+    fn terminator_straddles_feed_boundaries() {
+        let mut p = RequestParser::new();
+        p.feed(b"GET /x HTTP/1.1\r\n\r");
+        assert!(p.next().unwrap().is_none());
+        p.feed(b"\n");
+        assert_eq!(p.next().unwrap().unwrap().path, "/x");
+    }
+
+    #[test]
+    fn nonblocking_conn_roundtrip() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = std::net::TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        let mut conn = Conn::new(server);
+
+        // Nothing sent yet: idle, not EOF.
+        assert_eq!(conn.fill(), FillOutcome::Idle);
+
+        client.write_all(b"GET /health HTTP/1.1\r\n\r\n").unwrap();
+        // Wait for delivery (loopback is fast but not synchronous).
+        let deadline = Instant::now() + std::time::Duration::from_secs(2);
+        loop {
+            match conn.fill() {
+                FillOutcome::Progress => break,
+                FillOutcome::Idle if Instant::now() < deadline => {
+                    std::thread::sleep(std::time::Duration::from_millis(1))
+                }
+                other => panic!("unexpected fill outcome {other:?}"),
+            }
+        }
+        let req = conn.parser.next().unwrap().unwrap();
+        assert_eq!(req.path, "/health");
+
+        conn.start_write(b"HTTP/1.1 200 OK\r\nContent-Length: 0\r\n\r\n".to_vec(), false);
+        assert_eq!(conn.flush_write(), WriteOutcome::Done);
+        drop(conn);
+        let mut got = String::new();
+        client.read_to_string(&mut got).unwrap();
+        assert!(got.starts_with("HTTP/1.1 200 OK"));
+    }
+
+    #[test]
+    fn fill_reports_eof_on_peer_close() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::net::TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        let mut conn = Conn::new(server);
+        drop(client);
+        let deadline = Instant::now() + std::time::Duration::from_secs(2);
+        loop {
+            match conn.fill() {
+                FillOutcome::Eof => break,
+                FillOutcome::Idle if Instant::now() < deadline => {
+                    std::thread::sleep(std::time::Duration::from_millis(1))
+                }
+                other => panic!("unexpected fill outcome {other:?}"),
+            }
+        }
+        assert!(conn.peer_closed);
+    }
+}

@@ -1,0 +1,569 @@
+//! The evented readiness loop — epoll-driven nonblocking connections
+//! with HTTP/1.1 keep-alive, backpressure, and load-shedding admission
+//! control. Linux-only (raw-syscall shim, [`crate::util::epoll`]); other
+//! platforms fall back to the threaded path.
+//!
+//! # The per-connection state machine
+//!
+//! ```text
+//!             accept (< max_conns, else 429 + close)
+//!                │
+//!                ▼        parser yields a request
+//!          ┌──────────┐   ──────────────────────────►  admission?
+//!   ┌────► │ Reading  │                                  │
+//!   │      └──────────┘   interest: EPOLLIN              │ admitted: push to
+//!   │            │                                       │ per-user FIFO group
+//!   │            │ shed / parse error                    ▼
+//!   │            │ (429 / 400/413)                ┌────────────┐
+//!   │            │                                │ Dispatched │ interest: none
+//!   │            │                                └────────────┘ (kernel socket
+//!   │            │                                       │        buffer is the
+//!   │            │              worker: route() +        │        backpressure)
+//!   │            │              completion via wakeup    │
+//!   │            ▼              pipe                     ▼
+//!   │      ┌──────────┐ ◄────────────────────────────────┘
+//!   └──────│ Writing  │   interest: EPOLLOUT (only while blocked)
+//!  keep-   └──────────┘
+//!  alive         │ Connection: close / peer EOF / drain
+//!                ▼
+//!              close
+//! ```
+//!
+//! Invariants:
+//!
+//! * **One request in flight per connection.** While `Dispatched` or
+//!   `Writing`, the loop reads nothing from the socket — pipelined bytes
+//!   wait in the kernel buffer (TCP backpressure) or in the parser's
+//!   buffer, and are consumed only after the response flushes. This is
+//!   what makes keep-alive compose with the per-user FIFO serialization:
+//!   a connection can never have two requests racing in the pool.
+//! * **Admission before work.** A parsed request is shed with an
+//!   admission 429 (never dispatched, bridge untouched) when in-flight
+//!   dispatches sit at the shed watermark or the user's FIFO group is at
+//!   its bound (`FifoQueue::push_bounded`). The connection stays open:
+//!   shedding is per-request, so a well-behaved keep-alive client can
+//!   retry on the same socket.
+//! * **The loop never blocks — and never recurses.** Accepts, reads, and
+//!   writes all run nonblocking on readiness; bridge work happens
+//!   exclusively on the dispatch pool; completions return via a
+//!   lock-then-wake handoff ([`crate::util::epoll::WakePipe`]). Serving
+//!   a run of pipelined requests (each possibly shed inline) is a loop in
+//!   `process_parsed`, not mutual recursion, so a flood of tiny pipelined
+//!   requests is O(1) stack.
+//! * **Deadlines are swept, not armed.** A 100ms `epoll_wait` timeout
+//!   doubles as the sweep tick for keep-alive idle closes and the
+//!   per-request read deadline (anti-slowloris: the clock starts at the
+//!   first byte of an incomplete request and survives dribbled bytes,
+//!   unlike the idle clock, which any byte resets).
+//!
+//! Graceful drain: on stop the listener is deregistered, idle
+//! connections close immediately, dispatched/writing connections get
+//! until [`super::ServerConfig::drain_deadline`] to finish, then the
+//! loop force-closes the rest and joins the pool.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::TcpListener;
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::Bridge;
+use crate::queuing::FifoQueue;
+use crate::telemetry::Telemetry;
+use crate::util::epoll::{Epoll, Event, WakePipe, INTEREST_READ, INTEREST_WRITE};
+use crate::util::json::Json;
+
+use super::conn::{Conn, ConnState, FillOutcome, HttpRequest, WriteOutcome};
+use super::{admission_shed_body, render_response, route_server, ServerConfig, ServerState};
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+/// epoll_wait timeout — the sweep tick for idle/deadline reaping.
+const TICK_MS: i32 = 100;
+
+/// A fully parsed request handed to the dispatch pool.
+#[derive(Clone)]
+struct Job {
+    token: u64,
+    req: HttpRequest,
+}
+
+/// A rendered response traveling back from a worker to the loop.
+struct Completion {
+    token: u64,
+    bytes: Vec<u8>,
+    close_after: bool,
+}
+
+pub(super) struct EventedHandle {
+    stop: Arc<AtomicBool>,
+    wake: Arc<WakePipe>,
+    join: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl EventedHandle {
+    pub(super) fn stop(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.wake.wake();
+        for h in self.join {
+            let _ = h.join();
+        }
+    }
+}
+
+pub(super) fn start(
+    bridge: Arc<Bridge>,
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    config: ServerConfig,
+) -> Result<EventedHandle> {
+    listener.set_nonblocking(true)?;
+    let epoll = Epoll::new()?;
+    epoll.add(listener.as_raw_fd(), INTEREST_READ, TOKEN_LISTENER)?;
+    let wake = Arc::new(WakePipe::new()?);
+    epoll.add(wake.read_fd(), INTEREST_READ, TOKEN_WAKE)?;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let queue: Arc<FifoQueue<Job>> = Arc::new(FifoQueue::new());
+    let completions: Arc<Mutex<Vec<Completion>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut join = Vec::new();
+
+    // Dispatch pool: fully-parsed requests in, rendered responses out.
+    // `pop` honors the per-user exclusive-delivery guarantee; `ack`
+    // after publishing the completion keeps a user's next request
+    // blocked until their previous response is on its way back.
+    for _ in 0..config.workers.max(1) {
+        let queue = queue.clone();
+        let completions = completions.clone();
+        let wake = wake.clone();
+        let bridge = bridge.clone();
+        let state = state.clone();
+        join.push(std::thread::spawn(move || {
+            while let Some(msg) = queue.pop() {
+                let job = msg.payload;
+                let (status, body) = route_server(&bridge, &state, &job.req);
+                let close_after = !job.req.keep_alive;
+                let bytes = render_response(status, &body, !close_after);
+                completions.lock().unwrap().push(Completion {
+                    token: job.token,
+                    bytes,
+                    close_after,
+                });
+                queue.ack(msg.id, &msg.group);
+                wake.wake();
+            }
+        }));
+    }
+
+    // The readiness loop itself.
+    {
+        let stop = stop.clone();
+        let wake = wake.clone();
+        let tele = bridge.telemetry().clone();
+        join.push(std::thread::spawn(move || {
+            let mut lp = Loop {
+                epoll,
+                listener,
+                wake,
+                queue,
+                completions,
+                tele,
+                state,
+                config,
+                conns: HashMap::new(),
+                next_token: FIRST_CONN_TOKEN,
+                draining: false,
+            };
+            lp.run(&stop);
+        }));
+    }
+
+    Ok(EventedHandle { stop, wake, join })
+}
+
+/// What became of a connection after a response finished (or failed).
+#[derive(PartialEq)]
+enum AfterWrite {
+    /// Back in `Reading` — the caller may keep pulling parsed requests.
+    Recycled,
+    /// Parked in `Writing` (socket buffer full), dispatched, or closed —
+    /// stop driving this connection for now.
+    Settled,
+}
+
+struct Loop {
+    epoll: Epoll,
+    listener: TcpListener,
+    wake: Arc<WakePipe>,
+    queue: Arc<FifoQueue<Job>>,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    tele: Arc<Telemetry>,
+    state: Arc<ServerState>,
+    config: ServerConfig,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    draining: bool,
+}
+
+impl Loop {
+    fn run(&mut self, stop: &AtomicBool) {
+        let mut events: Vec<Event> = Vec::new();
+        let mut drain_deadline: Option<Instant> = None;
+        loop {
+            if self.epoll.wait(&mut events, 256, TICK_MS).is_err() {
+                break;
+            }
+            if stop.load(Ordering::Relaxed) && !self.draining {
+                self.begin_drain();
+                drain_deadline = Some(Instant::now() + self.config.drain_deadline);
+            }
+            for &ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_burst(),
+                    TOKEN_WAKE => self.wake.drain(),
+                    token => self.conn_event(token, ev),
+                }
+            }
+            self.drain_completions();
+            self.sweep_deadlines();
+            if self.draining {
+                let drained = self.conns.is_empty() && self.state.inflight() == 0;
+                let expired = drain_deadline.is_some_and(|d| Instant::now() >= d);
+                if drained || expired {
+                    break;
+                }
+            }
+        }
+        // Teardown: no more dispatches, force-close the stragglers.
+        self.queue.close();
+        self.conns.clear();
+    }
+
+    /// Stop accepting, reap idle connections, let the pool drain what is
+    /// already queued (`close` only stops blocked pops once empty).
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        self.state.set_draining();
+        let _ = self.epoll.delete(self.listener.as_raw_fd());
+        self.queue.close();
+        let idle: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.state == ConnState::Reading)
+            .map(|(t, _)| *t)
+            .collect();
+        for t in idle {
+            self.close_conn(t);
+        }
+    }
+
+    fn accept_burst(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    self.tele.counters.incr("server_accepted");
+                    if self.conns.len() >= self.config.max_conns {
+                        // Best-effort 429 so the client learns why; the
+                        // socket is young, so the first write virtually
+                        // always fits the send buffer.
+                        self.tele.counters.incr("server_shed_conns");
+                        let mut s = stream;
+                        let _ = s.set_nonblocking(true);
+                        let _ = s.write(&render_response(
+                            429,
+                            r#"{"error":"connection limit reached","reason":"admission"}"#,
+                            false,
+                        ));
+                        continue;
+                    }
+                    // accept(2) does not inherit O_NONBLOCK from the
+                    // listener; a socket stuck in blocking mode would
+                    // stall the whole loop — drop it instead.
+                    if let Err(e) = stream.set_nonblocking(true) {
+                        self.tele.counters.incr("server_sock_mode_errors");
+                        eprintln!(
+                            "server: dropping accepted connection — \
+                             cannot set nonblocking mode: {e}"
+                        );
+                        continue;
+                    }
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self
+                        .epoll
+                        .add(stream.as_raw_fd(), INTEREST_READ, token)
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    self.conns.insert(token, Conn::new(stream));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn conn_event(&mut self, token: u64, ev: Event) {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        match conn.state {
+            ConnState::Reading => match conn.fill() {
+                FillOutcome::Error | FillOutcome::Eof => self.close_conn(token),
+                FillOutcome::Progress | FillOutcome::Idle => {
+                    self.process_parsed(token);
+                    // Still `Reading` after parsing everything available:
+                    // an EOF (or a hangup event `fill` could not observe,
+                    // e.g. EPOLLERR) means no request can ever complete
+                    // here.
+                    let dead = self.conns.get(&token).is_some_and(|c| {
+                        c.state == ConnState::Reading && (c.peer_closed || ev.hangup)
+                    });
+                    if dead {
+                        self.close_conn(token);
+                    }
+                }
+            },
+            ConnState::Dispatched => {
+                // Interest is empty while dispatched; only RDHUP/HUP can
+                // land here. Remember the EOF — the response still gets
+                // a delivery attempt, then the conn closes.
+                if ev.hangup {
+                    conn.peer_closed = true;
+                }
+            }
+            ConnState::Writing => {
+                if ev.writable || ev.hangup {
+                    self.finish_write(token);
+                }
+            }
+        }
+    }
+
+    /// Pull complete requests out of the parser until the connection
+    /// dispatches, parks, closes, or runs out of bytes. Inline responses
+    /// (sheds, parse rejects) are flushed here too — iteratively, so a
+    /// pipelined burst never grows the stack.
+    fn process_parsed(&mut self, token: u64) {
+        loop {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                return;
+            };
+            if conn.state != ConnState::Reading {
+                return;
+            }
+            match conn.parser.next() {
+                Ok(Some(req)) => {
+                    conn.reading_since = None;
+                    if conn.served > 0 {
+                        self.tele.counters.incr("server_keepalive_reuse");
+                    }
+                    if self.dispatch(token, req) == AfterWrite::Settled {
+                        return;
+                    }
+                }
+                Ok(None) => return,
+                Err(pe) => {
+                    // The byte stream is unframeable from here on:
+                    // answer and always close.
+                    self.tele.counters.incr("server_parse_rejects");
+                    let body = Json::obj(vec![("error", Json::str(pe.to_string()))]).to_string();
+                    self.write_inline(token, pe.http_status(), &body, true);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Admission-check one parsed request: queue it (entering
+    /// `Dispatched`) or shed it with an inline 429. Returns `Recycled`
+    /// only when the connection is back in `Reading` and the caller may
+    /// continue with the next pipelined request.
+    fn dispatch(&mut self, token: u64, req: HttpRequest) -> AfterWrite {
+        // Probes are answered inline by the loop — never dispatched, so
+        // they stay accurate exactly when it matters: under overload
+        // (when the pool would shed them) and during drain.
+        if req.method == "GET" && req.path == "/health" {
+            return self.write_inline(token, 200, r#"{"status":"ok"}"#, !req.keep_alive);
+        }
+        if req.method == "GET" && req.path == "/ready" {
+            let (status, body) = super::ready_response(&self.state);
+            return self.write_inline(token, status, &body, !req.keep_alive);
+        }
+        if self.draining || !self.state.admits() {
+            self.tele.counters.incr("server_shed_admission");
+            let close = self.draining || !req.keep_alive;
+            return self.write_inline(token, 429, &admission_shed_body(), close);
+        }
+        // FIFO group = user when the body names one (per-user
+        // serialization), else connection-unique (no ordering need). The
+        // "d:" prefix keeps client-chosen names out of the internal
+        // namespace.
+        let group = Json::parse(&req.body)
+            .ok()
+            .and_then(|j| j.str_of("user").ok())
+            .map(|user| format!("d:u:{user}"))
+            .unwrap_or_else(|| format!("d:a:{token}"));
+        let keep_alive = req.keep_alive;
+        match self
+            .queue
+            .push_bounded(&group, Job { token, req }, self.config.per_user_queue_cap)
+        {
+            Ok(_) => {
+                self.state.begin_dispatch();
+                let conn = self.conns.get_mut(&token).expect("checked in caller");
+                conn.state = ConnState::Dispatched;
+                // Pause reads: pipelined bytes wait in the kernel buffer.
+                let fd = conn.stream.as_raw_fd();
+                let _ = self.epoll.modify(fd, 0, token);
+                AfterWrite::Settled
+            }
+            Err(_) => {
+                // This user's queue is full — per-user backpressure.
+                self.tele.counters.incr("server_shed_admission");
+                self.write_inline(token, 429, &admission_shed_body(), !keep_alive)
+            }
+        }
+    }
+
+    /// Flush a loop-generated response on a connection currently in
+    /// `Reading` (interest already EPOLLIN, so a recycled connection
+    /// needs no re-registration; a parked one switches to EPOLLOUT).
+    fn write_inline(
+        &mut self,
+        token: u64,
+        status: u16,
+        body: &str,
+        close_after: bool,
+    ) -> AfterWrite {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return AfterWrite::Settled;
+        };
+        let keep = !close_after;
+        conn.start_write(render_response(status, body, keep), keep);
+        match conn.flush_write() {
+            WriteOutcome::Done => self.after_response(token),
+            WriteOutcome::Blocked => {
+                let fd = conn.stream.as_raw_fd();
+                let _ = self.epoll.modify(fd, INTEREST_WRITE, token);
+                AfterWrite::Settled
+            }
+            WriteOutcome::Error => {
+                self.close_conn(token);
+                AfterWrite::Settled
+            }
+        }
+    }
+
+    /// A response finished flushing: recycle for keep-alive or close.
+    /// A peer that half-closed but left complete pipelined requests
+    /// buffered still gets them served; the persistent RDHUP level event
+    /// reaps the connection once the parser goes idle.
+    fn after_response(&mut self, token: u64) -> AfterWrite {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return AfterWrite::Settled;
+        };
+        conn.served += 1;
+        let recycle = conn.keep_alive_after_write
+            && !self.draining
+            && (!conn.peer_closed || !conn.parser.is_idle());
+        if recycle {
+            conn.state = ConnState::Reading;
+            // Re-arm the anti-slowloris clock for a partially-buffered
+            // next request; a clean boundary starts fresh on first byte.
+            conn.reading_since = if conn.parser.is_idle() {
+                None
+            } else {
+                Some(Instant::now())
+            };
+            AfterWrite::Recycled
+        } else {
+            self.close_conn(token);
+            AfterWrite::Settled
+        }
+    }
+
+    /// Drive a `Writing` connection (EPOLLOUT readiness or a completion
+    /// handoff). On completion, re-enters the read cycle — including any
+    /// pipelined requests already buffered.
+    fn finish_write(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        match conn.flush_write() {
+            WriteOutcome::Done => {
+                if self.after_response(token) == AfterWrite::Recycled {
+                    let Some(conn) = self.conns.get_mut(&token) else {
+                        return;
+                    };
+                    let fd = conn.stream.as_raw_fd();
+                    let _ = self.epoll.modify(fd, INTEREST_READ, token);
+                    self.process_parsed(token);
+                }
+            }
+            WriteOutcome::Blocked => {
+                let fd = conn.stream.as_raw_fd();
+                let _ = self.epoll.modify(fd, INTEREST_WRITE, token);
+            }
+            WriteOutcome::Error => self.close_conn(token),
+        }
+    }
+
+    /// Hand worker completions to their connections.
+    fn drain_completions(&mut self) {
+        let batch: Vec<Completion> = {
+            let mut guard = self.completions.lock().unwrap();
+            std::mem::take(&mut *guard)
+        };
+        for c in batch {
+            self.state.end_dispatch();
+            let Some(conn) = self.conns.get_mut(&c.token) else {
+                // Connection died while its request was in flight; the
+                // response has nowhere to go.
+                continue;
+            };
+            conn.start_write(c.bytes, !c.close_after);
+            self.finish_write(c.token);
+        }
+    }
+
+    /// Reap idle keep-alive connections and enforce the per-request read
+    /// deadline. The two clocks differ on purpose: any byte resets
+    /// `last_activity` (idle), but only a *complete* request clears
+    /// `reading_since` (deadline) — a dribbler cannot stay ahead of it.
+    fn sweep_deadlines(&mut self) {
+        let now = Instant::now();
+        let ka = self.config.keepalive_timeout;
+        let rd = self.config.request_deadline;
+        let expired: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.state == ConnState::Reading)
+            .filter(|(_, c)| {
+                let idle = now.duration_since(c.last_activity) >= ka;
+                let dribbling = c
+                    .reading_since
+                    .is_some_and(|t| now.duration_since(t) >= rd);
+                idle || dribbling
+            })
+            .map(|(t, _)| *t)
+            .collect();
+        for t in expired {
+            self.tele.counters.incr("server_idle_closed");
+            self.close_conn(t);
+        }
+    }
+
+    fn close_conn(&mut self, token: u64) {
+        // Dropping the stream closes the fd, which de-registers it from
+        // epoll implicitly.
+        self.conns.remove(&token);
+    }
+}

@@ -1,44 +1,176 @@
-//! REST server — the interface the classroom deployment used (§5.2):
-//! a hand-rolled HTTP/1.1 server on `std::net` with a worker pool fed by
-//! the per-user FIFO queue substrate (the paper's SQS per-user
-//! exclusive-delivery guarantee, end to end).
+//! REST server — the interface the classroom deployment used (§5.2),
+//! grown into an evented front door shaped for the ROADMAP's
+//! millions-of-users target.
 //!
-//! The acceptor thread only accepts: request parsing happens on the
-//! workers, so one slow-writing client can never stall accepts
-//! (head-of-line blocking). Each connection flows through two queue hops
-//! on the same FIFO substrate — a connection-unique "raw" group while
-//! unparsed, then the per-user group once the body names a user. The
-//! per-user guarantee is *serialization* (at most one in-flight request
-//! per user, queue order thereafter); a user's requests enter their
-//! queue in parse-completion order, which across separate connections
-//! can differ from accept order — same as concurrent clients racing the
-//! paper's SQS enqueue.
+//! Two interchangeable transport paths serve the same routes:
+//!
+//! * **Evented** (`evloop.rs`, Linux default): a nonblocking epoll
+//!   readiness loop (raw-syscall shim, [`crate::util::epoll`]) drives
+//!   per-connection state machines with HTTP/1.1 keep-alive, incremental
+//!   parsing ([`RequestParser`]), bounded per-user backpressure, and
+//!   load-shedding admission control that answers 429 *before* queues
+//!   melt. Worker threads are a dispatch pool fed fully-parsed requests
+//!   through the per-user FIFO substrate; responses travel back to the
+//!   loop over a wakeup pipe.
+//! * **Threaded** (`threaded.rs`, portable fallback): the original
+//!   blocking-socket worker pool — the acceptor enqueues raw
+//!   connections, workers parse and re-enqueue under the per-user group,
+//!   one request per connection (`Connection: close`).
+//!
+//! Both paths preserve the paper's per-user **serialization** guarantee
+//! end to end (the SQS exclusive-delivery semantics, via
+//! [`crate::queuing::FifoQueue`]): at most one in-flight request per
+//! user, queue order thereafter. A user's requests enter their queue in
+//! parse-completion order, which across separate connections can differ
+//! from accept order — same as concurrent clients racing the paper's SQS
+//! enqueue.
+//!
+//! **Admission control vs quota 429s.** The server sheds with HTTP 429
+//! in three places *before* any bridge work happens: at accept when
+//! [`ServerConfig::max_conns`] live connections exist, at dispatch when
+//! in-flight requests reach [`ServerConfig::shed_watermark`], and at
+//! enqueue when one user's queue is at
+//! [`ServerConfig::per_user_queue_cap`]. These shed bodies carry
+//! `"reason":"admission"` — distinct from the per-user *quota* 429
+//! ([`crate::error::BridgeError::QuotaExceeded`]) raised inside the
+//! pipeline, whose body names the user. Shed counts surface in
+//! `/v1/metrics` (`server_shed_*` counters).
 //!
 //! Routes:
 //! * `POST /v1/request`     — body: [`crate::api::Request`] JSON.
 //! * `POST /v1/regenerate`  — body: `{"request_id": "<hex>", "service_type": {...}?}`.
 //! * `GET  /v1/metrics`     — telemetry snapshot.
-//! * `GET  /health`         — liveness.
+//! * `GET  /health`         — liveness (always 200 while the process serves).
+//! * `GET  /ready`          — readiness: restore complete (implied by a
+//!   constructed [`Bridge`] — `open_with` replays WAL + snapshot before
+//!   returning), not draining, and in-flight load below the shed
+//!   watermark; 503 otherwise.
+//!
+//! [`Server::stop`] is graceful on both paths: stop accepting, drain
+//! in-flight connections (bounded by [`ServerConfig::drain_deadline`] on
+//! the evented path), then fsync the WAL so a clean exit loses nothing.
 
-use std::io::{Read, Write};
+mod conn;
+#[cfg(target_os = "linux")]
+mod evloop;
+mod threaded;
+
+use std::io::Read;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+
+pub use conn::{
+    Conn, ConnState, FillOutcome, HttpRequest, ParseError, RequestParser, WriteOutcome,
+    MAX_BODY_BYTES, MAX_HEAD_BYTES,
+};
 
 use crate::api::{Request, ServiceType};
 use crate::coordinator::Bridge;
 use crate::error::BridgeError;
-use crate::queuing::FifoQueue;
 use crate::util::json::Json;
 
-/// A parsed HTTP request.
-#[derive(Debug)]
-pub struct HttpRequest {
-    pub method: String,
-    pub path: String,
-    pub body: String,
+/// Which transport path serves connections.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerBackend {
+    /// Evented on Linux, threaded elsewhere.
+    Auto,
+    /// Force the epoll readiness loop (errors off-Linux).
+    Evented,
+    /// Force the portable blocking worker pool.
+    Threaded,
+}
+
+/// Server tuning knobs. `Default` matches the CLI defaults.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Dispatch-pool threads (both paths).
+    pub workers: usize,
+    /// Live-connection ceiling (evented path); excess accepts are
+    /// answered 429 and closed.
+    pub max_conns: usize,
+    /// In-flight dispatched-request watermark: at or above it, newly
+    /// parsed requests shed with an admission 429 instead of queueing.
+    pub shed_watermark: usize,
+    /// Per-user queue-depth bound (including the in-flight request).
+    pub per_user_queue_cap: usize,
+    /// Idle keep-alive connections are closed after this long.
+    pub keepalive_timeout: Duration,
+    /// A single request's bytes must fully arrive within this budget
+    /// (anti-slowloris; mirrors the threaded path's read deadline).
+    pub request_deadline: Duration,
+    /// Graceful-stop bound for draining in-flight work (evented path).
+    pub drain_deadline: Duration,
+    /// Transport selection.
+    pub backend: ServerBackend,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            workers: 4,
+            max_conns: 4096,
+            shed_watermark: 512,
+            per_user_queue_cap: 32,
+            keepalive_timeout: Duration::from_secs(30),
+            request_deadline: Duration::from_secs(10),
+            drain_deadline: Duration::from_secs(5),
+            backend: ServerBackend::Auto,
+        }
+    }
+}
+
+/// Load/lifecycle state shared between the transport path and the
+/// `/ready` endpoint: the in-flight dispatched-request count (the
+/// admission watermark input) and the draining latch.
+pub struct ServerState {
+    draining: AtomicBool,
+    inflight: AtomicUsize,
+    shed_watermark: usize,
+}
+
+impl ServerState {
+    pub fn new(shed_watermark: usize) -> ServerState {
+        ServerState {
+            draining: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            shed_watermark: shed_watermark.max(1),
+        }
+    }
+
+    /// Requests dispatched to the worker pool and not yet responded.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
+    }
+
+    /// Below the shed watermark — new dispatches are admitted.
+    pub fn admits(&self) -> bool {
+        self.inflight() < self.shed_watermark
+    }
+
+    /// Ready to take traffic: not draining and below the watermark.
+    pub fn ready(&self) -> bool {
+        !self.is_draining() && self.admits()
+    }
+
+    pub(crate) fn set_draining(&self) {
+        self.draining.store(true, Ordering::Relaxed);
+    }
+
+    pub(crate) fn begin_dispatch(&self) {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn end_dispatch(&self) {
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 /// Read one HTTP/1.1 request from the stream (no deadline; see
@@ -58,91 +190,68 @@ fn arm_deadline(stream: &TcpStream, deadline: Option<std::time::Instant>) -> Res
     Ok(())
 }
 
-fn find_bytes(haystack: &[u8], needle: &[u8]) -> Option<usize> {
-    haystack.windows(needle.len()).position(|w| w == needle)
-}
-
-/// Read one HTTP/1.1 request. `deadline` bounds the TOTAL wall time
-/// across every read (the socket timeout is re-armed with the remaining
-/// budget before each one), so a byte-dribbling client cannot hold a
-/// worker beyond it.
+/// Read one HTTP/1.1 request on a **blocking** socket — the threaded
+/// path's entry into the same incremental [`RequestParser`] the evented
+/// loop uses. `deadline` bounds the TOTAL wall time across every read
+/// (the socket timeout is re-armed with the remaining budget before each
+/// one), so a byte-dribbling client cannot hold a worker beyond it.
 pub fn read_request_deadline(
     stream: &mut TcpStream,
     deadline: Option<std::time::Instant>,
 ) -> Result<HttpRequest> {
-    const MAX_HEAD: usize = 64 * 1024;
-    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut parser = RequestParser::new();
     let mut tmp = [0u8; 4096];
-    // Accumulate until the blank line ending the headers (CRLF per spec,
-    // bare LF tolerated like the old line-based parser).
-    let (head_end, sep_len) = loop {
-        let crlf = find_bytes(&buf, b"\r\n\r\n").map(|p| (p, 4));
-        let lf = find_bytes(&buf, b"\n\n").map(|p| (p, 2));
-        match (crlf, lf) {
-            (Some(a), Some(b)) => break if a.0 <= b.0 { a } else { b },
-            (Some(a), None) => break a,
-            (None, Some(b)) => break b,
-            (None, None) => {}
-        }
-        if buf.len() > MAX_HEAD {
-            bail!("headers too large");
+    loop {
+        if let Some(req) = parser.next()? {
+            return Ok(req);
         }
         arm_deadline(stream, deadline)?;
         let n = stream.read(&mut tmp)?;
         if n == 0 {
-            bail!("connection closed mid-headers");
+            bail!("connection closed mid-request");
         }
-        buf.extend_from_slice(&tmp[..n]);
-    };
-    let head = std::str::from_utf8(&buf[..head_end]).context("non-utf8 headers")?;
-    let mut lines = head.split('\n').map(|l| l.trim_end_matches('\r'));
-    let request_line = lines.next().context("missing request line")?;
-    let mut parts = request_line.split_whitespace();
-    let method = parts.next().context("missing method")?.to_string();
-    let path = parts.next().context("missing path")?.to_string();
-    let mut content_length = 0usize;
-    for header in lines {
-        if let Some((k, v)) = header.split_once(':') {
-            if k.eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse().unwrap_or(0);
-            }
-        }
+        parser.feed(&tmp[..n]);
     }
-    if content_length > 4 * 1024 * 1024 {
-        bail!("body too large");
-    }
-    let mut body = buf[head_end + sep_len..].to_vec();
-    while body.len() < content_length {
-        arm_deadline(stream, deadline)?;
-        let n = stream.read(&mut tmp)?;
-        if n == 0 {
-            bail!("connection closed mid-body");
-        }
-        body.extend_from_slice(&tmp[..n]);
-    }
-    body.truncate(content_length);
-    Ok(HttpRequest {
-        method,
-        path,
-        body: String::from_utf8(body)?,
-    })
 }
 
-pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
-    let reason = match status {
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        413 => "Payload Too Large",
         429 => "Too Many Requests",
+        503 => "Service Unavailable",
         _ => "Internal Server Error",
-    };
-    let msg = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    );
-    stream.write_all(msg.as_bytes())?;
+    }
+}
+
+/// Serialize a response. `keep_alive` controls the `Connection` header —
+/// the evented path holds connections open between requests, the
+/// threaded path always closes.
+pub fn render_response(status: u16, body: &str, keep_alive: bool) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+        reason_phrase(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )
+    .into_bytes()
+}
+
+/// Write a `Connection: close` response on a blocking socket.
+pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+    use std::io::Write;
+    stream.write_all(&render_response(status, body, false))?;
     Ok(())
+}
+
+/// The admission-control shed body; `"reason":"admission"` distinguishes
+/// it from the pipeline's per-user quota 429.
+pub(crate) fn admission_shed_body() -> String {
+    r#"{"error":"server overloaded; request shed by admission control","reason":"admission"}"#
+        .to_string()
 }
 
 fn err_body(e: &BridgeError) -> String {
@@ -156,6 +265,35 @@ fn respond(result: Result<String, BridgeError>) -> (u16, String) {
     }
 }
 
+/// The `/ready` probe: 200 only when restore is complete (always true
+/// once a [`Bridge`] exists), the server is not draining, and in-flight
+/// load sits below the shed watermark.
+fn ready_response(state: &ServerState) -> (u16, String) {
+    if state.is_draining() {
+        return (503, r#"{"status":"draining"}"#.to_string());
+    }
+    let inflight = state.inflight();
+    if !state.admits() {
+        return (
+            503,
+            Json::obj(vec![
+                ("status", Json::str("overloaded")),
+                ("inflight", Json::num(inflight as f64)),
+            ])
+            .to_string(),
+        );
+    }
+    (
+        200,
+        Json::obj(vec![
+            ("status", Json::str("ready")),
+            ("restore", Json::str("complete")),
+            ("inflight", Json::num(inflight as f64)),
+        ])
+        .to_string(),
+    )
+}
+
 /// Dispatch one parsed request against the bridge (pure, testable).
 /// Status codes come from [`BridgeError::http_status`] — no string
 /// matching on error messages.
@@ -166,6 +304,15 @@ pub fn route(bridge: &Bridge, req: &HttpRequest) -> (u16, String) {
         ("POST", "/v1/request") => respond(handle_request(bridge, &req.body)),
         ("POST", "/v1/regenerate") => respond(handle_regenerate(bridge, &req.body)),
         _ => (404, r#"{"error":"not found"}"#.to_string()),
+    }
+}
+
+/// [`route`] plus the server-state routes (`/ready`) — what both
+/// transport paths actually dispatch.
+pub fn route_server(bridge: &Bridge, state: &ServerState, req: &HttpRequest) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/ready") => ready_response(state),
+        _ => route(bridge, req),
     }
 }
 
@@ -192,181 +339,153 @@ fn handle_regenerate(bridge: &Bridge, body: &str) -> Result<String, BridgeError>
     Ok(resp.to_json().to_string())
 }
 
-/// A connection's place in the two-hop worker flow.
-enum Conn {
-    /// Accepted, not yet parsed (queued under a connection-unique group).
-    Raw(TcpStream),
-    /// Parsed, awaiting dispatch (queued under the per-user group).
-    Ready(TcpStream, HttpRequest),
+/// Janitor: background maintenance off the request paths —
+/// (a) semantic-cache index rebuilds (flat→IVF migration past the row
+/// threshold, drift-triggered retrains; the k-means runs with no index
+/// lock held), and (b) the WAL-compaction trigger (size-keyed) when a
+/// data dir is configured. Cache reads are never blocked by either;
+/// journaled *mutations* quiesce for a compaction capture's duration
+/// (see persist module docs), which this thread pays instead of a
+/// request thread. Compaction failures back off exponentially (capped at
+/// 30s) so a full disk doesn't retry a gate-exclusive snapshot capture
+/// 4x per second.
+fn spawn_janitor(bridge: Arc<Bridge>, stop: Arc<AtomicBool>) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        // Fixed 250ms tick for index maintenance; compaction failures
+        // back off via their own cooldown so a full disk never slows
+        // in-memory index rebuilds.
+        const TICK_MS: u64 = 250;
+        let mut compact_backoff_ms: u64 = TICK_MS;
+        let mut compact_cooldown_ms: u64 = 0;
+        'outer: loop {
+            // Sleep in short slices so stop() stays responsive.
+            let mut slept = 0;
+            while slept < TICK_MS {
+                if stop.load(Ordering::Relaxed) {
+                    break 'outer;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+                slept += 50;
+            }
+            bridge.maybe_rebuild_index();
+            if bridge.persistence().is_none() {
+                continue;
+            }
+            if compact_cooldown_ms > 0 {
+                compact_cooldown_ms = compact_cooldown_ms.saturating_sub(TICK_MS);
+                continue;
+            }
+            match bridge.maybe_compact() {
+                Ok(_) => compact_backoff_ms = TICK_MS,
+                Err(e) => {
+                    compact_backoff_ms = (compact_backoff_ms * 2).min(30_000);
+                    compact_cooldown_ms = compact_backoff_ms;
+                    eprintln!(
+                        "persist: background compaction failed \
+                         (retrying in {compact_backoff_ms}ms): {e}"
+                    );
+                }
+            }
+        }
+    })
 }
 
-/// Serve until `stop` flips. The acceptor enqueues raw connections; the
-/// `workers` threads parse them, re-enqueue under the per-user FIFO group
-/// (user extracted from the body when present), and handle them.
+enum Inner {
+    #[cfg(target_os = "linux")]
+    Evented(evloop::EventedHandle),
+    Threaded(threaded::ThreadedHandle),
+}
+
+/// A running server. [`Server::stop`] shuts down gracefully: stop
+/// accepting, drain, flush the WAL.
 pub struct Server {
     pub addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    join: Vec<std::thread::JoinHandle<()>>,
+    bridge: Arc<Bridge>,
+    state: Arc<ServerState>,
+    inner: Inner,
+    janitor_stop: Arc<AtomicBool>,
+    janitor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
+    /// Start with default tuning (the historical signature).
     pub fn start(bridge: Arc<Bridge>, bind: &str, workers: usize) -> Result<Server> {
-        let listener = TcpListener::bind(bind)?;
-        listener.set_nonblocking(true)?;
-        let addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let queue: Arc<FifoQueue<u64>> = Arc::new(FifoQueue::new());
-        // Connection registry: id -> state.
-        let conns: Arc<std::sync::Mutex<std::collections::HashMap<u64, Conn>>> =
-            Arc::new(std::sync::Mutex::new(std::collections::HashMap::new()));
-        let mut join = Vec::new();
-
-        // Acceptor: accept, register, enqueue — never reads the socket, so
-        // a client that dribbles its request bytes can't block accepts.
-        {
-            let stop = stop.clone();
-            let queue = queue.clone();
-            let conns = conns.clone();
-            join.push(std::thread::spawn(move || {
-                let mut next_id = 0u64;
-                while !stop.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            stream.set_nonblocking(false).ok();
-                            // Bound response writes to unresponsive clients.
-                            stream
-                                .set_write_timeout(Some(std::time::Duration::from_secs(10)))
-                                .ok();
-                            next_id += 1;
-                            conns.lock().unwrap().insert(next_id, Conn::Raw(stream));
-                            // Group naming doubles as scheduling policy:
-                            // FifoQueue::pop scans groups in key order, so
-                            // dispatch groups ("d:...") always win over
-                            // parse groups ("p:...") — a flood of new
-                            // connections can't starve parsed requests —
-                            // and prefixing keeps client-chosen user names
-                            // out of the internal namespace.
-                            queue.push(&format!("p:raw-{next_id}"), next_id);
-                        }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
-                }
-                queue.close();
-            }));
-        }
-
-        // Janitor: background maintenance off the request paths —
-        // (a) semantic-cache index rebuilds (flat→IVF migration past the
-        // row threshold, drift-triggered retrains; the k-means runs with
-        // no index lock held), and (b) the WAL-compaction trigger
-        // (size-keyed) when a data dir is configured. Cache reads are
-        // never blocked by either; journaled *mutations* quiesce for a
-        // compaction capture's duration (see persist module docs), which
-        // this thread pays instead of a request thread. Compaction
-        // failures back off exponentially (capped at 30s) so a full disk
-        // doesn't retry a gate-exclusive snapshot capture 4x per second.
-        {
-            let stop = stop.clone();
-            let bridge = bridge.clone();
-            join.push(std::thread::spawn(move || {
-                // Fixed 250ms tick for index maintenance; compaction
-                // failures back off via their own cooldown so a full disk
-                // never slows in-memory index rebuilds.
-                const TICK_MS: u64 = 250;
-                let mut compact_backoff_ms: u64 = TICK_MS;
-                let mut compact_cooldown_ms: u64 = 0;
-                'outer: loop {
-                    // Sleep in short slices so stop() stays responsive.
-                    let mut slept = 0;
-                    while slept < TICK_MS {
-                        if stop.load(Ordering::Relaxed) {
-                            break 'outer;
-                        }
-                        std::thread::sleep(std::time::Duration::from_millis(50));
-                        slept += 50;
-                    }
-                    bridge.maybe_rebuild_index();
-                    if bridge.persistence().is_none() {
-                        continue;
-                    }
-                    if compact_cooldown_ms > 0 {
-                        compact_cooldown_ms = compact_cooldown_ms.saturating_sub(TICK_MS);
-                        continue;
-                    }
-                    match bridge.maybe_compact() {
-                        Ok(_) => compact_backoff_ms = TICK_MS,
-                        Err(e) => {
-                            compact_backoff_ms = (compact_backoff_ms * 2).min(30_000);
-                            compact_cooldown_ms = compact_backoff_ms;
-                            eprintln!(
-                                "persist: background compaction failed \
-                                 (retrying in {compact_backoff_ms}ms): {e}"
-                            );
-                        }
-                    }
-                }
-            }));
-        }
-
-        // Workers: a raw pop parses and re-enqueues under the user group;
-        // a ready pop dispatches. Raw groups are connection-unique, so
-        // parsing parallelizes; ready groups serialize per user (the SQS
-        // per-user exclusive-delivery guarantee).
-        for _ in 0..workers.max(1) {
-            let queue = queue.clone();
-            let conns = conns.clone();
-            let bridge = bridge.clone();
-            join.push(std::thread::spawn(move || {
-                while let Some(msg) = queue.pop() {
-                    let entry = conns.lock().unwrap().remove(&msg.payload);
-                    match entry {
-                        Some(Conn::Raw(mut stream)) => match read_request_deadline(
-                            &mut stream,
-                            Some(std::time::Instant::now() + std::time::Duration::from_secs(10)),
-                        ) {
-                            Ok(req) => {
-                                // FIFO group = user when parseable, else
-                                // connection-unique (no ordering need).
-                                let group = Json::parse(&req.body)
-                                    .ok()
-                                    .and_then(|j| j.str_of("user").ok())
-                                    .map(|user| format!("d:u:{user}"))
-                                    .unwrap_or_else(|| format!("d:a:{}", msg.payload));
-                                conns
-                                    .lock()
-                                    .unwrap()
-                                    .insert(msg.payload, Conn::Ready(stream, req));
-                                queue.push(&group, msg.payload);
-                            }
-                            Err(_) => {
-                                let _ = write_response(
-                                    &mut stream,
-                                    400,
-                                    r#"{"error":"bad request"}"#,
-                                );
-                            }
-                        },
-                        Some(Conn::Ready(mut stream, req)) => {
-                            let (status, body) = route(&bridge, &req);
-                            let _ = write_response(&mut stream, status, &body);
-                        }
-                        None => {}
-                    }
-                    queue.ack(msg.id, &msg.group);
-                }
-            }));
-        }
-
-        Ok(Server { addr, stop, join })
+        Server::start_with(
+            bridge,
+            bind,
+            ServerConfig {
+                workers,
+                ..ServerConfig::default()
+            },
+        )
     }
 
-    pub fn stop(self) {
-        self.stop.store(true, Ordering::Relaxed);
-        for h in self.join {
-            let _ = h.join();
+    pub fn start_with(bridge: Arc<Bridge>, bind: &str, config: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(ServerState::new(config.shed_watermark));
+        let evented = match config.backend {
+            ServerBackend::Auto => cfg!(target_os = "linux"),
+            ServerBackend::Evented => true,
+            ServerBackend::Threaded => false,
+        };
+        let inner = if evented {
+            #[cfg(target_os = "linux")]
+            {
+                Inner::Evented(evloop::start(
+                    bridge.clone(),
+                    listener,
+                    state.clone(),
+                    config,
+                )?)
+            }
+            #[cfg(not(target_os = "linux"))]
+            {
+                bail!("evented backend requires Linux (epoll); use ServerBackend::Threaded")
+            }
+        } else {
+            Inner::Threaded(threaded::start(
+                bridge.clone(),
+                listener,
+                state.clone(),
+                config,
+            )?)
+        };
+        let janitor_stop = Arc::new(AtomicBool::new(false));
+        let janitor = Some(spawn_janitor(bridge.clone(), janitor_stop.clone()));
+        Ok(Server {
+            addr,
+            bridge,
+            state,
+            inner,
+            janitor_stop,
+            janitor,
+        })
+    }
+
+    /// The `/ready` view, callable in-process.
+    pub fn ready(&self) -> bool {
+        self.state.ready()
+    }
+
+    /// Graceful shutdown: stop accepting, drain in-flight connections
+    /// (deadline-bounded on the evented path), stop the janitor, and
+    /// fsync the WAL so a clean exit is durable to the last write.
+    pub fn stop(mut self) {
+        self.state.set_draining();
+        match self.inner {
+            #[cfg(target_os = "linux")]
+            Inner::Evented(h) => h.stop(),
+            Inner::Threaded(h) => h.stop(),
+        }
+        self.janitor_stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.janitor.take() {
+            let _ = j.join();
+        }
+        if let Some(p) = self.bridge.persistence() {
+            if let Err(e) = p.sync_wal() {
+                eprintln!("server: WAL flush on shutdown failed: {e}");
+            }
         }
     }
 }
@@ -374,6 +493,7 @@ impl Server {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::Write;
 
     #[test]
     fn http_parse_roundtrip() {
@@ -393,6 +513,7 @@ mod tests {
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/v1/request");
         assert_eq!(req.body, "{\"user\":\"u1\"}");
+        assert!(req.keep_alive);
     }
 
     #[test]
@@ -410,6 +531,16 @@ mod tests {
         assert!(buf.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(buf.ends_with(r#"{"x":1}"#));
         assert!(buf.contains("Content-Length: 7"));
+        assert!(buf.contains("Connection: close"));
+    }
+
+    #[test]
+    fn render_response_keep_alive_header() {
+        let ka = String::from_utf8(render_response(200, "{}", true)).unwrap();
+        assert!(ka.contains("Connection: keep-alive"));
+        let cl = String::from_utf8(render_response(413, "{}", false)).unwrap();
+        assert!(cl.starts_with("HTTP/1.1 413 Payload Too Large"));
+        assert!(cl.contains("Connection: close"));
     }
 
     #[test]
@@ -427,5 +558,27 @@ mod tests {
         // Error bodies carry the message, not a guessed substring.
         let (_, body) = respond(Err(BridgeError::QuotaExceeded { user: "s1".into() }));
         assert!(body.contains("quota exceeded for user s1"));
+    }
+
+    #[test]
+    fn ready_reflects_draining_and_watermark() {
+        let state = ServerState::new(2);
+        let (code, body) = ready_response(&state);
+        assert_eq!(code, 200, "{body}");
+        assert!(body.contains("\"restore\""));
+
+        state.begin_dispatch();
+        state.begin_dispatch();
+        assert!(!state.admits());
+        let (code, body) = ready_response(&state);
+        assert_eq!(code, 503);
+        assert!(body.contains("overloaded"));
+
+        state.end_dispatch();
+        assert!(state.ready());
+        state.set_draining();
+        let (code, body) = ready_response(&state);
+        assert_eq!(code, 503);
+        assert!(body.contains("draining"));
     }
 }

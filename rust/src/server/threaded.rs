@@ -1,0 +1,198 @@
+//! The portable blocking-socket worker pool — the pre-evented server
+//! design, kept as the non-Linux fallback (and reachable anywhere via
+//! [`super::ServerBackend::Threaded`]).
+//!
+//! The acceptor thread only accepts: request parsing happens on the
+//! workers, so one slow-writing client can never stall accepts
+//! (head-of-line blocking). Each connection flows through two queue hops
+//! on the same FIFO substrate — a connection-unique "raw" group while
+//! unparsed, then the per-user group once the body names a user — which
+//! preserves the per-user serialization guarantee exactly like the
+//! evented path. Every response closes the connection (no keep-alive on
+//! this path); clients that want connection reuse get it from the
+//! evented loop.
+//!
+//! Admission control here is coarser than the evented loop's (there is
+//! no connection ceiling — the thread pool itself is the bound) but the
+//! same watermark applies: a parsed request sheds with an admission 429
+//! when total queued work sits at or above
+//! [`super::ServerConfig::shed_watermark`].
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::Bridge;
+use crate::queuing::FifoQueue;
+use crate::util::json::Json;
+
+use super::conn::HttpRequest;
+use super::{
+    admission_shed_body, read_request_deadline, route_server, write_response, ServerConfig,
+    ServerState,
+};
+
+/// A connection's place in the two-hop worker flow.
+enum Slot {
+    /// Accepted, not yet parsed (queued under a connection-unique group).
+    Raw(std::net::TcpStream),
+    /// Parsed, awaiting dispatch (queued under the per-user group).
+    Ready(std::net::TcpStream, HttpRequest),
+}
+
+pub(super) struct ThreadedHandle {
+    stop: Arc<AtomicBool>,
+    join: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadedHandle {
+    /// Stop accepting and drain: the acceptor closes the queue, workers
+    /// finish every queued connection (bounded per connection by the
+    /// read deadline), then exit.
+    pub(super) fn stop(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.join {
+            let _ = h.join();
+        }
+    }
+}
+
+pub(super) fn start(
+    bridge: Arc<Bridge>,
+    listener: std::net::TcpListener,
+    state: Arc<ServerState>,
+    config: ServerConfig,
+) -> Result<ThreadedHandle> {
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let queue: Arc<FifoQueue<u64>> = Arc::new(FifoQueue::new());
+    // Connection registry: id -> state.
+    let conns: Arc<std::sync::Mutex<std::collections::HashMap<u64, Slot>>> =
+        Arc::new(std::sync::Mutex::new(std::collections::HashMap::new()));
+    let mut join = Vec::new();
+
+    // Acceptor: accept, register, enqueue — never reads the socket, so
+    // a client that dribbles its request bytes can't block accepts.
+    {
+        let stop = stop.clone();
+        let queue = queue.clone();
+        let conns = conns.clone();
+        let tele = bridge.telemetry().clone();
+        join.push(std::thread::spawn(move || {
+            let mut next_id = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        tele.counters.incr("server_accepted");
+                        // The listener is nonblocking, so accepted
+                        // sockets inherit nothing predictable — workers
+                        // need blocking mode. A socket we cannot switch
+                        // must be dropped, never handed to a blocking
+                        // worker (it would spin on EWOULDBLOCK).
+                        if let Err(e) = stream.set_nonblocking(false) {
+                            tele.counters.incr("server_sock_mode_errors");
+                            eprintln!(
+                                "server: dropping accepted connection — \
+                                 cannot restore blocking mode: {e}"
+                            );
+                            continue;
+                        }
+                        // Bound response writes to unresponsive clients.
+                        stream
+                            .set_write_timeout(Some(std::time::Duration::from_secs(10)))
+                            .ok();
+                        next_id += 1;
+                        conns.lock().unwrap().insert(next_id, Slot::Raw(stream));
+                        // Group naming doubles as scheduling policy:
+                        // FifoQueue::pop scans groups in key order, so
+                        // dispatch groups ("d:...") always win over
+                        // parse groups ("p:...") — a flood of new
+                        // connections can't starve parsed requests —
+                        // and prefixing keeps client-chosen user names
+                        // out of the internal namespace.
+                        queue.push(&format!("p:raw-{next_id}"), next_id);
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            queue.close();
+        }));
+    }
+
+    // Workers: a raw pop parses and re-enqueues under the user group;
+    // a ready pop dispatches. Raw groups are connection-unique, so
+    // parsing parallelizes; ready groups serialize per user (the SQS
+    // per-user exclusive-delivery guarantee).
+    for _ in 0..config.workers.max(1) {
+        let queue = queue.clone();
+        let conns = conns.clone();
+        let bridge = bridge.clone();
+        let state = state.clone();
+        let deadline = config.request_deadline;
+        let watermark = config.shed_watermark;
+        join.push(std::thread::spawn(move || {
+            let tele = bridge.telemetry().clone();
+            while let Some(msg) = queue.pop() {
+                let entry = conns.lock().unwrap().remove(&msg.payload);
+                match entry {
+                    Some(Slot::Raw(mut stream)) => {
+                        match read_request_deadline(
+                            &mut stream,
+                            Some(std::time::Instant::now() + deadline),
+                        ) {
+                            Ok(req) => {
+                                // Admission control: shed before the
+                                // dispatch queue grows past the
+                                // watermark (the bridge never sees the
+                                // request).
+                                if queue.len() >= watermark {
+                                    tele.counters.incr("server_shed_admission");
+                                    let _ = write_response(
+                                        &mut stream,
+                                        429,
+                                        &admission_shed_body(),
+                                    );
+                                } else {
+                                    // FIFO group = user when parseable,
+                                    // else connection-unique (no
+                                    // ordering need).
+                                    let group = Json::parse(&req.body)
+                                        .ok()
+                                        .and_then(|j| j.str_of("user").ok())
+                                        .map(|user| format!("d:u:{user}"))
+                                        .unwrap_or_else(|| format!("d:a:{}", msg.payload));
+                                    conns
+                                        .lock()
+                                        .unwrap()
+                                        .insert(msg.payload, Slot::Ready(stream, req));
+                                    state.begin_dispatch();
+                                    queue.push(&group, msg.payload);
+                                }
+                            }
+                            Err(_) => {
+                                let _ = write_response(
+                                    &mut stream,
+                                    400,
+                                    r#"{"error":"bad request"}"#,
+                                );
+                            }
+                        }
+                    }
+                    Some(Slot::Ready(mut stream, req)) => {
+                        let (status, body) = route_server(&bridge, &state, &req);
+                        let _ = write_response(&mut stream, status, &body);
+                        state.end_dispatch();
+                    }
+                    None => {}
+                }
+                queue.ack(msg.id, &msg.group);
+            }
+        }));
+    }
+
+    Ok(ThreadedHandle { stop, join })
+}

@@ -1,0 +1,326 @@
+//! Minimal epoll + wakeup-pipe shim — raw `epoll_create1(2)` /
+//! `epoll_ctl(2)` / `epoll_wait(2)` / `pipe2(2)` through the C runtime
+//! std already links on Linux, honoring the anyhow-only dependency
+//! policy (no `libc`/`mio` crates). Same pattern as [`crate::util::mmap`].
+//!
+//! The one consumer is the evented server loop
+//! (`crate::server` — `rust/src/server/evloop.rs`): one `Epoll` instance
+//! multiplexes the listener, a [`WakePipe`] (worker → loop doorbell), and
+//! every live connection. The shim is deliberately tiny: level-triggered
+//! only (no `EPOLLET`), one `u64` token per fd, and interest masks built
+//! from [`INTEREST_READ`]/[`INTEREST_WRITE`].
+//!
+//! Non-Linux builds compile the server's portable threaded fallback and
+//! never reference this module (`#[cfg(target_os = "linux")]` in
+//! `util/mod.rs`).
+
+use std::os::raw::{c_int, c_void};
+use std::os::unix::io::RawFd;
+
+use anyhow::{bail, Result};
+
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    pub const O_NONBLOCK: c_int = 0o4000;
+    pub const O_CLOEXEC: c_int = 0o2000000;
+
+    /// The kernel's `struct epoll_event`. x86_64 is the one ABI where it
+    /// is packed (12 bytes); everywhere else it has natural alignment.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn pipe2(fds: *mut c_int, flags: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+/// Interest: readable (EPOLLIN). Hangup/error are always reported.
+pub const INTEREST_READ: u32 = sys::EPOLLIN;
+/// Interest: writable (EPOLLOUT).
+pub const INTEREST_WRITE: u32 = sys::EPOLLOUT;
+
+/// One readiness report from [`Epoll::wait`], decoded from the raw mask.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token registered with the fd.
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// EPOLLHUP / EPOLLERR / EPOLLRDHUP — the connection is done for.
+    pub hangup: bool,
+}
+
+fn os_err(what: &str) -> anyhow::Error {
+    anyhow::anyhow!("{what}: {}", std::io::Error::last_os_error())
+}
+
+/// A level-triggered epoll instance. Dropping it closes the epoll fd
+/// (registered fds are merely de-watched, not closed).
+pub struct Epoll {
+    fd: c_int,
+}
+
+// Safety: the epoll fd is just an int; epoll_ctl/epoll_wait are
+// thread-safe per POSIX. The server uses it from one loop thread anyway.
+unsafe impl Send for Epoll {}
+unsafe impl Sync for Epoll {}
+
+impl Epoll {
+    pub fn new() -> Result<Epoll> {
+        // Safety: plain syscall, result checked below.
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(os_err("epoll_create1"));
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, interest: u32, token: u64) -> Result<()> {
+        let mut ev = sys::EpollEvent {
+            // Always watch for peer hangup so half-closed keep-alive
+            // connections are reaped without a read() round.
+            events: interest | sys::EPOLLRDHUP,
+            data: token,
+        };
+        // Safety: `ev` outlives the call; the kernel copies it.
+        let rc = unsafe { sys::epoll_ctl(self.fd, op, fd, &mut ev) };
+        if rc < 0 {
+            bail!("epoll_ctl(op={op}, fd={fd}): {}", std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Start watching `fd` with `interest`, reporting `token` on events.
+    pub fn add(&self, fd: RawFd, interest: u32, token: u64) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, interest, token)
+    }
+
+    /// Change the interest mask (state transitions of the conn machine).
+    pub fn modify(&self, fd: RawFd, interest: u32, token: u64) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, interest, token)
+    }
+
+    /// Stop watching `fd`. Closing an fd de-watches it implicitly; this
+    /// is for fds that stay open (the listener during drain).
+    pub fn delete(&self, fd: RawFd) -> Result<()> {
+        let mut ev = sys::EpollEvent { events: 0, data: 0 };
+        // Safety: pre-2.6.9 kernels require a non-null event even for DEL.
+        let rc = unsafe { sys::epoll_ctl(self.fd, sys::EPOLL_CTL_DEL, fd, &mut ev) };
+        if rc < 0 {
+            return Err(os_err("epoll_ctl(DEL)"));
+        }
+        Ok(())
+    }
+
+    /// Wait up to `timeout_ms` (-1 = forever), appending decoded events
+    /// into `out` (cleared first). EINTR retries with the same timeout.
+    pub fn wait(&self, out: &mut Vec<Event>, max_events: usize, timeout_ms: i32) -> Result<()> {
+        out.clear();
+        let cap = max_events.clamp(1, 4096);
+        let mut raw = vec![sys::EpollEvent { events: 0, data: 0 }; cap];
+        loop {
+            // Safety: `raw` is a live buffer of `cap` events.
+            let n = unsafe { sys::epoll_wait(self.fd, raw.as_mut_ptr(), cap as c_int, timeout_ms) };
+            if n < 0 {
+                if std::io::Error::last_os_error().kind() == std::io::ErrorKind::Interrupted {
+                    continue;
+                }
+                return Err(os_err("epoll_wait"));
+            }
+            for ev in raw.iter().take(n as usize) {
+                let mask = ev.events;
+                out.push(Event {
+                    token: ev.data,
+                    readable: mask & sys::EPOLLIN != 0,
+                    writable: mask & sys::EPOLLOUT != 0,
+                    hangup: mask & (sys::EPOLLHUP | sys::EPOLLERR | sys::EPOLLRDHUP) != 0,
+                });
+            }
+            return Ok(());
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        // Safety: closing the fd this value owns; nothing to do on error.
+        unsafe {
+            sys::close(self.fd);
+        }
+    }
+}
+
+impl std::fmt::Debug for Epoll {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Epoll").field("fd", &self.fd).finish()
+    }
+}
+
+/// A nonblocking self-pipe: worker threads [`WakePipe::wake`] after
+/// publishing a completion, the event loop watches the read end and
+/// [`WakePipe::drain`]s it. Writes coalesce (a full pipe is already a
+/// pending wakeup, so EAGAIN is success).
+pub struct WakePipe {
+    r: c_int,
+    w: c_int,
+}
+
+// Safety: read(2)/write(2) on distinct ends are thread-safe; both ends
+// are O_NONBLOCK so neither side can block under contention.
+unsafe impl Send for WakePipe {}
+unsafe impl Sync for WakePipe {}
+
+impl WakePipe {
+    pub fn new() -> Result<WakePipe> {
+        let mut fds = [0 as c_int; 2];
+        // Safety: fds is a live 2-slot buffer; result checked.
+        let rc = unsafe { sys::pipe2(fds.as_mut_ptr(), sys::O_NONBLOCK | sys::O_CLOEXEC) };
+        if rc < 0 {
+            return Err(os_err("pipe2"));
+        }
+        Ok(WakePipe { r: fds[0], w: fds[1] })
+    }
+
+    /// The fd to register with [`Epoll::add`] under `INTEREST_READ`.
+    pub fn read_fd(&self) -> RawFd {
+        self.r
+    }
+
+    /// Ring the doorbell. Failure modes (EAGAIN = pipe already full) all
+    /// mean "a wakeup is already pending", so the result is ignored.
+    pub fn wake(&self) {
+        let b = [1u8];
+        // Safety: writing one byte from a live stack buffer.
+        unsafe {
+            sys::write(self.w, b.as_ptr() as *const c_void, 1);
+        }
+    }
+
+    /// Swallow every pending doorbell byte (call on read-readiness).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            // Safety: reading into a live stack buffer.
+            let n = unsafe { sys::read(self.r, buf.as_mut_ptr() as *mut c_void, buf.len()) };
+            if n <= 0 {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        // Safety: closing the two fds this value owns.
+        unsafe {
+            sys::close(self.r);
+            sys::close(self.w);
+        }
+    }
+}
+
+impl std::fmt::Debug for WakePipe {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WakePipe").field("r", &self.r).field("w", &self.w).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn wake_pipe_levels_and_drains() {
+        let ep = Epoll::new().unwrap();
+        let pipe = WakePipe::new().unwrap();
+        ep.add(pipe.read_fd(), INTEREST_READ, 7).unwrap();
+        let mut evs = Vec::new();
+
+        // Quiet pipe: no events within the timeout.
+        ep.wait(&mut evs, 8, 0).unwrap();
+        assert!(evs.is_empty());
+
+        // Multiple wakes coalesce into one readable report.
+        pipe.wake();
+        pipe.wake();
+        ep.wait(&mut evs, 8, 1000).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].token, 7);
+        assert!(evs[0].readable);
+
+        // Drained pipe goes quiet again (level-triggered).
+        pipe.drain();
+        ep.wait(&mut evs, 8, 0).unwrap();
+        assert!(evs.is_empty());
+    }
+
+    #[test]
+    fn socket_readable_and_interest_modify() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let ep = Epoll::new().unwrap();
+        ep.add(server.as_raw_fd(), INTEREST_READ, 42).unwrap();
+        let mut evs = Vec::new();
+
+        ep.wait(&mut evs, 8, 0).unwrap();
+        assert!(evs.is_empty(), "idle socket must not be readable");
+
+        client.write_all(b"ping").unwrap();
+        ep.wait(&mut evs, 8, 1000).unwrap();
+        assert!(evs.iter().any(|e| e.token == 42 && e.readable));
+
+        // Interest swapped to write-only: pending bytes stop reporting,
+        // an idle socket's send buffer reports writable.
+        ep.modify(server.as_raw_fd(), INTEREST_WRITE, 42).unwrap();
+        ep.wait(&mut evs, 8, 1000).unwrap();
+        assert!(evs.iter().any(|e| e.token == 42 && e.writable && !e.readable));
+
+        // Peer close surfaces as hangup alongside readability.
+        ep.modify(server.as_raw_fd(), INTEREST_READ, 42).unwrap();
+        let mut sink = [0u8; 16];
+        let mut s = &server;
+        let _ = s.read(&mut sink); // consume "ping" so only EOF remains
+        drop(client);
+        ep.wait(&mut evs, 8, 1000).unwrap();
+        assert!(evs.iter().any(|e| e.token == 42 && e.hangup));
+
+        ep.delete(server.as_raw_fd()).unwrap();
+        ep.wait(&mut evs, 8, 0).unwrap();
+        assert!(evs.is_empty());
+    }
+}

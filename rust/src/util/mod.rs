@@ -1,12 +1,15 @@
 //! Utility substrates built from scratch (the crate's only dependency is
 //! `anyhow`; `xla` only under `--features pjrt`): JSON, deterministic
 //! PRNG, CLI parsing, a criterion-style bench harness, a property-testing
-//! helper, shared bench/test corpus generators, and a raw-syscall mmap
-//! shim for the snapshot cold-boot path.
+//! helper, shared bench/test corpus generators, a raw-syscall mmap shim
+//! for the snapshot cold-boot path, and a raw-syscall epoll shim for the
+//! evented server loop.
 
 pub mod bench;
 pub mod cli;
 pub mod corpus;
+#[cfg(target_os = "linux")]
+pub mod epoll;
 pub mod json;
 #[cfg(unix)]
 pub mod mmap;

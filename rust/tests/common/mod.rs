@@ -36,3 +36,92 @@ pub fn old_gen_config() -> BridgeConfig {
         ..Default::default()
     }
 }
+
+/// A test HTTP/1.1 client that frames responses by `Content-Length`
+/// instead of waiting for EOF — required against the evented server,
+/// which holds keep-alive connections open, and correct against the
+/// threaded server, which closes them. Leftover bytes past one response
+/// stay buffered, so pipelined responses read back one at a time.
+#[allow(dead_code)]
+pub struct HttpClient {
+    pub stream: std::net::TcpStream,
+    buf: Vec<u8>,
+}
+
+#[allow(dead_code)]
+impl HttpClient {
+    pub fn connect(addr: std::net::SocketAddr) -> HttpClient {
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+            .unwrap();
+        HttpClient {
+            stream,
+            buf: Vec::new(),
+        }
+    }
+
+    pub fn send_raw(&mut self, raw: &[u8]) {
+        use std::io::Write;
+        self.stream.write_all(raw).unwrap();
+    }
+
+    /// One GET round-trip (connection stays usable afterward).
+    pub fn get(&mut self, path: &str) -> (u16, llmbridge::util::json::Json) {
+        self.send_raw(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes());
+        self.read_response()
+    }
+
+    /// One POST round-trip (connection stays usable afterward).
+    pub fn post(&mut self, path: &str, body: &str) -> (u16, llmbridge::util::json::Json) {
+        self.send_raw(
+            format!(
+                "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        );
+        self.read_response()
+    }
+
+    /// Read exactly one Content-Length-framed response.
+    pub fn read_response(&mut self) -> (u16, llmbridge::util::json::Json) {
+        use std::io::Read;
+        fn find(buf: &[u8], needle: &[u8]) -> Option<usize> {
+            buf.windows(needle.len()).position(|w| w == needle)
+        }
+        let mut tmp = [0u8; 4096];
+        let head_end = loop {
+            if let Some(p) = find(&self.buf, b"\r\n\r\n") {
+                break p + 4;
+            }
+            let n = self.stream.read(&mut tmp).unwrap();
+            assert!(n > 0, "connection closed before response head");
+            self.buf.extend_from_slice(&tmp[..n]);
+        };
+        let head = String::from_utf8(self.buf[..head_end].to_vec()).unwrap();
+        let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let clen: usize = head
+            .lines()
+            .find_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                if k.eq_ignore_ascii_case("content-length") {
+                    v.trim().parse().ok()
+                } else {
+                    None
+                }
+            })
+            .unwrap_or(0);
+        while self.buf.len() < head_end + clen {
+            let n = self.stream.read(&mut tmp).unwrap();
+            assert!(n > 0, "connection closed mid-body");
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+        let body = String::from_utf8(self.buf[head_end..head_end + clen].to_vec()).unwrap();
+        // Keep bytes past this response (pipelined successors) buffered.
+        self.buf.drain(..head_end + clen);
+        let json = llmbridge::util::json::Json::parse(&body)
+            .unwrap_or(llmbridge::util::json::Json::Null);
+        (status, json)
+    }
+}

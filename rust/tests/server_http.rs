@@ -1,48 +1,46 @@
-//! REST server integration: real TCP round-trips against the bridge.
+//! REST server integration: real TCP round-trips against the bridge,
+//! exercised on **both** transport paths — the evented epoll loop (the
+//! Linux default) and the portable threaded fallback — to pin that they
+//! serve identical routes with identical semantics.
 
 mod common;
 
-use std::io::{Read, Write};
-use std::net::TcpStream;
-
-use llmbridge::server::Server;
+use common::HttpClient;
+use llmbridge::server::{Server, ServerBackend, ServerConfig};
 use llmbridge::util::json::Json;
 
 fn http_post(addr: std::net::SocketAddr, path: &str, body: &str) -> (u16, Json) {
-    let mut s = TcpStream::connect(addr).unwrap();
-    let msg = format!(
-        "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-        body.len()
-    );
-    s.write_all(msg.as_bytes()).unwrap();
-    read_response(s)
+    HttpClient::connect(addr).post(path, body)
 }
 
 fn http_get(addr: std::net::SocketAddr, path: &str) -> (u16, Json) {
-    let mut s = TcpStream::connect(addr).unwrap();
-    s.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
-        .unwrap();
-    read_response(s)
+    HttpClient::connect(addr).get(path)
 }
 
-fn read_response(mut s: TcpStream) -> (u16, Json) {
-    let mut buf = String::new();
-    s.read_to_string(&mut buf).unwrap();
-    let status: u16 = buf.split_whitespace().nth(1).unwrap().parse().unwrap();
-    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("{}");
-    (status, Json::parse(body).unwrap())
+fn server_on(backend: ServerBackend, workers: usize) -> Server {
+    Server::start_with(
+        common::bridge(),
+        "127.0.0.1:0",
+        ServerConfig {
+            workers,
+            backend,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap()
 }
 
-#[test]
-fn full_rest_round_trip() {
-    let bridge = common::bridge();
-    let server = Server::start(bridge, "127.0.0.1:0", 2).unwrap();
+fn rest_round_trip(server: Server) {
     let addr = server.addr;
 
-    // Health.
+    // Health and readiness.
     let (code, j) = http_get(addr, "/health");
     assert_eq!(code, 200);
     assert_eq!(j.str_of("status").unwrap(), "ok");
+    let (code, j) = http_get(addr, "/ready");
+    assert_eq!(code, 200, "{}", j.to_string());
+    assert_eq!(j.str_of("status").unwrap(), "ready");
+    assert_eq!(j.str_of("restore").unwrap(), "complete");
 
     // A cost-type request.
     let (code, j) = http_post(
@@ -86,9 +84,19 @@ fn full_rest_round_trip() {
 }
 
 #[test]
-fn concurrent_clients_same_user_are_serialized() {
-    let bridge = common::bridge();
-    let server = Server::start(bridge, "127.0.0.1:0", 4).unwrap();
+fn full_rest_round_trip_default_backend() {
+    rest_round_trip(server_on(ServerBackend::Auto, 2));
+}
+
+#[test]
+fn full_rest_round_trip_threaded_backend() {
+    rest_round_trip(server_on(ServerBackend::Threaded, 2));
+}
+
+/// The paper's per-user serialization guarantee (SQS FIFO semantics):
+/// concurrent requests from one user all succeed, processed one at a
+/// time in queue order.
+fn same_user_serialized(server: Server) {
     let addr = server.addr;
     let mut handles = vec![];
     for i in 0..6 {
@@ -105,8 +113,18 @@ fn concurrent_clients_same_user_are_serialized() {
         }));
     }
     for h in handles {
-        let (code, _) = h.join().unwrap();
-        assert_eq!(code, 200);
+        let (code, j) = h.join().unwrap();
+        assert_eq!(code, 200, "{}", j.to_string());
     }
     server.stop();
+}
+
+#[test]
+fn concurrent_clients_same_user_are_serialized_default_backend() {
+    same_user_serialized(server_on(ServerBackend::Auto, 4));
+}
+
+#[test]
+fn concurrent_clients_same_user_are_serialized_threaded_backend() {
+    same_user_serialized(server_on(ServerBackend::Threaded, 4));
 }

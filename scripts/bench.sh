@@ -13,6 +13,14 @@
 # so WAL throughput, cold-restore time, and the ANN tier all ride the
 # same trajectory file.
 #
+# The throughput bench ends with an open-loop probe against a real
+# evented server over loopback: it calibrates the server's closed-loop
+# HTTP ceiling, then offers fixed arrival rates at 0.6x and 1.5x of it,
+# measuring p50/p99 from the *scheduled* arrival (no coordinated
+# omission) plus the admission-shed rate. Results land in
+# BENCH_throughput.json under throughput/open_loop_0.6x,
+# throughput/open_loop_1.5x, and the summary throughput/open_loop_p99.
+#
 # Usage: scripts/bench.sh [--fast|--smoke]
 #   --fast    shrink iteration counts (LLMBRIDGE_BENCH_FAST=1).
 #   --smoke   CI smoke: reduced corpus sizes + a single iteration per
