@@ -17,6 +17,10 @@
 //! capacity. The overload leg shows admission-control shedding (429s)
 //! keeping tail latency bounded instead of queues melting; both legs
 //! land in BENCH_throughput.json (`throughput/open_loop_*`).
+//!
+//! A final **breaker-open** leg trips one model's circuit breaker and
+//! measures the fast-fail path: typed 503s served before cache or
+//! engine are touched (`throughput/breaker_open`).
 
 mod bench_common;
 
@@ -123,6 +127,11 @@ impl OlClient {
             r#"{{"user":"{user}","conversation":"ol","prompt":"{prompt}",
                 "service_type":{{"name":"cost"}}}}"#
         );
+        self.roundtrip_body(&body)
+    }
+
+    /// [`Self::roundtrip`] with a caller-built JSON body.
+    fn roundtrip_body(&mut self, body: &str) -> u16 {
         let msg = format!(
             "POST /v1/request HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
             body.len()
@@ -398,6 +407,49 @@ fn main() {
             ("underload_p99_us", Json::num(legs[0].p99_us as f64)),
             ("overload_p99_us", Json::num(legs[1].p99_us as f64)),
             ("overload_shed_rate", Json::num(legs[1].shed_rate())),
+        ]),
+    );
+
+    // ---- breaker-open fast-fail leg -------------------------------------
+    // Trip one model's circuit breaker, then hammer that model over the
+    // same keep-alive path. Every request sheds with the typed 503 before
+    // touching cache or engine; the interesting numbers are how cheap
+    // saying "no" is (p99 far below a served request) and the fast-fail
+    // req/s ceiling a sick upstream leaves the proxy with.
+    let sick = ModelId::Gpt4oMini.as_str();
+    for _ in 0..bridge.breaker().config().threshold {
+        bridge.breaker().record_failure(sick);
+    }
+    let shots = if fast_mode() { 200 } else { 1000 };
+    let mut c = OlClient::connect(server.addr);
+    let mut lat: Vec<u64> = Vec::with_capacity(shots);
+    let mut shed_503 = 0usize;
+    let t0 = Instant::now();
+    for i in 0..shots {
+        let body = format!(
+            r#"{{"user":"brk","conversation":"brk","prompt":"breaker probe {i}",
+                "service_type":{{"name":"fixed","model":"{sick}","cache":"skip"}}}}"#
+        );
+        let s0 = Instant::now();
+        if c.roundtrip_body(&body) == 503 {
+            shed_503 += 1;
+        }
+        lat.push(s0.elapsed().as_micros() as u64);
+    }
+    let fail_rps = shots as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    lat.sort_unstable();
+    let (bp50, bp99) = (percentile(&lat, 0.50), percentile(&lat, 0.99));
+    println!(
+        "breaker_open  {fail_rps:>9.0} req/s fast-fail  503s {shed_503}/{shots}  p50 {bp50:>7} us  p99 {bp99:>7} us"
+    );
+    report.push(
+        "throughput/breaker_open",
+        Json::obj(vec![
+            ("requests", Json::num(shots as f64)),
+            ("shed_503", Json::num(shed_503 as f64)),
+            ("fast_fail_rps", Json::num(fail_rps)),
+            ("p50_us", Json::num(bp50 as f64)),
+            ("p99_us", Json::num(bp99 as f64)),
         ]),
     );
     server.stop();

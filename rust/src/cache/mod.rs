@@ -222,6 +222,7 @@ pub trait Journal: Send + Sync {
     fn log_put(&self, object: CacheObject, keys: Vec<(u64, CachedType, Vec<f32>)>)
         -> Result<()>;
     fn log_clear(&self);
+    fn log_remove_exact(&self, prompt: &str);
 }
 
 pub struct SemanticCache {
@@ -325,6 +326,24 @@ impl SemanticCache {
             .unwrap()
             .get(&key)
             .cloned()
+    }
+
+    /// Admin invalidation of one exact entry (`DELETE /admin/cache?key=`).
+    /// Returns whether an entry was actually removed. Journaled under the
+    /// shard lock like `put_exact`, so replay preserves the same
+    /// put/remove ordering the live cache saw.
+    pub fn remove_exact(&self, prompt: &str) -> bool {
+        let journal = self.journal.get();
+        let _gate = journal.map(|j| j.enter());
+        let key = Self::exact_key(prompt);
+        let mut shard = self.exact[Self::shard_of_str(&key)].write().unwrap();
+        let removed = shard.remove(&key).is_some();
+        if removed {
+            if let Some(j) = journal {
+                j.log_remove_exact(prompt);
+            }
+        }
+        removed
     }
 
     // --------------------------------------------------------------- PUT

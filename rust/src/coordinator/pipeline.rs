@@ -53,6 +53,12 @@ pub struct BridgeConfig {
     /// (checked by [`Bridge::maybe_compact`], which the server polls from
     /// a background janitor thread).
     pub compact_wal_bytes: u64,
+    /// Per-model circuit-breaker tunables (`--breaker-threshold`,
+    /// `--breaker-cooldown-secs`); hot-reloadable via `POST /admin/config`.
+    pub breaker: crate::ops::BreakerConfig,
+    /// Engine RPC deadline override (`--engine-timeout-secs`); `None`
+    /// keeps the engine's 120s default.
+    pub engine_timeout: Option<std::time::Duration>,
 }
 
 impl Default for BridgeConfig {
@@ -64,6 +70,8 @@ impl Default for BridgeConfig {
             quota: Quota::default(),
             data_dir: None,
             compact_wal_bytes: 8 * 1024 * 1024,
+            breaker: crate::ops::BreakerConfig::default(),
+            engine_timeout: None,
         }
     }
 }
@@ -125,6 +133,8 @@ pub struct Bridge {
     quotas: RwLock<HashMap<String, QuotaState>>,
     /// Snapshot+WAL durability; `None` when no data dir is configured.
     persist: Option<Arc<Persistence>>,
+    /// Per-model circuit breaker guarding generator execution (RouteStage).
+    pub(crate) breaker: crate::ops::CircuitBreaker,
     pub config: BridgeConfig,
 }
 
@@ -240,6 +250,9 @@ impl Bridge {
                             },
                         );
                     }
+                    WalOp::RemoveExact { prompt } => {
+                        cache.remove_exact(&prompt);
+                    }
                 }
             }
             telemetry.counters.add("persist_replayed_ops", replayed as u64);
@@ -252,6 +265,11 @@ impl Bridge {
             persist = Some(p);
         }
 
+        if let Some(timeout) = config.engine_timeout {
+            engine.set_rpc_timeout(timeout);
+        }
+        let breaker = crate::ops::CircuitBreaker::new(config.breaker);
+
         Ok(Bridge {
             engine,
             generator: Arc::new(generator),
@@ -261,6 +279,7 @@ impl Bridge {
             exchanges: RwLock::new(exchanges),
             quotas: RwLock::new(quotas),
             persist,
+            breaker,
             config,
         })
     }
@@ -288,6 +307,11 @@ impl Bridge {
 
     pub fn telemetry(&self) -> &Arc<Telemetry> {
         &self.telemetry
+    }
+
+    /// The per-model circuit breaker (admin surface + route stage).
+    pub fn breaker(&self) -> &crate::ops::CircuitBreaker {
+        &self.breaker
     }
 
     pub fn history(&self, user: &str, conversation: &str) -> Vec<Message> {

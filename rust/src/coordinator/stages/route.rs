@@ -6,12 +6,22 @@
 //! ② short-circuits generation — the grounded response is served under
 //! the cache-LLM's name. The per-user quota gates allowlist requests
 //! before any model runs.
+//!
+//! Execution is wrapped by the per-model circuit breaker
+//! ([`crate::ops::CircuitBreaker`]): the plan's *answer model* is gated
+//! before any model runs, and the outcome is reported back. While a
+//! model's breaker is open the request fast-fails with
+//! [`BridgeError::BreakerOpen`] (503, `"reason":"breaker"`,
+//! `Retry-After`) instead of pinning a worker on a sick backend. Only
+//! infrastructure failures (`Internal`, `UpstreamTimeout`) count against
+//! the breaker; a caller's `BadRequest` never trips it.
 
 use crate::adapter::Cascade;
 use crate::coordinator::ctx::RequestCtx;
 use crate::coordinator::pipeline::Bridge;
 use crate::error::BridgeError;
 use crate::models::quality::{latent_score, GenCondition, QueryTraits};
+use crate::ops::Admission;
 use crate::router::{RouteError, RoutePlan};
 
 use super::{Flow, Stage};
@@ -61,7 +71,8 @@ impl Stage for RouteStage {
     }
 }
 
-/// Resolve the routing policy to a plan and execute it.
+/// Resolve the routing policy to a plan and execute it under the answer
+/// model's circuit breaker.
 fn execute_plan(
     bridge: &Bridge,
     cx: &mut RequestCtx,
@@ -77,6 +88,71 @@ fn execute_plan(
         // A policy the pool can't satisfy is a configuration bug.
         RouteError::EmptyPool(_) => BridgeError::Internal(anyhow::anyhow!("{e}")),
     })?;
+
+    // The breaker keys on the model that answers first: the single plan's
+    // model, or the cascade's m1 (a cascade with a dead m1 never reaches
+    // m2, so m1's health is the plan's health).
+    let answer_model = match &plan {
+        RoutePlan::Single { model, .. } => *model,
+        RoutePlan::Cascade { m1, .. } => *m1,
+    };
+    let breaker = bridge.breaker();
+    match breaker.admit(answer_model.as_str()) {
+        Admission::Allow => {}
+        Admission::Probe => {
+            bridge.telemetry.counters.incr("breaker_probes");
+        }
+        Admission::Deny { retry_after } => {
+            bridge.telemetry.counters.incr("breaker_shed");
+            return Err(BridgeError::BreakerOpen {
+                model: answer_model.as_str().to_string(),
+                retry_after_secs: retry_after.as_secs().max(1),
+            });
+        }
+    }
+
+    match run_plan(bridge, cx, cond, traits, plan) {
+        Ok(()) => {
+            if breaker.record_success(answer_model.as_str()) {
+                bridge.telemetry.counters.incr("breaker_recoveries");
+            }
+            Ok(())
+        }
+        Err(e) => {
+            // Only infrastructure failures advance the breaker; a client's
+            // bad parameters say nothing about the backend's health.
+            if matches!(
+                e,
+                BridgeError::Internal(_) | BridgeError::UpstreamTimeout { .. }
+            ) {
+                bridge.telemetry.counters.incr("breaker_failures");
+                if breaker.record_failure(answer_model.as_str()) {
+                    bridge.telemetry.counters.incr("breaker_trips");
+                }
+            }
+            Err(e)
+        }
+    }
+}
+
+/// Execute a resolved plan (generation or cascade).
+fn run_plan(
+    bridge: &Bridge,
+    cx: &mut RequestCtx,
+    cond: GenCondition,
+    traits: &QueryTraits,
+    plan: RoutePlan,
+) -> Result<(), BridgeError> {
+    // Failpoint for the resilience tests: a request carrying
+    // `params.failpoint = "generate"` fails as if the backend died,
+    // exercising the breaker path end-to-end over real HTTP.
+    if cx.req.params.get("failpoint").map(String::as_str) == Some("generate")
+        && crate::util::failpoints_enabled()
+    {
+        return Err(BridgeError::Internal(anyhow::anyhow!(
+            "failpoint: injected generate failure"
+        )));
+    }
 
     match plan {
         RoutePlan::Single {

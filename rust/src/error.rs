@@ -7,6 +7,23 @@
 //! new failure modes get a status by construction, not by grep.
 
 use std::fmt;
+use std::time::Duration;
+
+/// Marker payload the engine attaches to an expired RPC: typed so the
+/// pipeline can `downcast_ref` it out of the `anyhow` chain and map it
+/// to [`BridgeError::UpstreamTimeout`] (503) instead of a generic 500.
+#[derive(Debug)]
+pub struct EngineTimeout {
+    pub timeout: Duration,
+}
+
+impl fmt::Display for EngineTimeout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "engine rpc timed out after {:?}", self.timeout)
+    }
+}
+
+impl std::error::Error for EngineTimeout {}
 
 /// Everything `Bridge::handle` / `Bridge::regenerate` can fail with.
 #[derive(Debug)]
@@ -24,6 +41,15 @@ pub enum BridgeError {
     /// compaction (torn *tails* are tolerated and never reach here; this
     /// is interior corruption or an unreadable data dir).
     Persist(String),
+    /// The model's circuit breaker is open: the backend has failed
+    /// repeatedly and requests fast-fail until the cooldown lapses.
+    BreakerOpen {
+        model: String,
+        retry_after_secs: u64,
+    },
+    /// The engine RPC expired (`--engine-timeout-secs`): the backend is
+    /// hung, not wrong — retryable, and counted against the breaker.
+    UpstreamTimeout { secs: u64 },
 }
 
 impl BridgeError {
@@ -35,6 +61,30 @@ impl BridgeError {
             BridgeError::BadRequest(_) => 400,
             BridgeError::Internal(_) => 500,
             BridgeError::Persist(_) => 500,
+            BridgeError::BreakerOpen { .. } => 503,
+            BridgeError::UpstreamTimeout { .. } => 503,
+        }
+    }
+
+    /// Machine-readable shed reason for the response body, so clients can
+    /// tell the three 429s (admission/rate/quota) and two 503s
+    /// (breaker/timeout) apart without parsing prose.
+    pub fn reason(&self) -> Option<&'static str> {
+        match self {
+            BridgeError::QuotaExceeded { .. } => Some("quota"),
+            BridgeError::BreakerOpen { .. } => Some("breaker"),
+            BridgeError::UpstreamTimeout { .. } => Some("timeout"),
+            _ => None,
+        }
+    }
+
+    /// `Retry-After` header value, when this error implies one.
+    pub fn retry_after_secs(&self) -> Option<u64> {
+        match self {
+            BridgeError::BreakerOpen {
+                retry_after_secs, ..
+            } => Some((*retry_after_secs).max(1)),
+            _ => None,
         }
     }
 
@@ -54,6 +104,16 @@ impl fmt::Display for BridgeError {
             // `{:#}` keeps the anyhow context chain in one line.
             BridgeError::Internal(e) => write!(f, "{e:#}"),
             BridgeError::Persist(msg) => write!(f, "persistence: {msg}"),
+            BridgeError::BreakerOpen {
+                model,
+                retry_after_secs,
+            } => write!(
+                f,
+                "circuit breaker open for model {model} (retry in {retry_after_secs}s)"
+            ),
+            BridgeError::UpstreamTimeout { secs } => {
+                write!(f, "upstream engine timed out after {secs}s")
+            }
         }
     }
 }
@@ -62,6 +122,13 @@ impl std::error::Error for BridgeError {}
 
 impl From<anyhow::Error> for BridgeError {
     fn from(e: anyhow::Error) -> BridgeError {
+        // An expired engine RPC carries a typed marker: surface it as a
+        // retryable 503 rather than an opaque Internal 500.
+        if let Some(t) = e.downcast_ref::<EngineTimeout>() {
+            return BridgeError::UpstreamTimeout {
+                secs: t.timeout.as_secs(),
+            };
+        }
         BridgeError::Internal(e)
     }
 }
@@ -80,6 +147,35 @@ mod tests {
             500
         );
         assert_eq!(BridgeError::Persist("bad wal".into()).http_status(), 500);
+        assert_eq!(
+            BridgeError::BreakerOpen { model: "m".into(), retry_after_secs: 3 }.http_status(),
+            503
+        );
+        assert_eq!(BridgeError::UpstreamTimeout { secs: 30 }.http_status(), 503);
+    }
+
+    #[test]
+    fn reasons_distinguish_shed_classes() {
+        assert_eq!(
+            BridgeError::QuotaExceeded { user: "u".into() }.reason(),
+            Some("quota")
+        );
+        let open = BridgeError::BreakerOpen { model: "m".into(), retry_after_secs: 7 };
+        assert_eq!(open.reason(), Some("breaker"));
+        assert_eq!(open.retry_after_secs(), Some(7));
+        assert_eq!(BridgeError::UpstreamTimeout { secs: 1 }.reason(), Some("timeout"));
+        assert_eq!(BridgeError::bad_request("x").reason(), None);
+        assert_eq!(BridgeError::bad_request("x").retry_after_secs(), None);
+    }
+
+    #[test]
+    fn engine_timeout_downcasts_to_503() {
+        let anyhow_err = anyhow::Error::new(EngineTimeout {
+            timeout: std::time::Duration::from_secs(30),
+        });
+        let be: BridgeError = anyhow_err.into();
+        assert!(matches!(be, BridgeError::UpstreamTimeout { secs: 30 }));
+        assert_eq!(be.http_status(), 503);
     }
 
     #[test]

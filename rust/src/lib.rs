@@ -61,6 +61,7 @@ pub mod error;
 pub mod experiments;
 pub mod kvstore;
 pub mod models;
+pub mod ops;
 pub mod persist;
 pub mod queuing;
 pub mod router;

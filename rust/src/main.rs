@@ -7,7 +7,10 @@
 //!                   [--backend auto|evented|threaded] [--max-conns 4096]
 //!                   [--shed-watermark 512] [--user-queue-cap 32]
 //!                   [--keepalive-secs 30] [--request-deadline-secs 10]
-//!                   [--drain-secs 5]
+//!                   [--drain-secs 5] [--admin-port N]
+//!                   [--rate-per-sec R] [--rate-burst B]
+//!                   [--engine-timeout-secs N]
+//!                   [--breaker-threshold N] [--breaker-cooldown-secs N]
 //! llmbridge ask     --prompt "..." [--service TYPE] [--user u] [--artifacts DIR]
 //! llmbridge warm    [--artifacts DIR]        # load corpus into the cache
 //! llmbridge models                            # print the model pool
@@ -83,6 +86,13 @@ fn server_config_from(args: &Args) -> Result<ServerConfig> {
             "threaded" => ServerBackend::Threaded,
             other => bail!("unknown --backend '{other}' (auto|evented|threaded)"),
         },
+        rate_per_sec: args.f64_or("rate-per-sec", d.rate_per_sec),
+        rate_burst: args.f64_or("rate-burst", d.rate_burst),
+        // The admin surface binds loopback-only: it can clear the cache
+        // and rewrite live limits, so it never rides the data bind.
+        admin_bind: args
+            .get("admin-port")
+            .map(|p| format!("127.0.0.1:{p}")),
     })
 }
 
@@ -100,6 +110,14 @@ fn config_from(args: &Args) -> BridgeConfig {
         // default: without --data-dir the proxy is fully in-memory.
         data_dir: args.get("data-dir").map(std::path::PathBuf::from),
         compact_wal_bytes: args.u64_or("compact-wal-bytes", 8 * 1024 * 1024),
+        breaker: llmbridge::ops::BreakerConfig {
+            threshold: args.usize_or("breaker-threshold", 5) as u32,
+            cooldown: std::time::Duration::from_secs(args.u64_or("breaker-cooldown-secs", 10)),
+        },
+        engine_timeout: args
+            .get("engine-timeout-secs")
+            .and_then(|s| s.parse::<u64>().ok())
+            .map(std::time::Duration::from_secs),
     }
 }
 
@@ -163,6 +181,9 @@ fn main() -> Result<()> {
                 "llmbridge serving on {} ({workers} workers); Ctrl-C drains and stops",
                 server.addr
             );
+            if let Some(admin) = server.admin_addr {
+                eprintln!("llmbridge admin surface on {admin}");
+            }
             #[cfg(unix)]
             {
                 shutdown::install();
@@ -257,7 +278,10 @@ fn main() -> Result<()> {
                  [--generation old|new] [--prefetch] [--warm] \
                  [--data-dir DIR] [--compact-wal-bytes N] \
                  [--backend auto|evented|threaded] [--max-conns N] [--shed-watermark N] \
-                 [--user-queue-cap N] [--keepalive-secs N] [--drain-secs N]"
+                 [--user-queue-cap N] [--keepalive-secs N] [--drain-secs N] \
+                 [--admin-port N] [--rate-per-sec R] [--rate-burst B] \
+                 [--engine-timeout-secs N] [--breaker-threshold N] \
+                 [--breaker-cooldown-secs N]"
             );
         }
     }

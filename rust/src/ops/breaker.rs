@@ -1,0 +1,366 @@
+//! Per-model circuit breaker: closed → open → half-open.
+//!
+//! The route stage asks [`CircuitBreaker::admit`] before executing a
+//! plan and reports the outcome with [`CircuitBreaker::record_success`]
+//! / [`CircuitBreaker::record_failure`]. Each model keeps its own state
+//! machine, so one sick pool member fast-fails while the rest of the
+//! pool keeps serving:
+//!
+//! ```text
+//!              consecutive failures >= threshold
+//!   Closed ───────────────────────────────────────▶ Open{until}
+//!     ▲                                               │
+//!     │ probe succeeds                    now >= until │
+//!     │                                               ▼
+//!   (reset) ◀─────────────────────────────── HalfOpen{probing}
+//!                      probe fails ──▶ back to Open{now + cooldown}
+//! ```
+//!
+//! While `Open`, every admit is denied with the remaining cooldown as a
+//! `Retry-After` hint. Once the cooldown lapses the breaker turns
+//! half-open and lets exactly **one** probe through at a time; other
+//! requests keep shedding until the probe reports back. A successful
+//! probe closes the breaker, a failed one re-opens it for a full
+//! cooldown.
+//!
+//! Only infrastructure failures (engine RPC errors/timeouts) count
+//! against the breaker — client errors like `BadRequest` never trip it.
+//! All methods take `&self`; state lives behind one mutex (the map is
+//! touched once per request, nowhere near the hot path's shard locks).
+
+use std::collections::HashMap;
+use std::sync::{Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Breaker tunables, hot-reloadable via `POST /admin/config`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BreakerConfig {
+    /// Consecutive infrastructure failures before the breaker opens.
+    pub threshold: u32,
+    /// How long an open breaker sheds before allowing a half-open probe.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            threshold: 5,
+            cooldown: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Verdict of [`CircuitBreaker::admit`] for one request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Admission {
+    /// Breaker closed: execute normally.
+    Allow,
+    /// Breaker half-open and this request won the probe slot: execute,
+    /// and the recorded outcome decides whether the breaker closes.
+    Probe,
+    /// Breaker open (or half-open with a probe already in flight):
+    /// shed with a 503 carrying this `Retry-After` hint.
+    Deny { retry_after: Duration },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum State {
+    Closed,
+    Open { until: Instant },
+    HalfOpen { probing: bool },
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    state: State,
+    consecutive_failures: u32,
+    trips: u64,
+}
+
+impl Entry {
+    fn new() -> Entry {
+        Entry {
+            state: State::Closed,
+            consecutive_failures: 0,
+            trips: 0,
+        }
+    }
+}
+
+/// One state-machine line of [`CircuitBreaker::snapshot`].
+#[derive(Clone, Debug)]
+pub struct BreakerLine {
+    pub model: String,
+    /// `"closed"`, `"open"`, or `"half-open"`.
+    pub state: &'static str,
+    pub consecutive_failures: u32,
+    pub trips: u64,
+    /// Remaining cooldown when open, else 0.
+    pub retry_after_secs: u64,
+}
+
+struct Inner {
+    config: BreakerConfig,
+    models: HashMap<String, Entry>,
+}
+
+/// Per-model circuit breaker; see the module docs for the state machine.
+pub struct CircuitBreaker {
+    inner: Mutex<Inner>,
+}
+
+/// When half-open with a probe already dispatched, concurrent requests
+/// are denied with this short hint rather than the full cooldown — the
+/// probe's verdict is at most one request away.
+const PROBE_RETRY: Duration = Duration::from_secs(1);
+
+impl CircuitBreaker {
+    pub fn new(config: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            inner: Mutex::new(Inner {
+                config,
+                models: HashMap::new(),
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // A panic while holding this mutex leaves consistent state (all
+        // mutations are single assignments), so poisoning is recoverable.
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn config(&self) -> BreakerConfig {
+        self.lock().config
+    }
+
+    /// Swap tunables atomically. Existing open/half-open state is kept;
+    /// the new threshold/cooldown apply from the next transition.
+    pub fn set_config(&self, config: BreakerConfig) {
+        self.lock().config = config;
+    }
+
+    /// Gate one request against `model`'s breaker.
+    pub fn admit(&self, model: &str) -> Admission {
+        self.admit_at(model, Instant::now())
+    }
+
+    /// `admit` with an explicit clock, for deterministic tests.
+    pub fn admit_at(&self, model: &str, now: Instant) -> Admission {
+        let mut g = self.lock();
+        let entry = g.models.entry(model.to_string()).or_insert_with(Entry::new);
+        match entry.state {
+            State::Closed => Admission::Allow,
+            State::Open { until } => {
+                if now < until {
+                    Admission::Deny {
+                        retry_after: until - now,
+                    }
+                } else {
+                    // Cooldown lapsed: this request becomes the probe.
+                    entry.state = State::HalfOpen { probing: true };
+                    Admission::Probe
+                }
+            }
+            State::HalfOpen { probing } => {
+                if probing {
+                    Admission::Deny {
+                        retry_after: PROBE_RETRY,
+                    }
+                } else {
+                    entry.state = State::HalfOpen { probing: true };
+                    Admission::Probe
+                }
+            }
+        }
+    }
+
+    /// Report a successful execution. Returns `true` if this success
+    /// closed a half-open breaker (a recovery, worth a counter).
+    pub fn record_success(&self, model: &str) -> bool {
+        let mut g = self.lock();
+        let entry = g.models.entry(model.to_string()).or_insert_with(Entry::new);
+        match entry.state {
+            State::HalfOpen { .. } => {
+                entry.state = State::Closed;
+                entry.consecutive_failures = 0;
+                true
+            }
+            State::Closed => {
+                entry.consecutive_failures = 0;
+                false
+            }
+            // A success racing an already-open breaker (request admitted
+            // before the trip) doesn't close it early.
+            State::Open { .. } => false,
+        }
+    }
+
+    /// Report an infrastructure failure. Returns `true` if this failure
+    /// tripped the breaker open (closed→open or a failed probe).
+    pub fn record_failure(&self, model: &str) -> bool {
+        self.record_failure_at(model, Instant::now())
+    }
+
+    /// `record_failure` with an explicit clock, for deterministic tests.
+    pub fn record_failure_at(&self, model: &str, now: Instant) -> bool {
+        let mut g = self.lock();
+        let cooldown = g.config.cooldown;
+        let threshold = g.config.threshold.max(1);
+        let entry = g.models.entry(model.to_string()).or_insert_with(Entry::new);
+        match entry.state {
+            State::Closed => {
+                entry.consecutive_failures += 1;
+                if entry.consecutive_failures >= threshold {
+                    entry.state = State::Open {
+                        until: now + cooldown,
+                    };
+                    entry.trips += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+            State::HalfOpen { .. } => {
+                entry.state = State::Open {
+                    until: now + cooldown,
+                };
+                entry.trips += 1;
+                true
+            }
+            // Late failures from requests admitted pre-trip don't extend
+            // the cooldown.
+            State::Open { .. } => false,
+        }
+    }
+
+    /// Point-in-time view of every model's breaker, for `/admin/breaker`.
+    pub fn snapshot(&self) -> Vec<BreakerLine> {
+        self.snapshot_at(Instant::now())
+    }
+
+    pub fn snapshot_at(&self, now: Instant) -> Vec<BreakerLine> {
+        let g = self.lock();
+        let mut lines: Vec<BreakerLine> = g
+            .models
+            .iter()
+            .map(|(model, e)| {
+                let (state, retry) = match e.state {
+                    State::Closed => ("closed", 0),
+                    State::Open { until } => {
+                        ("open", until.saturating_duration_since(now).as_secs())
+                    }
+                    State::HalfOpen { .. } => ("half-open", 0),
+                };
+                BreakerLine {
+                    model: model.clone(),
+                    state,
+                    consecutive_failures: e.consecutive_failures,
+                    trips: e.trips,
+                    retry_after_secs: retry,
+                }
+            })
+            .collect();
+        lines.sort_by(|a, b| a.model.cmp(&b.model));
+        lines
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(threshold: u32, cooldown_ms: u64) -> BreakerConfig {
+        BreakerConfig {
+            threshold,
+            cooldown: Duration::from_millis(cooldown_ms),
+        }
+    }
+
+    #[test]
+    fn trips_after_consecutive_failures_only() {
+        let b = CircuitBreaker::new(cfg(3, 1000));
+        let t0 = Instant::now();
+        assert!(!b.record_failure_at("m", t0));
+        assert!(!b.record_failure_at("m", t0));
+        // A success in between resets the consecutive count.
+        assert!(!b.record_success("m"));
+        assert!(!b.record_failure_at("m", t0));
+        assert!(!b.record_failure_at("m", t0));
+        assert_eq!(b.admit_at("m", t0), Admission::Allow);
+        assert!(b.record_failure_at("m", t0));
+        match b.admit_at("m", t0) {
+            Admission::Deny { retry_after } => {
+                assert!(retry_after <= Duration::from_millis(1000))
+            }
+            other => panic!("expected Deny while open, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cooldown_then_single_probe_then_recovery() {
+        let b = CircuitBreaker::new(cfg(1, 1000));
+        let t0 = Instant::now();
+        assert!(b.record_failure_at("m", t0));
+        // Still open just before the cooldown lapses.
+        assert!(matches!(
+            b.admit_at("m", t0 + Duration::from_millis(999)),
+            Admission::Deny { .. }
+        ));
+        // Cooldown lapsed: first request is the probe, concurrent ones shed.
+        let t1 = t0 + Duration::from_millis(1001);
+        assert_eq!(b.admit_at("m", t1), Admission::Probe);
+        assert!(matches!(b.admit_at("m", t1), Admission::Deny { .. }));
+        // Probe success closes the breaker and is reported as a recovery.
+        assert!(b.record_success("m"));
+        assert_eq!(b.admit_at("m", t1), Admission::Allow);
+        assert!(!b.record_success("m"));
+    }
+
+    #[test]
+    fn failed_probe_reopens_for_full_cooldown() {
+        let b = CircuitBreaker::new(cfg(1, 1000));
+        let t0 = Instant::now();
+        b.record_failure_at("m", t0);
+        let t1 = t0 + Duration::from_millis(1500);
+        assert_eq!(b.admit_at("m", t1), Admission::Probe);
+        assert!(b.record_failure_at("m", t1));
+        // Re-opened from the probe's failure time, not the original trip.
+        assert!(matches!(
+            b.admit_at("m", t1 + Duration::from_millis(999)),
+            Admission::Deny { .. }
+        ));
+        assert_eq!(
+            b.admit_at("m", t1 + Duration::from_millis(1001)),
+            Admission::Probe
+        );
+    }
+
+    #[test]
+    fn per_model_isolation() {
+        let b = CircuitBreaker::new(cfg(1, 1000));
+        let t0 = Instant::now();
+        assert!(b.record_failure_at("sick", t0));
+        assert!(matches!(b.admit_at("sick", t0), Admission::Deny { .. }));
+        assert_eq!(b.admit_at("healthy", t0), Admission::Allow);
+        let snap = b.snapshot_at(t0);
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].model, "healthy");
+        assert_eq!(snap[0].state, "closed");
+        assert_eq!(snap[1].model, "sick");
+        assert_eq!(snap[1].state, "open");
+        assert_eq!(snap[1].trips, 1);
+    }
+
+    #[test]
+    fn config_swap_applies_to_next_transition() {
+        let b = CircuitBreaker::new(cfg(5, 1000));
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            assert!(!b.record_failure_at("m", t0));
+        }
+        b.set_config(cfg(2, 1000));
+        // Already at 4 consecutive >= new threshold 2: next failure trips.
+        assert!(b.record_failure_at("m", t0));
+    }
+}

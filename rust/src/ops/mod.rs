@@ -1,0 +1,50 @@
+//! Operational resilience layer (ROADMAP item 2): the pieces that keep a
+//! long-lived deployment serving through backend outages and traffic
+//! bursts without a restart — the paper's deployments ran for months
+//! (§5: the WhatsApp bridge 12+ months, the classroom proxy a semester),
+//! so operability is part of the reproduction, not an afterthought.
+//!
+//! * [`CircuitBreaker`] — per-model closed→open→half-open state machines
+//!   wrapped around generator calls in the route stage. A sick model
+//!   fast-fails with a typed 503 (`"reason":"breaker"` + `Retry-After`)
+//!   instead of pinning workers, and per-model state means one sick pool
+//!   member doesn't black-hole the rest.
+//! * [`RateLimiter`] — per-user token buckets, the admission gate ahead
+//!   of the quota check. Sheds with a 429 whose `"reason":"rate"` is
+//!   distinct from both the admission 429 and the per-user quota 429.
+//! * [`OpsConfig`] — the server-side knobs `POST /admin/config`
+//!   hot-reloads. The whole struct swaps through one `Arc`, so a request
+//!   that loads the snapshot once observes either the old config or the
+//!   new one, never a mix (the validate → swap happens-before edge).
+
+pub mod breaker;
+pub mod rate;
+
+pub use breaker::{Admission, BreakerConfig, CircuitBreaker};
+pub use rate::RateLimiter;
+
+/// Server-side tunables, hot-reloadable as one unit via
+/// `POST /admin/config`. Held in an `RwLock<Arc<OpsConfig>>` on the
+/// server state; readers clone the `Arc` once per request and read every
+/// field from that snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpsConfig {
+    /// In-flight dispatched-request watermark (admission control).
+    pub shed_watermark: usize,
+    /// Token-bucket refill rate per user. `0.0` disables rate limiting
+    /// (the default — existing deployments see no behavior change).
+    pub rate_per_sec: f64,
+    /// Token-bucket capacity: how many requests a user may burst after
+    /// an idle period.
+    pub rate_burst: f64,
+}
+
+impl Default for OpsConfig {
+    fn default() -> OpsConfig {
+        OpsConfig {
+            shed_watermark: 512,
+            rate_per_sec: 0.0,
+            rate_burst: 16.0,
+        }
+    }
+}

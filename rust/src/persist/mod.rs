@@ -477,6 +477,12 @@ impl Journal for Persistence {
     fn log_clear(&self) {
         self.append_best_effort(&WalOp::Clear);
     }
+
+    fn log_remove_exact(&self, prompt: &str) {
+        self.append_best_effort(&WalOp::RemoveExact {
+            prompt: prompt.to_string(),
+        });
+    }
 }
 
 #[cfg(test)]

@@ -76,6 +76,7 @@ const TAG_PUT_OBJECT: u8 = 2;
 const TAG_CLEAR: u8 = 3;
 const TAG_QUOTA: u8 = 4;
 const TAG_EXCHANGE: u8 = 5;
+const TAG_REMOVE_EXACT: u8 = 6;
 
 /// One durable mutation. Cache PUTs carry the embedding vectors computed
 /// at insert time, so replay never touches the engine (no re-embedding).
@@ -107,6 +108,10 @@ pub enum WalOp {
         regen_count: u32,
         request_json: String,
     },
+    /// `SemanticCache::remove_exact` — admin invalidation of one exact
+    /// entry (`DELETE /admin/cache?key=`). Journaled so an invalidation
+    /// survives restart instead of resurrecting the stale entry.
+    RemoveExact { prompt: String },
 }
 
 // ------------------------------------------------------------- encoding
@@ -232,6 +237,10 @@ impl WalOp {
                 put_u32(&mut out, *regen_count);
                 put_str(&mut out, request_json);
             }
+            WalOp::RemoveExact { prompt } => {
+                out.push(TAG_REMOVE_EXACT);
+                put_str(&mut out, prompt);
+            }
         }
         out
     }
@@ -281,6 +290,7 @@ impl WalOp {
                 regen_count: c.u32()?,
                 request_json: c.str()?,
             },
+            TAG_REMOVE_EXACT => WalOp::RemoveExact { prompt: c.str()? },
             t => return Err(format!("unknown op tag {t}")),
         };
         c.done()?;
@@ -552,7 +562,7 @@ mod tests {
     fn sample_ops(r: &mut crate::util::rng::Rng) -> Vec<WalOp> {
         let n = 1 + r.below(6);
         (0..n)
-            .map(|i| match r.below(5) {
+            .map(|i| match r.below(6) {
                 0 => WalOp::PutExact {
                     prompt: gen_text(r, 6),
                     response: gen_text(r, 6),
@@ -581,10 +591,13 @@ mod tests {
                     input_tokens: r.next_u64() >> 20,
                     output_tokens: r.next_u64() >> 20,
                 },
-                _ => WalOp::Exchange {
+                4 => WalOp::Exchange {
                     request_id: r.next_u64(),
                     regen_count: r.below(4) as u32,
                     request_json: format!("{{\"user\":\"{}\"}}", gen_text(r, 1)),
+                },
+                _ => WalOp::RemoveExact {
+                    prompt: gen_text(r, 6),
                 },
             })
             .collect()

@@ -347,6 +347,9 @@ fn serve_wave(backend: &dyn EmbedBackend, wave: Vec<Rpc>) -> bool {
     shutdown
 }
 
+/// Default engine RPC deadline (`--engine-timeout-secs` overrides it).
+const DEFAULT_RPC_TIMEOUT_MS: u64 = 120_000;
+
 /// Cloneable, `Send + Sync` handle to the engine thread. (`mpsc::Sender`
 /// is `!Sync`, so it sits behind a short-lived Mutex; the lock covers only
 /// the enqueue, never the execution.)
@@ -355,6 +358,9 @@ pub struct EngineHandle {
     seq_len: usize,
     embed_dim: usize,
     backend: &'static str,
+    /// RPC deadline in milliseconds, shared across clones so a runtime
+    /// reconfiguration applies to every caller at once.
+    rpc_timeout_ms: std::sync::Arc<std::sync::atomic::AtomicU64>,
 }
 
 impl Clone for EngineHandle {
@@ -364,6 +370,7 @@ impl Clone for EngineHandle {
             seq_len: self.seq_len,
             embed_dim: self.embed_dim,
             backend: self.backend,
+            rpc_timeout_ms: self.rpc_timeout_ms.clone(),
         }
     }
 }
@@ -417,6 +424,9 @@ impl EngineHandle {
             seq_len,
             embed_dim,
             backend,
+            rpc_timeout_ms: std::sync::Arc::new(std::sync::atomic::AtomicU64::new(
+                DEFAULT_RPC_TIMEOUT_MS,
+            )),
         })
     }
 
@@ -463,6 +473,38 @@ impl EngineHandle {
         self.embed_dim
     }
 
+    /// Current RPC deadline. A hung backend holds a worker (and its
+    /// per-user FIFO slot) for at most this long before the call fails
+    /// with a typed [`EngineTimeout`] → 503.
+    pub fn rpc_timeout(&self) -> Duration {
+        Duration::from_millis(
+            self.rpc_timeout_ms
+                .load(std::sync::atomic::Ordering::Relaxed),
+        )
+    }
+
+    /// Set the RPC deadline (shared across all clones of this handle).
+    pub fn set_rpc_timeout(&self, timeout: Duration) {
+        let ms = timeout.as_millis().clamp(1, u64::MAX as u128) as u64;
+        self.rpc_timeout_ms
+            .store(ms, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Wait for an RPC reply under the configured deadline. Expiry maps
+    /// to the typed [`EngineTimeout`] marker (the pipeline downcasts it
+    /// to a 503 and feeds it to the circuit breaker); a disconnected
+    /// channel means the engine thread itself is gone.
+    fn wait_reply<T>(&self, rx: mpsc::Receiver<Result<T>>) -> Result<T> {
+        let timeout = self.rpc_timeout();
+        match rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(anyhow::Error::new(crate::error::EngineTimeout { timeout }))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(anyhow!("engine thread gone")),
+        }
+    }
+
     pub fn lm_logits(&self, variant: &str, tokens: Vec<i32>, length: i32) -> Result<Vec<f32>> {
         let (reply, rx) = mpsc::channel();
         self.tx
@@ -475,8 +517,7 @@ impl EngineHandle {
                 reply,
             })
             .map_err(|_| anyhow!("engine thread gone"))?;
-        rx.recv_timeout(Duration::from_secs(120))
-            .map_err(|_| anyhow!("engine rpc timeout"))?
+        self.wait_reply(rx)
     }
 
     /// Embed arbitrary text (tokenize + window + execute).
@@ -492,8 +533,7 @@ impl EngineHandle {
                 reply,
             })
             .map_err(|_| anyhow!("engine thread gone"))?;
-        rx.recv_timeout(Duration::from_secs(120))
-            .map_err(|_| anyhow!("engine rpc timeout"))?
+        self.wait_reply(rx)
     }
 
     /// Embed many texts in one RPC round-trip. Results are in input order;
@@ -513,8 +553,7 @@ impl EngineHandle {
             .unwrap()
             .send(Rpc::EmbedBatch { items, reply })
             .map_err(|_| anyhow!("engine thread gone"))?;
-        rx.recv_timeout(Duration::from_secs(120))
-            .map_err(|_| anyhow!("engine rpc timeout"))?
+        self.wait_reply(rx)
     }
 
     pub fn shutdown(&self) {

@@ -288,6 +288,9 @@ pub struct Conn {
     /// Requests fully served on this connection (keep-alive reuse count
     /// is `served - 1` at close).
     pub served: u64,
+    /// Accepted on the admin listener: routed through `route_admin`
+    /// inline (never dispatched) and exempt from `max_conns`.
+    pub admin: bool,
     outbox: Vec<u8>,
     written: usize,
 }
@@ -304,6 +307,7 @@ impl Conn {
             last_activity: Instant::now(),
             reading_since: None,
             served: 0,
+            admin: false,
             outbox: Vec::new(),
             written: 0,
         }

@@ -37,12 +37,31 @@
 //!   buffer, and are consumed only after the response flushes. This is
 //!   what makes keep-alive compose with the per-user FIFO serialization:
 //!   a connection can never have two requests racing in the pool.
-//! * **Admission before work.** A parsed request is shed with an
-//!   admission 429 (never dispatched, bridge untouched) when in-flight
-//!   dispatches sit at the shed watermark or the user's FIFO group is at
-//!   its bound (`FifoQueue::push_bounded`). The connection stays open:
-//!   shedding is per-request, so a well-behaved keep-alive client can
-//!   retry on the same socket.
+//! * **Admission before work.** A parsed request is shed inline (never
+//!   dispatched, bridge pipeline untouched) when in-flight dispatches
+//!   sit at the shed watermark or the user's FIFO group is at its bound
+//!   (`FifoQueue::push_bounded`) — both 429 `"reason":"admission"`;
+//!   when the user's token bucket is empty — 429 `"reason":"rate"` with
+//!   `Retry-After`; and when a POST body to the JSON API is unparseable
+//!   — 400 (`server_reject_badjson`), which previously burned a
+//!   dispatch slot and a worker round-trip before failing. The
+//!   connection stays open: shedding is per-request, so a well-behaved
+//!   keep-alive client can retry on the same socket. The shed
+//!   watermark and rate limits come from the [`ServerState`]'s
+//!   hot-reloadable ops snapshot, loaded once per request.
+//! * **Workers are panic-isolated.** Route handling runs under
+//!   `catch_unwind`: a panicking request yields a 500 for that
+//!   connection (`server_worker_panics`), the FIFO slot is acked, and
+//!   the worker keeps serving. The completions mutex is taken with
+//!   [`super::lock_unpoisoned`] on both sides, so even a panic at the
+//!   worst point (mid-push) cannot take the loop thread down with a
+//!   poisoned-lock unwrap — one bad request used to kill the server.
+//! * **The admin listener shares the loop.** With `--admin-port`, a
+//!   second listener (token [`TOKEN_ADMIN`]) is multiplexed by the same
+//!   epoll loop; its connections are marked `admin`, exempt from
+//!   `max_conns`, and answered **inline** via [`super::route_admin`] —
+//!   never dispatched — so cache inspection, breaker state, and config
+//!   hot-reload stay responsive exactly when the data port is shedding.
 //! * **The loop never blocks — and never recurses.** Accepts, reads, and
 //!   writes all run nonblocking on readiness; bridge work happens
 //!   exclusively on the dispatch pool; completions return via a
@@ -78,11 +97,16 @@ use crate::util::epoll::{Epoll, Event, WakePipe, INTEREST_READ, INTEREST_WRITE};
 use crate::util::json::Json;
 
 use super::conn::{Conn, ConnState, FillOutcome, HttpRequest, WriteOutcome};
-use super::{admission_shed_body, render_response, route_server, ServerConfig, ServerState};
+use super::{
+    admission_shed_body, lock_unpoisoned, rate_shed_reply, render_reply, render_response,
+    route_server, Reply, ServerConfig, ServerState,
+};
 
 const TOKEN_LISTENER: u64 = 0;
 const TOKEN_WAKE: u64 = 1;
-const FIRST_CONN_TOKEN: u64 = 2;
+/// The admin listener's token (`--admin-port`), when configured.
+const TOKEN_ADMIN: u64 = 2;
+const FIRST_CONN_TOKEN: u64 = 3;
 /// epoll_wait timeout — the sweep tick for idle/deadline reaping.
 const TICK_MS: i32 = 100;
 
@@ -119,6 +143,7 @@ impl EventedHandle {
 pub(super) fn start(
     bridge: Arc<Bridge>,
     listener: TcpListener,
+    admin_listener: Option<TcpListener>,
     state: Arc<ServerState>,
     config: ServerConfig,
 ) -> Result<EventedHandle> {
@@ -127,6 +152,10 @@ pub(super) fn start(
     epoll.add(listener.as_raw_fd(), INTEREST_READ, TOKEN_LISTENER)?;
     let wake = Arc::new(WakePipe::new()?);
     epoll.add(wake.read_fd(), INTEREST_READ, TOKEN_WAKE)?;
+    if let Some(al) = &admin_listener {
+        al.set_nonblocking(true)?;
+        epoll.add(al.as_raw_fd(), INTEREST_READ, TOKEN_ADMIN)?;
+    }
 
     let stop = Arc::new(AtomicBool::new(false));
     let queue: Arc<FifoQueue<Job>> = Arc::new(FifoQueue::new());
@@ -137,6 +166,11 @@ pub(super) fn start(
     // `pop` honors the per-user exclusive-delivery guarantee; `ack`
     // after publishing the completion keeps a user's next request
     // blocked until their previous response is on its way back.
+    //
+    // Route handling is panic-isolated: an unwinding handler turns into
+    // a 500 for that connection, and ack/completion/wake still run —
+    // the panic can neither wedge the user's FIFO group nor skip the
+    // loop's wakeup.
     for _ in 0..config.workers.max(1) {
         let queue = queue.clone();
         let completions = completions.clone();
@@ -146,10 +180,19 @@ pub(super) fn start(
         join.push(std::thread::spawn(move || {
             while let Some(msg) = queue.pop() {
                 let job = msg.payload;
-                let (status, body) = route_server(&bridge, &state, &job.req);
+                let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    route_server(&bridge, &state, &job.req)
+                }))
+                .unwrap_or_else(|_| {
+                    bridge.telemetry().counters.incr("server_worker_panics");
+                    Reply::new(
+                        500,
+                        r#"{"error":"internal error: request handler panicked"}"#,
+                    )
+                });
                 let close_after = !job.req.keep_alive;
-                let bytes = render_response(status, &body, !close_after);
-                completions.lock().unwrap().push(Completion {
+                let bytes = render_reply(&reply, !close_after);
+                lock_unpoisoned(&completions).push(Completion {
                     token: job.token,
                     bytes,
                     close_after,
@@ -169,6 +212,8 @@ pub(super) fn start(
             let mut lp = Loop {
                 epoll,
                 listener,
+                admin_listener,
+                bridge,
                 wake,
                 queue,
                 completions,
@@ -199,6 +244,8 @@ enum AfterWrite {
 struct Loop {
     epoll: Epoll,
     listener: TcpListener,
+    admin_listener: Option<TcpListener>,
+    bridge: Arc<Bridge>,
     wake: Arc<WakePipe>,
     queue: Arc<FifoQueue<Job>>,
     completions: Arc<Mutex<Vec<Completion>>>,
@@ -224,7 +271,8 @@ impl Loop {
             }
             for &ev in &events {
                 match ev.token {
-                    TOKEN_LISTENER => self.accept_burst(),
+                    TOKEN_LISTENER => self.accept_burst(false),
+                    TOKEN_ADMIN => self.accept_burst(true),
                     TOKEN_WAKE => self.wake.drain(),
                     token => self.conn_event(token, ev),
                 }
@@ -250,6 +298,9 @@ impl Loop {
         self.draining = true;
         self.state.set_draining();
         let _ = self.epoll.delete(self.listener.as_raw_fd());
+        if let Some(al) = &self.admin_listener {
+            let _ = self.epoll.delete(al.as_raw_fd());
+        }
         self.queue.close();
         let idle: Vec<u64> = self
             .conns
@@ -262,12 +313,23 @@ impl Loop {
         }
     }
 
-    fn accept_burst(&mut self) {
+    fn accept_burst(&mut self, admin: bool) {
         loop {
-            match self.listener.accept() {
+            let accepted = if admin {
+                match &self.admin_listener {
+                    Some(l) => l.accept(),
+                    None => return,
+                }
+            } else {
+                self.listener.accept()
+            };
+            match accepted {
                 Ok((stream, _)) => {
                     self.tele.counters.incr("server_accepted");
-                    if self.conns.len() >= self.config.max_conns {
+                    // Admin connections bypass `max_conns`: the point of
+                    // the separate port is staying reachable exactly when
+                    // the data plane is at its connection ceiling.
+                    if !admin && self.conns.len() >= self.config.max_conns {
                         // Best-effort 429 so the client learns why; the
                         // socket is young, so the first write virtually
                         // always fits the send buffer.
@@ -301,7 +363,9 @@ impl Loop {
                     {
                         continue;
                     }
-                    self.conns.insert(token, Conn::new(stream));
+                    let mut conn = Conn::new(stream);
+                    conn.admin = admin;
+                    self.conns.insert(token, conn);
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
@@ -375,7 +439,7 @@ impl Loop {
                     // answer and always close.
                     self.tele.counters.incr("server_parse_rejects");
                     let body = Json::obj(vec![("error", Json::str(pe.to_string()))]).to_string();
-                    self.write_inline(token, pe.http_status(), &body, true);
+                    self.write_inline(token, Reply::new(pe.http_status(), body), true);
                     return;
                 }
             }
@@ -383,35 +447,71 @@ impl Loop {
     }
 
     /// Admission-check one parsed request: queue it (entering
-    /// `Dispatched`) or shed it with an inline 429. Returns `Recycled`
-    /// only when the connection is back in `Reading` and the caller may
-    /// continue with the next pipelined request.
+    /// `Dispatched`) or shed it with an inline 429/400. Returns
+    /// `Recycled` only when the connection is back in `Reading` and the
+    /// caller may continue with the next pipelined request.
     fn dispatch(&mut self, token: u64, req: HttpRequest) -> AfterWrite {
+        let keep_alive = req.keep_alive;
+        // Admin connections are answered inline — never dispatched, never
+        // admission-checked — so the control surface stays responsive
+        // exactly when the data plane is shedding. The handlers are cheap
+        // reads and config swaps; the one heavy case (DELETE clearing a
+        // large journaled cache) briefly occupies the loop, an accepted
+        // cost for keeping the surface worker-independent.
+        if self.conns.get(&token).is_some_and(|c| c.admin) {
+            let reply = super::route_admin(&self.bridge, &self.state, &req);
+            return self.write_inline(token, reply, !keep_alive);
+        }
         // Probes are answered inline by the loop — never dispatched, so
         // they stay accurate exactly when it matters: under overload
         // (when the pool would shed them) and during drain.
         if req.method == "GET" && req.path == "/health" {
-            return self.write_inline(token, 200, r#"{"status":"ok"}"#, !req.keep_alive);
+            return self.write_inline(token, Reply::new(200, r#"{"status":"ok"}"#), !keep_alive);
         }
         if req.method == "GET" && req.path == "/ready" {
-            let (status, body) = super::ready_response(&self.state);
-            return self.write_inline(token, status, &body, !req.keep_alive);
+            let reply = super::ready_response(&self.state);
+            return self.write_inline(token, reply, !keep_alive);
         }
-        if self.draining || !self.state.admits() {
+        // One coherent ops snapshot per request: the watermark, rate, and
+        // burst below all come from the same hot-reload generation.
+        let ops = self.state.ops_config();
+        if self.draining || !self.state.admits_under(&ops) {
             self.tele.counters.incr("server_shed_admission");
-            let close = self.draining || !req.keep_alive;
-            return self.write_inline(token, 429, &admission_shed_body(), close);
+            let close = self.draining || !keep_alive;
+            return self.write_inline(token, Reply::new(429, admission_shed_body()), close);
+        }
+        // Parse the body once: FIFO grouping, rate limiting, and the
+        // bad-JSON reject all read it. A POST to the JSON API whose body
+        // does not parse is rejected here — it used to burn a dispatch
+        // slot and a worker round-trip before failing with the same 400.
+        let parsed = Json::parse(&req.body).ok();
+        if parsed.is_none()
+            && req.method == "POST"
+            && matches!(req.path.as_str(), "/v1/request" | "/v1/regenerate")
+        {
+            self.tele.counters.incr("server_reject_badjson");
+            return self.write_inline(
+                token,
+                Reply::new(400, r#"{"error":"request body is not valid JSON"}"#),
+                !keep_alive,
+            );
+        }
+        let user = parsed.as_ref().and_then(|j| j.str_of("user").ok());
+        // The token bucket gates ahead of the quota stage: a flooding
+        // user is turned away before consuming a dispatch slot.
+        if let Some(u) = &user {
+            if let Err(retry_secs) = self.state.rate_acquire(&ops, u) {
+                self.tele.counters.incr("server_shed_rate");
+                return self.write_inline(token, rate_shed_reply(u, retry_secs), !keep_alive);
+            }
         }
         // FIFO group = user when the body names one (per-user
         // serialization), else connection-unique (no ordering need). The
         // "d:" prefix keeps client-chosen names out of the internal
         // namespace.
-        let group = Json::parse(&req.body)
-            .ok()
-            .and_then(|j| j.str_of("user").ok())
+        let group = user
             .map(|user| format!("d:u:{user}"))
             .unwrap_or_else(|| format!("d:a:{token}"));
-        let keep_alive = req.keep_alive;
         match self
             .queue
             .push_bounded(&group, Job { token, req }, self.config.per_user_queue_cap)
@@ -428,7 +528,7 @@ impl Loop {
             Err(_) => {
                 // This user's queue is full — per-user backpressure.
                 self.tele.counters.incr("server_shed_admission");
-                self.write_inline(token, 429, &admission_shed_body(), !keep_alive)
+                self.write_inline(token, Reply::new(429, admission_shed_body()), !keep_alive)
             }
         }
     }
@@ -436,18 +536,12 @@ impl Loop {
     /// Flush a loop-generated response on a connection currently in
     /// `Reading` (interest already EPOLLIN, so a recycled connection
     /// needs no re-registration; a parked one switches to EPOLLOUT).
-    fn write_inline(
-        &mut self,
-        token: u64,
-        status: u16,
-        body: &str,
-        close_after: bool,
-    ) -> AfterWrite {
+    fn write_inline(&mut self, token: u64, reply: Reply, close_after: bool) -> AfterWrite {
         let Some(conn) = self.conns.get_mut(&token) else {
             return AfterWrite::Settled;
         };
         let keep = !close_after;
-        conn.start_write(render_response(status, body, keep), keep);
+        conn.start_write(render_reply(&reply, keep), keep);
         match conn.flush_write() {
             WriteOutcome::Done => self.after_response(token),
             WriteOutcome::Blocked => {
@@ -519,7 +613,7 @@ impl Loop {
     /// Hand worker completions to their connections.
     fn drain_completions(&mut self) {
         let batch: Vec<Completion> = {
-            let mut guard = self.completions.lock().unwrap();
+            let mut guard = lock_unpoisoned(&self.completions);
             std::mem::take(&mut *guard)
         };
         for c in batch {

@@ -25,18 +25,27 @@
 //! from accept order — same as concurrent clients racing the paper's SQS
 //! enqueue.
 //!
-//! **Admission control vs quota 429s.** The server sheds with HTTP 429
-//! in three places *before* any bridge work happens: at accept when
-//! [`ServerConfig::max_conns`] live connections exist, at dispatch when
-//! in-flight requests reach [`ServerConfig::shed_watermark`], and at
-//! enqueue when one user's queue is at
-//! [`ServerConfig::per_user_queue_cap`]. These shed bodies carry
-//! `"reason":"admission"` — distinct from the per-user *quota* 429
-//! ([`crate::error::BridgeError::QuotaExceeded`]) raised inside the
-//! pipeline, whose body names the user. Shed counts surface in
-//! `/v1/metrics` (`server_shed_*` counters).
+//! **The three 429s and the two 503s.** The server sheds with HTTP 429
+//! in three distinguishable ways, each with a machine-readable
+//! `"reason"` in the body:
 //!
-//! Routes:
+//! * `"admission"` — server-wide overload, *before* any bridge work:
+//!   at accept when [`ServerConfig::max_conns`] live connections exist,
+//!   at dispatch when in-flight requests reach the shed watermark, and
+//!   at enqueue when one user's queue is at
+//!   [`ServerConfig::per_user_queue_cap`].
+//! * `"rate"` — this user's token bucket is empty
+//!   ([`crate::ops::RateLimiter`]; `--rate-per-sec`/`--rate-burst`),
+//!   checked in the loop ahead of the quota gate, with `Retry-After`.
+//! * `"quota"` — the pipeline's per-user daily cap
+//!   ([`crate::error::BridgeError::QuotaExceeded`]); body names the user.
+//!
+//! Backend sickness sheds 503 the same way: `"breaker"` (the model's
+//! circuit breaker is open; `Retry-After` = remaining cooldown) and
+//! `"timeout"` (one engine RPC exceeded `--engine-timeout-secs`). Shed
+//! counts surface in `/v1/metrics` (`server_shed_*`, `breaker_*`).
+//!
+//! Routes (data port):
 //! * `POST /v1/request`     — body: [`crate::api::Request`] JSON.
 //! * `POST /v1/regenerate`  — body: `{"request_id": "<hex>", "service_type": {...}?}`.
 //! * `GET  /v1/metrics`     — telemetry snapshot.
@@ -45,6 +54,19 @@
 //!   constructed [`Bridge`] — `open_with` replays WAL + snapshot before
 //!   returning), not draining, and in-flight load below the shed
 //!   watermark; 503 otherwise.
+//!
+//! Routes (admin port, `--admin-port`; see [`route_admin`]): `GET
+//! /admin/cache` (index tier/rows/bytes + hit/miss counters), `DELETE
+//! /admin/cache?key=` / `DELETE /admin/cache` (invalidate one exact
+//! entry / clear everything — both journaled through the WAL), `GET
+//! /admin/breaker`, `POST /admin/config` (staged hot-reload), plus
+//! `/health` and `/v1/metrics`. On the evented path the admin listener
+//! is multiplexed by the same epoll loop and answered inline, so it
+//! stays responsive while the data port sheds; admin connections are
+//! exempt from `max_conns`. Hot-reload is validate-then-swap: the new
+//! [`crate::ops::OpsConfig`] is built and checked completely, then
+//! published as one `Arc` swap — a request loads the snapshot once, so
+//! it observes either the old config or the new one, never a mix.
 //!
 //! [`Server::stop`] is graceful on both paths: stop accepting, drain
 //! in-flight connections (bounded by [`ServerConfig::drain_deadline`] on
@@ -58,7 +80,7 @@ mod threaded;
 use std::io::Read;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError, RwLock};
 use std::time::Duration;
 
 use anyhow::{bail, Result};
@@ -71,7 +93,17 @@ pub use conn::{
 use crate::api::{Request, ServiceType};
 use crate::coordinator::Bridge;
 use crate::error::BridgeError;
+use crate::ops::{OpsConfig, RateLimiter};
 use crate::util::json::Json;
+
+/// Lock a mutex, recovering from poisoning. A worker that panicked while
+/// holding the lock completed (or abandoned) a single queue push — the
+/// data is a `Vec` of finished completions, valid either way — so the
+/// loop must keep serving rather than propagate the panic and kill the
+/// server (the PR 8 headline bug).
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Which transport path serves connections.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -106,6 +138,13 @@ pub struct ServerConfig {
     pub drain_deadline: Duration,
     /// Transport selection.
     pub backend: ServerBackend,
+    /// Per-user token-bucket refill rate (`0.0` disables rate limiting).
+    pub rate_per_sec: f64,
+    /// Per-user token-bucket burst capacity.
+    pub rate_burst: f64,
+    /// Bind address for the admin listener (`--admin-port`); `None`
+    /// disables the admin surface.
+    pub admin_bind: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -119,26 +158,63 @@ impl Default for ServerConfig {
             request_deadline: Duration::from_secs(10),
             drain_deadline: Duration::from_secs(5),
             backend: ServerBackend::Auto,
+            rate_per_sec: 0.0,
+            rate_burst: 16.0,
+            admin_bind: None,
         }
     }
 }
 
 /// Load/lifecycle state shared between the transport path and the
 /// `/ready` endpoint: the in-flight dispatched-request count (the
-/// admission watermark input) and the draining latch.
+/// admission watermark input), the draining latch, the hot-reloadable
+/// [`OpsConfig`] snapshot, and the per-user rate limiter.
 pub struct ServerState {
     draining: AtomicBool,
     inflight: AtomicUsize,
-    shed_watermark: usize,
+    /// Current ops tunables. Swapped whole by `POST /admin/config`;
+    /// request paths load the `Arc` once and read every field from that
+    /// snapshot, so no request observes a half-applied config.
+    ops: RwLock<Arc<OpsConfig>>,
+    rate: RateLimiter,
 }
 
 impl ServerState {
     pub fn new(shed_watermark: usize) -> ServerState {
+        ServerState::with_ops(OpsConfig {
+            shed_watermark: shed_watermark.max(1),
+            ..OpsConfig::default()
+        })
+    }
+
+    pub fn with_ops(ops: OpsConfig) -> ServerState {
         ServerState {
             draining: AtomicBool::new(false),
             inflight: AtomicUsize::new(0),
-            shed_watermark: shed_watermark.max(1),
+            ops: RwLock::new(Arc::new(ops)),
+            rate: RateLimiter::new(),
         }
+    }
+
+    fn from_config(config: &ServerConfig) -> ServerState {
+        ServerState::with_ops(OpsConfig {
+            shed_watermark: config.shed_watermark.max(1),
+            rate_per_sec: config.rate_per_sec,
+            rate_burst: config.rate_burst,
+        })
+    }
+
+    /// The current ops-config snapshot (one `Arc` clone).
+    pub fn ops_config(&self) -> Arc<OpsConfig> {
+        self.ops
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone()
+    }
+
+    /// Publish a new, fully-validated ops config (the hot-reload swap).
+    pub fn set_ops_config(&self, ops: OpsConfig) {
+        *self.ops.write().unwrap_or_else(PoisonError::into_inner) = Arc::new(ops);
     }
 
     /// Requests dispatched to the worker pool and not yet responded.
@@ -150,9 +226,20 @@ impl ServerState {
         self.draining.load(Ordering::Relaxed)
     }
 
+    /// Below the shed watermark of an already-loaded config snapshot.
+    pub fn admits_under(&self, ops: &OpsConfig) -> bool {
+        self.inflight() < ops.shed_watermark
+    }
+
     /// Below the shed watermark — new dispatches are admitted.
     pub fn admits(&self) -> bool {
-        self.inflight() < self.shed_watermark
+        self.admits_under(&self.ops_config())
+    }
+
+    /// Spend one rate-limit token for `user` under a loaded config
+    /// snapshot; `Err(secs)` is the `Retry-After` hint.
+    pub fn rate_acquire(&self, ops: &OpsConfig, user: &str) -> std::result::Result<(), u64> {
+        self.rate.try_acquire(ops.rate_per_sec, ops.rate_burst, user)
     }
 
     /// Ready to take traffic: not draining and below the watermark.
@@ -226,18 +313,53 @@ fn reason_phrase(status: u16) -> &'static str {
     }
 }
 
-/// Serialize a response. `keep_alive` controls the `Connection` header —
+/// One routed response: status, JSON body, and an optional `Retry-After`
+/// hint (breaker 503s and rate-limit 429s carry one).
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub status: u16,
+    pub body: String,
+    pub retry_after: Option<u64>,
+}
+
+impl Reply {
+    pub fn new(status: u16, body: impl Into<String>) -> Reply {
+        Reply {
+            status,
+            body: body.into(),
+            retry_after: None,
+        }
+    }
+
+    pub fn with_retry_after(mut self, secs: u64) -> Reply {
+        self.retry_after = Some(secs);
+        self
+    }
+}
+
+/// Serialize a [`Reply`]. `keep_alive` controls the `Connection` header —
 /// the evented path holds connections open between requests, the
 /// threaded path always closes.
-pub fn render_response(status: u16, body: &str, keep_alive: bool) -> Vec<u8> {
+pub fn render_reply(reply: &Reply, keep_alive: bool) -> Vec<u8> {
+    let retry = match reply.retry_after {
+        Some(secs) => format!("Retry-After: {secs}\r\n"),
+        None => String::new(),
+    };
     format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: {}\r\n\r\n{body}",
-        reason_phrase(status),
-        body.len(),
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n{retry}Connection: {}\r\n\r\n{}",
+        reply.status,
+        reason_phrase(reply.status),
+        reply.body.len(),
         if keep_alive { "keep-alive" } else { "close" },
+        reply.body,
     )
     .into_bytes()
+}
+
+/// [`render_reply`] for header-less callers (parse errors, probes).
+pub fn render_response(status: u16, body: &str, keep_alive: bool) -> Vec<u8> {
+    render_reply(&Reply::new(status, body), keep_alive)
 }
 
 /// Write a `Connection: close` response on a blocking socket.
@@ -247,34 +369,63 @@ pub fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result
     Ok(())
 }
 
+/// [`write_response`] for a full [`Reply`] (carries `Retry-After`).
+pub fn write_reply(stream: &mut TcpStream, reply: &Reply) -> Result<()> {
+    use std::io::Write;
+    stream.write_all(&render_reply(reply, false))?;
+    Ok(())
+}
+
 /// The admission-control shed body; `"reason":"admission"` distinguishes
-/// it from the pipeline's per-user quota 429.
+/// it from the rate-limit and per-user quota 429s.
 pub(crate) fn admission_shed_body() -> String {
     r#"{"error":"server overloaded; request shed by admission control","reason":"admission"}"#
         .to_string()
 }
 
-fn err_body(e: &BridgeError) -> String {
-    Json::obj(vec![("error", Json::str(e.to_string()))]).to_string()
+/// The rate-limit shed reply: 429 + `"reason":"rate"` + `Retry-After`.
+pub(crate) fn rate_shed_reply(user: &str, retry_secs: u64) -> Reply {
+    let body = Json::obj(vec![
+        (
+            "error",
+            Json::str(format!("rate limit exceeded for user {user}")),
+        ),
+        ("reason", Json::str("rate")),
+        ("retry_after_secs", Json::num(retry_secs as f64)),
+    ])
+    .to_string();
+    Reply::new(429, body).with_retry_after(retry_secs)
 }
 
-fn respond(result: Result<String, BridgeError>) -> (u16, String) {
+fn err_body(e: &BridgeError) -> String {
+    let mut fields = vec![("error", Json::str(e.to_string()))];
+    if let Some(reason) = e.reason() {
+        fields.push(("reason", Json::str(reason)));
+    }
+    Json::obj(fields).to_string()
+}
+
+fn respond(result: Result<String, BridgeError>) -> Reply {
     match result {
-        Ok(body) => (200, body),
-        Err(e) => (e.http_status(), err_body(&e)),
+        Ok(body) => Reply::new(200, body),
+        Err(e) => {
+            let mut reply = Reply::new(e.http_status(), err_body(&e));
+            reply.retry_after = e.retry_after_secs();
+            reply
+        }
     }
 }
 
 /// The `/ready` probe: 200 only when restore is complete (always true
 /// once a [`Bridge`] exists), the server is not draining, and in-flight
 /// load sits below the shed watermark.
-fn ready_response(state: &ServerState) -> (u16, String) {
+fn ready_response(state: &ServerState) -> Reply {
     if state.is_draining() {
-        return (503, r#"{"status":"draining"}"#.to_string());
+        return Reply::new(503, r#"{"status":"draining"}"#);
     }
     let inflight = state.inflight();
     if !state.admits() {
-        return (
+        return Reply::new(
             503,
             Json::obj(vec![
                 ("status", Json::str("overloaded")),
@@ -283,7 +434,7 @@ fn ready_response(state: &ServerState) -> (u16, String) {
             .to_string(),
         );
     }
-    (
+    Reply::new(
         200,
         Json::obj(vec![
             ("status", Json::str("ready")),
@@ -297,23 +448,271 @@ fn ready_response(state: &ServerState) -> (u16, String) {
 /// Dispatch one parsed request against the bridge (pure, testable).
 /// Status codes come from [`BridgeError::http_status`] — no string
 /// matching on error messages.
-pub fn route(bridge: &Bridge, req: &HttpRequest) -> (u16, String) {
+pub fn route(bridge: &Bridge, req: &HttpRequest) -> Reply {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/health") => (200, r#"{"status":"ok"}"#.to_string()),
-        ("GET", "/v1/metrics") => (200, bridge.telemetry().to_json().to_string()),
+        ("GET", "/health") => Reply::new(200, r#"{"status":"ok"}"#),
+        ("GET", "/v1/metrics") => Reply::new(200, bridge.telemetry().to_json().to_string()),
         ("POST", "/v1/request") => respond(handle_request(bridge, &req.body)),
         ("POST", "/v1/regenerate") => respond(handle_regenerate(bridge, &req.body)),
-        _ => (404, r#"{"error":"not found"}"#.to_string()),
+        // Failpoint for the panic-isolation regression tests: a worker
+        // that unwinds here must 500 this connection and keep serving.
+        ("POST", "/v1/test/panic") if crate::util::failpoints_enabled() => {
+            panic!("failpoint: injected handler panic")
+        }
+        _ => Reply::new(404, r#"{"error":"not found"}"#),
     }
 }
 
 /// [`route`] plus the server-state routes (`/ready`) — what both
 /// transport paths actually dispatch.
-pub fn route_server(bridge: &Bridge, state: &ServerState, req: &HttpRequest) -> (u16, String) {
+pub fn route_server(bridge: &Bridge, state: &ServerState, req: &HttpRequest) -> Reply {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/ready") => ready_response(state),
         _ => route(bridge, req),
     }
+}
+
+/// Split a request-line path into `(path, query)` — [`HttpRequest::path`]
+/// carries the raw request-line token, query string included.
+fn split_query(raw: &str) -> (&str, Option<&str>) {
+    match raw.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (raw, None),
+    }
+}
+
+/// Extract one `key=value` pair from a query string, percent-decoded.
+fn query_param(query: Option<&str>, name: &str) -> Option<String> {
+    query?
+        .split('&')
+        .filter_map(|pair| pair.split_once('='))
+        .find(|(k, _)| *k == name)
+        .map(|(_, v)| percent_decode(v))
+}
+
+/// Minimal `%XX` + `+` decoding for query-string values.
+fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' if i + 2 < bytes.len() => {
+                let hex = std::str::from_utf8(&bytes[i + 1..i + 3])
+                    .ok()
+                    .and_then(|h| u8::from_str_radix(h, 16).ok());
+                match hex {
+                    Some(b) => {
+                        out.push(b);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Dispatch one request on the **admin** listener (`--admin-port`).
+/// Never routed to the worker pool: the evented loop answers admin
+/// requests inline, so the surface stays responsive while the data port
+/// sheds under overload. (Consequence: the rare `DELETE /admin/cache`
+/// full clear briefly occupies the loop if it races a WAL compaction's
+/// exclusive gate; accepted for an admin-initiated, admin-rate action.)
+pub fn route_admin(bridge: &Bridge, state: &ServerState, req: &HttpRequest) -> Reply {
+    let (path, query) = split_query(&req.path);
+    match (req.method.as_str(), path) {
+        ("GET", "/health") => Reply::new(200, r#"{"status":"ok"}"#),
+        ("GET", "/ready") => ready_response(state),
+        ("GET", "/v1/metrics") => Reply::new(200, bridge.telemetry().to_json().to_string()),
+        ("GET", "/admin/cache") => admin_cache_stats(bridge),
+        ("DELETE", "/admin/cache") => admin_cache_invalidate(bridge, query),
+        ("GET", "/admin/breaker") => admin_breaker_snapshot(bridge),
+        ("POST", "/admin/config") => admin_config_reload(bridge, state, &req.body),
+        _ => Reply::new(404, r#"{"error":"not found"}"#),
+    }
+}
+
+/// `GET /admin/cache`: index tier, rows, vector bytes, entry counts, and
+/// the hit/miss counters — proxima's cache-inspection idiom.
+fn admin_cache_stats(bridge: &Bridge) -> Reply {
+    let cache = bridge.cache();
+    let stats = cache.index_stats();
+    let counters = &bridge.telemetry().counters;
+    let body = Json::obj(vec![
+        ("tier", Json::str(stats.tier)),
+        ("rows", Json::num(stats.rows as f64)),
+        ("trained", Json::Bool(stats.trained)),
+        ("nlist", Json::num(stats.nlist as f64)),
+        ("vector_bytes", Json::num(stats.vector_bytes as f64)),
+        ("objects", Json::num(cache.len_objects() as f64)),
+        ("keys", Json::num(cache.len_keys() as f64)),
+        ("exact", Json::num(cache.len_exact() as f64)),
+        (
+            "exact_hits",
+            Json::num(counters.get("cache_exact_hits") as f64),
+        ),
+        (
+            "semantic_hits",
+            Json::num(counters.get("cache_semantic_hits") as f64),
+        ),
+        ("misses", Json::num(counters.get("cache_misses") as f64)),
+    ])
+    .to_string();
+    Reply::new(200, body)
+}
+
+/// `DELETE /admin/cache?key=<prompt>` invalidates one exact entry;
+/// `DELETE /admin/cache` clears everything. Both go through the cache's
+/// journaled mutation paths, so with a data dir configured the
+/// invalidation is WAL-durable and survives a restart.
+fn admin_cache_invalidate(bridge: &Bridge, query: Option<&str>) -> Reply {
+    match query_param(query, "key") {
+        Some(key) if !key.is_empty() => {
+            let removed = bridge.cache().remove_exact(&key);
+            bridge
+                .telemetry()
+                .counters
+                .incr("admin_cache_invalidations");
+            Reply::new(
+                200,
+                Json::obj(vec![("removed", Json::Bool(removed))]).to_string(),
+            )
+        }
+        Some(_) => Reply::new(400, r#"{"error":"empty key"}"#),
+        None => {
+            bridge.cache().clear();
+            bridge.telemetry().counters.incr("admin_cache_clears");
+            Reply::new(200, r#"{"cleared":true}"#)
+        }
+    }
+}
+
+/// `GET /admin/breaker`: config plus every model's breaker line.
+fn admin_breaker_snapshot(bridge: &Bridge) -> Reply {
+    let breaker = bridge.breaker();
+    let config = breaker.config();
+    let models: Vec<(String, Json)> = breaker
+        .snapshot()
+        .into_iter()
+        .map(|line| {
+            (
+                line.model,
+                Json::obj(vec![
+                    ("state", Json::str(line.state)),
+                    (
+                        "consecutive_failures",
+                        Json::num(line.consecutive_failures as f64),
+                    ),
+                    ("trips", Json::num(line.trips as f64)),
+                    (
+                        "retry_after_secs",
+                        Json::num(line.retry_after_secs as f64),
+                    ),
+                ]),
+            )
+        })
+        .collect();
+    let models_obj = Json::obj(
+        models
+            .iter()
+            .map(|(name, j)| (name.as_str(), j.clone()))
+            .collect(),
+    );
+    let body = Json::obj(vec![
+        ("threshold", Json::num(config.threshold as f64)),
+        (
+            "cooldown_secs",
+            Json::num(config.cooldown.as_secs_f64()),
+        ),
+        ("models", models_obj),
+    ])
+    .to_string();
+    Reply::new(200, body)
+}
+
+/// `POST /admin/config`: staged hot-reload of the ops tunables. The new
+/// config is built from the current snapshot plus the request's fields
+/// and validated completely; only then is it published — one `Arc` swap
+/// for the server knobs, one call for the breaker — so no request
+/// observes a half-applied config (validate → swap, the Chameleon
+/// happens-before framing). An unknown field or invalid value rejects
+/// the whole request with 400 and changes nothing.
+fn admin_config_reload(bridge: &Bridge, state: &ServerState, body: &str) -> Reply {
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return Reply::new(400, err_body(&BridgeError::bad_request(format!("{e:#}")))),
+    };
+    let fields = match &j {
+        Json::Obj(map) => map,
+        _ => return Reply::new(400, r#"{"error":"config body must be an object"}"#),
+    };
+
+    // Stage: copy current configs, overlay request fields, validate.
+    let mut ops = (*state.ops_config()).clone();
+    let mut breaker = bridge.breaker().config();
+    for (key, value) in fields {
+        let bad = |msg: &str| Reply::new(400, err_body(&BridgeError::bad_request(msg)));
+        match key.as_str() {
+            "shed_watermark" => match value.as_usize() {
+                Some(v) if v >= 1 => ops.shed_watermark = v,
+                _ => return bad("shed_watermark must be an integer >= 1"),
+            },
+            "rate_per_sec" => match value.as_f64() {
+                Some(v) if v >= 0.0 => ops.rate_per_sec = v,
+                _ => return bad("rate_per_sec must be a number >= 0"),
+            },
+            "rate_burst" => match value.as_f64() {
+                Some(v) if v >= 1.0 => ops.rate_burst = v,
+                _ => return bad("rate_burst must be a number >= 1"),
+            },
+            "breaker_threshold" => match value.as_usize() {
+                Some(v) if v >= 1 => breaker.threshold = v as u32,
+                _ => return bad("breaker_threshold must be an integer >= 1"),
+            },
+            "breaker_cooldown_secs" => match value.as_f64() {
+                Some(v) if v > 0.0 => {
+                    breaker.cooldown = Duration::from_secs_f64(v);
+                }
+                _ => return bad("breaker_cooldown_secs must be a number > 0"),
+            },
+            other => {
+                return bad(&format!("unknown config field '{other}'"));
+            }
+        }
+    }
+
+    // Swap: everything validated; publish atomically per subsystem.
+    bridge.breaker().set_config(breaker);
+    state.set_ops_config(ops.clone());
+    bridge.telemetry().counters.incr("admin_config_reloads");
+    Reply::new(
+        200,
+        Json::obj(vec![
+            ("applied", Json::Bool(true)),
+            ("shed_watermark", Json::num(ops.shed_watermark as f64)),
+            ("rate_per_sec", Json::num(ops.rate_per_sec)),
+            ("rate_burst", Json::num(ops.rate_burst)),
+            ("breaker_threshold", Json::num(breaker.threshold as f64)),
+            (
+                "breaker_cooldown_secs",
+                Json::num(breaker.cooldown.as_secs_f64()),
+            ),
+        ])
+        .to_string(),
+    )
 }
 
 fn handle_request(bridge: &Bridge, body: &str) -> Result<String, BridgeError> {
@@ -400,6 +799,8 @@ enum Inner {
 /// accepting, drain, flush the WAL.
 pub struct Server {
     pub addr: std::net::SocketAddr,
+    /// Where the admin surface listens, when `admin_bind` was configured.
+    pub admin_addr: Option<std::net::SocketAddr>,
     bridge: Arc<Bridge>,
     state: Arc<ServerState>,
     inner: Inner,
@@ -423,7 +824,15 @@ impl Server {
     pub fn start_with(bridge: Arc<Bridge>, bind: &str, config: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(bind)?;
         let addr = listener.local_addr()?;
-        let state = Arc::new(ServerState::new(config.shed_watermark));
+        let admin_listener = match &config.admin_bind {
+            Some(bind) => Some(TcpListener::bind(bind)?),
+            None => None,
+        };
+        let admin_addr = match &admin_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
+        let state = Arc::new(ServerState::from_config(&config));
         let evented = match config.backend {
             ServerBackend::Auto => cfg!(target_os = "linux"),
             ServerBackend::Evented => true,
@@ -435,6 +844,7 @@ impl Server {
                 Inner::Evented(evloop::start(
                     bridge.clone(),
                     listener,
+                    admin_listener,
                     state.clone(),
                     config,
                 )?)
@@ -447,6 +857,7 @@ impl Server {
             Inner::Threaded(threaded::start(
                 bridge.clone(),
                 listener,
+                admin_listener,
                 state.clone(),
                 config,
             )?)
@@ -455,6 +866,7 @@ impl Server {
         let janitor = Some(spawn_janitor(bridge.clone(), janitor_stop.clone()));
         Ok(Server {
             addr,
+            admin_addr,
             bridge,
             state,
             inner,
@@ -544,41 +956,129 @@ mod tests {
     }
 
     #[test]
+    fn render_reply_emits_retry_after() {
+        let plain = String::from_utf8(render_reply(&Reply::new(200, "{}"), true)).unwrap();
+        assert!(!plain.contains("Retry-After"));
+        let shed = String::from_utf8(render_reply(
+            &Reply::new(503, "{}").with_retry_after(7),
+            false,
+        ))
+        .unwrap();
+        assert!(shed.contains("Retry-After: 7\r\n"));
+        assert!(shed.contains("Content-Length: 2"));
+        // Header block still well-formed: one blank line before the body.
+        assert!(shed.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
     fn error_statuses_are_typed() {
         assert_eq!(
-            respond(Err(BridgeError::QuotaExceeded { user: "u".into() })).0,
+            respond(Err(BridgeError::QuotaExceeded { user: "u".into() })).status,
             429
         );
-        assert_eq!(respond(Err(BridgeError::UnknownRequest(1))).0, 404);
-        assert_eq!(respond(Err(BridgeError::bad_request("x"))).0, 400);
+        assert_eq!(respond(Err(BridgeError::UnknownRequest(1))).status, 404);
+        assert_eq!(respond(Err(BridgeError::bad_request("x"))).status, 400);
         assert_eq!(
-            respond(Err(BridgeError::Internal(anyhow::anyhow!("x")))).0,
+            respond(Err(BridgeError::Internal(anyhow::anyhow!("x")))).status,
             500
         );
         // Error bodies carry the message, not a guessed substring.
-        let (_, body) = respond(Err(BridgeError::QuotaExceeded { user: "s1".into() }));
-        assert!(body.contains("quota exceeded for user s1"));
+        let reply = respond(Err(BridgeError::QuotaExceeded { user: "s1".into() }));
+        assert!(reply.body.contains("quota exceeded for user s1"));
+        assert!(reply.body.contains(r#""reason":"quota""#));
+        // Breaker 503s carry reason + Retry-After.
+        let open = respond(Err(BridgeError::BreakerOpen {
+            model: "gpt-4o-mini".into(),
+            retry_after_secs: 9,
+        }));
+        assert_eq!(open.status, 503);
+        assert_eq!(open.retry_after, Some(9));
+        assert!(open.body.contains(r#""reason":"breaker""#));
+    }
+
+    #[test]
+    fn shed_reasons_are_distinct() {
+        assert!(admission_shed_body().contains(r#""reason":"admission""#));
+        let rate = rate_shed_reply("u1", 3);
+        assert_eq!(rate.status, 429);
+        assert_eq!(rate.retry_after, Some(3));
+        assert!(rate.body.contains(r#""reason":"rate""#));
+        assert!(rate.body.contains("u1"));
     }
 
     #[test]
     fn ready_reflects_draining_and_watermark() {
         let state = ServerState::new(2);
-        let (code, body) = ready_response(&state);
-        assert_eq!(code, 200, "{body}");
-        assert!(body.contains("\"restore\""));
+        let reply = ready_response(&state);
+        assert_eq!(reply.status, 200, "{}", reply.body);
+        assert!(reply.body.contains("\"restore\""));
 
         state.begin_dispatch();
         state.begin_dispatch();
         assert!(!state.admits());
-        let (code, body) = ready_response(&state);
-        assert_eq!(code, 503);
-        assert!(body.contains("overloaded"));
+        let reply = ready_response(&state);
+        assert_eq!(reply.status, 503);
+        assert!(reply.body.contains("overloaded"));
 
         state.end_dispatch();
         assert!(state.ready());
         state.set_draining();
-        let (code, body) = ready_response(&state);
-        assert_eq!(code, 503);
-        assert!(body.contains("draining"));
+        let reply = ready_response(&state);
+        assert_eq!(reply.status, 503);
+        assert!(reply.body.contains("draining"));
+    }
+
+    #[test]
+    fn query_helpers_decode() {
+        let (path, query) = split_query("/admin/cache?key=what%20is%20rust%3F&x=1");
+        assert_eq!(path, "/admin/cache");
+        assert_eq!(
+            query_param(query, "key").as_deref(),
+            Some("what is rust?")
+        );
+        assert_eq!(query_param(query, "x").as_deref(), Some("1"));
+        assert_eq!(query_param(query, "missing"), None);
+        let (path, query) = split_query("/admin/cache");
+        assert_eq!(path, "/admin/cache");
+        assert!(query.is_none());
+        assert_eq!(percent_decode("a+b%2Bc"), "a b+c");
+        // Malformed escapes pass through rather than erroring.
+        assert_eq!(percent_decode("100%"), "100%");
+        assert_eq!(percent_decode("%zz"), "%zz");
+    }
+
+    #[test]
+    fn ops_config_swap_is_whole_snapshot() {
+        let state = ServerState::new(4);
+        let before = state.ops_config();
+        assert_eq!(before.shed_watermark, 4);
+        assert_eq!(before.rate_per_sec, 0.0);
+        state.set_ops_config(OpsConfig {
+            shed_watermark: 9,
+            rate_per_sec: 2.5,
+            rate_burst: 5.0,
+        });
+        // The old snapshot is unchanged (readers holding it see a
+        // consistent config); a fresh load sees the new one whole.
+        assert_eq!(before.shed_watermark, 4);
+        let after = state.ops_config();
+        assert_eq!(after.shed_watermark, 9);
+        assert_eq!(after.rate_per_sec, 2.5);
+        assert_eq!(after.rate_burst, 5.0);
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers() {
+        let m = Arc::new(Mutex::new(vec![1u32]));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        let mut g = lock_unpoisoned(&m);
+        g.push(2);
+        assert_eq!(*g, vec![1, 2]);
     }
 }

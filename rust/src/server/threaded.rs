@@ -14,9 +14,22 @@
 //!
 //! Admission control here is coarser than the evented loop's (there is
 //! no connection ceiling — the thread pool itself is the bound) but the
-//! same watermark applies: a parsed request sheds with an admission 429
-//! when total queued work sits at or above
-//! [`super::ServerConfig::shed_watermark`].
+//! same gates apply, from the same hot-reloadable ops snapshot: a parsed
+//! request sheds with an admission 429 when total queued work sits at or
+//! above the shed watermark, with a rate 429 + `Retry-After` when the
+//! user's token bucket is empty, and with an inline 400
+//! (`server_reject_badjson`) when a POST body to the JSON API is
+//! unparseable — all before the dispatch hop.
+//!
+//! Dispatch is panic-isolated just like the evented workers: a panicking
+//! route handler yields a 500 on that connection
+//! (`server_worker_panics`), the in-flight gauge is released, and the
+//! worker thread survives to serve the next pop.
+//!
+//! With `--admin-port`, a dedicated acceptor thread serves the admin
+//! surface ([`super::route_admin`]) one blocking request at a time —
+//! deliberately outside the worker pool, so cache inspection and config
+//! hot-reload stay responsive while the data plane sheds.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -29,8 +42,8 @@ use crate::util::json::Json;
 
 use super::conn::HttpRequest;
 use super::{
-    admission_shed_body, read_request_deadline, route_server, write_response, ServerConfig,
-    ServerState,
+    admission_shed_body, lock_unpoisoned, rate_shed_reply, read_request_deadline, route_server,
+    write_reply, write_response, Reply, ServerConfig, ServerState,
 };
 
 /// A connection's place in the two-hop worker flow.
@@ -61,6 +74,7 @@ impl ThreadedHandle {
 pub(super) fn start(
     bridge: Arc<Bridge>,
     listener: std::net::TcpListener,
+    admin_listener: Option<std::net::TcpListener>,
     state: Arc<ServerState>,
     config: ServerConfig,
 ) -> Result<ThreadedHandle> {
@@ -103,7 +117,7 @@ pub(super) fn start(
                             .set_write_timeout(Some(std::time::Duration::from_secs(10)))
                             .ok();
                         next_id += 1;
-                        conns.lock().unwrap().insert(next_id, Slot::Raw(stream));
+                        lock_unpoisoned(&conns).insert(next_id, Slot::Raw(stream));
                         // Group naming doubles as scheduling policy:
                         // FifoQueue::pop scans groups in key order, so
                         // dispatch groups ("d:...") always win over
@@ -123,6 +137,49 @@ pub(super) fn start(
         }));
     }
 
+    // Admin acceptor: serves the control surface inline, one blocking
+    // request per connection, entirely outside the worker pool and its
+    // admission gates. Handlers are cheap; a slowloris here can stall
+    // only the admin plane, never data-plane dispatch.
+    if let Some(al) = admin_listener {
+        al.set_nonblocking(true)?;
+        let stop = stop.clone();
+        let bridge = bridge.clone();
+        let state = state.clone();
+        let deadline = config.request_deadline;
+        join.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                match al.accept() {
+                    Ok((mut stream, _)) => {
+                        if stream.set_nonblocking(false).is_err() {
+                            continue;
+                        }
+                        stream
+                            .set_write_timeout(Some(std::time::Duration::from_secs(10)))
+                            .ok();
+                        match read_request_deadline(
+                            &mut stream,
+                            Some(std::time::Instant::now() + deadline),
+                        ) {
+                            Ok(req) => {
+                                let reply = super::route_admin(&bridge, &state, &req);
+                                let _ = write_reply(&mut stream, &reply);
+                            }
+                            Err(_) => {
+                                let _ =
+                                    write_response(&mut stream, 400, r#"{"error":"bad request"}"#);
+                            }
+                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        }));
+    }
+
     // Workers: a raw pop parses and re-enqueues under the user group;
     // a ready pop dispatches. Raw groups are connection-unique, so
     // parsing parallelizes; ready groups serialize per user (the SQS
@@ -133,11 +190,10 @@ pub(super) fn start(
         let bridge = bridge.clone();
         let state = state.clone();
         let deadline = config.request_deadline;
-        let watermark = config.shed_watermark;
         join.push(std::thread::spawn(move || {
             let tele = bridge.telemetry().clone();
             while let Some(msg) = queue.pop() {
-                let entry = conns.lock().unwrap().remove(&msg.payload);
+                let entry = lock_unpoisoned(&conns).remove(&msg.payload);
                 match entry {
                     Some(Slot::Raw(mut stream)) => {
                         match read_request_deadline(
@@ -145,33 +201,66 @@ pub(super) fn start(
                             Some(std::time::Instant::now() + deadline),
                         ) {
                             Ok(req) => {
+                                // One coherent ops snapshot per request —
+                                // watermark and rate limits from the same
+                                // hot-reload generation.
+                                let ops = state.ops_config();
                                 // Admission control: shed before the
                                 // dispatch queue grows past the
                                 // watermark (the bridge never sees the
                                 // request).
-                                if queue.len() >= watermark {
+                                if queue.len() >= ops.shed_watermark {
                                     tele.counters.incr("server_shed_admission");
                                     let _ = write_response(
                                         &mut stream,
                                         429,
                                         &admission_shed_body(),
                                     );
-                                } else {
-                                    // FIFO group = user when parseable,
-                                    // else connection-unique (no
-                                    // ordering need).
-                                    let group = Json::parse(&req.body)
-                                        .ok()
-                                        .and_then(|j| j.str_of("user").ok())
-                                        .map(|user| format!("d:u:{user}"))
-                                        .unwrap_or_else(|| format!("d:a:{}", msg.payload));
-                                    conns
-                                        .lock()
-                                        .unwrap()
-                                        .insert(msg.payload, Slot::Ready(stream, req));
-                                    state.begin_dispatch();
-                                    queue.push(&group, msg.payload);
+                                    queue.ack(msg.id, &msg.group);
+                                    continue;
                                 }
+                                // Parse once: grouping, rate limiting,
+                                // and the bad-JSON reject all read it.
+                                let parsed = Json::parse(&req.body).ok();
+                                if parsed.is_none()
+                                    && req.method == "POST"
+                                    && matches!(
+                                        req.path.as_str(),
+                                        "/v1/request" | "/v1/regenerate"
+                                    )
+                                {
+                                    tele.counters.incr("server_reject_badjson");
+                                    let _ = write_response(
+                                        &mut stream,
+                                        400,
+                                        r#"{"error":"request body is not valid JSON"}"#,
+                                    );
+                                    queue.ack(msg.id, &msg.group);
+                                    continue;
+                                }
+                                let user =
+                                    parsed.as_ref().and_then(|j| j.str_of("user").ok());
+                                if let Some(u) = &user {
+                                    if let Err(secs) = state.rate_acquire(&ops, u) {
+                                        tele.counters.incr("server_shed_rate");
+                                        let _ = write_reply(
+                                            &mut stream,
+                                            &rate_shed_reply(u, secs),
+                                        );
+                                        queue.ack(msg.id, &msg.group);
+                                        continue;
+                                    }
+                                }
+                                // FIFO group = user when parseable,
+                                // else connection-unique (no
+                                // ordering need).
+                                let group = user
+                                    .map(|user| format!("d:u:{user}"))
+                                    .unwrap_or_else(|| format!("d:a:{}", msg.payload));
+                                lock_unpoisoned(&conns)
+                                    .insert(msg.payload, Slot::Ready(stream, req));
+                                state.begin_dispatch();
+                                queue.push(&group, msg.payload);
                             }
                             Err(_) => {
                                 let _ = write_response(
@@ -183,8 +272,20 @@ pub(super) fn start(
                         }
                     }
                     Some(Slot::Ready(mut stream, req)) => {
-                        let (status, body) = route_server(&bridge, &state, &req);
-                        let _ = write_response(&mut stream, status, &body);
+                        // Panic isolation: a handler that unwinds costs
+                        // this request a 500, not the worker thread —
+                        // and the in-flight gauge is always released.
+                        let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || route_server(&bridge, &state, &req),
+                        ))
+                        .unwrap_or_else(|_| {
+                            tele.counters.incr("server_worker_panics");
+                            Reply::new(
+                                500,
+                                r#"{"error":"internal error: request handler panicked"}"#,
+                            )
+                        });
+                        let _ = write_reply(&mut stream, &reply);
                         state.end_dispatch();
                     }
                     None => {}

@@ -16,6 +16,14 @@ pub mod mmap;
 pub mod prop;
 pub mod rng;
 
+/// Whether test failpoints are armed (`LLMBRIDGE_FAILPOINTS=1`). Gates
+/// the panic-injection route and the generate-failure param used by the
+/// resilience regression tests; callers check it only after a cheap
+/// path/param match so normal traffic never reads the environment.
+pub fn failpoints_enabled() -> bool {
+    std::env::var("LLMBRIDGE_FAILPOINTS").map(|v| v == "1").unwrap_or(false)
+}
+
 /// FNV-1a 64-bit hash — the same function the tokenizer uses for word ids
 /// and the simulation layer uses for deterministic per-event seeds.
 pub fn fnv1a(data: &[u8]) -> u64 {

@@ -74,6 +74,17 @@ impl HttpClient {
 
     /// One POST round-trip (connection stays usable afterward).
     pub fn post(&mut self, path: &str, body: &str) -> (u16, llmbridge::util::json::Json) {
+        let (status, _head, json) = self.post_full(path, body);
+        (status, json)
+    }
+
+    /// One POST round-trip that also returns the raw response header
+    /// block, for header assertions (`Retry-After`).
+    pub fn post_full(
+        &mut self,
+        path: &str,
+        body: &str,
+    ) -> (u16, String, llmbridge::util::json::Json) {
         self.send_raw(
             format!(
                 "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
@@ -81,11 +92,23 @@ impl HttpClient {
             )
             .as_bytes(),
         );
+        self.read_response_full()
+    }
+
+    /// One DELETE round-trip (connection stays usable afterward).
+    pub fn delete(&mut self, path: &str) -> (u16, llmbridge::util::json::Json) {
+        self.send_raw(format!("DELETE {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes());
         self.read_response()
     }
 
     /// Read exactly one Content-Length-framed response.
     pub fn read_response(&mut self) -> (u16, llmbridge::util::json::Json) {
+        let (status, _head, json) = self.read_response_full();
+        (status, json)
+    }
+
+    /// [`Self::read_response`], also returning the raw header block.
+    pub fn read_response_full(&mut self) -> (u16, String, llmbridge::util::json::Json) {
         use std::io::Read;
         fn find(buf: &[u8], needle: &[u8]) -> Option<usize> {
             buf.windows(needle.len()).position(|w| w == needle)
@@ -122,6 +145,6 @@ impl HttpClient {
         self.buf.drain(..head_end + clen);
         let json = llmbridge::util::json::Json::parse(&body)
             .unwrap_or(llmbridge::util::json::Json::Null);
-        (status, json)
+        (status, head, json)
     }
 }

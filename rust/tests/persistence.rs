@@ -408,6 +408,58 @@ fn wal_concurrent_mixed_ops_no_deadlock_and_all_durable() {
 }
 
 // ---------------------------------------------------------------------
+// Admin invalidation durability (PR 8): a `DELETE /admin/cache?key=`
+// issued over the admin port journals a RemoveExact through the WAL, so
+// the invalidation holds across a restart — and across a compaction
+// that folds the WAL into a snapshot.
+// ---------------------------------------------------------------------
+
+#[test]
+fn admin_invalidation_is_journaled_and_survives_restart() {
+    use llmbridge::server::{Server, ServerConfig};
+
+    let dir = fresh_dir("admin_inval");
+    let bridge = Arc::new(persisted_bridge(&dir));
+    bridge.cache().put_exact("keep me", "kept");
+    bridge.cache().put_exact("remove me", "doomed");
+
+    // Invalidate end-to-end over the admin port (percent-encoded key).
+    let server = Server::start_with(
+        bridge.clone(),
+        "127.0.0.1:0",
+        ServerConfig {
+            workers: 1,
+            admin_bind: Some("127.0.0.1:0".into()),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let admin = server.admin_addr.unwrap();
+    let (code, j) = common::HttpClient::connect(admin).delete("/admin/cache?key=remove%20me");
+    assert_eq!(code, 200, "{}", j.to_string());
+    assert_eq!(bridge.cache().get_exact("remove me"), None);
+    server.stop(); // graceful: drains and fsyncs the WAL
+
+    // A remove that matched nothing must not have been journaled.
+    let len_before = wal_len(&dir, 0);
+    assert!(!bridge.cache().remove_exact("never existed"));
+    assert_eq!(wal_len(&dir, 0), len_before, "no-op remove is not journaled");
+    drop(bridge);
+
+    // Replay order (put, put, remove) reproduces the live state.
+    let restored = persisted_bridge(&dir);
+    assert_eq!(restored.cache().get_exact("keep me").as_deref(), Some("kept"));
+    assert_eq!(restored.cache().get_exact("remove me"), None);
+
+    // The invalidation also survives being folded into a snapshot.
+    assert!(restored.compact_persistence().unwrap());
+    drop(restored);
+    let again = persisted_bridge(&dir);
+    assert_eq!(again.cache().get_exact("keep me").as_deref(), Some("kept"));
+    assert_eq!(again.cache().get_exact("remove me"), None);
+}
+
+// ---------------------------------------------------------------------
 // Quota + exchange durability: gated usage and regeneration handles
 // survive a restart.
 // ---------------------------------------------------------------------

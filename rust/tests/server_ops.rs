@@ -1,0 +1,383 @@
+//! Operational-resilience integration tests (ROADMAP item 2), on both
+//! transport backends over real TCP:
+//!
+//! * panic isolation — an injected handler panic costs one connection a
+//!   500 and the server keeps serving (the poisoned-completions-mutex
+//!   regression);
+//! * the circuit breaker end-to-end — injected generate failures trip it,
+//!   requests fast-fail 503 `"reason":"breaker"` with `Retry-After`
+//!   while `/health` and the admin port stay responsive, and the
+//!   half-open probe restores service after the cooldown;
+//! * per-user rate limiting and its `POST /admin/config` hot-reload;
+//! * the admin surface: cache stats, journaled invalidation, breaker
+//!   snapshot, config validation.
+//!
+//! Failure injection rides the `LLMBRIDGE_FAILPOINTS=1` gate; the flag
+//! only arms `POST /v1/test/panic` and the `params.failpoint` hook, so
+//! setting it process-wide here cannot change other behavior.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::HttpClient;
+use llmbridge::coordinator::BridgeConfig;
+use llmbridge::ops::BreakerConfig;
+use llmbridge::server::{Server, ServerBackend, ServerConfig};
+
+fn enable_failpoints() {
+    std::env::set_var("LLMBRIDGE_FAILPOINTS", "1");
+}
+
+fn ops_server(backend: ServerBackend, bridge: Arc<llmbridge::coordinator::Bridge>) -> Server {
+    Server::start_with(
+        bridge,
+        "127.0.0.1:0",
+        ServerConfig {
+            workers: 2,
+            backend,
+            admin_bind: Some("127.0.0.1:0".into()),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+fn fixed_body(user: &str, prompt: &str, model: &str, failpoint: bool) -> String {
+    let params = if failpoint {
+        r#","params":{"failpoint":"generate"}"#
+    } else {
+        ""
+    };
+    format!(
+        r#"{{"user":"{user}","conversation":"c1","prompt":"{prompt}",
+            "service_type":{{"name":"fixed","model":"{model}","cache":"skip"}}{params}}}"#
+    )
+}
+
+// ---------------------------------------------------------------- panics
+
+/// The PR 8 headline regression: a panicking handler used to poison the
+/// completions mutex and take the whole server down with it. Now it must
+/// cost exactly one 500 and leave the server serving.
+fn panic_leaves_server_serving(backend: ServerBackend) {
+    enable_failpoints();
+    let bridge = common::bridge();
+    let server = Server::start_with(
+        bridge.clone(),
+        "127.0.0.1:0",
+        ServerConfig {
+            workers: 2,
+            backend,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr;
+
+    let (code, j) = HttpClient::connect(addr).post("/v1/test/panic", "{}");
+    assert_eq!(code, 500, "{}", j.to_string());
+    assert!(j.str_of("error").unwrap().contains("panicked"));
+    assert!(bridge.telemetry().counters.get("server_worker_panics") >= 1);
+
+    // The server is still alive: probes answer and real work completes.
+    let (code, _) = HttpClient::connect(addr).get("/health");
+    assert_eq!(code, 200);
+    let (code, j) = HttpClient::connect(addr).post(
+        "/v1/request",
+        &fixed_body("panic-after", "still serving?", "gpt-4o-mini", false),
+    );
+    assert_eq!(code, 200, "{}", j.to_string());
+    server.stop();
+}
+
+#[test]
+fn panic_leaves_server_serving_default_backend() {
+    panic_leaves_server_serving(ServerBackend::Auto);
+}
+
+#[test]
+fn panic_leaves_server_serving_threaded_backend() {
+    panic_leaves_server_serving(ServerBackend::Threaded);
+}
+
+// --------------------------------------------------------------- breaker
+
+/// Breaker lifecycle over real HTTP: trip on injected generate failures,
+/// fast-fail 503 with `Retry-After` while open (probes + admin stay
+/// responsive, other models unaffected), recover via the half-open probe.
+fn breaker_opens_sheds_and_recovers(backend: ServerBackend) {
+    enable_failpoints();
+    let bridge = Arc::new(common::private_bridge(BridgeConfig {
+        breaker: BreakerConfig {
+            threshold: 2,
+            cooldown: Duration::from_millis(300),
+        },
+        ..BridgeConfig::default()
+    }));
+    let server = ops_server(backend, bridge.clone());
+    let addr = server.addr;
+    let admin = server.admin_addr.unwrap();
+
+    // Two consecutive infrastructure failures trip the breaker.
+    for i in 0..2 {
+        let (code, j) = HttpClient::connect(addr).post(
+            "/v1/request",
+            &fixed_body(&format!("bk-f{i}"), "inject failure", "gpt-4o-mini", true),
+        );
+        assert_eq!(code, 500, "{}", j.to_string());
+    }
+    assert!(bridge.telemetry().counters.get("breaker_trips") >= 1);
+
+    // Open: a healthy request fast-fails with the typed 503.
+    let (code, head, j) = HttpClient::connect(addr).post_full(
+        "/v1/request",
+        &fixed_body("bk-shed", "shed me", "gpt-4o-mini", false),
+    );
+    assert_eq!(code, 503, "{}", j.to_string());
+    assert_eq!(j.str_of("reason").unwrap(), "breaker");
+    assert!(head.contains("Retry-After:"), "{head}");
+
+    // Liveness and the admin surface keep answering while it sheds.
+    let (code, _) = HttpClient::connect(addr).get("/health");
+    assert_eq!(code, 200);
+    let (code, b) = HttpClient::connect(admin).get("/admin/breaker");
+    assert_eq!(code, 200, "{}", b.to_string());
+    let line = b.req("models").unwrap().req("gpt-4o-mini").unwrap();
+    assert_eq!(line.str_of("state").unwrap(), "open");
+
+    // Per-model isolation: a different model serves normally.
+    let (code, j) = HttpClient::connect(addr).post(
+        "/v1/request",
+        &fixed_body("bk-other", "other model fine", "phi-3-mini", false),
+    );
+    assert_eq!(code, 200, "{}", j.to_string());
+
+    // Cooldown lapses: the next request is the probe; success recovers.
+    std::thread::sleep(Duration::from_millis(350));
+    let (code, j) = HttpClient::connect(addr).post(
+        "/v1/request",
+        &fixed_body("bk-rec", "probe me back to life", "gpt-4o-mini", false),
+    );
+    assert_eq!(code, 200, "{}", j.to_string());
+    assert!(bridge.telemetry().counters.get("breaker_recoveries") >= 1);
+    let (_, b) = HttpClient::connect(admin).get("/admin/breaker");
+    let line = b.req("models").unwrap().req("gpt-4o-mini").unwrap();
+    assert_eq!(line.str_of("state").unwrap(), "closed");
+
+    server.stop();
+}
+
+#[test]
+fn breaker_opens_sheds_and_recovers_default_backend() {
+    breaker_opens_sheds_and_recovers(ServerBackend::Auto);
+}
+
+#[test]
+fn breaker_opens_sheds_and_recovers_threaded_backend() {
+    breaker_opens_sheds_and_recovers(ServerBackend::Threaded);
+}
+
+// ---------------------------------------------------- rate + hot reload
+
+/// Rate limiting is off by default, switches on through `POST
+/// /admin/config` with no restart, rejects invalid/unknown fields whole,
+/// and switches back off — each request seeing one coherent config.
+fn rate_limit_hot_reload(backend: ServerBackend) {
+    let bridge = Arc::new(common::private_bridge(BridgeConfig::default()));
+    let server = ops_server(backend, bridge);
+    let addr = server.addr;
+    let admin = server.admin_addr.unwrap();
+
+    // Disabled by default: a burst of requests from one user all pass.
+    for i in 0..3 {
+        let (code, j) = HttpClient::connect(addr).post(
+            "/v1/request",
+            &fixed_body("rl-u1", &format!("warm {i}"), "gpt-4o-mini", false),
+        );
+        assert_eq!(code, 200, "{}", j.to_string());
+    }
+
+    // Hot-reload a 1-token bucket with a trickle refill.
+    let (code, j) = HttpClient::connect(admin).post(
+        "/admin/config",
+        r#"{"rate_per_sec":0.01,"rate_burst":1}"#,
+    );
+    assert_eq!(code, 200, "{}", j.to_string());
+    assert_eq!(j.get("applied"), Some(&llmbridge::util::json::Json::Bool(true)));
+
+    // First request spends the token; the second sheds with the typed
+    // 429 — "rate", not "admission" or "quota" — and a Retry-After.
+    let (code, j) = HttpClient::connect(addr).post(
+        "/v1/request",
+        &fixed_body("rl-u2", "token one", "gpt-4o-mini", false),
+    );
+    assert_eq!(code, 200, "{}", j.to_string());
+    let (code, head, j) = HttpClient::connect(addr).post_full(
+        "/v1/request",
+        &fixed_body("rl-u2", "token two", "gpt-4o-mini", false),
+    );
+    assert_eq!(code, 429, "{}", j.to_string());
+    assert_eq!(j.str_of("reason").unwrap(), "rate");
+    assert!(head.contains("Retry-After:"), "{head}");
+
+    // An unknown field rejects the whole reload — nothing half-applies.
+    let (code, _) = HttpClient::connect(admin).post(
+        "/admin/config",
+        r#"{"rate_per_sec":1000,"bogus_knob":1}"#,
+    );
+    assert_eq!(code, 400);
+    // Still the old config: a fresh user gets exactly one token.
+    let (code, _) = HttpClient::connect(addr).post(
+        "/v1/request",
+        &fixed_body("rl-u3", "one", "gpt-4o-mini", false),
+    );
+    assert_eq!(code, 200);
+    let (code, j) = HttpClient::connect(addr).post(
+        "/v1/request",
+        &fixed_body("rl-u3", "two", "gpt-4o-mini", false),
+    );
+    assert_eq!(code, 429, "{}", j.to_string());
+
+    // Switch it back off; the drained user admits again immediately.
+    let (code, _) =
+        HttpClient::connect(admin).post("/admin/config", r#"{"rate_per_sec":0}"#);
+    assert_eq!(code, 200);
+    let (code, j) = HttpClient::connect(addr).post(
+        "/v1/request",
+        &fixed_body("rl-u2", "limits off", "gpt-4o-mini", false),
+    );
+    assert_eq!(code, 200, "{}", j.to_string());
+
+    server.stop();
+}
+
+#[test]
+fn rate_limit_hot_reload_default_backend() {
+    rate_limit_hot_reload(ServerBackend::Auto);
+}
+
+#[test]
+fn rate_limit_hot_reload_threaded_backend() {
+    rate_limit_hot_reload(ServerBackend::Threaded);
+}
+
+// ---------------------------------------------------------- admin surface
+
+fn admin_surface(backend: ServerBackend) {
+    let bridge = Arc::new(common::private_bridge(BridgeConfig::default()));
+    let server = ops_server(backend, bridge.clone());
+    let addr = server.addr;
+    let admin = server.admin_addr.unwrap();
+
+    // Admin routes do not exist on the data port.
+    let (code, _) = HttpClient::connect(addr).get("/admin/cache");
+    assert_eq!(code, 404);
+
+    // Cache stats carry the index tier and entry counts.
+    let (code, j) = HttpClient::connect(admin).get("/admin/cache");
+    assert_eq!(code, 200, "{}", j.to_string());
+    assert!(!j.str_of("tier").unwrap().is_empty());
+    assert!(j.get("rows").is_some() && j.get("exact").is_some());
+
+    // Targeted invalidation, key percent-encoded in the query string.
+    bridge.cache().put_exact("what is rust?", "a systems language");
+    assert!(bridge.cache().get_exact("what is rust?").is_some());
+    let (code, j) =
+        HttpClient::connect(admin).delete("/admin/cache?key=what%20is%20rust%3F");
+    assert_eq!(code, 200, "{}", j.to_string());
+    assert_eq!(j.get("removed"), Some(&llmbridge::util::json::Json::Bool(true)));
+    assert!(bridge.cache().get_exact("what is rust?").is_none());
+    // Idempotent: a second delete reports nothing removed.
+    let (_, j) = HttpClient::connect(admin).delete("/admin/cache?key=what%20is%20rust%3F");
+    assert_eq!(j.get("removed"), Some(&llmbridge::util::json::Json::Bool(false)));
+
+    // Full clear.
+    bridge.cache().put_exact("ephemeral", "entry");
+    let (code, j) = HttpClient::connect(admin).delete("/admin/cache");
+    assert_eq!(code, 200, "{}", j.to_string());
+    assert_eq!(j.get("cleared"), Some(&llmbridge::util::json::Json::Bool(true)));
+    assert_eq!(bridge.cache().len_exact(), 0);
+
+    // Probes and metrics ride the admin port too; unknown routes 404.
+    let (code, _) = HttpClient::connect(admin).get("/health");
+    assert_eq!(code, 200);
+    let (code, _) = HttpClient::connect(admin).get("/v1/metrics");
+    assert_eq!(code, 200);
+    let (code, _) = HttpClient::connect(admin).get("/admin/nope");
+    assert_eq!(code, 404);
+
+    server.stop();
+}
+
+#[test]
+fn admin_surface_default_backend() {
+    admin_surface(ServerBackend::Auto);
+}
+
+#[test]
+fn admin_surface_threaded_backend() {
+    admin_surface(ServerBackend::Threaded);
+}
+
+// --------------------------------------------------------- badjson reject
+
+fn badjson_is_rejected_inline(backend: ServerBackend) {
+    let bridge = Arc::new(common::private_bridge(BridgeConfig::default()));
+    let server = ops_server(backend, bridge.clone());
+    let addr = server.addr;
+
+    let before = bridge.telemetry().counters.get("server_reject_badjson");
+    let (code, j) = HttpClient::connect(addr).post("/v1/request", "{definitely not json");
+    assert_eq!(code, 400, "{}", j.to_string());
+    assert!(bridge.telemetry().counters.get("server_reject_badjson") > before);
+    // The reject is per-request: the same socket keeps working on the
+    // keep-alive (evented) path, and a fresh one works on both.
+    let (code, j) = HttpClient::connect(addr).post(
+        "/v1/request",
+        &fixed_body("bj-u", "valid after invalid", "gpt-4o-mini", false),
+    );
+    assert_eq!(code, 200, "{}", j.to_string());
+
+    server.stop();
+}
+
+#[test]
+fn badjson_is_rejected_inline_default_backend() {
+    badjson_is_rejected_inline(ServerBackend::Auto);
+}
+
+#[test]
+fn badjson_is_rejected_inline_threaded_backend() {
+    badjson_is_rejected_inline(ServerBackend::Threaded);
+}
+
+// --------------------------------------------------------- engine timeout
+
+#[test]
+fn engine_rpc_timeout_is_configurable() {
+    use llmbridge::runtime::EngineHandle;
+    let engine = EngineHandle::spawn_deterministic().unwrap();
+    assert_eq!(engine.rpc_timeout(), Duration::from_secs(120));
+    engine.set_rpc_timeout(Duration::from_secs(3));
+    assert_eq!(engine.rpc_timeout(), Duration::from_secs(3));
+    // Zero clamps to a nonzero arm — recv_timeout(0) would always fire.
+    engine.set_rpc_timeout(Duration::ZERO);
+    assert!(engine.rpc_timeout() > Duration::ZERO);
+    // A healthy engine still answers under a tight-but-sane timeout.
+    engine.set_rpc_timeout(Duration::from_secs(30));
+    assert!(!engine.embed_text("timeout smoke").unwrap().is_empty());
+    engine.shutdown();
+}
+
+#[test]
+fn bridge_config_engine_timeout_applies() {
+    let bridge = common::private_bridge(BridgeConfig {
+        engine_timeout: Some(Duration::from_secs(77)),
+        ..BridgeConfig::default()
+    });
+    assert_eq!(bridge.engine().rpc_timeout(), Duration::from_secs(77));
+    // The engine is shared with the rest of the binary — restore it.
+    bridge.engine().set_rpc_timeout(Duration::from_secs(120));
+}

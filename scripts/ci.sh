@@ -13,7 +13,9 @@
 # the runtime would actually use on a machine without AVX2/NEON), a
 # release-mode server stress pass (the evented-loop suite: 1k+ concurrent
 # keep-alive connections, connection churn, induced overload/shedding —
-# debug-mode timing hides races the optimized loop would hit), then
+# plus the ops-resilience suite: panic isolation, breaker trips,
+# rate-limit hot-reload, admin surface — debug-mode timing hides races
+# the optimized loop would hit), then
 # cargo fmt --check, cargo clippy --workspace -D warnings, rustdoc with
 # -D warnings (the docs gate — broken intra-doc links and malformed docs
 # fail the build, so module docs can't rot), and a `--features pjrt`
@@ -49,8 +51,8 @@ cargo test --workspace -q
 echo "==> force-scalar: LLMBRIDGE_FORCE_SCALAR=1 cargo test -q (kernel fallback gate)"
 LLMBRIDGE_FORCE_SCALAR=1 cargo test --workspace -q
 
-echo "==> server stress: cargo test --release --test server_evented --test server_http"
-cargo test --release --test server_evented --test server_http -q
+echo "==> server stress: cargo test --release --test server_evented --test server_http --test server_ops"
+cargo test --release --test server_evented --test server_http --test server_ops -q
 
 echo "==> cargo fmt --check"
 cargo fmt --all -- --check
