@@ -47,6 +47,28 @@
 //!   takes, so WAL appends cannot deadlock with the shard locks.
 //! * PUT embeds all typed keys with one [`EngineHandle::embed_batch`]
 //!   round-trip instead of a serial `embed_text` per key.
+//! * Replication state (per-entry [`Stamp`]s, exact-path tombstones, the
+//!   stamp→object dedup map) lives in dedicated shard-striped maps that
+//!   are always present but stay empty until
+//!   [`SemanticCache::enable_replication`] runs, so the unreplicated hot
+//!   path pays one `OnceLock` load and nothing else. A stamp-map lock is
+//!   always acquired *after* the data-shard lock it shadows and released
+//!   with it, extending the lock order above without new deadlock shapes.
+//!
+//! ## Replication model
+//!
+//! When a node id is set, every mutation carries a [`Stamp`] —
+//! `(origin, version)` under a per-node Lamport clock — and peers
+//! exchange deltas by per-origin high-water mark (see `crate::sync`).
+//! Conflicts resolve by [`Stamp::beats`]: higher version wins, ties break
+//! on lexicographic origin, so any two replicas that have seen the same
+//! stamps hold the same winners regardless of arrival order. Exact
+//! entries are last-writer-wins with tombstoned removals; semantic
+//! objects are add-only and deduplicated by stamp (ids are node-local —
+//! a remote object is re-keyed under fresh local ids on apply). Vectors
+//! travel with the delta in *stored* (pre-normalized) form and are
+//! inserted verbatim, so replicas are bit-identical and the receiver
+//! never re-embeds.
 //!
 //! [`EngineHandle::embed_batch`]: crate::runtime::EngineHandle::embed_batch
 
@@ -56,7 +78,7 @@ use std::collections::{HashMap, HashSet};
 use std::io::Write as _;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{OnceLock, RwLock};
+use std::sync::{Mutex, OnceLock, RwLock};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -199,6 +221,121 @@ pub struct SmartCacheOutcome {
     pub llm_calls: Vec<Completion>,
 }
 
+/// Replication identity of one cache entry: which node wrote it
+/// (`origin`) at which tick of that node's write clock (`version`).
+/// [`Stamp::beats`] totally orders stamps identically on every node,
+/// which is what makes anti-entropy apply-order-independent.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Stamp {
+    pub origin: String,
+    pub version: u64,
+}
+
+impl Stamp {
+    /// The deterministic symmetric tiebreaker: higher version wins, equal
+    /// versions break on lexicographic origin id. Equal stamps denote the
+    /// *same* write (idempotent re-delivery), so neither beats the other.
+    pub fn beats(&self, other: &Stamp) -> bool {
+        (self.version, self.origin.as_str()) > (other.version, other.origin.as_str())
+    }
+
+    /// The stamp legacy (pre-replication) entries carry: version 0, empty
+    /// origin. Any stamped write beats it.
+    pub fn zero() -> Stamp {
+        Stamp {
+            origin: String::new(),
+            version: 0,
+        }
+    }
+}
+
+/// What a `WalOp::Adopt` record retro-stamps: one pre-replication entry,
+/// named without re-journaling its payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdoptTarget {
+    /// A normalized exact-cache key.
+    Exact(String),
+    /// A semantic object id (node-local).
+    Object(u64),
+}
+
+/// One unit of the anti-entropy delta stream, self-contained: everything
+/// a peer needs to apply the entry without an engine round-trip (object
+/// vectors travel in stored form) and without trusting the sender's
+/// node-local ids (identity is the stamp).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SyncEntry {
+    /// An exact-cache entry (last-writer-wins by stamp).
+    Exact {
+        key: String,
+        response: String,
+        stamp: Stamp,
+    },
+    /// An exact-cache tombstone: the removal of `key` at `stamp`.
+    Tomb { key: String, stamp: Stamp },
+    /// A semantic object plus all its typed keys' stored-form vectors.
+    /// Objects are add-only; the receiver re-keys under fresh local ids
+    /// and dedups by stamp.
+    Object {
+        text: String,
+        origin: String,
+        is_document: bool,
+        stamp: Stamp,
+        keys: Vec<(CachedType, Vec<f32>)>,
+    },
+}
+
+impl SyncEntry {
+    pub fn stamp(&self) -> &Stamp {
+        match self {
+            SyncEntry::Exact { stamp, .. }
+            | SyncEntry::Tomb { stamp, .. }
+            | SyncEntry::Object { stamp, .. } => stamp,
+        }
+    }
+}
+
+/// Outcome of [`SemanticCache::apply_sync_entry`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncApplied {
+    /// The entry won (or was new) and is now part of local state.
+    Applied,
+    /// The entry lost the tiebreaker or was already present — a no-op.
+    Stale,
+}
+
+/// Node identity + Lamport write clock, set once by
+/// [`SemanticCache::enable_replication`]. The clock holds the last
+/// version issued *or observed*: local writes stamp
+/// `max(clock, overwritten.version) + 1` and remote applies advance it,
+/// so a local overwrite always beats the entry it replaced on every
+/// replica, not just here.
+struct ReplState {
+    node_id: String,
+    clock: AtomicU64,
+}
+
+impl ReplState {
+    /// Issue a fresh stamp strictly beyond both the clock and `beyond`
+    /// (the version of whatever this write supersedes).
+    fn next_stamp(&self, beyond: u64) -> Stamp {
+        let prev = self
+            .clock
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| {
+                Some(c.max(beyond) + 1)
+            })
+            .unwrap();
+        Stamp {
+            origin: self.node_id.clone(),
+            version: prev.max(beyond) + 1,
+        }
+    }
+
+    fn observe(&self, version: u64) {
+        self.clock.fetch_max(version, Ordering::SeqCst);
+    }
+}
+
 /// Compaction-gate guard handed out by [`Journal::enter`] /
 /// [`Journal::enter_exclusive`]; held across one mutation's apply+append.
 pub enum JournalGuard<'a> {
@@ -223,6 +360,21 @@ pub trait Journal: Send + Sync {
         -> Result<()>;
     fn log_clear(&self);
     fn log_remove_exact(&self, prompt: &str);
+    /// Stamped twin of [`Journal::log_put_exact`] (replicated writes and
+    /// applied remote entries).
+    fn log_put_exact_v(&self, prompt: &str, response: &str, stamp: &Stamp);
+    /// Stamped twin of [`Journal::log_put`]. On this path `keys` carries
+    /// the index's *stored* rows (pre-normalized), replayed verbatim.
+    fn log_put_v(
+        &self,
+        object: CacheObject,
+        keys: Vec<(u64, CachedType, Vec<f32>)>,
+        stamp: &Stamp,
+    ) -> Result<()>;
+    /// Stamped twin of [`Journal::log_remove_exact`]: a tombstone.
+    fn log_remove_exact_v(&self, prompt: &str, stamp: &Stamp);
+    /// Retro-stamp one pre-replication entry (payload-free record).
+    fn log_adopt(&self, target: AdoptTarget, stamp: &Stamp);
 }
 
 pub struct SemanticCache {
@@ -236,6 +388,24 @@ pub struct SemanticCache {
     rebuilding: AtomicBool,
     /// Durable-mutation sink; unset (zero-cost) for in-memory deployments.
     journal: OnceLock<std::sync::Arc<dyn Journal>>,
+    /// Per-entry replication stamps for the exact map, sharded like it.
+    /// Entries present in `exact` but absent here are version-0 (legacy).
+    exact_stamps: Vec<RwLock<HashMap<String, Stamp>>>,
+    /// Exact-path tombstones: the stamp at which a key was removed. Kept
+    /// so a removal beats concurrent remote puts of the losing entry.
+    exact_tombs: Vec<RwLock<HashMap<String, Stamp>>>,
+    /// Per-object replication stamps, sharded like `objects`.
+    object_stamps: Vec<RwLock<HashMap<u64, Stamp>>>,
+    /// Stamp → local object id: dedups re-delivered remote objects (ids
+    /// are node-local, so identity on the wire is the stamp alone).
+    object_by_stamp: RwLock<HashMap<Stamp, u64>>,
+    /// Max stamp version ever seen per origin — survives `clear` and is
+    /// persisted in snapshot meta, so a node that clears and restarts
+    /// still resumes its own write clock past every stamp it ever issued
+    /// (re-issuing a version would permanently diverge the fleet).
+    version_floors: Mutex<HashMap<String, u64>>,
+    /// Node identity + write clock; unset until `enable_replication`.
+    repl: OnceLock<ReplState>,
     /// Relevance threshold the SmartCache ground truth uses.
     pub relevance_threshold: f64,
 }
@@ -256,6 +426,12 @@ impl SemanticCache {
             next_id: AtomicU64::new(1),
             rebuilding: AtomicBool::new(false),
             journal: OnceLock::new(),
+            exact_stamps: (0..SHARD_COUNT).map(|_| RwLock::new(HashMap::new())).collect(),
+            exact_tombs: (0..SHARD_COUNT).map(|_| RwLock::new(HashMap::new())).collect(),
+            object_stamps: (0..SHARD_COUNT).map(|_| RwLock::new(HashMap::new())).collect(),
+            object_by_stamp: RwLock::new(HashMap::new()),
+            version_floors: Mutex::new(HashMap::new()),
+            repl: OnceLock::new(),
             relevance_threshold: 0.40,
         }
     }
@@ -309,13 +485,35 @@ impl SemanticCache {
         let journal = self.journal.get();
         let _gate = journal.map(|j| j.enter());
         let key = Self::exact_key(prompt);
-        let mut shard = self.exact[Self::shard_of_str(&key)].write().unwrap();
-        shard.insert(key, response.to_string());
-        if let Some(j) = journal {
-            // Append while still holding the shard lock: same-key races
-            // then land in the WAL in apply order, so last-record-wins
-            // replay reconstructs exactly the pre-crash winner.
-            j.log_put_exact(prompt, response);
+        let si = Self::shard_of_str(&key);
+        let mut shard = self.exact[si].write().unwrap();
+        if let Some(r) = self.repl.get() {
+            let mut stamps = self.exact_stamps[si].write().unwrap();
+            let mut tombs = self.exact_tombs[si].write().unwrap();
+            // Stamp past whatever this write supersedes (entry or
+            // tombstone), so it beats the loser on every replica, not
+            // just locally.
+            let beyond = stamps
+                .get(&key)
+                .map(|s| s.version)
+                .unwrap_or(0)
+                .max(tombs.get(&key).map(|s| s.version).unwrap_or(0));
+            let stamp = r.next_stamp(beyond);
+            shard.insert(key.clone(), response.to_string());
+            stamps.insert(key.clone(), stamp.clone());
+            tombs.remove(&key);
+            if let Some(j) = journal {
+                j.log_put_exact_v(prompt, response, &stamp);
+            }
+        } else {
+            shard.insert(key, response.to_string());
+            if let Some(j) = journal {
+                // Append while still holding the shard lock: same-key
+                // races then land in the WAL in apply order, so
+                // last-record-wins replay reconstructs exactly the
+                // pre-crash winner.
+                j.log_put_exact(prompt, response);
+            }
         }
     }
 
@@ -336,10 +534,24 @@ impl SemanticCache {
         let journal = self.journal.get();
         let _gate = journal.map(|j| j.enter());
         let key = Self::exact_key(prompt);
-        let mut shard = self.exact[Self::shard_of_str(&key)].write().unwrap();
+        let si = Self::shard_of_str(&key);
+        let mut shard = self.exact[si].write().unwrap();
         let removed = shard.remove(&key).is_some();
         if removed {
-            if let Some(j) = journal {
+            if let Some(r) = self.repl.get() {
+                let mut stamps = self.exact_stamps[si].write().unwrap();
+                let mut tombs = self.exact_tombs[si].write().unwrap();
+                let beyond = stamps
+                    .remove(&key)
+                    .map(|s| s.version)
+                    .unwrap_or(0)
+                    .max(tombs.get(&key).map(|s| s.version).unwrap_or(0));
+                let stamp = r.next_stamp(beyond);
+                tombs.insert(key.clone(), stamp.clone());
+                if let Some(j) = journal {
+                    j.log_remove_exact_v(prompt, &stamp);
+                }
+            } else if let Some(j) = journal {
                 j.log_remove_exact(prompt);
             }
         }
@@ -368,7 +580,19 @@ impl SemanticCache {
             .filter(|(_, key_text)| !key_text.trim().is_empty())
             .collect();
         let texts: Vec<&str> = live.iter().map(|pair| pair.1.as_str()).collect();
-        let embs = generator.engine().embed_batch(&texts)?;
+        let mut embs = generator.engine().embed_batch(&texts)?;
+        let repl = self.repl.get();
+        if repl.is_some() {
+            // Replicated puts normalize up front and insert the stored
+            // form verbatim (the index would normalize on insert anyway —
+            // same bits). The WAL and the sync wire then carry the stored
+            // rows themselves, so a replica applying this object lands
+            // bit-identical without re-normalizing (normalizing an
+            // already-unit f32 row is not a no-op).
+            for e in &mut embs {
+                crate::vecdb::normalize_in_place(e);
+            }
+        }
 
         let journal = self.journal.get();
         let _gate = journal.map(|j| j.enter());
@@ -388,7 +612,11 @@ impl SemanticCache {
             let mut index = self.index.write().unwrap();
             for (pair, emb) in live.iter().zip(embs.iter()) {
                 let key_id = self.fresh_id();
-                index.insert(key_id, emb)?;
+                if repl.is_some() {
+                    index.insert_stored(key_id, emb)?;
+                } else {
+                    index.insert(key_id, emb)?;
+                }
                 entries.push((key_id, pair.0));
             }
         }
@@ -398,28 +626,52 @@ impl SemanticCache {
                 .unwrap()
                 .insert(*key_id, KeyEntry { object_id, ctype: *ctype });
         }
+        // Stamp *after* object + keys are all in place: a concurrent sync
+        // round collects its delta by scanning stamps, so an unstamped
+        // object is invisible to it and a stamped one is never
+        // half-assembled.
+        let stamp = repl.map(|r| {
+            let stamp = r.next_stamp(0);
+            self.object_stamps[Self::shard_of(object_id)]
+                .write()
+                .unwrap()
+                .insert(object_id, stamp.clone());
+            self.object_by_stamp
+                .write()
+                .unwrap()
+                .insert(stamp.clone(), object_id);
+            stamp
+        });
         if let Some(j) = journal {
-            // Log the raw embeddings alongside the assigned ids: replay
-            // re-inserts them without an engine round-trip and reaches the
-            // same pre-normalized rows.
+            // Log the embeddings alongside the assigned ids: replay
+            // re-inserts them without an engine round-trip (raw rows on
+            // the legacy path, stored rows on the replicated path).
             let logged: Vec<(u64, CachedType, Vec<f32>)> = entries
                 .iter()
                 .zip(embs.iter())
                 .map(|(&(key_id, ctype), emb)| (key_id, ctype, emb.clone()))
                 .collect();
-            let log_result = j.log_put(
-                CacheObject {
-                    id: object_id,
-                    text: text.to_string(),
-                    origin: origin.to_string(),
-                    is_document,
-                },
-                logged,
-            );
+            let object = CacheObject {
+                id: object_id,
+                text: text.to_string(),
+                origin: origin.to_string(),
+                is_document,
+            };
+            let log_result = match &stamp {
+                Some(s) => j.log_put_v(object, logged, s),
+                None => j.log_put(object, logged),
+            };
             if let Err(e) = log_result {
                 // Roll back the in-memory apply so an Err means "this PUT
                 // did not happen" — memory and WAL stay in agreement, and
                 // a caller's retry can't strand duplicate objects.
+                if let Some(s) = &stamp {
+                    self.object_stamps[Self::shard_of(object_id)]
+                        .write()
+                        .unwrap()
+                        .remove(&object_id);
+                    self.object_by_stamp.write().unwrap().remove(s);
+                }
                 {
                     let mut index = self.index.write().unwrap();
                     for (key_id, _) in &entries {
@@ -765,9 +1017,583 @@ impl SemanticCache {
         for shard in &self.exact {
             shard.write().unwrap().clear();
         }
+        for shard in &self.exact_stamps {
+            shard.write().unwrap().clear();
+        }
+        for shard in &self.exact_tombs {
+            shard.write().unwrap().clear();
+        }
+        for shard in &self.object_stamps {
+            shard.write().unwrap().clear();
+        }
+        self.object_by_stamp.write().unwrap().clear();
+        // version_floors survives deliberately: the write clock must never
+        // re-issue a version this node already used, even across a clear
+        // (a peer that saw the old stamp would treat the re-issue as
+        // already-applied and the fleet would silently diverge).
         if let Some(j) = journal {
             j.log_clear();
         }
+    }
+
+    // ------------------------------------------------------- replication
+
+    /// Turn on replication: give this cache a node identity and seed its
+    /// write clock past every version this node has ever issued (the
+    /// persisted floor), so versions are never reused across restarts or
+    /// clears. Call once at boot, *after* snapshot restore and WAL replay
+    /// (which populate the floor). Idempotent; later calls are ignored.
+    pub fn enable_replication(&self, node_id: &str) {
+        let floor = self
+            .version_floors
+            .lock()
+            .unwrap()
+            .get(node_id)
+            .copied()
+            .unwrap_or(0);
+        let _ = self.repl.set(ReplState {
+            node_id: node_id.to_string(),
+            clock: AtomicU64::new(floor),
+        });
+    }
+
+    /// This node's replication identity, if enabled.
+    pub fn replication_node(&self) -> Option<&str> {
+        self.repl.get().map(|r| r.node_id.as_str())
+    }
+
+    /// Current value of the write clock (diagnostics; 0 when disabled).
+    pub fn replication_clock(&self) -> u64 {
+        self.repl
+            .get()
+            .map(|r| r.clock.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    fn note_floor(&self, stamp: &Stamp) {
+        let mut floors = self.version_floors.lock().unwrap();
+        let e = floors.entry(stamp.origin.clone()).or_insert(0);
+        *e = (*e).max(stamp.version);
+    }
+
+    /// Retro-stamp every version-0 (pre-replication) entry with a fresh
+    /// own stamp, journaling payload-free `Adopt` records — the one-time
+    /// upgrade path when a legacy corpus first boots with a node id.
+    /// Without this, legacy entries would have no stamp, never clear any
+    /// peer's high-water mark, and never replicate. Returns the number of
+    /// entries adopted (0 when replication is off or nothing is legacy).
+    pub fn adopt_unstamped(&self) -> usize {
+        let Some(r) = self.repl.get() else {
+            return 0;
+        };
+        let journal = self.journal.get();
+        let _gate = journal.map(|j| j.enter());
+        let mut adopted = 0usize;
+        for si in 0..SHARD_COUNT {
+            let unstamped: Vec<String> = {
+                let shard = self.exact[si].read().unwrap();
+                let stamps = self.exact_stamps[si].read().unwrap();
+                shard
+                    .keys()
+                    .filter(|k| !stamps.contains_key(*k))
+                    .cloned()
+                    .collect()
+            };
+            for key in unstamped {
+                let stamp = r.next_stamp(0);
+                self.exact_stamps[si]
+                    .write()
+                    .unwrap()
+                    .insert(key.clone(), stamp.clone());
+                self.note_floor(&stamp);
+                if let Some(j) = journal {
+                    j.log_adopt(AdoptTarget::Exact(key), &stamp);
+                }
+                adopted += 1;
+            }
+            let unstamped: Vec<u64> = {
+                let shard = self.objects[si].read().unwrap();
+                let stamps = self.object_stamps[si].read().unwrap();
+                shard
+                    .keys()
+                    .filter(|id| !stamps.contains_key(*id))
+                    .copied()
+                    .collect()
+            };
+            for id in unstamped {
+                let stamp = r.next_stamp(0);
+                self.object_stamps[si]
+                    .write()
+                    .unwrap()
+                    .insert(id, stamp.clone());
+                self.object_by_stamp
+                    .write()
+                    .unwrap()
+                    .insert(stamp.clone(), id);
+                self.note_floor(&stamp);
+                if let Some(j) = journal {
+                    j.log_adopt(AdoptTarget::Object(id), &stamp);
+                }
+                adopted += 1;
+            }
+        }
+        adopted
+    }
+
+    /// Replay a WAL `PutExactV`: unconditional (the losing side of any
+    /// conflict was resolved *before* journaling, so WAL order is final
+    /// state), tracking the version floor.
+    pub fn replay_put_exact_v(&self, prompt: &str, response: &str, stamp: &Stamp) {
+        let key = Self::exact_key(prompt);
+        let si = Self::shard_of_str(&key);
+        let mut shard = self.exact[si].write().unwrap();
+        let mut stamps = self.exact_stamps[si].write().unwrap();
+        let mut tombs = self.exact_tombs[si].write().unwrap();
+        shard.insert(key.clone(), response.to_string());
+        stamps.insert(key.clone(), stamp.clone());
+        tombs.remove(&key);
+        drop((shard, stamps, tombs));
+        self.note_floor(stamp);
+    }
+
+    /// Replay a WAL `RemoveExactV`: re-establish the tombstone.
+    pub fn replay_remove_exact_v(&self, prompt: &str, stamp: &Stamp) {
+        let key = Self::exact_key(prompt);
+        let si = Self::shard_of_str(&key);
+        let mut shard = self.exact[si].write().unwrap();
+        let mut stamps = self.exact_stamps[si].write().unwrap();
+        let mut tombs = self.exact_tombs[si].write().unwrap();
+        shard.remove(&key);
+        stamps.remove(&key);
+        tombs.insert(key, stamp.clone());
+        drop((shard, stamps, tombs));
+        self.note_floor(stamp);
+    }
+
+    /// Replay a WAL `PutObjectV`: like [`SemanticCache::apply_logged_put`]
+    /// but the journaled rows are stored-form and land verbatim
+    /// (`insert_stored`), and the object's stamp is restored. Idempotent
+    /// per key id.
+    pub fn replay_put_object_v(
+        &self,
+        object: CacheObject,
+        keys: &[(u64, CachedType, Vec<f32>)],
+        stamp: &Stamp,
+    ) -> Result<()> {
+        let object_id = object.id;
+        let mut max_id = object_id;
+        {
+            let mut index = self.index.write().unwrap();
+            for (key_id, _, vector) in keys {
+                max_id = max_id.max(*key_id);
+                if !index.contains(*key_id) {
+                    index.insert_stored(*key_id, vector)?;
+                }
+            }
+        }
+        for (key_id, ctype, _) in keys {
+            self.keys[Self::shard_of(*key_id)]
+                .write()
+                .unwrap()
+                .insert(*key_id, KeyEntry { object_id, ctype: *ctype });
+        }
+        self.objects[Self::shard_of(object_id)]
+            .write()
+            .unwrap()
+            .insert(object_id, object);
+        self.object_stamps[Self::shard_of(object_id)]
+            .write()
+            .unwrap()
+            .insert(object_id, stamp.clone());
+        self.object_by_stamp
+            .write()
+            .unwrap()
+            .insert(stamp.clone(), object_id);
+        self.next_id.fetch_max(max_id + 1, Ordering::Relaxed);
+        self.note_floor(stamp);
+        Ok(())
+    }
+
+    /// Replay a WAL `Adopt`: stamp the named entry if it still exists (a
+    /// later WAL record may have removed it — adoption is best-effort by
+    /// construction).
+    pub fn replay_adopt(&self, target: &AdoptTarget, stamp: &Stamp) {
+        match target {
+            AdoptTarget::Exact(key) => {
+                let si = Self::shard_of_str(key);
+                let shard = self.exact[si].read().unwrap();
+                if shard.contains_key(key) {
+                    self.exact_stamps[si]
+                        .write()
+                        .unwrap()
+                        .insert(key.clone(), stamp.clone());
+                }
+            }
+            AdoptTarget::Object(id) => {
+                let si = Self::shard_of(*id);
+                let present = self.objects[si].read().unwrap().contains_key(id);
+                if present {
+                    self.object_stamps[si]
+                        .write()
+                        .unwrap()
+                        .insert(*id, stamp.clone());
+                    self.object_by_stamp
+                        .write()
+                        .unwrap()
+                        .insert(stamp.clone(), *id);
+                }
+            }
+        }
+        self.note_floor(stamp);
+    }
+
+    /// Per-origin high-water marks of the *present* state: the max stamp
+    /// version per origin across entries, tombstones, and objects. This is
+    /// what a sync round advertises; deriving it from live state (rather
+    /// than a separate counter) means a cleared node naturally re-requests
+    /// everything — `clear` is a local operation, peers re-seed it.
+    pub fn sync_hwms(&self) -> HashMap<String, u64> {
+        let mut hwms: HashMap<String, u64> = HashMap::new();
+        let mut fold = |s: &Stamp| {
+            let e = hwms.entry(s.origin.clone()).or_insert(0);
+            *e = (*e).max(s.version);
+        };
+        for si in 0..SHARD_COUNT {
+            for s in self.exact_stamps[si].read().unwrap().values() {
+                fold(s);
+            }
+            for s in self.exact_tombs[si].read().unwrap().values() {
+                fold(s);
+            }
+            for s in self.object_stamps[si].read().unwrap().values() {
+                fold(s);
+            }
+        }
+        hwms
+    }
+
+    /// Collect every entry whose stamp is above the peer's advertised
+    /// high-water mark for its origin — the anti-entropy delta. Runs in
+    /// staged O(n) passes (stamps → key shards → one index row sweep) with
+    /// no nested shard locks, entirely off the request hot path. Version-0
+    /// (never-adopted) entries have no stamp and are never shipped.
+    pub fn sync_delta(&self, peer_hwms: &HashMap<String, u64>) -> Vec<SyncEntry> {
+        let newer =
+            |s: &Stamp| s.version > peer_hwms.get(&s.origin).copied().unwrap_or(0);
+        let mut out = Vec::new();
+        for si in 0..SHARD_COUNT {
+            {
+                let shard = self.exact[si].read().unwrap();
+                let stamps = self.exact_stamps[si].read().unwrap();
+                for (k, s) in stamps.iter() {
+                    if newer(s) {
+                        if let Some(v) = shard.get(k) {
+                            out.push(SyncEntry::Exact {
+                                key: k.clone(),
+                                response: v.clone(),
+                                stamp: s.clone(),
+                            });
+                        }
+                    }
+                }
+            }
+            for (k, s) in self.exact_tombs[si].read().unwrap().iter() {
+                if newer(s) {
+                    out.push(SyncEntry::Tomb {
+                        key: k.clone(),
+                        stamp: s.clone(),
+                    });
+                }
+            }
+        }
+        // Objects: wanted ids first (stamps are recorded only once the
+        // object and all its keys are in place, so everything collected
+        // below is fully assembled), then one pass over the key shards for
+        // the id→keys reverse mapping, then one index sweep for the rows.
+        let mut wanted: HashMap<u64, Stamp> = HashMap::new();
+        for si in 0..SHARD_COUNT {
+            for (id, s) in self.object_stamps[si].read().unwrap().iter() {
+                if newer(s) {
+                    wanted.insert(*id, s.clone());
+                }
+            }
+        }
+        if wanted.is_empty() {
+            return out;
+        }
+        let mut obj_keys: HashMap<u64, Vec<(u64, CachedType)>> = HashMap::new();
+        for si in 0..SHARD_COUNT {
+            for (key_id, e) in self.keys[si].read().unwrap().iter() {
+                if wanted.contains_key(&e.object_id) {
+                    obj_keys
+                        .entry(e.object_id)
+                        .or_default()
+                        .push((*key_id, e.ctype));
+                }
+            }
+        }
+        let need_rows: HashSet<u64> =
+            obj_keys.values().flatten().map(|(id, _)| *id).collect();
+        let mut rows: HashMap<u64, Vec<f32>> = HashMap::new();
+        {
+            let index = self.index.read().unwrap();
+            index.for_each_row(|id, row| {
+                if need_rows.contains(&id) {
+                    rows.insert(id, row.to_vec());
+                }
+            });
+        }
+        for (id, stamp) in wanted {
+            let obj = {
+                let shard = self.objects[Self::shard_of(id)].read().unwrap();
+                shard.get(&id).cloned()
+            };
+            // A concurrent clear() can race this collection; an object
+            // gone mid-pass is simply not shipped this round.
+            let Some(obj) = obj else {
+                continue;
+            };
+            let mut ks = obj_keys.remove(&id).unwrap_or_default();
+            ks.sort_by_key(|(kid, _)| *kid);
+            let keys: Vec<(CachedType, Vec<f32>)> = ks
+                .into_iter()
+                .filter_map(|(kid, ct)| rows.get(&kid).map(|r| (ct, r.clone())))
+                .collect();
+            out.push(SyncEntry::Object {
+                text: obj.text,
+                origin: obj.origin,
+                is_document: obj.is_document,
+                stamp,
+                keys,
+            });
+        }
+        out
+    }
+
+    /// Apply one remote entry under the deterministic tiebreaker,
+    /// journaling winners through the local WAL (so replication survives
+    /// restart and compaction without ever needing the peer's history).
+    /// Exact entries are last-writer-wins against both the present entry
+    /// and any tombstone; objects are add-only, deduplicated by stamp and
+    /// re-keyed under fresh local ids; vectors land verbatim
+    /// (stored-form), never re-embedded or re-normalized.
+    pub fn apply_sync_entry(&self, entry: SyncEntry) -> Result<SyncApplied> {
+        if let Some(r) = self.repl.get() {
+            // Lamport receive rule: later local writes must beat this.
+            r.observe(entry.stamp().version);
+        }
+        self.note_floor(entry.stamp());
+        let journal = self.journal.get();
+        let _gate = journal.map(|j| j.enter());
+        match entry {
+            SyncEntry::Exact {
+                key,
+                response,
+                stamp,
+            } => {
+                let si = Self::shard_of_str(&key);
+                let mut shard = self.exact[si].write().unwrap();
+                let mut stamps = self.exact_stamps[si].write().unwrap();
+                let mut tombs = self.exact_tombs[si].write().unwrap();
+                let current = stamps
+                    .get(&key)
+                    .cloned()
+                    .or_else(|| shard.contains_key(&key).then(Stamp::zero));
+                if let Some(cur) = current {
+                    if !stamp.beats(&cur) {
+                        return Ok(SyncApplied::Stale);
+                    }
+                }
+                if let Some(t) = tombs.get(&key) {
+                    if !stamp.beats(t) {
+                        return Ok(SyncApplied::Stale);
+                    }
+                }
+                shard.insert(key.clone(), response.clone());
+                stamps.insert(key.clone(), stamp.clone());
+                tombs.remove(&key);
+                if let Some(j) = journal {
+                    // The key is already normalized; exact_key is
+                    // idempotent, so journaling it as the prompt replays
+                    // to the same key.
+                    j.log_put_exact_v(&key, &response, &stamp);
+                }
+                Ok(SyncApplied::Applied)
+            }
+            SyncEntry::Tomb { key, stamp } => {
+                let si = Self::shard_of_str(&key);
+                let mut shard = self.exact[si].write().unwrap();
+                let mut stamps = self.exact_stamps[si].write().unwrap();
+                let mut tombs = self.exact_tombs[si].write().unwrap();
+                if let Some(t) = tombs.get(&key) {
+                    if !stamp.beats(t) {
+                        return Ok(SyncApplied::Stale);
+                    }
+                }
+                let current = stamps
+                    .get(&key)
+                    .cloned()
+                    .or_else(|| shard.contains_key(&key).then(Stamp::zero));
+                if let Some(cur) = current {
+                    if !stamp.beats(&cur) {
+                        return Ok(SyncApplied::Stale);
+                    }
+                }
+                shard.remove(&key);
+                stamps.remove(&key);
+                // Recorded even when the key was absent here: the
+                // tombstone must outlive the race with a slower remote
+                // put of the entry it killed.
+                tombs.insert(key.clone(), stamp.clone());
+                if let Some(j) = journal {
+                    j.log_remove_exact_v(&key, &stamp);
+                }
+                Ok(SyncApplied::Applied)
+            }
+            SyncEntry::Object {
+                text,
+                origin,
+                is_document,
+                stamp,
+                keys,
+            } => {
+                if self.object_by_stamp.read().unwrap().contains_key(&stamp) {
+                    return Ok(SyncApplied::Stale);
+                }
+                let object_id = self.fresh_id();
+                let object = CacheObject {
+                    id: object_id,
+                    text,
+                    origin,
+                    is_document,
+                };
+                self.objects[Self::shard_of(object_id)]
+                    .write()
+                    .unwrap()
+                    .insert(object_id, object.clone());
+                let mut entries: Vec<(u64, CachedType)> =
+                    Vec::with_capacity(keys.len());
+                {
+                    let mut index = self.index.write().unwrap();
+                    for (ctype, vector) in &keys {
+                        let key_id = self.fresh_id();
+                        index.insert_stored(key_id, vector)?;
+                        entries.push((key_id, *ctype));
+                    }
+                }
+                for (key_id, ctype) in &entries {
+                    self.keys[Self::shard_of(*key_id)]
+                        .write()
+                        .unwrap()
+                        .insert(*key_id, KeyEntry { object_id, ctype: *ctype });
+                }
+                self.object_stamps[Self::shard_of(object_id)]
+                    .write()
+                    .unwrap()
+                    .insert(object_id, stamp.clone());
+                self.object_by_stamp
+                    .write()
+                    .unwrap()
+                    .insert(stamp.clone(), object_id);
+                if let Some(j) = journal {
+                    let logged: Vec<(u64, CachedType, Vec<f32>)> = entries
+                        .iter()
+                        .zip(keys.iter())
+                        .map(|(&(key_id, ctype), (_, v))| (key_id, ctype, v.clone()))
+                        .collect();
+                    if let Err(e) = j.log_put_v(object, logged, &stamp) {
+                        self.object_stamps[Self::shard_of(object_id)]
+                            .write()
+                            .unwrap()
+                            .remove(&object_id);
+                        self.object_by_stamp.write().unwrap().remove(&stamp);
+                        {
+                            let mut index = self.index.write().unwrap();
+                            for (key_id, _) in &entries {
+                                index.remove(*key_id);
+                            }
+                        }
+                        for (key_id, _) in &entries {
+                            self.keys[Self::shard_of(*key_id)]
+                                .write()
+                                .unwrap()
+                                .remove(key_id);
+                        }
+                        self.objects[Self::shard_of(object_id)]
+                            .write()
+                            .unwrap()
+                            .remove(&object_id);
+                        return Err(e);
+                    }
+                }
+                Ok(SyncApplied::Applied)
+            }
+        }
+    }
+
+    /// Deterministic, id-free fingerprint of the replicated corpus: exact
+    /// entries + stamps, tombstones, and the object multiset with each
+    /// object's typed keys as exact f32 bit patterns. Two converged
+    /// replicas produce identical fingerprints even though their local
+    /// ids differ — the convergence tests' bit-exactness oracle.
+    pub fn replica_fingerprint(&self) -> Vec<String> {
+        fn fmt_stamp(s: Option<&Stamp>) -> String {
+            match s {
+                Some(s) => format!("{}#{}", s.origin, s.version),
+                None => "#0".to_string(),
+            }
+        }
+        let mut lines = Vec::new();
+        for si in 0..SHARD_COUNT {
+            {
+                let shard = self.exact[si].read().unwrap();
+                let stamps = self.exact_stamps[si].read().unwrap();
+                for (k, v) in shard.iter() {
+                    lines.push(format!("exact|{k}|{v}|{}", fmt_stamp(stamps.get(k))));
+                }
+            }
+            for (k, s) in self.exact_tombs[si].read().unwrap().iter() {
+                lines.push(format!("tomb|{k}|{}", fmt_stamp(Some(s))));
+            }
+        }
+        let mut rows: HashMap<u64, String> = HashMap::new();
+        {
+            let index = self.index.read().unwrap();
+            index.for_each_row(|id, row| {
+                let mut hex = String::with_capacity(row.len() * 8);
+                for x in row {
+                    hex.push_str(&format!("{:08x}", x.to_bits()));
+                }
+                rows.insert(id, hex);
+            });
+        }
+        let mut obj_keys: HashMap<u64, Vec<String>> = HashMap::new();
+        for si in 0..SHARD_COUNT {
+            for (key_id, e) in self.keys[si].read().unwrap().iter() {
+                let bits = rows.get(key_id).cloned().unwrap_or_default();
+                obj_keys
+                    .entry(e.object_id)
+                    .or_default()
+                    .push(format!("{}:{}", e.ctype.as_str(), bits));
+            }
+        }
+        for si in 0..SHARD_COUNT {
+            let stamps = self.object_stamps[si].read().unwrap();
+            for obj in self.objects[si].read().unwrap().values() {
+                let mut ks = obj_keys.remove(&obj.id).unwrap_or_default();
+                ks.sort();
+                lines.push(format!(
+                    "obj|{}|{}|{}|{}|{}",
+                    obj.text,
+                    obj.origin,
+                    obj.is_document,
+                    fmt_stamp(stamps.get(&obj.id)),
+                    ks.join(",")
+                ));
+            }
+        }
+        lines.sort();
+        lines
     }
 
     // ---------------------------------------------------------- snapshot
@@ -789,26 +1615,63 @@ impl SemanticCache {
         let mut w =
             std::io::BufWriter::new(std::fs::File::create(dir.join("cache.jsonl"))?);
         // Ids are small sequential allocations (f64-exact), unlike the
-        // hashed request ids elsewhere — safe as JSON numbers.
-        let meta = Json::obj(vec![
+        // hashed request ids elsewhere — safe as JSON numbers. Version
+        // floors fold in the live write clock (and the present stamps,
+        // for caches replicating without a journal) so a restored node
+        // never re-issues a version; the "floors" key is omitted when
+        // empty, keeping unreplicated snapshots byte-identical to pre-
+        // replication ones.
+        let mut floors = self.version_floors.lock().unwrap().clone();
+        for (origin, v) in self.sync_hwms() {
+            let e = floors.entry(origin).or_insert(0);
+            *e = (*e).max(v);
+        }
+        if let Some(r) = self.repl.get() {
+            let e = floors.entry(r.node_id.clone()).or_insert(0);
+            *e = (*e).max(r.clock.load(Ordering::Relaxed));
+        }
+        let mut meta_fields = vec![
             ("t", Json::str("meta")),
             (
                 "next_id",
                 Json::num(self.next_id.load(Ordering::Relaxed) as f64),
             ),
             ("relevance_threshold", Json::Num(self.relevance_threshold)),
-        ]);
+        ];
+        if !floors.is_empty() {
+            meta_fields.push((
+                "floors",
+                Json::Obj(
+                    floors
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ));
+        }
+        let meta = Json::obj(meta_fields);
         writeln!(w, "{}", meta.to_string())?;
-        for shard in &self.objects {
+        let stamp_fields = |s: Option<&Stamp>| -> Vec<(&'static str, Json)> {
+            match s {
+                Some(s) => vec![
+                    ("so", Json::str(s.origin.clone())),
+                    ("sv", Json::num(s.version as f64)),
+                ],
+                None => Vec::new(),
+            }
+        };
+        for (si, shard) in self.objects.iter().enumerate() {
+            let stamps = self.object_stamps[si].read().unwrap();
             for obj in shard.read().unwrap().values() {
-                let row = Json::obj(vec![
+                let mut fields = vec![
                     ("t", Json::str("obj")),
                     ("id", Json::num(obj.id as f64)),
                     ("text", Json::str(obj.text.clone())),
                     ("origin", Json::str(obj.origin.clone())),
                     ("doc", Json::Bool(obj.is_document)),
-                ]);
-                writeln!(w, "{}", row.to_string())?;
+                ];
+                fields.extend(stamp_fields(stamps.get(&obj.id)));
+                writeln!(w, "{}", Json::obj(fields).to_string())?;
             }
         }
         for shard in &self.keys {
@@ -822,14 +1685,27 @@ impl SemanticCache {
                 writeln!(w, "{}", row.to_string())?;
             }
         }
-        for shard in &self.exact {
+        for (si, shard) in self.exact.iter().enumerate() {
+            let stamps = self.exact_stamps[si].read().unwrap();
             for (k, v) in shard.read().unwrap().iter() {
                 // Keys are stored normalized; restore re-inserts them
                 // verbatim (normalization is idempotent).
-                let row = Json::obj(vec![
+                let mut fields = vec![
                     ("t", Json::str("exact")),
                     ("k", Json::str(k.clone())),
                     ("v", Json::str(v.clone())),
+                ];
+                fields.extend(stamp_fields(stamps.get(k)));
+                writeln!(w, "{}", Json::obj(fields).to_string())?;
+            }
+        }
+        for shard in &self.exact_tombs {
+            for (k, s) in shard.read().unwrap().iter() {
+                let row = Json::obj(vec![
+                    ("t", Json::str("tomb")),
+                    ("k", Json::str(k.clone())),
+                    ("so", Json::str(s.origin.clone())),
+                    ("sv", Json::num(s.version as f64)),
                 ]);
                 writeln!(w, "{}", row.to_string())?;
             }
@@ -869,6 +1745,23 @@ impl SemanticCache {
         let mut keys = Vec::new();
         let mut exact = Vec::new();
         let mut meta: Option<(u64, f64)> = None;
+        // Replication extras — absent (and free) in pre-replication
+        // snapshots: per-entry stamps, tombstones, version floors.
+        let mut obj_stamps: Vec<(u64, Stamp)> = Vec::new();
+        let mut exact_stamps: Vec<(String, Stamp)> = Vec::new();
+        let mut tombs: Vec<(String, Stamp)> = Vec::new();
+        let mut floors: HashMap<String, u64> = HashMap::new();
+        // "so"/"sv" are optional on obj/exact rows (legacy rows lack
+        // them); a malformed half-present pair is rejected.
+        let row_stamp = |row: &crate::util::json::Json| -> Result<Option<Stamp>> {
+            match (row.get("so"), row.get("sv")) {
+                (Some(_), _) | (_, Some(_)) => Ok(Some(Stamp {
+                    origin: row.str_of("so")?,
+                    version: row.f64_of("sv")? as u64,
+                })),
+                (None, None) => Ok(None),
+            }
+        };
         for line in reader.lines() {
             let line = line?;
             if line.trim().is_empty() {
@@ -881,29 +1774,56 @@ impl SemanticCache {
                         row.f64_of("next_id")? as u64,
                         row.f64_of("relevance_threshold")?,
                     ));
+                    if let Some(crate::util::json::Json::Obj(m)) = row.get("floors") {
+                        for (origin, v) in m {
+                            let v = v
+                                .as_f64()
+                                .ok_or_else(|| anyhow!("floor for '{origin}' not a number"))?;
+                            floors.insert(origin.clone(), v as u64);
+                        }
+                    }
                 }
-                "obj" => objects.push(CacheObject {
-                    id: row.f64_of("id")? as u64,
-                    text: row.str_of("text")?,
-                    origin: row.str_of("origin")?,
-                    is_document: row
-                        .req("doc")?
-                        .as_bool()
-                        .ok_or_else(|| anyhow!("object row 'doc' not a bool"))?,
-                }),
+                "obj" => {
+                    let id = row.f64_of("id")? as u64;
+                    if let Some(s) = row_stamp(&row)? {
+                        obj_stamps.push((id, s));
+                    }
+                    objects.push(CacheObject {
+                        id,
+                        text: row.str_of("text")?,
+                        origin: row.str_of("origin")?,
+                        is_document: row
+                            .req("doc")?
+                            .as_bool()
+                            .ok_or_else(|| anyhow!("object row 'doc' not a bool"))?,
+                    })
+                }
                 "key" => keys.push((
                     row.f64_of("id")? as u64,
                     row.f64_of("obj")? as u64,
                     CachedType::parse(&row.str_of("ctype")?)
                         .ok_or_else(|| anyhow!("bad ctype in key row"))?,
                 )),
-                "exact" => exact.push((row.str_of("k")?, row.str_of("v")?)),
+                "exact" => {
+                    let k = row.str_of("k")?;
+                    if let Some(s) = row_stamp(&row)? {
+                        exact_stamps.push((k.clone(), s));
+                    }
+                    exact.push((k, row.str_of("v")?))
+                }
+                "tomb" => tombs.push((
+                    row.str_of("k")?,
+                    Stamp {
+                        origin: row.str_of("so")?,
+                        version: row.f64_of("sv")? as u64,
+                    },
+                )),
                 other => bail!("unknown cache snapshot row type '{other}'"),
             }
         }
         let (next_id, relevance_threshold) =
             meta.ok_or_else(|| anyhow!("cache snapshot missing meta row"))?;
-        Self::restore_bulk(
+        let cache = Self::restore_bulk(
             embed_dim,
             index,
             objects,
@@ -911,7 +1831,37 @@ impl SemanticCache {
             exact,
             next_id,
             relevance_threshold,
-        )
+        )?;
+        for (id, s) in obj_stamps {
+            cache.object_stamps[Self::shard_of(id)]
+                .write()
+                .unwrap()
+                .insert(id, s.clone());
+            cache.object_by_stamp.write().unwrap().insert(s.clone(), id);
+            cache.note_floor(&s);
+        }
+        for (k, s) in exact_stamps {
+            cache.note_floor(&s);
+            cache.exact_stamps[Self::shard_of_str(&k)]
+                .write()
+                .unwrap()
+                .insert(k, s);
+        }
+        for (k, s) in tombs {
+            cache.note_floor(&s);
+            cache.exact_tombs[Self::shard_of_str(&k)]
+                .write()
+                .unwrap()
+                .insert(k, s);
+        }
+        {
+            let mut f = cache.version_floors.lock().unwrap();
+            for (origin, v) in floors {
+                let e = f.entry(origin).or_insert(0);
+                *e = (*e).max(v);
+            }
+        }
+        Ok(cache)
     }
 
     /// Validated bulk load: rebuild the sharded maps and adopt a loaded
@@ -1262,6 +2212,119 @@ mod tests {
         }
         assert_eq!(CachedType::from_tag(9), None);
         assert_eq!(CachedType::parse("nope"), None);
+    }
+
+    /// The version tiebreaker in isolation: any interleaving of the same
+    /// op set on two replicas converges to identical winners — no
+    /// sockets, no engine, exact entries and tombstones applied straight
+    /// through `apply_sync_entry`. An independent per-key max-stamp
+    /// oracle checks the winner really is the highest stamp.
+    #[test]
+    fn prop_tiebreaker_any_interleaving_converges() {
+        use crate::util::prop::forall;
+        forall(
+            0xC0FFEE,
+            60,
+            |r| {
+                // Few keys, few origins, small versions: conflicts are
+                // dense. (origin, version) pairs are deduplicated — a
+                // real node's clock never issues the same version twice.
+                let mut used: HashSet<(String, u64)> = HashSet::new();
+                let n = 2 + r.below(10);
+                (0..n)
+                    .map(|_| {
+                        let key = format!("key {}", r.below(4));
+                        let origin =
+                            format!("node-{}", (b'a' + r.below(3) as u8) as char);
+                        let mut version = 1 + r.below(5) as u64;
+                        while !used.insert((origin.clone(), version)) {
+                            version += 1;
+                        }
+                        let stamp = Stamp { origin, version };
+                        if r.chance(0.3) {
+                            SyncEntry::Tomb { key, stamp }
+                        } else {
+                            SyncEntry::Exact {
+                                response: format!(
+                                    "{}@{}",
+                                    stamp.origin, stamp.version
+                                ),
+                                key,
+                                stamp,
+                            }
+                        }
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |entries| {
+                let a = SemanticCache::new(4);
+                let b = SemanticCache::new(4);
+                for e in entries {
+                    a.apply_sync_entry(e.clone()).unwrap();
+                }
+                // Reverse order on b, then re-deliver everything forward
+                // (idempotent re-delivery must not disturb the winners).
+                for e in entries.iter().rev() {
+                    b.apply_sync_entry(e.clone()).unwrap();
+                }
+                for e in entries {
+                    b.apply_sync_entry(e.clone()).unwrap();
+                }
+                if a.replica_fingerprint() != b.replica_fingerprint() {
+                    return false;
+                }
+                let mut winners: HashMap<&str, &SyncEntry> = HashMap::new();
+                for e in entries {
+                    let k = match e {
+                        SyncEntry::Exact { key, .. } | SyncEntry::Tomb { key, .. } => {
+                            key.as_str()
+                        }
+                        SyncEntry::Object { .. } => unreachable!(),
+                    };
+                    match winners.get(k) {
+                        Some(cur) if !e.stamp().beats(cur.stamp()) => {}
+                        _ => {
+                            winners.insert(k, e);
+                        }
+                    }
+                }
+                winners.into_iter().all(|(k, e)| match e {
+                    SyncEntry::Exact { response, .. } => {
+                        a.get_exact(k).as_deref() == Some(response.as_str())
+                    }
+                    SyncEntry::Tomb { .. } => a.get_exact(k).is_none(),
+                    SyncEntry::Object { .. } => true,
+                })
+            },
+        );
+    }
+
+    /// Lamport rule: a local overwrite of an observed remote entry must
+    /// outrank it globally, not just locally — the write clock advances
+    /// past every stamp it has seen.
+    #[test]
+    fn local_overwrite_beats_observed_remote_stamp() {
+        let c = SemanticCache::new(4);
+        c.enable_replication("a");
+        c.apply_sync_entry(SyncEntry::Exact {
+            key: "k".into(),
+            response: "remote".into(),
+            stamp: Stamp {
+                origin: "z".into(),
+                version: 50,
+            },
+        })
+        .unwrap();
+        c.put_exact("k", "local");
+        assert_eq!(c.get_exact("k").as_deref(), Some("local"));
+        let hwms = c.sync_hwms();
+        assert!(hwms["a"] > 50, "local stamp {:?} must beat version 50", hwms);
+        // The delta against an empty peer ships the local winner.
+        let delta = c.sync_delta(&HashMap::new());
+        assert!(delta.iter().any(|e| matches!(
+            e,
+            SyncEntry::Exact { response, .. } if response == "local"
+        )));
     }
 
     #[test]

@@ -59,6 +59,12 @@ pub struct BridgeConfig {
     /// Engine RPC deadline override (`--engine-timeout-secs`); `None`
     /// keeps the engine's 120s default.
     pub engine_timeout: Option<std::time::Duration>,
+    /// Replication identity (`--node-id`). `None` (the default) keeps
+    /// replication off: no stamps, no sync threads, the hot path exactly
+    /// as before. Set it (distinct per node) to stamp every cache write
+    /// and allow a [`crate::sync::SyncService`] to exchange deltas with
+    /// peers.
+    pub node_id: Option<String>,
 }
 
 impl Default for BridgeConfig {
@@ -72,6 +78,7 @@ impl Default for BridgeConfig {
             compact_wal_bytes: 8 * 1024 * 1024,
             breaker: crate::ops::BreakerConfig::default(),
             engine_timeout: None,
+            node_id: None,
         }
     }
 }
@@ -253,6 +260,22 @@ impl Bridge {
                     WalOp::RemoveExact { prompt } => {
                         cache.remove_exact(&prompt);
                     }
+                    WalOp::PutExactV {
+                        prompt,
+                        response,
+                        stamp,
+                    } => cache.replay_put_exact_v(&prompt, &response, &stamp),
+                    WalOp::RemoveExactV { prompt, stamp } => {
+                        cache.replay_remove_exact_v(&prompt, &stamp)
+                    }
+                    WalOp::PutObjectV {
+                        object,
+                        keys,
+                        stamp,
+                    } => cache.replay_put_object_v(object, &keys, &stamp).map_err(|e| {
+                        BridgeError::Persist(format!("wal replay: {e:#}"))
+                    })?,
+                    WalOp::Adopt { target, stamp } => cache.replay_adopt(&target, &stamp),
                 }
             }
             telemetry.counters.add("persist_replayed_ops", replayed as u64);
@@ -263,6 +286,18 @@ impl Bridge {
             // Journal wired only now: recovery itself is not re-journaled.
             cache.set_journal(p.clone());
             persist = Some(p);
+        }
+
+        if let Some(node) = &config.node_id {
+            // After restore + replay (which seed the version floor) and
+            // after the journal is wired (adoption records must hit the
+            // WAL): turn on stamping, then retro-stamp any legacy
+            // version-0 entries so a pre-replication corpus replicates.
+            cache.enable_replication(node);
+            let adopted = cache.adopt_unstamped();
+            if adopted > 0 {
+                telemetry.counters.add("sync_adopted_entries", adopted as u64);
+            }
         }
 
         if let Some(timeout) = config.engine_timeout {

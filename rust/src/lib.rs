@@ -67,6 +67,7 @@ pub mod queuing;
 pub mod router;
 pub mod runtime;
 pub mod server;
+pub mod sync;
 pub mod telemetry;
 pub mod util;
 pub mod vecdb;

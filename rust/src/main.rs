@@ -11,6 +11,10 @@
 //!                   [--rate-per-sec R] [--rate-burst B]
 //!                   [--engine-timeout-secs N]
 //!                   [--breaker-threshold N] [--breaker-cooldown-secs N]
+//!                   [--node-id ID] [--sync-port N] [--peer HOST:PORT]
+//!                   [--sync-interval-ms N]
+//! llmbridge sync    --node-id ID --peer HOST:PORT [--data-dir DIR]
+//!                                             # one anti-entropy round, then exit
 //! llmbridge ask     --prompt "..." [--service TYPE] [--user u] [--artifacts DIR]
 //! llmbridge warm    [--artifacts DIR]        # load corpus into the cache
 //! llmbridge models                            # print the model pool
@@ -93,7 +97,41 @@ fn server_config_from(args: &Args) -> Result<ServerConfig> {
         admin_bind: args
             .get("admin-port")
             .map(|p| format!("127.0.0.1:{p}")),
+        sync: sync_config_from(args)?,
     })
+}
+
+/// Replication wiring from `--node-id`/`--sync-port`/`--peer`
+/// (`--sync-interval-ms` tunes the anti-entropy cadence). All of it is
+/// opt-in: with none of these flags, no sync threads start and the cache
+/// carries no replication state.
+fn sync_config_from(args: &Args) -> Result<Option<llmbridge::sync::SyncConfig>> {
+    let listen_port = match args.get("sync-port") {
+        Some(p) => Some(
+            p.parse::<u16>()
+                .map_err(|_| anyhow::anyhow!("bad --sync-port '{p}'"))?,
+        ),
+        None => None,
+    };
+    let peer = args.get("peer").map(String::from);
+    let Some(node_id) = args.get("node-id") else {
+        if listen_port.is_some() || peer.is_some() {
+            bail!("--sync-port/--peer require --node-id (a distinct id per node)");
+        }
+        return Ok(None);
+    };
+    if listen_port.is_none() && peer.is_none() {
+        // A node id alone turns on stamping (config_from passes it to the
+        // bridge) without any sync wiring — legal, e.g. to pre-stamp a
+        // corpus before joining a fleet.
+        return Ok(None);
+    }
+    Ok(Some(llmbridge::sync::SyncConfig {
+        node_id: node_id.to_string(),
+        listen_port,
+        peer,
+        interval: std::time::Duration::from_millis(args.u64_or("sync-interval-ms", 5_000)),
+    }))
 }
 
 fn config_from(args: &Args) -> BridgeConfig {
@@ -118,6 +156,7 @@ fn config_from(args: &Args) -> BridgeConfig {
             .get("engine-timeout-secs")
             .and_then(|s| s.parse::<u64>().ok())
             .map(std::time::Duration::from_secs),
+        node_id: args.get("node-id").map(String::from),
     }
 }
 
@@ -184,6 +223,9 @@ fn main() -> Result<()> {
             if let Some(admin) = server.admin_addr {
                 eprintln!("llmbridge admin surface on {admin}");
             }
+            if let Some(addr) = server.sync_addr() {
+                eprintln!("llmbridge sync listener on {addr}");
+            }
             #[cfg(unix)]
             {
                 shutdown::install();
@@ -198,6 +240,36 @@ fn main() -> Result<()> {
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
+        }
+        "sync" => {
+            // One-shot anti-entropy round against a running peer: boot
+            // the local state (restore + replay), dial, exchange deltas,
+            // flush the WAL, exit. The offline half of a fleet can catch
+            // up without serving traffic.
+            let peer = args
+                .get("peer")
+                .ok_or_else(|| anyhow::anyhow!("--peer required"))?;
+            let config = config_from(&args);
+            if config.node_id.is_none() {
+                bail!("--node-id required (a distinct id per node)");
+            }
+            let bridge = Bridge::open_with(
+                args.get_or("artifacts", "artifacts"),
+                config,
+            )?;
+            let report = llmbridge::sync::run_once(&bridge, peer)?;
+            if let Some(p) = bridge.persistence() {
+                p.sync_wal()?;
+            }
+            println!(
+                "{}",
+                Json::obj(vec![
+                    ("shipped", Json::num(report.shipped as f64)),
+                    ("applied", Json::num(report.applied as f64)),
+                    ("stale", Json::num(report.stale as f64)),
+                ])
+                .to_string()
+            );
         }
         "ask" => {
             let prompt = args
@@ -273,7 +345,7 @@ fn main() -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: llmbridge <serve|ask|warm|models|probe-backend> [--artifacts DIR] \
+                "usage: llmbridge <serve|sync|ask|warm|models|probe-backend> [--artifacts DIR] \
                  [--service TYPE] [--prompt TEXT] [--bind ADDR] [--workers N] \
                  [--generation old|new] [--prefetch] [--warm] \
                  [--data-dir DIR] [--compact-wal-bytes N] \
@@ -281,7 +353,8 @@ fn main() -> Result<()> {
                  [--user-queue-cap N] [--keepalive-secs N] [--drain-secs N] \
                  [--admin-port N] [--rate-per-sec R] [--rate-burst B] \
                  [--engine-timeout-secs N] [--breaker-threshold N] \
-                 [--breaker-cooldown-secs N]"
+                 [--breaker-cooldown-secs N] [--node-id ID] [--sync-port N] \
+                 [--peer HOST:PORT] [--sync-interval-ms N]"
             );
         }
     }

@@ -38,7 +38,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
-use crate::cache::{CacheObject, CachedType, Journal, JournalGuard};
+use crate::cache::{AdoptTarget, CacheObject, CachedType, Journal, JournalGuard, Stamp};
 use crate::error::BridgeError;
 use self::snapshot::{persist_err, CaptureCounts, Manifest, SnapshotState};
 use self::wal::{RecoveryReport, WalOp, WalWriter};
@@ -481,6 +481,42 @@ impl Journal for Persistence {
     fn log_remove_exact(&self, prompt: &str) {
         self.append_best_effort(&WalOp::RemoveExact {
             prompt: prompt.to_string(),
+        });
+    }
+
+    fn log_put_exact_v(&self, prompt: &str, response: &str, stamp: &Stamp) {
+        self.append_best_effort(&WalOp::PutExactV {
+            prompt: prompt.to_string(),
+            response: response.to_string(),
+            stamp: stamp.clone(),
+        });
+    }
+
+    fn log_put_v(
+        &self,
+        object: CacheObject,
+        keys: Vec<(u64, CachedType, Vec<f32>)>,
+        stamp: &Stamp,
+    ) -> anyhow::Result<()> {
+        self.append(&WalOp::PutObjectV {
+            object,
+            keys,
+            stamp: stamp.clone(),
+        })
+        .map_err(|e| anyhow::anyhow!("wal append: {e}"))
+    }
+
+    fn log_remove_exact_v(&self, prompt: &str, stamp: &Stamp) {
+        self.append_best_effort(&WalOp::RemoveExactV {
+            prompt: prompt.to_string(),
+            stamp: stamp.clone(),
+        });
+    }
+
+    fn log_adopt(&self, target: AdoptTarget, stamp: &Stamp) {
+        self.append_best_effort(&WalOp::Adopt {
+            target,
+            stamp: stamp.clone(),
         });
     }
 }

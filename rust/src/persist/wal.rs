@@ -26,6 +26,21 @@
 //! * **exchange** ([`WalOp::Exchange`]) — a served request in its REST
 //!   JSON form, so `regenerate` works across restarts.
 //!
+//! ## Versioned (replicated) records
+//!
+//! When replication is enabled (`--node-id`), cache mutations carry a
+//! [`Stamp`] — the `(origin_node, version)` identity the anti-entropy
+//! protocol keys on — and are journaled as the stamped twins of the ops
+//! above: [`WalOp::PutExactV`], [`WalOp::PutObjectV`],
+//! [`WalOp::RemoveExactV`], plus [`WalOp::Adopt`], which retro-stamps a
+//! pre-replication entry without re-journaling its payload. A stamp is
+//! encoded as `origin: str, version: u64` appended after the legacy
+//! fields, so the versioned encodings are strict supersets of the legacy
+//! ones. An unreplicated node keeps writing the legacy tags byte-for-byte
+//! unchanged, and legacy records always replay as **version-0** entries
+//! (origin `""`), which any stamped write beats — that is the entire
+//! upgrade path for pre-replication WALs.
+//!
 //! ## Recovery semantics
 //!
 //! * A **torn tail** — the expected artifact of a crash or power loss —
@@ -58,7 +73,7 @@ use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::cache::{CacheObject, CachedType};
+use crate::cache::{AdoptTarget, CacheObject, CachedType, Stamp};
 use crate::error::BridgeError;
 use crate::util::fnv1a;
 
@@ -77,6 +92,16 @@ const TAG_CLEAR: u8 = 3;
 const TAG_QUOTA: u8 = 4;
 const TAG_EXCHANGE: u8 = 5;
 const TAG_REMOVE_EXACT: u8 = 6;
+// Stamped twins of the cache mutations above (see "Versioned records" in
+// the module docs). Only written when replication is enabled.
+const TAG_PUT_EXACT_V: u8 = 7;
+const TAG_PUT_OBJECT_V: u8 = 8;
+const TAG_REMOVE_EXACT_V: u8 = 9;
+const TAG_ADOPT: u8 = 10;
+
+/// [`AdoptTarget`] discriminants inside a [`WalOp::Adopt`] payload.
+const ADOPT_EXACT: u8 = 1;
+const ADOPT_OBJECT: u8 = 2;
 
 /// One durable mutation. Cache PUTs carry the embedding vectors computed
 /// at insert time, so replay never touches the engine (no re-embedding).
@@ -112,36 +137,73 @@ pub enum WalOp {
     /// entry (`DELETE /admin/cache?key=`). Journaled so an invalidation
     /// survives restart instead of resurrecting the stale entry.
     RemoveExact { prompt: String },
+    /// Stamped [`WalOp::PutExact`]: a replicated exact-cache put (local
+    /// write on a `--node-id` bridge, or a remote entry applied by sync).
+    PutExactV {
+        prompt: String,
+        response: String,
+        stamp: Stamp,
+    },
+    /// Stamped [`WalOp::PutObject`]. On this path the logged vectors are
+    /// the index's *stored* rows (already normalized for cosine), replayed
+    /// verbatim — replicas must be bit-identical, so replay never
+    /// re-normalizes.
+    PutObjectV {
+        object: CacheObject,
+        keys: Vec<(u64, CachedType, Vec<f32>)>,
+        stamp: Stamp,
+    },
+    /// Stamped [`WalOp::RemoveExact`]: a replicated tombstone. Replay
+    /// records the tombstone even when the key is absent, so a removal
+    /// beats a concurrent remote put regardless of arrival order.
+    RemoveExactV { prompt: String, stamp: Stamp },
+    /// Retro-stamp one pre-replication (version-0) entry when a node is
+    /// first booted with `--node-id` — payload-free, so adopting a large
+    /// legacy corpus costs bytes proportional to keys, not vectors.
+    Adopt { target: AdoptTarget, stamp: Stamp },
 }
 
 // ------------------------------------------------------------- encoding
+//
+// The primitive writers and `Cursor` are pub(crate): the sync wire
+// protocol (`crate::sync`) frames its messages in this same encoding, so
+// both ends of a peer session share one set of codec primitives.
 
-fn put_u32(out: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(out: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_str(out: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
     put_u32(out, s.len() as u32);
     out.extend_from_slice(s.as_bytes());
 }
 
-fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+pub(crate) fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
     put_u32(out, v.len() as u32);
     for x in v {
         out.extend_from_slice(&x.to_le_bytes());
     }
 }
 
-struct Cursor<'a> {
+pub(crate) fn put_stamp(out: &mut Vec<u8>, s: &Stamp) {
+    put_str(out, &s.origin);
+    put_u64(out, s.version);
+}
+
+pub(crate) struct Cursor<'a> {
     bytes: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Cursor<'a> {
+    pub(crate) fn new(bytes: &'a [u8]) -> Cursor<'a> {
+        Cursor { bytes, pos: 0 }
+    }
+
     fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
         let end = self
             .pos
@@ -153,25 +215,25 @@ impl<'a> Cursor<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8, String> {
+    pub(crate) fn u8(&mut self) -> Result<u8, String> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32, String> {
+    pub(crate) fn u32(&mut self) -> Result<u32, String> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64, String> {
+    pub(crate) fn u64(&mut self) -> Result<u64, String> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn str(&mut self) -> Result<String, String> {
+    pub(crate) fn str(&mut self) -> Result<String, String> {
         let n = self.u32()? as usize;
         let raw = self.take(n)?;
         String::from_utf8(raw.to_vec()).map_err(|_| "non-utf8 string".to_string())
     }
 
-    fn f32s(&mut self) -> Result<Vec<f32>, String> {
+    pub(crate) fn f32s(&mut self) -> Result<Vec<f32>, String> {
         let n = self.u32()? as usize;
         let raw = self.take(n.checked_mul(4).ok_or("vector length overflow")?)?;
         Ok(raw
@@ -180,7 +242,14 @@ impl<'a> Cursor<'a> {
             .collect())
     }
 
-    fn done(&self) -> Result<(), String> {
+    pub(crate) fn stamp(&mut self) -> Result<Stamp, String> {
+        Ok(Stamp {
+            origin: self.str()?,
+            version: self.u64()?,
+        })
+    }
+
+    pub(crate) fn done(&self) -> Result<(), String> {
         if self.pos != self.bytes.len() {
             return Err(format!(
                 "trailing bytes in payload ({} of {})",
@@ -241,6 +310,53 @@ impl WalOp {
                 out.push(TAG_REMOVE_EXACT);
                 put_str(&mut out, prompt);
             }
+            WalOp::PutExactV {
+                prompt,
+                response,
+                stamp,
+            } => {
+                out.push(TAG_PUT_EXACT_V);
+                put_str(&mut out, prompt);
+                put_str(&mut out, response);
+                put_stamp(&mut out, stamp);
+            }
+            WalOp::PutObjectV {
+                object,
+                keys,
+                stamp,
+            } => {
+                out.push(TAG_PUT_OBJECT_V);
+                put_u64(&mut out, object.id);
+                out.push(object.is_document as u8);
+                put_str(&mut out, &object.text);
+                put_str(&mut out, &object.origin);
+                put_u32(&mut out, keys.len() as u32);
+                for (key_id, ctype, vector) in keys {
+                    put_u64(&mut out, *key_id);
+                    out.push(ctype.tag());
+                    put_f32s(&mut out, vector);
+                }
+                put_stamp(&mut out, stamp);
+            }
+            WalOp::RemoveExactV { prompt, stamp } => {
+                out.push(TAG_REMOVE_EXACT_V);
+                put_str(&mut out, prompt);
+                put_stamp(&mut out, stamp);
+            }
+            WalOp::Adopt { target, stamp } => {
+                out.push(TAG_ADOPT);
+                match target {
+                    AdoptTarget::Exact(key) => {
+                        out.push(ADOPT_EXACT);
+                        put_str(&mut out, key);
+                    }
+                    AdoptTarget::Object(id) => {
+                        out.push(ADOPT_OBJECT);
+                        put_u64(&mut out, *id);
+                    }
+                }
+                put_stamp(&mut out, stamp);
+            }
         }
         out
     }
@@ -291,6 +407,50 @@ impl WalOp {
                 request_json: c.str()?,
             },
             TAG_REMOVE_EXACT => WalOp::RemoveExact { prompt: c.str()? },
+            TAG_PUT_EXACT_V => WalOp::PutExactV {
+                prompt: c.str()?,
+                response: c.str()?,
+                stamp: c.stamp()?,
+            },
+            TAG_PUT_OBJECT_V => {
+                let id = c.u64()?;
+                let is_document = c.u8()? != 0;
+                let text = c.str()?;
+                let origin = c.str()?;
+                let nkeys = c.u32()? as usize;
+                let mut keys = Vec::with_capacity(nkeys.min(1024));
+                for _ in 0..nkeys {
+                    let key_id = c.u64()?;
+                    let ctype = CachedType::from_tag(c.u8()?)
+                        .ok_or_else(|| "bad cached-type tag".to_string())?;
+                    keys.push((key_id, ctype, c.f32s()?));
+                }
+                WalOp::PutObjectV {
+                    object: CacheObject {
+                        id,
+                        text,
+                        origin,
+                        is_document,
+                    },
+                    keys,
+                    stamp: c.stamp()?,
+                }
+            }
+            TAG_REMOVE_EXACT_V => WalOp::RemoveExactV {
+                prompt: c.str()?,
+                stamp: c.stamp()?,
+            },
+            TAG_ADOPT => {
+                let target = match c.u8()? {
+                    ADOPT_EXACT => AdoptTarget::Exact(c.str()?),
+                    ADOPT_OBJECT => AdoptTarget::Object(c.u64()?),
+                    t => return Err(format!("bad adopt-target tag {t}")),
+                };
+                WalOp::Adopt {
+                    target,
+                    stamp: c.stamp()?,
+                }
+            }
             t => return Err(format!("unknown op tag {t}")),
         };
         c.done()?;
@@ -559,10 +719,17 @@ mod tests {
     use super::*;
     use crate::util::prop::{forall, gen_text};
 
+    fn gen_stamp(r: &mut crate::util::rng::Rng) -> Stamp {
+        Stamp {
+            origin: gen_text(r, 2),
+            version: r.next_u64() >> 32,
+        }
+    }
+
     fn sample_ops(r: &mut crate::util::rng::Rng) -> Vec<WalOp> {
         let n = 1 + r.below(6);
         (0..n)
-            .map(|i| match r.below(6) {
+            .map(|i| match r.below(10) {
                 0 => WalOp::PutExact {
                     prompt: gen_text(r, 6),
                     response: gen_text(r, 6),
@@ -596,8 +763,43 @@ mod tests {
                     regen_count: r.below(4) as u32,
                     request_json: format!("{{\"user\":\"{}\"}}", gen_text(r, 1)),
                 },
-                _ => WalOp::RemoveExact {
+                5 => WalOp::RemoveExact {
                     prompt: gen_text(r, 6),
+                },
+                6 => WalOp::PutExactV {
+                    prompt: gen_text(r, 6),
+                    response: gen_text(r, 6),
+                    stamp: gen_stamp(r),
+                },
+                7 => WalOp::PutObjectV {
+                    object: CacheObject {
+                        id: r.next_u64() >> 12,
+                        text: gen_text(r, 8),
+                        origin: gen_text(r, 3),
+                        is_document: r.chance(0.5),
+                    },
+                    keys: (0..1 + r.below(3))
+                        .map(|k| {
+                            (
+                                r.next_u64() >> 12,
+                                CachedType::from_tag((k % 7) as u8).unwrap(),
+                                (0..8).map(|_| r.normal() as f32).collect(),
+                            )
+                        })
+                        .collect(),
+                    stamp: gen_stamp(r),
+                },
+                8 => WalOp::RemoveExactV {
+                    prompt: gen_text(r, 6),
+                    stamp: gen_stamp(r),
+                },
+                _ => WalOp::Adopt {
+                    target: if r.chance(0.5) {
+                        AdoptTarget::Exact(gen_text(r, 4))
+                    } else {
+                        AdoptTarget::Object(r.next_u64() >> 12)
+                    },
+                    stamp: gen_stamp(r),
                 },
             })
             .collect()

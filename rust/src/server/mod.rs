@@ -59,7 +59,8 @@
 //! /admin/cache` (index tier/rows/bytes + hit/miss counters), `DELETE
 //! /admin/cache?key=` / `DELETE /admin/cache` (invalidate one exact
 //! entry / clear everything — both journaled through the WAL), `GET
-//! /admin/breaker`, `POST /admin/config` (staged hot-reload), plus
+//! /admin/breaker`, `GET /admin/sync` (replication status; see
+//! [`crate::sync`]), `POST /admin/config` (staged hot-reload), plus
 //! `/health` and `/v1/metrics`. On the evented path the admin listener
 //! is multiplexed by the same epoll loop and answered inline, so it
 //! stays responsive while the data port sheds; admin connections are
@@ -145,6 +146,10 @@ pub struct ServerConfig {
     /// Bind address for the admin listener (`--admin-port`); `None`
     /// disables the admin surface.
     pub admin_bind: Option<String>,
+    /// Peer replication wiring (`--node-id`/`--sync-port`/`--peer`);
+    /// `None` (the default) starts no sync threads at all — see
+    /// [`crate::sync`].
+    pub sync: Option<crate::sync::SyncConfig>,
 }
 
 impl Default for ServerConfig {
@@ -161,6 +166,7 @@ impl Default for ServerConfig {
             rate_per_sec: 0.0,
             rate_burst: 16.0,
             admin_bind: None,
+            sync: None,
         }
     }
 }
@@ -177,6 +183,9 @@ pub struct ServerState {
     /// snapshot, so no request observes a half-applied config.
     ops: RwLock<Arc<OpsConfig>>,
     rate: RateLimiter,
+    /// Status view of the replication service, set by [`Server::start_with`]
+    /// when sync is configured; what `GET /admin/sync` reads.
+    sync: RwLock<Option<crate::sync::SyncHandle>>,
 }
 
 impl ServerState {
@@ -193,6 +202,7 @@ impl ServerState {
             inflight: AtomicUsize::new(0),
             ops: RwLock::new(Arc::new(ops)),
             rate: RateLimiter::new(),
+            sync: RwLock::new(None),
         }
     }
 
@@ -245,6 +255,19 @@ impl ServerState {
     /// Ready to take traffic: not draining and below the watermark.
     pub fn ready(&self) -> bool {
         !self.is_draining() && self.admits()
+    }
+
+    /// Publish the replication service's status handle (boot-time, once).
+    pub fn set_sync_handle(&self, handle: crate::sync::SyncHandle) {
+        *self.sync.write().unwrap_or_else(PoisonError::into_inner) = Some(handle);
+    }
+
+    /// The replication status view, when sync is configured.
+    pub fn sync_handle(&self) -> Option<crate::sync::SyncHandle> {
+        self.sync
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone()
     }
 
     pub(crate) fn set_draining(&self) {
@@ -540,8 +563,20 @@ pub fn route_admin(bridge: &Bridge, state: &ServerState, req: &HttpRequest) -> R
         ("GET", "/admin/cache") => admin_cache_stats(bridge),
         ("DELETE", "/admin/cache") => admin_cache_invalidate(bridge, query),
         ("GET", "/admin/breaker") => admin_breaker_snapshot(bridge),
+        ("GET", "/admin/sync") => admin_sync_status(state),
         ("POST", "/admin/config") => admin_config_reload(bridge, state, &req.body),
         _ => Reply::new(404, r#"{"error":"not found"}"#),
+    }
+}
+
+/// `GET /admin/sync`: replication status — node identity, peer wiring,
+/// write clock, per-origin high-water marks, and round/entry counters.
+/// `{"enabled":false}` on an unreplicated node (still 200: asking "is
+/// sync on?" is a valid question with a valid answer).
+fn admin_sync_status(state: &ServerState) -> Reply {
+    match state.sync_handle() {
+        Some(h) => Reply::new(200, h.status().to_string()),
+        None => Reply::new(200, r#"{"enabled":false}"#),
     }
 }
 
@@ -806,6 +841,8 @@ pub struct Server {
     inner: Inner,
     janitor_stop: Arc<AtomicBool>,
     janitor: Option<std::thread::JoinHandle<()>>,
+    /// Replication service, when configured; stopped before the WAL flush.
+    sync: Option<crate::sync::SyncService>,
 }
 
 impl Server {
@@ -833,6 +870,17 @@ impl Server {
             None => None,
         };
         let state = Arc::new(ServerState::from_config(&config));
+        // Replication starts (and its listener binds) before the
+        // transports so a bad --sync-port fails boot, and its status
+        // handle is published before any admin request can arrive.
+        let sync = match config.sync.clone() {
+            Some(sync_cfg) => {
+                let service = crate::sync::SyncService::start(bridge.clone(), sync_cfg)?;
+                state.set_sync_handle(service.handle());
+                Some(service)
+            }
+            None => None,
+        };
         let evented = match config.backend {
             ServerBackend::Auto => cfg!(target_os = "linux"),
             ServerBackend::Evented => true,
@@ -872,7 +920,23 @@ impl Server {
             inner,
             janitor_stop,
             janitor,
+            sync,
         })
+    }
+
+    /// The sync listener's bound address, when replication is configured
+    /// (resolves `--sync-port 0` for tests).
+    pub fn sync_addr(&self) -> Option<std::net::SocketAddr> {
+        self.sync.as_ref().and_then(|s| s.listen_addr())
+    }
+
+    /// Dial the configured peer and run one anti-entropy round now
+    /// (deterministic quiesce for tests and the CLI).
+    pub fn sync_now(&self) -> Result<crate::sync::RoundReport> {
+        match &self.sync {
+            Some(s) => s.run_round_now(),
+            None => bail!("replication is not configured"),
+        }
     }
 
     /// The `/ready` view, callable in-process.
@@ -893,6 +957,9 @@ impl Server {
         self.janitor_stop.store(true, Ordering::Relaxed);
         if let Some(j) = self.janitor.take() {
             let _ = j.join();
+        }
+        if let Some(mut s) = self.sync.take() {
+            s.stop();
         }
         if let Some(p) = self.bridge.persistence() {
             if let Err(e) = p.sync_wal() {

@@ -1,0 +1,742 @@
+//! Peer replication: anti-entropy sync of the semantic cache between
+//! bridge nodes (ROADMAP Open item 3, stage one — a two-node fleet).
+//!
+//! A cache hit earned on one bridge should be a hit everywhere. Each
+//! entry carries a [`Stamp`] (`origin` node id + `version` under that
+//! node's Lamport write clock); peers periodically exchange per-origin
+//! high-water marks and ship only the entries the other side has not
+//! seen, resolving conflicts with the deterministic symmetric tiebreaker
+//! ([`Stamp::beats`]). Applied remote entries are journaled through the
+//! receiver's own WAL, so replication survives restarts and compactions
+//! **without coordination**: each node compacts independently and a sync
+//! round never needs a peer's WAL history — only its present state.
+//!
+//! ## Wire format
+//!
+//! Frames reuse the WAL's record idiom (`persist/wal.rs`): length
+//! prefix, FNV-1a content checksum, little-endian throughout.
+//!
+//! ```text
+//! per frame:  [payload_len: u32 LE]
+//!             [crc:         u64 LE]        FNV-1a over the payload
+//!             [payload:     payload_len bytes]
+//!
+//! payload:    [msg tag: u8] then per message:
+//!   1 HELLO    [proto: u32] [origin: str]
+//!   2 SUMMARY  [n: u32] n x ([origin: str] [version: u64])
+//!   3 ENTRY    [entry tag: u8] ...
+//!   4 DONE     [shipped: u32]
+//!
+//! entry:
+//!   1 EXACT    [key: str] [response: str] [stamp]
+//!   2 TOMB     [key: str] [stamp]
+//!   3 OBJECT   [text: str] [origin_field: str] [is_document: u8]
+//!              [nkeys: u32] nkeys x ([ctype: u8] [vector: f32s])
+//!              [stamp]
+//!
+//! str   = [len: u32] [utf-8 bytes]          f32s = [n: u32] [n x f32 LE]
+//! stamp = [origin: str] [version: u64]
+//! ```
+//!
+//! Object vectors travel in **stored form** (pre-normalized rows read
+//! straight out of the sender's index), so the receiver inserts them
+//! verbatim — replicas are bit-identical and never re-embed.
+//!
+//! ## Session
+//!
+//! One round is one TCP connection, strictly turn-taking (no concurrent
+//! reads/writes, so plain blocking sockets suffice):
+//!
+//! 1. dialer → `HELLO`, acceptor → `HELLO` (protocol + distinct node ids)
+//! 2. dialer → `SUMMARY`, acceptor → `SUMMARY` (per-origin high-water marks)
+//! 3. acceptor streams `ENTRY`* + `DONE` (its delta vs the dialer's marks);
+//!    the dialer applies as it reads
+//! 4. dialer streams `ENTRY`* + `DONE`; the acceptor applies
+//!
+//! One bidirectional round therefore converges both nodes on everything
+//! either had at step 2. A round that dies mid-stream is safe: every
+//! applied entry was journaled before the next read, and the next round's
+//! high-water marks simply re-ship the tail.
+//!
+//! ## Scope and guarantees
+//!
+//! * **Opt-in and zero-cost when off** — no `--peer`/`--sync-port` means
+//!   this module's threads never start and the cache hot path carries no
+//!   replication state.
+//! * **Trusted network assumed** — the sync listener speaks an
+//!   unauthenticated binary protocol and binds a dedicated port; deploy
+//!   it on a private interface (unlike the loopback-only admin surface,
+//!   peers are usually not on the same host).
+//! * `clear` is **local** — a cleared node advertises empty high-water
+//!   marks and is re-seeded by its peer on the next round.
+//! * Quotas and exchange history are node-local by design; only the
+//!   semantic cache (objects, exact entries, tombstones) replicates.
+//!
+//! [`Stamp`]: crate::cache::Stamp
+//! [`Stamp::beats`]: crate::cache::Stamp::beats
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cache::{CachedType, Stamp, SyncApplied, SyncEntry};
+use crate::coordinator::Bridge;
+use crate::persist::wal::{put_stamp, put_str, put_u32, put_u64, Cursor};
+use crate::util::fnv1a;
+use crate::util::json::Json;
+
+/// Protocol version in `HELLO`; bumped on any wire-format change.
+pub const PROTO_VERSION: u32 = 1;
+/// Frame header: `payload_len: u32` + `crc: u64`.
+const FRAME_HEADER: usize = 4 + 8;
+/// Sanity cap on one frame's payload, matching the WAL's record cap.
+const MAX_FRAME: usize = 64 * 1024 * 1024;
+/// Per-socket read/write timeout: a wedged peer fails the round instead
+/// of hanging the sync thread forever.
+const IO_TIMEOUT: Duration = Duration::from_secs(20);
+
+const MSG_HELLO: u8 = 1;
+const MSG_SUMMARY: u8 = 2;
+const MSG_ENTRY: u8 = 3;
+const MSG_DONE: u8 = 4;
+
+const ENTRY_EXACT: u8 = 1;
+const ENTRY_TOMB: u8 = 2;
+const ENTRY_OBJECT: u8 = 3;
+
+// ------------------------------------------------------------- framing
+
+fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("sync frame of {} bytes exceeds the cap", payload.len()),
+        ));
+    }
+    let mut rec = Vec::with_capacity(FRAME_HEADER + payload.len());
+    rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    rec.extend_from_slice(&fnv1a(payload).to_le_bytes());
+    rec.extend_from_slice(payload);
+    stream.write_all(&rec)
+}
+
+fn read_frame(stream: &mut TcpStream) -> std::io::Result<Vec<u8>> {
+    let mut head = [0u8; FRAME_HEADER];
+    stream.read_exact(&mut head)?;
+    let len = u32::from_le_bytes(head[0..4].try_into().unwrap()) as usize;
+    let crc = u64::from_le_bytes(head[4..12].try_into().unwrap());
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "sync frame declares an insane length",
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload)?;
+    if fnv1a(&payload) != crc {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "sync frame checksum mismatch",
+        ));
+    }
+    Ok(payload)
+}
+
+// ------------------------------------------------------------ messages
+
+#[derive(Clone, Debug, PartialEq)]
+enum Msg {
+    Hello { proto: u32, origin: String },
+    Summary { hwms: Vec<(String, u64)> },
+    Entry(SyncEntry),
+    Done { shipped: u32 },
+}
+
+fn encode_entry(out: &mut Vec<u8>, entry: &SyncEntry) {
+    match entry {
+        SyncEntry::Exact {
+            key,
+            response,
+            stamp,
+        } => {
+            out.push(ENTRY_EXACT);
+            put_str(out, key);
+            put_str(out, response);
+            put_stamp(out, stamp);
+        }
+        SyncEntry::Tomb { key, stamp } => {
+            out.push(ENTRY_TOMB);
+            put_str(out, key);
+            put_stamp(out, stamp);
+        }
+        SyncEntry::Object {
+            text,
+            origin,
+            is_document,
+            stamp,
+            keys,
+        } => {
+            out.push(ENTRY_OBJECT);
+            put_str(out, text);
+            put_str(out, origin);
+            out.push(*is_document as u8);
+            put_u32(out, keys.len() as u32);
+            for (ctype, vector) in keys {
+                out.push(ctype.tag());
+                crate::persist::wal::put_f32s(out, vector);
+            }
+            put_stamp(out, stamp);
+        }
+    }
+}
+
+fn decode_entry(c: &mut Cursor<'_>) -> Result<SyncEntry, String> {
+    Ok(match c.u8()? {
+        ENTRY_EXACT => SyncEntry::Exact {
+            key: c.str()?,
+            response: c.str()?,
+            stamp: c.stamp()?,
+        },
+        ENTRY_TOMB => SyncEntry::Tomb {
+            key: c.str()?,
+            stamp: c.stamp()?,
+        },
+        ENTRY_OBJECT => {
+            let text = c.str()?;
+            let origin = c.str()?;
+            let is_document = c.u8()? != 0;
+            let nkeys = c.u32()? as usize;
+            let mut keys = Vec::with_capacity(nkeys.min(1024));
+            for _ in 0..nkeys {
+                let ctype = CachedType::from_tag(c.u8()?)
+                    .ok_or_else(|| "bad cached-type tag".to_string())?;
+                keys.push((ctype, c.f32s()?));
+            }
+            SyncEntry::Object {
+                text,
+                origin,
+                is_document,
+                stamp: c.stamp()?,
+                keys,
+            }
+        }
+        t => return Err(format!("unknown sync entry tag {t}")),
+    })
+}
+
+impl Msg {
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Msg::Hello { proto, origin } => {
+                out.push(MSG_HELLO);
+                put_u32(&mut out, *proto);
+                put_str(&mut out, origin);
+            }
+            Msg::Summary { hwms } => {
+                out.push(MSG_SUMMARY);
+                put_u32(&mut out, hwms.len() as u32);
+                for (origin, version) in hwms {
+                    put_str(&mut out, origin);
+                    put_u64(&mut out, *version);
+                }
+            }
+            Msg::Entry(entry) => {
+                out.push(MSG_ENTRY);
+                encode_entry(&mut out, entry);
+            }
+            Msg::Done { shipped } => {
+                out.push(MSG_DONE);
+                put_u32(&mut out, *shipped);
+            }
+        }
+        out
+    }
+
+    fn decode(payload: &[u8]) -> Result<Msg, String> {
+        let mut c = Cursor::new(payload);
+        let msg = match c.u8()? {
+            MSG_HELLO => Msg::Hello {
+                proto: c.u32()?,
+                origin: c.str()?,
+            },
+            MSG_SUMMARY => {
+                let n = c.u32()? as usize;
+                let mut hwms = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    hwms.push((c.str()?, c.u64()?));
+                }
+                Msg::Summary { hwms }
+            }
+            MSG_ENTRY => Msg::Entry(decode_entry(&mut c)?),
+            MSG_DONE => Msg::Done { shipped: c.u32()? },
+            t => return Err(format!("unknown sync msg tag {t}")),
+        };
+        c.done()?;
+        Ok(msg)
+    }
+}
+
+fn send(stream: &mut TcpStream, msg: &Msg) -> Result<()> {
+    write_frame(stream, &msg.encode()).map_err(|e| anyhow!("sync send: {e}"))
+}
+
+fn recv(stream: &mut TcpStream) -> Result<Msg> {
+    let payload = read_frame(stream).map_err(|e| anyhow!("sync recv: {e}"))?;
+    Msg::decode(&payload).map_err(|e| anyhow!("sync decode: {e}"))
+}
+
+// -------------------------------------------------------------- session
+
+/// What one anti-entropy round did, from the local node's perspective.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundReport {
+    /// Entries this node shipped to the peer.
+    pub shipped: usize,
+    /// Remote entries applied locally (won their tiebreaks).
+    pub applied: usize,
+    /// Remote entries received but stale (lost, or already present).
+    pub stale: usize,
+}
+
+fn send_delta(
+    bridge: &Bridge,
+    stream: &mut TcpStream,
+    peer_hwms: &HashMap<String, u64>,
+) -> Result<usize> {
+    let delta = bridge.cache().sync_delta(peer_hwms);
+    for entry in &delta {
+        send(stream, &Msg::Entry(entry.clone()))?;
+    }
+    send(
+        stream,
+        &Msg::Done {
+            shipped: delta.len() as u32,
+        },
+    )?;
+    Ok(delta.len())
+}
+
+fn recv_delta(bridge: &Bridge, stream: &mut TcpStream) -> Result<(usize, usize)> {
+    let (mut applied, mut stale) = (0usize, 0usize);
+    loop {
+        match recv(stream)? {
+            Msg::Entry(entry) => match bridge.cache().apply_sync_entry(entry)? {
+                SyncApplied::Applied => applied += 1,
+                SyncApplied::Stale => stale += 1,
+            },
+            Msg::Done { .. } => return Ok((applied, stale)),
+            other => bail!("unexpected sync message {other:?} in delta stream"),
+        }
+    }
+}
+
+/// Run one full session on an established connection. `dialer` selects
+/// which side of the turn-taking order this node plays.
+fn run_session(
+    bridge: &Bridge,
+    node_id: &str,
+    mut stream: TcpStream,
+    dialer: bool,
+) -> Result<RoundReport> {
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let _ = stream.set_nodelay(true);
+    let hello = Msg::Hello {
+        proto: PROTO_VERSION,
+        origin: node_id.to_string(),
+    };
+    let peer_hello = if dialer {
+        send(&mut stream, &hello)?;
+        recv(&mut stream)?
+    } else {
+        let h = recv(&mut stream)?;
+        send(&mut stream, &hello)?;
+        h
+    };
+    let Msg::Hello { proto, origin } = peer_hello else {
+        bail!("peer did not open with HELLO");
+    };
+    if proto != PROTO_VERSION {
+        bail!("peer speaks sync protocol {proto}, this node speaks {PROTO_VERSION}");
+    }
+    if origin == node_id {
+        bail!("peer has this node's id '{origin}' — each node needs a distinct --node-id");
+    }
+    let summary = Msg::Summary {
+        hwms: bridge.cache().sync_hwms().into_iter().collect(),
+    };
+    let peer_summary = if dialer {
+        send(&mut stream, &summary)?;
+        recv(&mut stream)?
+    } else {
+        let s = recv(&mut stream)?;
+        send(&mut stream, &summary)?;
+        s
+    };
+    let Msg::Summary { hwms } = peer_summary else {
+        bail!("peer did not follow HELLO with SUMMARY");
+    };
+    let peer_hwms: HashMap<String, u64> = hwms.into_iter().collect();
+    let (shipped, applied, stale) = if dialer {
+        let (applied, stale) = recv_delta(bridge, &mut stream)?;
+        let shipped = send_delta(bridge, &mut stream, &peer_hwms)?;
+        (shipped, applied, stale)
+    } else {
+        let shipped = send_delta(bridge, &mut stream, &peer_hwms)?;
+        let (applied, stale) = recv_delta(bridge, &mut stream)?;
+        (shipped, applied, stale)
+    };
+    Ok(RoundReport {
+        shipped,
+        applied,
+        stale,
+    })
+}
+
+/// Dial `peer` and run one anti-entropy round right now (the
+/// `llmbridge sync` one-shot, and the deterministic quiesce the
+/// convergence tests use). The bridge must have replication enabled.
+pub fn run_once(bridge: &Bridge, peer: &str) -> Result<RoundReport> {
+    let node_id = bridge
+        .cache()
+        .replication_node()
+        .ok_or_else(|| anyhow!("replication is off — boot with --node-id"))?
+        .to_string();
+    let stream = TcpStream::connect(peer).map_err(|e| anyhow!("sync dial {peer}: {e}"))?;
+    run_session(bridge, &node_id, stream, true)
+}
+
+// -------------------------------------------------------------- service
+
+/// How a [`SyncService`] connects to its fleet.
+#[derive(Clone, Debug)]
+pub struct SyncConfig {
+    /// This node's replication identity (must differ from every peer's).
+    pub node_id: String,
+    /// Port to accept peer sessions on (`0` = OS-assigned, for tests);
+    /// `None` = dial-only node.
+    pub listen_port: Option<u16>,
+    /// `host:port` of the peer to dial on the anti-entropy cadence;
+    /// `None` = accept-only node.
+    pub peer: Option<String>,
+    /// Anti-entropy cadence for the dialer thread.
+    pub interval: Duration,
+}
+
+struct Shared {
+    bridge: Arc<Bridge>,
+    cfg: SyncConfig,
+    stop: AtomicBool,
+    bound: Mutex<Option<SocketAddr>>,
+    last_error: Mutex<Option<String>>,
+}
+
+impl Shared {
+    fn finish_round(&self, outcome: Result<RoundReport>) {
+        let c = &self.bridge.telemetry().counters;
+        match outcome {
+            Ok(rep) => {
+                c.incr("sync_rounds_ok");
+                c.add("sync_entries_shipped", rep.shipped as u64);
+                c.add("sync_entries_applied", rep.applied as u64);
+                c.add("sync_entries_stale", rep.stale as u64);
+                *self.last_error.lock().unwrap() = None;
+            }
+            Err(e) => {
+                c.incr("sync_rounds_failed");
+                *self.last_error.lock().unwrap() = Some(e.to_string());
+            }
+        }
+    }
+}
+
+/// The replication runtime: an accept loop for peer-initiated rounds, a
+/// dialer thread on the anti-entropy cadence, or both. Constructed only
+/// when the operator configured replication — an unconfigured bridge
+/// never starts these threads.
+pub struct SyncService {
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl SyncService {
+    /// Bind the listener (if configured), then spawn the accept and
+    /// dialer threads. Fails fast on a bind error — a mistyped
+    /// `--sync-port` should kill boot, not surface rounds later.
+    pub fn start(bridge: Arc<Bridge>, cfg: SyncConfig) -> Result<SyncService> {
+        let listen = cfg.listen_port;
+        let dial = cfg.peer.is_some();
+        let shared = Arc::new(Shared {
+            bridge,
+            cfg,
+            stop: AtomicBool::new(false),
+            bound: Mutex::new(None),
+            last_error: Mutex::new(None),
+        });
+        let mut threads = Vec::new();
+        if let Some(port) = listen {
+            let listener = TcpListener::bind(("0.0.0.0", port))
+                .map_err(|e| anyhow!("sync listener bind port {port}: {e}"))?;
+            *shared.bound.lock().unwrap() = Some(listener.local_addr()?);
+            listener.set_nonblocking(true)?;
+            let s = Arc::clone(&shared);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("llmbridge-sync-accept".into())
+                    .spawn(move || accept_loop(s, listener))?,
+            );
+        }
+        if dial {
+            let s = Arc::clone(&shared);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("llmbridge-sync-dial".into())
+                    .spawn(move || dial_loop(s))?,
+            );
+        }
+        Ok(SyncService { shared, threads })
+    }
+
+    /// The listener's actual bound address (resolves port 0).
+    pub fn listen_addr(&self) -> Option<SocketAddr> {
+        *self.shared.bound.lock().unwrap()
+    }
+
+    /// Dial the configured peer and run one round synchronously,
+    /// counting it like a scheduled round. Tests use this as their
+    /// deterministic quiesce instead of waiting out the cadence.
+    pub fn run_round_now(&self) -> Result<RoundReport> {
+        let peer = self
+            .shared
+            .cfg
+            .peer
+            .clone()
+            .ok_or_else(|| anyhow!("no --peer configured"))?;
+        let outcome = run_once(&self.shared.bridge, &peer);
+        let report = match &outcome {
+            Ok(r) => Ok(*r),
+            Err(e) => Err(anyhow!("{e}")),
+        };
+        self.shared.finish_round(outcome);
+        report
+    }
+
+    /// The `/admin/sync` document: identity, wiring, live counters,
+    /// per-origin high-water marks, and the last round error if any.
+    pub fn status(&self) -> Json {
+        status_json(&self.shared)
+    }
+
+    /// A cheap cloneable view for the admin router, which outlives no
+    /// one and must not own the service's threads.
+    pub fn handle(&self) -> SyncHandle {
+        SyncHandle {
+            shared: Arc::clone(&self.shared),
+        }
+    }
+
+    /// Signal both threads and join them. Idempotent.
+    pub fn stop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for SyncService {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Status-only view of a running [`SyncService`] (see
+/// [`SyncService::handle`]); what `GET /admin/sync` reads.
+#[derive(Clone)]
+pub struct SyncHandle {
+    shared: Arc<Shared>,
+}
+
+impl SyncHandle {
+    /// Same document as [`SyncService::status`].
+    pub fn status(&self) -> Json {
+        status_json(&self.shared)
+    }
+}
+
+fn status_json(shared: &Shared) -> Json {
+    let c = &shared.bridge.telemetry().counters;
+    let cache = shared.bridge.cache();
+    let mut hwms: Vec<(String, u64)> = cache.sync_hwms().into_iter().collect();
+    hwms.sort();
+    Json::obj(vec![
+        ("enabled", Json::Bool(true)),
+        ("node", Json::str(shared.cfg.node_id.clone())),
+        (
+            "peer",
+            match &shared.cfg.peer {
+                Some(p) => Json::str(p.clone()),
+                None => Json::Null,
+            },
+        ),
+        (
+            "listen",
+            match *shared.bound.lock().unwrap() {
+                Some(a) => Json::str(a.to_string()),
+                None => Json::Null,
+            },
+        ),
+        (
+            "interval_ms",
+            Json::num(shared.cfg.interval.as_millis() as f64),
+        ),
+        ("clock", Json::num(cache.replication_clock() as f64)),
+        (
+            "hwms",
+            Json::Obj(
+                hwms.into_iter()
+                    .map(|(o, v)| (o, Json::num(v as f64)))
+                    .collect(),
+            ),
+        ),
+        ("rounds_ok", Json::num(c.get("sync_rounds_ok") as f64)),
+        (
+            "rounds_failed",
+            Json::num(c.get("sync_rounds_failed") as f64),
+        ),
+        (
+            "entries_shipped",
+            Json::num(c.get("sync_entries_shipped") as f64),
+        ),
+        (
+            "entries_applied",
+            Json::num(c.get("sync_entries_applied") as f64),
+        ),
+        (
+            "entries_stale",
+            Json::num(c.get("sync_entries_stale") as f64),
+        ),
+        (
+            "last_error",
+            match shared.last_error.lock().unwrap().clone() {
+                Some(e) => Json::str(e),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+fn accept_loop(shared: Arc<Shared>, listener: TcpListener) {
+    while !shared.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // The listener is non-blocking (for prompt shutdown);
+                // accepted sessions run blocking with per-op timeouts.
+                let _ = stream.set_nonblocking(false);
+                let outcome =
+                    run_session(&shared.bridge, &shared.cfg.node_id, stream, false);
+                shared.finish_round(outcome);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+}
+
+fn dial_loop(shared: Arc<Shared>) {
+    let step = Duration::from_millis(25);
+    loop {
+        // Sleep the cadence in small steps so stop() is prompt.
+        let mut slept = Duration::ZERO;
+        while slept < shared.cfg.interval {
+            if shared.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            std::thread::sleep(step);
+            slept += step;
+        }
+        if shared.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        if let Some(peer) = shared.cfg.peer.clone() {
+            let outcome = run_once(&shared.bridge, &peer);
+            shared.finish_round(outcome);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_encode_decode_roundtrip() {
+        let msgs = vec![
+            Msg::Hello {
+                proto: PROTO_VERSION,
+                origin: "node-a".into(),
+            },
+            Msg::Summary {
+                hwms: vec![("node-a".into(), 7), ("node-b".into(), 19)],
+            },
+            Msg::Entry(SyncEntry::Exact {
+                key: "what is a wal".into(),
+                response: "a log".into(),
+                stamp: Stamp {
+                    origin: "node-a".into(),
+                    version: 3,
+                },
+            }),
+            Msg::Entry(SyncEntry::Tomb {
+                key: "stale".into(),
+                stamp: Stamp {
+                    origin: "node-b".into(),
+                    version: 9,
+                },
+            }),
+            Msg::Entry(SyncEntry::Object {
+                text: "the cached answer".into(),
+                origin: "the prompt".into(),
+                is_document: true,
+                stamp: Stamp {
+                    origin: "node-a".into(),
+                    version: 12,
+                },
+                keys: vec![
+                    (CachedType::Prompt, vec![0.25, -0.5, 1.0]),
+                    (CachedType::Response, vec![0.0, 0.125, -1.0]),
+                ],
+            }),
+            Msg::Done { shipped: 42 },
+        ];
+        for m in msgs {
+            assert_eq!(Msg::decode(&m.encode()).as_ref(), Ok(&m));
+        }
+    }
+
+    #[test]
+    fn frame_rejects_corruption() {
+        // A frame whose checksum is wrong must be rejected by decode of
+        // the reader side; simulate via the raw codec.
+        let payload = Msg::Done { shipped: 1 }.encode();
+        let mut rec = Vec::new();
+        rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        rec.extend_from_slice(&(fnv1a(&payload) ^ 1).to_le_bytes());
+        rec.extend_from_slice(&payload);
+        // read_frame needs a TcpStream; exercise the checksum math the
+        // same way it does.
+        let len = u32::from_le_bytes(rec[0..4].try_into().unwrap()) as usize;
+        let crc = u64::from_le_bytes(rec[4..12].try_into().unwrap());
+        assert_eq!(len, payload.len());
+        assert_ne!(fnv1a(&rec[FRAME_HEADER..]), crc);
+    }
+}

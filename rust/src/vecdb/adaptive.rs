@@ -626,6 +626,21 @@ impl AdaptiveIndex {
         }
     }
 
+    /// Insert a row already in stored form (pre-normalized for cosine),
+    /// verbatim — the replication apply/replay path, where rows shipped or
+    /// journaled in stored form must land bit-identical on every replica.
+    /// Counts as churn exactly like [`VectorIndex::insert`].
+    pub(crate) fn insert_stored(&mut self, id: u64, row: &[f32]) -> Result<()> {
+        match &mut self.tier {
+            Tier::Flat(f) => f.insert_stored(id, row)?,
+            Tier::Ivf(i) => i.insert_stored(id, row)?,
+            Tier::IvfQ(q) => q.insert_stored(id, row)?,
+        }
+        self.epoch += 1;
+        self.churn_since_train += 1;
+        Ok(())
+    }
+
     // ----------------------------------------------------------- snapshot
 
     /// Durable image: the flat tier writes LBV2 unchanged (old readers

@@ -167,6 +167,21 @@ impl FlatIndex {
             slots,
         })
     }
+
+    /// Insert a row that is **already in stored form** (pre-normalized for
+    /// cosine), verbatim — no re-normalization. Replication applies peer
+    /// rows through this so replicas stay bit-identical: re-normalizing an
+    /// already-unit row is not an f32 no-op.
+    pub(crate) fn insert_stored(&mut self, id: u64, row: &[f32]) -> Result<()> {
+        if row.len() != self.dim {
+            bail!("dim mismatch: got {}, want {}", row.len(), self.dim);
+        }
+        let slot = self.ids.len();
+        self.ids.push(id);
+        self.data.extend_from_slice(row);
+        self.slots.insert(id, slot);
+        Ok(())
+    }
 }
 
 impl VectorIndex for FlatIndex {

@@ -1,0 +1,459 @@
+//! Two-node replication harness: bidirectional churn → anti-entropy
+//! round → bit-exact convergence (`replica_fingerprint` as the oracle),
+//! symmetric conflict tiebreaks, kill-and-restart mid-sync, the
+//! compaction-during-sync race, the version-0 (legacy corpus) upgrade
+//! path, and the zero-cost-when-off contract.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use llmbridge::cache::{GetFilter, SyncApplied};
+use llmbridge::coordinator::{Bridge, BridgeConfig};
+use llmbridge::persist::wal::{self, WalOp};
+use llmbridge::server::{Server, ServerConfig};
+use llmbridge::sync::{run_once, SyncConfig, SyncService};
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "llmbridge_replication_{name}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn node_config(dir: &Path, node: Option<&str>) -> BridgeConfig {
+    BridgeConfig {
+        data_dir: Some(dir.to_path_buf()),
+        node_id: node.map(String::from),
+        ..Default::default()
+    }
+}
+
+/// A durable bridge with a replication identity, sharing the test
+/// binary's engine.
+fn node_bridge(dir: &Path, node: &str) -> Arc<Bridge> {
+    Arc::new(
+        Bridge::from_engine(common::bridge().engine().clone(), node_config(dir, Some(node)))
+            .unwrap(),
+    )
+}
+
+/// Accept-only sync listener for `bridge` on an ephemeral port; returns
+/// the service (keep it alive) and the address peers dial.
+fn listener_for(bridge: &Arc<Bridge>) -> (SyncService, String) {
+    let service = SyncService::start(
+        bridge.clone(),
+        SyncConfig {
+            node_id: bridge.cache().replication_node().unwrap().to_string(),
+            listen_port: Some(0),
+            peer: None,
+            // Tests drive rounds explicitly; park the cadence out of the way.
+            interval: Duration::from_secs(3600),
+        },
+    )
+    .unwrap();
+    let addr = service.listen_addr().unwrap().to_string();
+    (service, addr)
+}
+
+/// One bidirectional round: `a` dials `b`'s listener.
+fn round(a: &Bridge, b: &Arc<Bridge>) -> llmbridge::sync::RoundReport {
+    let (_service, addr) = listener_for(b);
+    run_once(a, &addr).unwrap()
+}
+
+#[test]
+fn bidirectional_churn_converges_bit_exact() {
+    let (dir_a, dir_b) = (fresh_dir("churn_a"), fresh_dir("churn_b"));
+    let a = node_bridge(&dir_a, "node-a");
+    let b = node_bridge(&dir_b, "node-b");
+
+    // Disjoint churn on both sides: exact entries, semantic objects, and
+    // a remove (tombstone) each.
+    for i in 0..6 {
+        a.cache()
+            .put_exact(&format!("alpha question {i}"), &format!("alpha answer {i}"));
+        b.cache()
+            .put_exact(&format!("beta question {i}"), &format!("beta answer {i}"));
+    }
+    a.cache()
+        .put_interaction(
+            a.generator(),
+            "what makes the desert bloom after rain",
+            "dormant seeds germinate when moisture arrives",
+        )
+        .unwrap();
+    b.cache()
+        .put_interaction(
+            b.generator(),
+            "why do rivers meander across plains",
+            "sediment erosion and deposition bend the channel over time",
+        )
+        .unwrap();
+    a.cache().put_exact("alpha doomed", "soon removed");
+    assert!(a.cache().remove_exact("alpha doomed"));
+
+    let report = round(&a, &b);
+    assert!(report.shipped > 0 && report.applied > 0, "{report:?}");
+
+    let (fa, fb) = (a.cache().replica_fingerprint(), b.cache().replica_fingerprint());
+    assert!(!fa.is_empty());
+    assert_eq!(fa, fb, "replicas must be bit-exact after one round");
+
+    // A prompt cached only on A is a *semantic* hit on B, scored
+    // bit-identically (the vectors traveled; B never re-embedded).
+    let filter = GetFilter::default();
+    let query = "what makes the desert bloom after rain";
+    let hits_a = a.cache().get(a.generator(), query, &filter).unwrap();
+    let hits_b = b.cache().get(b.generator(), query, &filter).unwrap();
+    assert!(!hits_b.is_empty(), "cross-node semantic hit expected");
+    let view = |hits: &[llmbridge::cache::CacheHit]| -> Vec<(String, String, u64)> {
+        hits.iter()
+            .map(|h| (h.object.text.clone(), h.object.origin.clone(), h.score.to_bits()))
+            .collect()
+    };
+    assert_eq!(view(&hits_a), view(&hits_b));
+
+    // The tombstone replicated, not just the absence.
+    assert_eq!(b.cache().get_exact("alpha doomed"), None);
+
+    // Converged replicas have nothing left to ship.
+    let report = round(&a, &b);
+    assert_eq!((report.shipped, report.applied, report.stale), (0, 0, 0));
+}
+
+#[test]
+fn conflict_tiebreak_is_symmetric_and_deterministic() {
+    let (dir_a, dir_b) = (fresh_dir("conflict_a"), fresh_dir("conflict_b"));
+    let a = node_bridge(&dir_a, "node-a");
+    let b = node_bridge(&dir_b, "node-b");
+
+    // Same key written concurrently on both nodes at equal clock values:
+    // versions tie, so the lexicographically greater origin must win —
+    // on BOTH nodes, regardless of delivery order.
+    a.cache().put_exact("contested fact", "answer from a");
+    b.cache().put_exact("contested fact", "answer from b");
+    round(&a, &b);
+    assert_eq!(
+        a.cache().get_exact("contested fact").as_deref(),
+        Some("answer from b")
+    );
+    assert_eq!(
+        b.cache().get_exact("contested fact").as_deref(),
+        Some("answer from b")
+    );
+
+    // Higher version beats origin: A overwrites locally (its Lamport
+    // clock has observed B's version, so the new stamp is strictly
+    // higher) and must now win everywhere — a local overwrite is never
+    // silently undone by replication.
+    a.cache().put_exact("contested fact", "second thoughts from a");
+    round(&a, &b);
+    assert_eq!(
+        b.cache().get_exact("contested fact").as_deref(),
+        Some("second thoughts from a")
+    );
+    assert_eq!(
+        a.cache().replica_fingerprint(),
+        b.cache().replica_fingerprint()
+    );
+}
+
+#[test]
+fn kill_and_restart_mid_sync_then_converge() {
+    let (dir_a, dir_b) = (fresh_dir("kill_a"), fresh_dir("kill_b"));
+    let a = node_bridge(&dir_a, "node-a");
+
+    for i in 0..10 {
+        a.cache()
+            .put_exact(&format!("durable fact {i}"), &format!("value {i}"));
+    }
+    a.cache()
+        .put_interaction(a.generator(), "how do tides work", "lunar gravity pulls the ocean")
+        .unwrap();
+
+    // Simulate a round dying mid-stream: B applies only half the delta
+    // (each application journals through B's WAL), then the process dies.
+    {
+        let b = node_bridge(&dir_b, "node-b");
+        let delta = a.cache().sync_delta(&b.cache().sync_hwms());
+        assert!(delta.len() >= 4);
+        for entry in delta.into_iter().take(4) {
+            assert!(matches!(
+                b.cache().apply_sync_entry(entry).unwrap(),
+                SyncApplied::Applied
+            ));
+        }
+        // Dropped without graceful shutdown: the WAL tail is what's left.
+    }
+
+    // Restart: the half-applied entries survived their journaling; the
+    // next full round ships only the missing tail and converges.
+    let b = node_bridge(&dir_b, "node-b");
+    assert!(!b.cache().sync_hwms().is_empty(), "partial apply must survive restart");
+    round(&a, &b);
+    assert_eq!(
+        a.cache().replica_fingerprint(),
+        b.cache().replica_fingerprint()
+    );
+}
+
+#[test]
+fn compaction_between_rounds_preserves_convergence() {
+    let (dir_a, dir_b) = (fresh_dir("compact_a"), fresh_dir("compact_b"));
+    let a = node_bridge(&dir_a, "node-a");
+    let b = node_bridge(&dir_b, "node-b");
+
+    for i in 0..5 {
+        a.cache()
+            .put_exact(&format!("early fact {i}"), &format!("early value {i}"));
+    }
+    a.cache().put_exact("ephemeral fact", "will be tombstoned");
+    round(&a, &b);
+
+    // Each node compacts independently — coordination-free GC. The
+    // replicated entries, their stamps, and the tombstone below must all
+    // survive the fold into a snapshot.
+    assert!(b.compact_persistence().unwrap());
+    a.cache().remove_exact("ephemeral fact");
+    for i in 0..4 {
+        a.cache()
+            .put_exact(&format!("late fact {i}"), &format!("late value {i}"));
+    }
+    assert!(a.compact_persistence().unwrap());
+    round(&a, &b);
+    assert_eq!(
+        a.cache().replica_fingerprint(),
+        b.cache().replica_fingerprint()
+    );
+    assert_eq!(b.cache().get_exact("ephemeral fact"), None);
+
+    // Restart both off their compacted snapshots: state (stamps, floors,
+    // tombstones included) restores bit-exactly.
+    let fp = a.cache().replica_fingerprint();
+    drop(a);
+    drop(b);
+    let a = node_bridge(&dir_a, "node-a");
+    let b = node_bridge(&dir_b, "node-b");
+    assert_eq!(a.cache().replica_fingerprint(), fp);
+    assert_eq!(b.cache().replica_fingerprint(), fp);
+}
+
+#[test]
+fn legacy_corpus_adopts_and_replicates() {
+    let (dir_a, dir_b) = (fresh_dir("legacy_a"), fresh_dir("legacy_b"));
+
+    // A pre-replication deployment: no node id, legacy WAL records only.
+    {
+        let legacy = Bridge::from_engine(
+            common::bridge().engine().clone(),
+            node_config(&dir_a, None),
+        )
+        .unwrap();
+        legacy.cache().put_exact("legacy fact", "legacy answer");
+        legacy
+            .cache()
+            .put_interaction(
+                legacy.generator(),
+                "what did the old deployment cache",
+                "everything it served",
+            )
+            .unwrap();
+    }
+
+    // First boot with a node id: version-0 entries are adopted (fresh own
+    // stamps, journaled), so the whole legacy corpus becomes shippable.
+    let a = node_bridge(&dir_a, "node-a");
+    let hwm = a.cache().sync_hwms();
+    assert!(hwm.get("node-a").copied().unwrap_or(0) >= 2, "{hwm:?}");
+
+    let b = node_bridge(&dir_b, "node-b");
+    round(&a, &b);
+    assert_eq!(
+        b.cache().get_exact("legacy fact").as_deref(),
+        Some("legacy answer")
+    );
+    assert_eq!(
+        a.cache().replica_fingerprint(),
+        b.cache().replica_fingerprint()
+    );
+
+    // Adoption itself is WAL-durable: a further restart replays the
+    // Adopt records and reaches the same stamped state, issuing no new
+    // versions (the clock restarts from the persisted floor).
+    let fp = a.cache().replica_fingerprint();
+    let clock = a.cache().replication_clock();
+    drop(a);
+    let a = node_bridge(&dir_a, "node-a");
+    assert_eq!(a.cache().replica_fingerprint(), fp);
+    assert_eq!(a.cache().replication_clock(), clock);
+}
+
+#[test]
+fn replication_off_is_zero_cost_and_legacy_wal_shaped() {
+    let dir = fresh_dir("off");
+    {
+        let plain = Bridge::from_engine(
+            common::bridge().engine().clone(),
+            node_config(&dir, None),
+        )
+        .unwrap();
+        assert_eq!(plain.cache().replication_node(), None);
+        plain.cache().put_exact("plain fact", "plain answer");
+        plain
+            .cache()
+            .put_interaction(plain.generator(), "a plain prompt", "a plain response")
+            .unwrap();
+        plain.cache().put_exact("plain doomed", "x");
+        plain.cache().remove_exact("plain doomed");
+        assert!(plain.cache().sync_hwms().is_empty());
+    }
+
+    // The WAL a replication-off node writes contains only the legacy
+    // record catalogue — byte-compatible with every pre-replication
+    // reader, no stamps anywhere.
+    let wal_path = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .find(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("wal-"))
+        })
+        .expect("a WAL file");
+    let (ops, _report) = wal::recover(&wal_path).unwrap();
+    assert!(!ops.is_empty());
+    assert!(
+        ops.iter().all(|op| !matches!(
+            op,
+            WalOp::PutExactV { .. }
+                | WalOp::PutObjectV { .. }
+                | WalOp::RemoveExactV { .. }
+                | WalOp::Adopt { .. }
+        )),
+        "replication off must journal only legacy records"
+    );
+
+    // And that WAL restores on a replication-off boot, unchanged.
+    let plain = Bridge::from_engine(
+        common::bridge().engine().clone(),
+        node_config(&dir, None),
+    )
+    .unwrap();
+    assert_eq!(
+        plain.cache().get_exact("plain fact").as_deref(),
+        Some("plain answer")
+    );
+    assert_eq!(plain.cache().get_exact("plain doomed"), None);
+}
+
+#[test]
+fn server_sync_wiring_and_admin_status() {
+    let a = Arc::new(
+        Bridge::from_engine(
+            common::bridge().engine().clone(),
+            BridgeConfig {
+                node_id: Some("node-a".into()),
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let b = Arc::new(
+        Bridge::from_engine(
+            common::bridge().engine().clone(),
+            BridgeConfig {
+                node_id: Some("node-b".into()),
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    a.cache().put_exact("fleet fact", "served once, hit twice");
+
+    let server_b = Server::start_with(
+        b.clone(),
+        "127.0.0.1:0",
+        ServerConfig {
+            workers: 2,
+            admin_bind: Some("127.0.0.1:0".into()),
+            sync: Some(SyncConfig {
+                node_id: "node-b".into(),
+                listen_port: Some(0),
+                peer: None,
+                interval: Duration::from_secs(3600),
+            }),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let sync_addr = server_b.sync_addr().expect("sync listener bound");
+
+    let server_a = Server::start_with(
+        a.clone(),
+        "127.0.0.1:0",
+        ServerConfig {
+            workers: 2,
+            admin_bind: Some("127.0.0.1:0".into()),
+            sync: Some(SyncConfig {
+                node_id: "node-a".into(),
+                listen_port: None,
+                peer: Some(sync_addr.to_string()),
+                interval: Duration::from_secs(3600),
+            }),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+
+    let report = server_a.sync_now().unwrap();
+    assert!(report.shipped >= 1, "{report:?}");
+    assert_eq!(
+        b.cache().get_exact("fleet fact").as_deref(),
+        Some("served once, hit twice")
+    );
+
+    // /admin/sync reports identity, wiring, and the round that just ran.
+    let mut admin = common::HttpClient::connect(server_a.admin_addr.unwrap());
+    let (status, j) = admin.get("/admin/sync");
+    assert_eq!(status, 200);
+    assert_eq!(j.str_of("node").unwrap(), "node-a");
+    assert_eq!(j.str_of("peer").unwrap(), sync_addr.to_string());
+    assert!(j.get("rounds_ok").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+    assert!(j.get("entries_shipped").and_then(|v| v.as_f64()).unwrap() >= 1.0);
+
+    // sync_* counters ride the ordinary metrics surface.
+    let mut data = common::HttpClient::connect(server_a.addr);
+    let (status, metrics) = data.get("/v1/metrics");
+    assert_eq!(status, 200);
+    assert!(metrics.to_string().contains("sync_rounds_ok"));
+
+    server_a.stop();
+    server_b.stop();
+
+    // An unreplicated server answers the same route with enabled:false.
+    let plain = Arc::new(
+        Bridge::from_engine(common::bridge().engine().clone(), BridgeConfig::default())
+            .unwrap(),
+    );
+    let server_plain = Server::start_with(
+        plain,
+        "127.0.0.1:0",
+        ServerConfig {
+            workers: 2,
+            admin_bind: Some("127.0.0.1:0".into()),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let mut admin = common::HttpClient::connect(server_plain.admin_addr.unwrap());
+    let (status, j) = admin.get("/admin/sync");
+    assert_eq!(status, 200);
+    assert_eq!(j.get("enabled").and_then(|v| v.as_bool()), Some(false));
+    server_plain.stop();
+}

@@ -14,12 +14,15 @@
 # release-mode server stress pass (the evented-loop suite: 1k+ concurrent
 # keep-alive connections, connection churn, induced overload/shedding —
 # plus the ops-resilience suite: panic isolation, breaker trips,
-# rate-limit hot-reload, admin surface — debug-mode timing hides races
-# the optimized loop would hit), then
+# rate-limit hot-reload, admin surface — plus the two-node replication
+# convergence harness — debug-mode timing hides races the optimized loop
+# would hit), then
 # cargo fmt --check, cargo clippy --workspace -D warnings, rustdoc with
 # -D warnings (the docs gate — broken intra-doc links and malformed docs
-# fail the build, so module docs can't rot), and a `--features pjrt`
-# type-check of the engine path against the stub.
+# fail the build, so module docs can't rot), a pure-shell markdown link
+# check over README.md/ROADMAP.md/docs/ (relative link targets must
+# exist — the same can't-rot contract for the prose docs), and a
+# `--features pjrt` type-check of the engine path against the stub.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -51,8 +54,8 @@ cargo test --workspace -q
 echo "==> force-scalar: LLMBRIDGE_FORCE_SCALAR=1 cargo test -q (kernel fallback gate)"
 LLMBRIDGE_FORCE_SCALAR=1 cargo test --workspace -q
 
-echo "==> server stress: cargo test --release --test server_evented --test server_http --test server_ops"
-cargo test --release --test server_evented --test server_http --test server_ops -q
+echo "==> server stress: cargo test --release --test server_evented --test server_http --test server_ops --test replication"
+cargo test --release --test server_evented --test server_http --test server_ops --test replication -q
 
 echo "==> cargo fmt --check"
 cargo fmt --all -- --check
@@ -62,6 +65,32 @@ cargo clippy --workspace --all-targets -- -D warnings
 
 echo "==> cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+echo "==> markdown link check (README.md, ROADMAP.md, docs/)"
+# Pure shell + grep/sed: every relative inline-link target must exist on
+# disk, resolved against the file that contains it. External URLs and
+# in-page #fragments are skipped; a target's own #anchor is stripped
+# before the existence check.
+link_fail=0
+for doc in "$ROOT/README.md" "$ROOT/ROADMAP.md" "$ROOT"/docs/*.md; do
+  [[ -f "$doc" ]] || continue
+  doc_dir="$(dirname "$doc")"
+  while IFS= read -r target; do
+    case "$target" in
+      http://*|https://*|mailto:*|"#"*) continue ;;
+    esac
+    rel="${target%%#*}"
+    [[ -n "$rel" ]] || continue
+    if [[ ! -e "$doc_dir/$rel" ]]; then
+      echo "ci.sh: broken link in ${doc#"$ROOT"/}: ($target)" >&2
+      link_fail=1
+    fi
+  done < <(grep -o '\[[^]]*\]([^)]*)' "$doc" | sed 's/^\[[^]]*\](\([^)]*\))$/\1/')
+done
+if [[ "$link_fail" -ne 0 ]]; then
+  echo "ci.sh: markdown link check failed" >&2
+  exit 1
+fi
 
 echo "==> cargo check --features pjrt (engine path vs the vendored xla stub)"
 cargo check --features pjrt --all-targets
