@@ -1,0 +1,76 @@
+//! Open-loop scenario matrix bench: runs every scenario in
+//! `scenario::default_matrix` against the real HTTP server and writes
+//! per-scenario results (p50/p99 measured from the *scheduled* arrival,
+//! cost per 1k requests, cache hit rate, shed rate by reason, SLO
+//! violations during the reconfiguration cutover window, the
+//! old-or-new-snapshot invariant tally) to the path in
+//! `LLMBRIDGE_BENCH_JSON` — `scripts/bench.sh` lands it in
+//! `BENCH_scenarios.json` (ROADMAP.md §Perf trajectory).
+//!
+//! `LLMBRIDGE_BENCH_SMOKE=1` shrinks to the reduced corpus the CI gate
+//! (`tests/scenarios.rs`) uses; full mode runs 5-second legs with up to
+//! 4000 events per scenario. Load levels are multiples of a calibrated
+//! closed-loop capacity, so the matrix stresses a laptop and a CI runner
+//! by the same *relative* amounts.
+
+mod bench_common;
+
+use llmbridge::scenario::{default_matrix, run_matrix, RunOptions};
+use llmbridge::server::ServerBackend;
+use llmbridge::util::bench::{smoke_mode, BenchReport};
+use llmbridge::util::json::Json;
+
+fn main() {
+    let engine = bench_common::engine();
+    let backend = if cfg!(target_os = "linux") {
+        ServerBackend::Evented
+    } else {
+        ServerBackend::Threaded
+    };
+    let opts = RunOptions::new(backend, smoke_mode());
+
+    let outcomes = run_matrix(&engine, &default_matrix(), &opts).expect("scenario matrix");
+
+    let mut report = BenchReport::new();
+    for o in &outcomes {
+        println!(
+            "scenario {:<14} offered {:>7.0} req/s  served {:>5}  shed {:>5} ({:>4.1}%)  \
+             p50 {:>7} us  p99 {:>7} us  cost/1k ${:>8.4}  hit {:>5.1}%",
+            o.name,
+            o.offered_rps,
+            o.served,
+            o.shed,
+            o.shed_rate() * 100.0,
+            o.p50_us,
+            o.p99_us,
+            o.cost_per_1k_usd,
+            o.cache_hit_rate * 100.0
+        );
+        if let Some(inv) = &o.invariant {
+            println!(
+                "scenario {:<14} invariant: checked {} old {} new {} cache {} mixed {}",
+                o.name, inv.checked, inv.old_only, inv.new_only, inv.cache_only, inv.mixed
+            );
+            assert_eq!(inv.mixed, 0, "half-applied config observed under load");
+        }
+        report.push(&format!("scenarios/{}", o.name), o.to_json());
+    }
+    report.push(
+        "scenarios/meta",
+        Json::obj(vec![
+            ("smoke", Json::Bool(smoke_mode())),
+            (
+                "backend",
+                Json::str(if matches!(backend, ServerBackend::Evented) {
+                    "evented"
+                } else {
+                    "threaded"
+                }),
+            ),
+            ("count", Json::num(outcomes.len() as f64)),
+        ]),
+    );
+    report.write_env("LLMBRIDGE_BENCH_JSON");
+
+    engine.shutdown();
+}

@@ -39,7 +39,10 @@ pub struct BridgeConfig {
     /// each response (the WhatsApp buttons; async in production, sync here
     /// for determinism).
     pub prefetch_followups: bool,
-    /// Which model generation the delegated service types draw from.
+    /// Which model generation the delegated service types draw from at
+    /// boot. Hot-swappable at runtime via [`Bridge::set_generation`]
+    /// (`POST /admin/config {"generation": "old"|"new"}`); this field
+    /// only seeds the live cell.
     pub generation: Generation,
     /// Memoize completions (replay accelerator; see Generator docs).
     pub memoize: bool,
@@ -142,7 +145,30 @@ pub struct Bridge {
     persist: Option<Arc<Persistence>>,
     /// Per-model circuit breaker guarding generator execution (RouteStage).
     pub(crate) breaker: crate::ops::CircuitBreaker,
+    /// Live model-pool generation (0 = Old, 1 = New), hot-swappable via
+    /// `POST /admin/config {"generation": ...}`. Each request loads this
+    /// exactly once and threads the loaded value through both `escalate`
+    /// and `lower`, so a concurrent swap can never produce a response
+    /// mixing the two pools — every response is consistent with either
+    /// the pre- or post-swap snapshot. `config.generation` remains the
+    /// boot value only.
+    generation: std::sync::atomic::AtomicU8,
     pub config: BridgeConfig,
+}
+
+fn generation_to_u8(g: Generation) -> u8 {
+    match g {
+        Generation::Old => 0,
+        Generation::New => 1,
+    }
+}
+
+fn generation_from_u8(v: u8) -> Generation {
+    if v == 0 {
+        Generation::Old
+    } else {
+        Generation::New
+    }
 }
 
 impl Bridge {
@@ -315,6 +341,7 @@ impl Bridge {
             quotas: RwLock::new(quotas),
             persist,
             breaker,
+            generation: std::sync::atomic::AtomicU8::new(generation_to_u8(config.generation)),
             config,
         })
     }
@@ -347,6 +374,22 @@ impl Bridge {
     /// The per-model circuit breaker (admin surface + route stage).
     pub fn breaker(&self) -> &crate::ops::CircuitBreaker {
         &self.breaker
+    }
+
+    /// The live model-pool generation the delegated service types draw
+    /// from. Loaded once per request (see `resolve_with`), so readers see
+    /// either the pre- or post-swap pool, never a mix.
+    pub fn generation(&self) -> Generation {
+        generation_from_u8(self.generation.load(std::sync::atomic::Ordering::Acquire))
+    }
+
+    /// Atomically swap the live model-pool generation. In-flight requests
+    /// finish on the generation they loaded at admission; requests
+    /// admitted after the swap observe the new one. There is no
+    /// intermediate state to observe.
+    pub fn set_generation(&self, g: Generation) {
+        self.generation
+            .store(generation_to_u8(g), std::sync::atomic::Ordering::Release);
     }
 
     pub fn history(&self, user: &str, conversation: &str) -> Vec<Message> {
@@ -404,12 +447,15 @@ impl Bridge {
                 .ok_or(BridgeError::UnknownRequest(request_id))?;
             (e.request.clone(), e.regen_count + 1)
         };
+        // One generation load for the whole regeneration: escalate and
+        // resolve must agree even if an admin swap lands between them.
+        let generation = self.generation();
         req.service_type = match new_service_type {
             Some(st) => st,
-            None => router::escalate(&req.service_type, self.config.generation),
+            None => router::escalate(&req.service_type, generation),
         };
         self.telemetry.counters.incr("regenerations");
-        let resp = self.resolve(&req, count)?;
+        let resp = self.resolve_with(&req, count, generation)?;
         self.record_exchange(resp.metadata.request_id, req, count);
         Ok(resp)
     }
@@ -420,8 +466,21 @@ impl Bridge {
     /// semantics live in the lowered [`router::ServicePolicy`]; all model
     /// choice in the routing policy it carries.
     fn resolve(&self, req: &Request, regen_count: u32) -> Result<Response, BridgeError> {
+        self.resolve_with(req, regen_count, self.generation())
+    }
+
+    /// `resolve` with an explicitly threaded generation: the caller loads
+    /// the live generation exactly once, so every model choice this
+    /// request makes (the lowered policy is the complete routing table)
+    /// comes from one consistent snapshot even while an admin swap races.
+    fn resolve_with(
+        &self,
+        req: &Request,
+        regen_count: u32,
+        generation: Generation,
+    ) -> Result<Response, BridgeError> {
         self.telemetry.counters.incr("requests");
-        let policy = router::lower(&req.service_type, self.config.generation, regen_count);
+        let policy = router::lower(&req.service_type, generation, regen_count);
         let mut cx = RequestCtx::new(req, regen_count, policy);
 
         let stages: [&dyn Stage; 3] = [&CacheStage, &ContextStage, &RouteStage];

@@ -250,7 +250,7 @@ pub struct Fig1Row {
 pub fn fig1(bridge: &Bridge, seed: u64, limit: Option<usize>) -> Result<Vec<Fig1Row>> {
     let conv = whatsapp::fig1_conversation(seed);
     let convs = vec![conv];
-    let model = answer_model(bridge.config.generation);
+    let model = answer_model(bridge.generation());
     let ks = [0usize, 1, 5, 10, 50];
     let mut runs = Vec::new();
     for &k in &ks {
@@ -317,7 +317,7 @@ pub fn fig45(
     generation: Generation,
     limit: Option<usize>,
 ) -> Result<Fig45Output> {
-    assert_eq!(bridge.config.generation, generation, "bridge generation");
+    assert_eq!(bridge.generation(), generation, "bridge generation");
     let convs = whatsapp::dataset_d(seed);
     let (m1, m2, verifier) = fig45_models(generation);
 
@@ -388,7 +388,7 @@ pub struct Fig6Output {
 
 pub fn fig6(bridge: &Bridge, seed: u64, limit: Option<usize>) -> Result<Fig6Output> {
     let convs = whatsapp::dataset_d(seed);
-    let model = answer_model(bridge.config.generation);
+    let model = answer_model(bridge.generation());
     let k0 = replay(bridge, &convs, &Strategy::FixedModel { model, k: 0 }, limit)?;
     let k1 = replay(bridge, &convs, &Strategy::FixedModel { model, k: 1 }, limit)?;
     let k5 = replay(bridge, &convs, &Strategy::FixedModel { model, k: 5 }, limit)?;
@@ -545,7 +545,7 @@ pub fn ablation_threshold(
     thresholds: &[f64],
     limit: Option<usize>,
 ) -> Result<Vec<AblationRow>> {
-    let generation = bridge.config.generation;
+    let generation = bridge.generation();
     let convs = whatsapp::dataset_d(seed);
     let (m1, m2, verifier) = fig45_models(generation);
     let m2_only = replay(bridge, &convs, &Strategy::FixedModel { model: m2, k: 5 }, limit)?;

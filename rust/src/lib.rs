@@ -66,6 +66,7 @@ pub mod persist;
 pub mod queuing;
 pub mod router;
 pub mod runtime;
+pub mod scenario;
 pub mod server;
 pub mod sync;
 pub mod telemetry;

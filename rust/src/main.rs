@@ -19,6 +19,7 @@
 //! llmbridge warm    [--artifacts DIR]        # load corpus into the cache
 //! llmbridge models                            # print the model pool
 //! llmbridge probe-backend [--text "..."]      # backend fingerprint (determinism probe)
+//! llmbridge trace [--seed N]                  # workload/trace fingerprints (determinism probe)
 //! ```
 //!
 //! The default build serves from the deterministic pure-Rust backend (no
@@ -327,6 +328,70 @@ fn main() -> Result<()> {
             }
             engine.shutdown();
         }
+        "trace" => {
+            // Print deterministic fingerprints of every synthetic
+            // workload: the two seed workloads, the static corpus, and
+            // each scenario trace in the standing matrix.
+            // `tests/workload_determinism.rs` runs this twice in separate
+            // processes and diffs the output byte for byte — same seed
+            // must mean the same traffic, or every scenario number
+            // becomes incomparable across machines and runs.
+            use llmbridge::scenario::{default_matrix, tenants_fingerprint, ArrivalProcess, Trace};
+            use llmbridge::util::fnv1a;
+            use llmbridge::workload::{classroom, whatsapp};
+            let seed = args.u64_or("seed", 42);
+
+            let mut buf = String::new();
+            for conv in whatsapp::dataset_d(seed) {
+                for q in &conv.queries {
+                    buf.push_str(&conv.user);
+                    buf.push('|');
+                    buf.push_str(&conv.id);
+                    buf.push('|');
+                    buf.push_str(&q.text);
+                    buf.push('\n');
+                }
+            }
+            println!("whatsapp {seed} {:016x}", fnv1a(buf.as_bytes()));
+
+            buf.clear();
+            for r in classroom::generate(seed, 30, 7, 500) {
+                buf.push_str(&format!(
+                    "{}|{}|{}|{}|{}\n",
+                    r.student,
+                    r.course,
+                    r.day,
+                    r.model.as_str(),
+                    r.prompt
+                ));
+            }
+            println!("classroom {seed} {:016x}", fnv1a(buf.as_bytes()));
+
+            buf.clear();
+            for article in corpus::full_corpus() {
+                buf.push_str(&article.title);
+                buf.push('|');
+                buf.push_str(&article.text);
+                buf.push('\n');
+            }
+            println!("corpus {:016x}", fnv1a(buf.as_bytes()));
+
+            for sc in default_matrix() {
+                let trace = Trace::generate(
+                    seed ^ fnv1a(sc.name.as_bytes()),
+                    &sc.tenants,
+                    &ArrivalProcess::Poisson { rps: 80.0 },
+                    std::time::Duration::from_secs(1),
+                );
+                println!(
+                    "scenario {} {:016x} {} {:016x}",
+                    sc.name,
+                    trace.fingerprint,
+                    trace.events.len(),
+                    tenants_fingerprint(&sc.tenants)
+                );
+            }
+        }
         "models" => {
             let rows: Vec<Json> = POOL
                 .iter()
@@ -345,7 +410,7 @@ fn main() -> Result<()> {
         }
         _ => {
             eprintln!(
-                "usage: llmbridge <serve|sync|ask|warm|models|probe-backend> [--artifacts DIR] \
+                "usage: llmbridge <serve|sync|ask|warm|models|probe-backend|trace> [--artifacts DIR] \
                  [--service TYPE] [--prompt TEXT] [--bind ADDR] [--workers N] \
                  [--generation old|new] [--prefetch] [--warm] \
                  [--data-dir DIR] [--compact-wal-bytes N] \

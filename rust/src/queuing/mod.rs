@@ -7,8 +7,15 @@
 //! per group is in flight at a time. `pop` hands out the head of some group
 //! that has no in-flight message; `ack` completes it (removing it) and
 //! unblocks the group; `nack` returns it to the head for redelivery.
+//!
+//! Delivery across groups is round-robin fair: the scan for the next
+//! ready group starts strictly *after* the last-delivered group (wrapping),
+//! so a continuously-refilled lexicographically-early group can never
+//! starve a later one — a first-ready scan over the `BTreeMap` would
+//! (see `no_ready_group_starves_under_multi_group_churn`).
 
 use std::collections::{BTreeMap, VecDeque};
+use std::ops::Bound::{Excluded, Unbounded};
 use std::sync::{Condvar, Mutex};
 
 #[derive(Clone, Debug, PartialEq)]
@@ -27,6 +34,32 @@ struct Inner<T> {
     groups: BTreeMap<String, GroupQueue<T>>,
     next_id: u64,
     closed: bool,
+    /// Last group a message was delivered from; the next scan starts
+    /// strictly after it (wrapping) so delivery rotates across groups.
+    /// May name a since-removed group — `range` handles that fine.
+    cursor: Option<String>,
+}
+
+impl<T> Inner<T> {
+    /// The next group with a ready head, rotating from the cursor.
+    fn next_ready(&self) -> Option<String> {
+        fn ready<T>(g: &GroupQueue<T>) -> bool {
+            !g.in_flight && !g.messages.is_empty()
+        }
+        if let Some(cur) = &self.cursor {
+            if let Some((k, _)) = self
+                .groups
+                .range::<String, _>((Excluded(cur), Unbounded))
+                .find(|(_, g)| ready(g))
+            {
+                return Some(k.clone());
+            }
+        }
+        self.groups
+            .iter()
+            .find(|(_, g)| ready(g))
+            .map(|(k, _)| k.clone())
+    }
 }
 
 /// Multi-group FIFO with per-group exclusive delivery.
@@ -48,6 +81,7 @@ impl<T> FifoQueue<T> {
                 groups: BTreeMap::new(),
                 next_id: 1,
                 closed: false,
+                cursor: None,
             }),
             cond: Condvar::new(),
         }
@@ -119,13 +153,8 @@ impl<T> FifoQueue<T> {
     {
         let mut inner = self.inner.lock().unwrap();
         loop {
-            // Find a group with a ready head and nothing in flight.
-            let candidate = inner
-                .groups
-                .iter()
-                .find(|(_, g)| !g.in_flight && !g.messages.is_empty())
-                .map(|(k, _)| k.clone());
-            if let Some(group) = candidate {
+            if let Some(group) = inner.next_ready() {
+                inner.cursor = Some(group.clone());
                 let g = inner.groups.get_mut(&group).unwrap();
                 g.in_flight = true;
                 return g.messages.front().cloned();
@@ -143,12 +172,9 @@ impl<T> FifoQueue<T> {
         T: Clone,
     {
         let mut inner = self.inner.lock().unwrap();
-        let candidate = inner
-            .groups
-            .iter()
-            .find(|(_, g)| !g.in_flight && !g.messages.is_empty())
-            .map(|(k, _)| k.clone());
+        let candidate = inner.next_ready();
         candidate.map(|group| {
+            inner.cursor = Some(group.clone());
             let g = inner.groups.get_mut(&group).unwrap();
             g.in_flight = true;
             g.messages.front().cloned().unwrap()
@@ -279,6 +305,101 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         q.close();
         assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn no_ready_group_starves_under_multi_group_churn() {
+        // Adversarial schedule for a first-ready scan: the delivered
+        // group is refilled *before* it is acked, so it is ready again
+        // by the next pop. Without the rotation cursor, the
+        // lexicographically first group would be delivered every single
+        // time and the others would starve forever; with it, delivery
+        // must visit every ready group once per rotation.
+        let q = FifoQueue::new();
+        let groups = ["alpha", "beta", "gamma", "zeta"];
+        for g in groups {
+            q.push(g, 0);
+        }
+        let mut counts: BTreeMap<String, u32> = BTreeMap::new();
+        let rounds = 40u32;
+        for step in 0..rounds {
+            let m = q.pop().unwrap();
+            q.push(&m.group, step + 1);
+            q.ack(m.id, &m.group);
+            *counts.entry(m.group).or_insert(0) += 1;
+        }
+        for g in groups {
+            let served = counts.get(g).copied().unwrap_or(0);
+            let fair_share = rounds / groups.len() as u32;
+            assert!(
+                served >= fair_share - 1,
+                "group {g} served {served}/{rounds} (fair share {fair_share}): starved"
+            );
+        }
+    }
+
+    #[test]
+    fn nack_redelivers_at_head_in_order() {
+        // A nacked message comes back *at the head*: the group's FIFO
+        // order survives redelivery, and later messages stay blocked
+        // behind it until it is finally acked.
+        let q = FifoQueue::new();
+        q.push("u1", 10);
+        q.push("u1", 20);
+        q.push("u1", 30);
+        let first = q.try_pop().unwrap();
+        assert_eq!(first.payload, 10);
+        assert!(q.nack(first.id, "u1"));
+        let mut drained = Vec::new();
+        while let Some(m) = q.try_pop() {
+            drained.push((m.id, m.payload));
+            q.ack(m.id, "u1");
+        }
+        assert_eq!(
+            drained,
+            vec![(first.id, 10), (first.id + 1, 20), (first.id + 2, 30)],
+            "redelivery must replay the nacked head first, then the rest in order"
+        );
+    }
+
+    #[test]
+    fn close_racing_concurrent_pops_drains_then_none() {
+        // close() must not drop queued work: consumers racing the close
+        // drain every message exactly once, then every blocked pop
+        // returns None.
+        let q: Arc<FifoQueue<u32>> = Arc::new(FifoQueue::new());
+        let seen = Arc::new(Mutex::new(Vec::<u32>::new()));
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let q = q.clone();
+            let seen = seen.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Some(m) = q.pop() {
+                    seen.lock().unwrap().push(m.payload);
+                    q.ack(m.id, &m.group);
+                }
+            }));
+        }
+        for i in 0..200u32 {
+            q.push(&format!("g{}", i % 7), i);
+            if i == 100 {
+                // Let consumers race the producer mid-stream.
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        q.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut seen = seen.lock().unwrap().clone();
+        seen.sort_unstable();
+        assert_eq!(
+            seen,
+            (0..200).collect::<Vec<_>>(),
+            "every message delivered exactly once before pops observed None"
+        );
+        assert!(q.is_empty());
+        assert!(q.pop().is_none(), "post-drain pop returns None immediately");
     }
 
     #[test]

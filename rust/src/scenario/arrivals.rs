@@ -1,0 +1,144 @@
+//! Arrival processes for the open-loop engine.
+//!
+//! An arrival process turns a duration into a deterministic list of
+//! *scheduled* arrival offsets — the driver sends each request at its
+//! offset regardless of how the server is doing, and latency is measured
+//! from the schedule, so a melting server cannot slow the clock down and
+//! hide its own queueing delay (no coordinated omission).
+//!
+//! Two processes, per "Introducing LLMs as the Next Challenging Internet
+//! Traffic Source" (PAPERS.md): homogeneous [`ArrivalProcess::Poisson`]
+//! and the non-homogeneous [`ArrivalProcess::DiurnalBurst`], a compressed
+//! "day" whose rate swings sinusoidally between a base and a peak
+//! (sampled by Lewis thinning at the peak rate, so the realized process
+//! is exactly Poisson with the time-varying intensity).
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// How request arrivals are distributed over a scenario's duration.
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson: exponential inter-arrival times at `rps`.
+    Poisson { rps: f64 },
+    /// Non-homogeneous Poisson: intensity swings from `base_rps` up to
+    /// `peak_rps` and back over `period` (one compressed diurnal cycle),
+    /// peaking mid-period.
+    DiurnalBurst {
+        base_rps: f64,
+        peak_rps: f64,
+        period: Duration,
+    },
+}
+
+impl ArrivalProcess {
+    /// Mean offered rate over one period, in requests per second.
+    pub fn mean_rps(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rps } => *rps,
+            // The sin^2 profile averages to the midpoint.
+            ArrivalProcess::DiurnalBurst {
+                base_rps, peak_rps, ..
+            } => 0.5 * (base_rps + peak_rps),
+        }
+    }
+
+    /// Deterministic arrival offsets in `[0, duration)`, sorted ascending.
+    pub fn schedule(&self, duration: Duration, rng: &mut Rng) -> Vec<Duration> {
+        let horizon = duration.as_secs_f64();
+        let mut out = Vec::new();
+        match self {
+            ArrivalProcess::Poisson { rps } => {
+                if *rps <= 0.0 {
+                    return out;
+                }
+                let mut t = 0.0;
+                loop {
+                    t += exp_sample(rng, *rps);
+                    if t >= horizon {
+                        break;
+                    }
+                    out.push(Duration::from_secs_f64(t));
+                }
+            }
+            ArrivalProcess::DiurnalBurst {
+                base_rps,
+                peak_rps,
+                period,
+            } => {
+                let peak = peak_rps.max(*base_rps);
+                if peak <= 0.0 {
+                    return out;
+                }
+                let period = period.as_secs_f64().max(1e-6);
+                // Lewis thinning: sample at the peak rate, accept with
+                // probability rate(t)/peak.
+                let mut t = 0.0;
+                loop {
+                    t += exp_sample(rng, peak);
+                    if t >= horizon {
+                        break;
+                    }
+                    let phase = (t / period) * std::f64::consts::TAU;
+                    let rate =
+                        base_rps + (peak - base_rps) * 0.5 * (1.0 - phase.cos());
+                    if rng.f64() < rate / peak {
+                        out.push(Duration::from_secs_f64(t));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One exponential inter-arrival time at `rate` per second.
+fn exp_sample(rng: &mut Rng, rate: f64) -> f64 {
+    let u = rng.f64();
+    -(1.0 - u).ln() / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_count_near_expectation() {
+        let p = ArrivalProcess::Poisson { rps: 500.0 };
+        let n = p.schedule(Duration::from_secs(4), &mut Rng::new(7)).len();
+        // 2000 expected, sd ~45; 5 sigma either way.
+        assert!((1775..=2225).contains(&n), "n={n}");
+    }
+
+    #[test]
+    fn schedules_are_deterministic_and_sorted() {
+        let p = ArrivalProcess::DiurnalBurst {
+            base_rps: 50.0,
+            peak_rps: 400.0,
+            period: Duration::from_secs(2),
+        };
+        let a = p.schedule(Duration::from_secs(2), &mut Rng::new(3));
+        let b = p.schedule(Duration::from_secs(2), &mut Rng::new(3));
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        assert_ne!(a, p.schedule(Duration::from_secs(2), &mut Rng::new(4)));
+    }
+
+    #[test]
+    fn diurnal_peak_denser_than_trough() {
+        let p = ArrivalProcess::DiurnalBurst {
+            base_rps: 20.0,
+            peak_rps: 800.0,
+            period: Duration::from_secs(4),
+        };
+        let sched = p.schedule(Duration::from_secs(4), &mut Rng::new(11));
+        // Peak quarter is centered mid-period; trough quarter at the start.
+        let trough = sched.iter().filter(|d| d.as_secs_f64() < 1.0).count();
+        let peak = sched
+            .iter()
+            .filter(|d| (1.5..2.5).contains(&d.as_secs_f64()))
+            .count();
+        assert!(peak > 3 * trough.max(1), "peak={peak} trough={trough}");
+    }
+}

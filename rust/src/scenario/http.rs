@@ -1,0 +1,261 @@
+//! A minimal keep-alive HTTP/1.1 client with *typed* failure modes.
+//!
+//! The scenario driver holds hundreds of keep-alive connections against a
+//! server it is deliberately overloading, tripping, and reconfiguring —
+//! so every way a roundtrip can die must come back as a value, never a
+//! hang or a panic: a stuck socket is [`HttpError::Timeout`] (bounded by
+//! the connect-time read timeout), a mid-response drop is
+//! [`HttpError::Closed`], garbage is [`HttpError::Malformed`]. The test
+//! harness's `tests/common` HttpClient layers its panicking convenience
+//! API over this same type.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// Typed transport/protocol failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HttpError {
+    /// No bytes arrived within the read timeout; the operand names the
+    /// phase ("connect", "headers", "body").
+    Timeout(&'static str),
+    /// The peer closed the connection mid-phase.
+    Closed(&'static str),
+    /// The bytes that did arrive are not a parseable HTTP/1.1 response.
+    Malformed(String),
+    /// Any other socket error.
+    Io(String),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Timeout(phase) => write!(f, "read timeout during {phase}"),
+            HttpError::Closed(phase) => write!(f, "connection closed during {phase}"),
+            HttpError::Malformed(m) => write!(f, "malformed response: {m}"),
+            HttpError::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// A parsed response.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    /// The raw header block (status line + headers, no trailing CRLFCRLF),
+    /// kept for header assertions (`Retry-After`, `Connection`).
+    pub head: String,
+    pub body: String,
+    /// The server sent `Connection: close` — reconnect before reusing.
+    pub close: bool,
+}
+
+/// One keep-alive connection. Leftover bytes past the current response
+/// stay buffered, so back-to-back roundtrips never lose data.
+pub struct HttpConn {
+    pub stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl HttpConn {
+    /// Connect with a bounded read timeout (every later read inherits it).
+    pub fn connect(addr: SocketAddr, read_timeout: Duration) -> Result<HttpConn, HttpError> {
+        let stream = TcpStream::connect_timeout(&addr, read_timeout.max(Duration::from_secs(1)))
+            .map_err(|e| map_io(e, "connect"))?;
+        stream
+            .set_read_timeout(Some(read_timeout))
+            .map_err(|e| map_io(e, "connect"))?;
+        stream.set_nodelay(true).ok();
+        Ok(HttpConn {
+            stream,
+            buf: Vec::new(),
+        })
+    }
+
+    pub fn post(&mut self, path: &str, body: &str) -> Result<HttpResponse, HttpError> {
+        let raw = format!(
+            "POST {path} HTTP/1.1\r\nHost: scenario\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.send_raw(raw.as_bytes())?;
+        self.read_response()
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<HttpResponse, HttpError> {
+        let raw = format!("GET {path} HTTP/1.1\r\nHost: scenario\r\n\r\n");
+        self.send_raw(raw.as_bytes())?;
+        self.read_response()
+    }
+
+    /// Write raw bytes (a hand-built request, or a deliberately broken one).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<(), HttpError> {
+        self.stream.write_all(bytes).map_err(|e| map_io(e, "send"))
+    }
+
+    /// Read one full response (head + `Content-Length` body).
+    pub fn read_response(&mut self) -> Result<HttpResponse, HttpError> {
+        // Head.
+        let head_end = loop {
+            if let Some(pos) = find_head_end(&self.buf) {
+                break pos;
+            }
+            self.fill("headers")?;
+        };
+        let head = String::from_utf8_lossy(&self.buf[..head_end]).to_string();
+        let status = parse_status(&head)?;
+        let close = head
+            .to_ascii_lowercase()
+            .contains("connection: close");
+        let content_length = parse_content_length(&head)?;
+
+        // Body.
+        let body_start = head_end + 4;
+        while self.buf.len() < body_start + content_length {
+            self.fill("body")?;
+        }
+        let body =
+            String::from_utf8_lossy(&self.buf[body_start..body_start + content_length]).to_string();
+        self.buf.drain(..body_start + content_length);
+        Ok(HttpResponse {
+            status,
+            head,
+            body,
+            close,
+        })
+    }
+
+    fn fill(&mut self, phase: &'static str) -> Result<(), HttpError> {
+        let mut tmp = [0u8; 16 * 1024];
+        match self.stream.read(&mut tmp) {
+            Ok(0) => Err(HttpError::Closed(phase)),
+            Ok(n) => {
+                self.buf.extend_from_slice(&tmp[..n]);
+                Ok(())
+            }
+            Err(e) => Err(map_io_phase(e, phase)),
+        }
+    }
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn parse_status(head: &str) -> Result<u16, HttpError> {
+    let line = head.lines().next().unwrap_or("");
+    line.split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| HttpError::Malformed(format!("status line '{line}'")))
+}
+
+fn parse_content_length(head: &str) -> Result<usize, HttpError> {
+    for line in head.lines().skip(1) {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                return value
+                    .trim()
+                    .parse()
+                    .map_err(|_| HttpError::Malformed(format!("content-length '{value}'")));
+            }
+        }
+    }
+    Err(HttpError::Malformed("no content-length".into()))
+}
+
+fn map_io(e: std::io::Error, phase: &'static str) -> HttpError {
+    map_io_phase(e, phase)
+}
+
+fn map_io_phase(e: std::io::Error, phase: &'static str) -> HttpError {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => HttpError::Timeout(phase),
+        ErrorKind::UnexpectedEof | ErrorKind::ConnectionReset | ErrorKind::BrokenPipe
+        | ErrorKind::ConnectionAborted => HttpError::Closed(phase),
+        _ => HttpError::Io(e.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::TcpListener;
+
+    fn serve_once(payload: &'static [u8], shutdown_after: bool) -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // Consume the request head so the client's send completes.
+            let mut sink = [0u8; 4096];
+            let _ = s.read(&mut sink);
+            s.write_all(payload).unwrap();
+            if shutdown_after {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            } else {
+                // Hold the connection open, sending nothing more.
+                std::thread::sleep(Duration::from_secs(5));
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn read_timeout_is_typed_not_a_hang() {
+        // Headers promise 10 body bytes; none ever arrive.
+        let addr = serve_once(
+            b"HTTP/1.1 200 OK\r\nContent-Length: 10\r\nConnection: keep-alive\r\n\r\n",
+            false,
+        );
+        let mut c = HttpConn::connect(addr, Duration::from_millis(200)).unwrap();
+        let t0 = std::time::Instant::now();
+        let err = c.get("/x").unwrap_err();
+        assert_eq!(err, HttpError::Timeout("body"));
+        assert!(t0.elapsed() < Duration::from_secs(3), "did not hang");
+    }
+
+    #[test]
+    fn mid_response_drop_is_typed() {
+        // Half the promised body, then a hard close.
+        let addr = serve_once(
+            b"HTTP/1.1 200 OK\r\nContent-Length: 10\r\nConnection: keep-alive\r\n\r\nhello",
+            true,
+        );
+        let mut c = HttpConn::connect(addr, Duration::from_secs(2)).unwrap();
+        assert_eq!(c.get("/x").unwrap_err(), HttpError::Closed("body"));
+    }
+
+    #[test]
+    fn garbage_is_malformed() {
+        let addr = serve_once(b"NOT HTTP AT ALL\r\n\r\n", true);
+        let mut c = HttpConn::connect(addr, Duration::from_secs(2)).unwrap();
+        assert!(matches!(c.get("/x"), Err(HttpError::Malformed(_))));
+    }
+
+    #[test]
+    fn keep_alive_roundtrips_and_close_flag() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut sink = [0u8; 4096];
+            let _ = s.read(&mut sink);
+            // Two pipelined responses in one write: the client must not
+            // lose the second one's bytes.
+            s.write_all(
+                b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\nConnection: keep-alive\r\n\r\nok\
+                  HTTP/1.1 429 Too Many Requests\r\nContent-Length: 4\r\nConnection: close\r\n\r\nshed",
+            )
+            .unwrap();
+        });
+        let mut c = HttpConn::connect(addr, Duration::from_secs(2)).unwrap();
+        let r1 = c.get("/a").unwrap();
+        assert_eq!((r1.status, r1.body.as_str(), r1.close), (200, "ok", false));
+        let r2 = c.read_response().unwrap();
+        assert_eq!((r2.status, r2.body.as_str(), r2.close), (429, "shed", true));
+    }
+}

@@ -1,0 +1,52 @@
+//! Open-loop scenario engine: trace-driven traffic against the real HTTP
+//! server, with a declarative scenario matrix and invariant-checked live
+//! reconfiguration (ROADMAP Open item 5).
+//!
+//! The two seed workloads replay closed-loop — each client waits for its
+//! previous response before sending the next request — which makes a
+//! melting server *reduce* its own offered load and hide queueing
+//! collapse. This engine is open-loop: [`arrivals::ArrivalProcess`]
+//! fixes every request's send time up front (homogeneous Poisson or a
+//! diurnal-burst cycle), [`traffic::Trace`] binds each arrival to a
+//! tenant/user/service-type/prompt draw (heavy-tailed prompt lengths via
+//! [`traffic::bounded_pareto`]), and [`runner::run_scenario`] drives the
+//! schedule over keep-alive connections, measuring every latency from
+//! the *scheduled* arrival — so shed decisions and queue growth appear
+//! in p99 instead of silently stretching the clock (no coordinated
+//! omission; the `run_open_loop` idiom from `benches/throughput.rs`
+//! generalized to traces, tenants, and both server backends).
+//!
+//! The standing matrix ([`runner::default_matrix`]) covers underload,
+//! diurnal-burst overload with shedding, a tripped per-model breaker,
+//! cache-cold vs cache-warm, two-node replication, and the live
+//! reconfiguration drill: `POST /admin/config {"generation": ...}` swaps
+//! the model pool under load while an invariant checker classifies every
+//! response by the generations of its `metadata.models_used` — a mixed
+//! response would mean a half-applied config and fails the suite
+//! ([`runner::InvariantReport`]). Results are reported per scenario as
+//! p50/p99, cost per 1k requests, cache hit rate, shed rate by reason,
+//! and SLO violations during the cutover window
+//! ([`runner::ScenarioOutcome`]) — `benches/scenarios.rs` writes them to
+//! `BENCH_scenarios.json`, and `tests/scenarios.rs` CI-gates the whole
+//! matrix in smoke mode on both server backends.
+//!
+//! Everything stochastic forks from one seed ([`crate::util::rng::Rng`]),
+//! so a trace is byte-reproducible across processes
+//! (`tests/workload_determinism.rs` diffs fingerprints via the
+//! `llmbridge trace` subcommand).
+
+pub mod arrivals;
+pub mod http;
+pub mod runner;
+pub mod traffic;
+
+pub use arrivals::ArrivalProcess;
+pub use http::{HttpConn, HttpError, HttpResponse};
+pub use runner::{
+    calibrate_rps, default_matrix, run_matrix, run_scenario, ArrivalShape, InvariantReport,
+    ReconfigSpec, RunOptions, Scenario, ScenarioOutcome,
+};
+pub use traffic::{
+    bounded_pareto, cacheable_tenants, delegated_tenants, standard_tenants, tenants_fingerprint,
+    TenantSpec, Trace, TraceEvent,
+};

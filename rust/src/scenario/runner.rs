@@ -1,0 +1,903 @@
+//! Scenario definitions and the open-loop runner.
+//!
+//! A [`Scenario`] is declarative: an arrival shape (as multiples of the
+//! machine's *calibrated* closed-loop capacity, so the same matrix
+//! stresses a laptop and a CI runner equally), a tenant set, and the
+//! fault/operation to exercise (shed watermark, breaker trip, cache
+//! warm-up, two-node sync, live reconfiguration). [`run_scenario`] builds
+//! a fresh [`Bridge`] + [`Server`] per scenario, generates the
+//! deterministic [`Trace`], and drives it over keep-alive connections
+//! with scheduled-arrival latency accounting — each request's latency is
+//! measured from its *scheduled* send time, so server-induced queueing
+//! shows up in p99 instead of silently stretching the load clock
+//! (the `run_open_loop` idiom from `benches/throughput.rs`, generalized).
+//!
+//! **The reconfiguration invariant.** The `reconfig` scenario swaps the
+//! model-pool generation via `POST /admin/config {"generation": ...}`
+//! mid-run. Every 200 response is classified by the generations of its
+//! `metadata.models_used`: with generation-delegated tenants, a response
+//! must be *entirely* old-pool or *entirely* new-pool. A single response
+//! mixing the two would mean a request observed a half-applied config —
+//! [`InvariantReport::mixed`] counts exactly that and must be zero
+//! (asserted by `tests/scenarios.rs`), while `old_only`/`new_only` both
+//! being positive proves the cutover actually happened under load.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Bridge, BridgeConfig};
+use crate::models::pricing::{Generation, ModelId};
+use crate::runtime::EngineHandle;
+use crate::server::{Server, ServerBackend, ServerConfig};
+use crate::util::json::Json;
+
+use super::arrivals::ArrivalProcess;
+use super::http::{HttpConn, HttpError, HttpResponse};
+use super::traffic::{TenantSpec, Trace};
+
+/// Arrival shape in multiples of calibrated closed-loop capacity.
+#[derive(Clone, Debug)]
+pub enum ArrivalShape {
+    Poisson { mult: f64 },
+    DiurnalBurst { base_mult: f64, peak_mult: f64 },
+}
+
+/// Live-reconfiguration step: POST `body` to `/admin/config` at
+/// `at_frac` of the run, then watch SLO compliance in a window of
+/// `window_frac` around the cutover.
+#[derive(Clone, Debug)]
+pub struct ReconfigSpec {
+    pub at_frac: f64,
+    pub window_frac: f64,
+    pub body: String,
+}
+
+/// One declarative scenario.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub shape: ArrivalShape,
+    pub tenants: Vec<TenantSpec>,
+    /// Pre-seed the exact cache with every trace prompt.
+    pub warm_cache: bool,
+    /// Trip this model's breaker open before traffic starts.
+    pub trip_breaker: Option<ModelId>,
+    /// Swap config under load.
+    pub reconfig: Option<ReconfigSpec>,
+    /// Replicate node A's cache to a fresh node B after the run.
+    pub two_node: bool,
+    /// Override the server's shed watermark (`None` = default 512).
+    pub shed_watermark: Option<usize>,
+    pub slo_ms: u64,
+    pub start_generation: Generation,
+}
+
+impl Scenario {
+    fn base(name: &'static str, shape: ArrivalShape, tenants: Vec<TenantSpec>) -> Scenario {
+        Scenario {
+            name,
+            shape,
+            tenants,
+            warm_cache: false,
+            trip_breaker: None,
+            reconfig: None,
+            two_node: false,
+            shed_watermark: None,
+            slo_ms: 250,
+            start_generation: Generation::New,
+        }
+    }
+}
+
+/// The standing matrix: every operational regime the proxy claims to
+/// handle, each CI-gated in smoke mode (`tests/scenarios.rs`) and
+/// measured at full size by `benches/scenarios.rs`.
+pub fn default_matrix() -> Vec<Scenario> {
+    use super::traffic::{cacheable_tenants, delegated_tenants, standard_tenants};
+    vec![
+        Scenario::base(
+            "underload",
+            ArrivalShape::Poisson { mult: 0.5 },
+            standard_tenants(),
+        ),
+        Scenario {
+            shed_watermark: Some(1),
+            ..Scenario::base(
+                "overload_shed",
+                ArrivalShape::DiurnalBurst {
+                    base_mult: 0.5,
+                    peak_mult: 4.0,
+                },
+                standard_tenants(),
+            )
+        },
+        Scenario {
+            trip_breaker: Some(ModelId::SonarHugeOnline),
+            ..Scenario::base(
+                "breaker_trip",
+                ArrivalShape::Poisson { mult: 0.5 },
+                standard_tenants(),
+            )
+        },
+        Scenario::base(
+            "cache_cold",
+            ArrivalShape::Poisson { mult: 0.5 },
+            cacheable_tenants(),
+        ),
+        Scenario {
+            warm_cache: true,
+            ..Scenario::base(
+                "cache_warm",
+                ArrivalShape::Poisson { mult: 0.5 },
+                cacheable_tenants(),
+            )
+        },
+        Scenario {
+            warm_cache: true,
+            two_node: true,
+            ..Scenario::base(
+                "two_node_sync",
+                ArrivalShape::Poisson { mult: 0.5 },
+                cacheable_tenants(),
+            )
+        },
+        Scenario {
+            start_generation: Generation::Old,
+            reconfig: Some(ReconfigSpec {
+                at_frac: 0.4,
+                window_frac: 0.15,
+                body: r#"{"generation":"new"}"#.into(),
+            }),
+            ..Scenario::base(
+                "reconfig",
+                ArrivalShape::Poisson { mult: 0.7 },
+                delegated_tenants(),
+            )
+        },
+    ]
+}
+
+/// Runner knobs shared by every scenario in one invocation.
+#[derive(Clone, Debug)]
+pub struct RunOptions {
+    pub backend: ServerBackend,
+    /// Reduced-corpus mode for CI: shorter runs, capped event counts.
+    pub smoke: bool,
+    pub seed: u64,
+}
+
+impl RunOptions {
+    pub fn new(backend: ServerBackend, smoke: bool) -> RunOptions {
+        RunOptions {
+            backend,
+            smoke,
+            seed: 0x5eed_0010,
+        }
+    }
+
+    fn duration(&self) -> Duration {
+        if self.smoke {
+            Duration::from_millis(1000)
+        } else {
+            Duration::from_secs(5)
+        }
+    }
+
+    fn conns(&self) -> usize {
+        if self.smoke {
+            6
+        } else {
+            8
+        }
+    }
+
+    fn max_events(&self) -> usize {
+        if self.smoke {
+            240
+        } else {
+            4000
+        }
+    }
+
+    fn min_events(&self) -> usize {
+        if self.smoke {
+            60
+        } else {
+            400
+        }
+    }
+
+    fn calibration_requests(&self) -> usize {
+        if self.smoke {
+            60
+        } else {
+            200
+        }
+    }
+
+    fn read_timeout(&self) -> Duration {
+        Duration::from_secs(5)
+    }
+}
+
+/// Old-or-new classification of one response's `models_used`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum GenClass {
+    /// No billed models (pure cache hit) — trivially consistent.
+    CacheOnly,
+    Old,
+    New,
+    /// Models from both generations in one response: the invariant
+    /// violation the reconfig scenario exists to rule out.
+    Mixed,
+}
+
+/// Per-response snapshot-consistency tally for the reconfig scenario.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InvariantReport {
+    pub checked: u64,
+    pub old_only: u64,
+    pub new_only: u64,
+    pub cache_only: u64,
+    /// Must be zero: responses mixing old- and new-generation models.
+    pub mixed: u64,
+}
+
+/// Everything a scenario run measured.
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    pub name: String,
+    pub offered_rps: f64,
+    pub scheduled: u64,
+    pub served: u64,
+    pub shed: u64,
+    pub transport_errors: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub slo_ms: u64,
+    pub slo_violations: u64,
+    pub cost_per_1k_usd: f64,
+    pub cache_hit_rate: f64,
+    pub shed_by_reason: BTreeMap<String, u64>,
+    pub invariant: Option<InvariantReport>,
+    pub cutover_slo_violations: Option<u64>,
+    pub reconfig_applied: Option<bool>,
+    pub sync_applied: Option<u64>,
+}
+
+impl ScenarioOutcome {
+    pub fn shed_rate(&self) -> f64 {
+        if self.scheduled == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.scheduled as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("offered_rps", Json::num(self.offered_rps)),
+            ("scheduled", Json::num(self.scheduled as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("shed_rate", Json::num(self.shed_rate())),
+            ("transport_errors", Json::num(self.transport_errors as f64)),
+            ("p50_us", Json::num(self.p50_us as f64)),
+            ("p99_us", Json::num(self.p99_us as f64)),
+            ("slo_ms", Json::num(self.slo_ms as f64)),
+            ("slo_violations", Json::num(self.slo_violations as f64)),
+            ("cost_per_1k_usd", Json::num(self.cost_per_1k_usd)),
+            ("cache_hit_rate", Json::num(self.cache_hit_rate)),
+            (
+                "shed_by_reason",
+                Json::obj(
+                    self.shed_by_reason
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+        ];
+        if let Some(inv) = &self.invariant {
+            pairs.push((
+                "invariant",
+                Json::obj(vec![
+                    ("checked", Json::num(inv.checked as f64)),
+                    ("old_only", Json::num(inv.old_only as f64)),
+                    ("new_only", Json::num(inv.new_only as f64)),
+                    ("cache_only", Json::num(inv.cache_only as f64)),
+                    ("mixed", Json::num(inv.mixed as f64)),
+                ]),
+            ));
+        }
+        if let Some(v) = self.cutover_slo_violations {
+            pairs.push(("cutover_slo_violations", Json::num(v as f64)));
+        }
+        if let Some(ok) = self.reconfig_applied {
+            pairs.push(("reconfig_applied", Json::Bool(ok)));
+        }
+        if let Some(n) = self.sync_applied {
+            pairs.push(("sync_applied", Json::num(n as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// One record per scheduled request.
+struct Sample {
+    /// Scheduled offset from trace start.
+    at: Duration,
+    /// Measured from the *scheduled* send time.
+    lat_us: u64,
+    /// HTTP status; 0 = transport error.
+    status: u16,
+    reason: Option<String>,
+    cost_usd: f64,
+    cache_hit: bool,
+    gen: GenClass,
+}
+
+/// A keep-alive connection that transparently reconnects after a
+/// `Connection: close` (the threaded backend closes after every request)
+/// or a typed transport error.
+struct Client {
+    addr: std::net::SocketAddr,
+    timeout: Duration,
+    conn: Option<HttpConn>,
+}
+
+impl Client {
+    fn new(addr: std::net::SocketAddr, timeout: Duration) -> Client {
+        Client {
+            addr,
+            timeout,
+            conn: None,
+        }
+    }
+
+    fn post(&mut self, path: &str, body: &str) -> Result<HttpResponse, HttpError> {
+        if self.conn.is_none() {
+            self.conn = Some(HttpConn::connect(self.addr, self.timeout)?);
+        }
+        let conn = self.conn.as_mut().expect("connected above");
+        match conn.post(path, body) {
+            Ok(resp) => {
+                if resp.close {
+                    self.conn = None;
+                }
+                Ok(resp)
+            }
+            Err(e) => {
+                self.conn = None;
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Measure closed-loop capacity (req/s) for this backend so scenario
+/// rates scale to the machine: a couple of connections issuing cheap
+/// `cost`-type requests back to back against a default-tuned server.
+pub fn calibrate_rps(engine: &EngineHandle, opts: &RunOptions) -> Result<f64> {
+    let bridge = Arc::new(Bridge::from_engine(
+        engine.clone(),
+        BridgeConfig::default(),
+    )?);
+    let server = Server::start_with(
+        bridge,
+        "127.0.0.1:0",
+        ServerConfig {
+            workers: 2,
+            backend: opts.backend,
+            ..ServerConfig::default()
+        },
+    )?;
+    let addr = server.addr;
+    let per_conn = opts.calibration_requests();
+    let timeout = opts.read_timeout();
+    let t0 = Instant::now();
+    let total: usize = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut client = Client::new(addr, timeout);
+                    let mut done = 0usize;
+                    for i in 0..per_conn {
+                        let body = format!(
+                            r#"{{"user":"cal-{c}","conversation":"cal","prompt":"calibration probe {c}-{i}","service_type":{{"name":"cost"}},"update_context":false}}"#
+                        );
+                        if client.post("/v1/request", &body).is_ok() {
+                            done += 1;
+                        }
+                    }
+                    done
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-3);
+    server.stop();
+    if total == 0 {
+        bail!("calibration served no requests");
+    }
+    Ok(total as f64 / elapsed)
+}
+
+/// Run every scenario with one shared calibration. The usual entry point
+/// for the bench and the smoke suite.
+pub fn run_matrix(
+    engine: &EngineHandle,
+    scenarios: &[Scenario],
+    opts: &RunOptions,
+) -> Result<Vec<ScenarioOutcome>> {
+    let base_rps = calibrate_rps(engine, opts)?;
+    scenarios
+        .iter()
+        .map(|sc| run_scenario(engine, sc, opts, base_rps))
+        .collect()
+}
+
+/// Run one scenario against a fresh bridge + server.
+pub fn run_scenario(
+    engine: &EngineHandle,
+    sc: &Scenario,
+    opts: &RunOptions,
+    base_rps: f64,
+) -> Result<ScenarioOutcome> {
+    let duration = opts.duration();
+    let arrivals = build_arrivals(sc, opts, base_rps, duration);
+
+    let trace = Trace::generate(
+        opts.seed ^ crate::util::fnv1a(sc.name.as_bytes()),
+        &sc.tenants,
+        &arrivals,
+        duration,
+    );
+
+    let bridge_config = BridgeConfig {
+        generation: sc.start_generation,
+        node_id: if sc.two_node {
+            Some("scn-a".to_string())
+        } else {
+            None
+        },
+        breaker: crate::ops::BreakerConfig {
+            // Long cooldown: a manually tripped breaker must stay open
+            // for the whole run instead of half-open-probing shut.
+            cooldown: Duration::from_secs(120),
+            ..crate::ops::BreakerConfig::default()
+        },
+        ..BridgeConfig::default()
+    };
+    let bridge = Arc::new(Bridge::from_engine(engine.clone(), bridge_config)?);
+
+    if sc.warm_cache {
+        for prompt in trace.unique_prompts() {
+            bridge.cache().put_exact(prompt, "warm: prefetched answer");
+        }
+    }
+    if let Some(model) = sc.trip_breaker {
+        let threshold = bridge.breaker().config().threshold;
+        for _ in 0..threshold {
+            bridge.breaker().record_failure(model.as_str());
+        }
+    }
+
+    // Node A's sync listener, when replicating.
+    let mut sync_service = if sc.two_node {
+        Some(crate::sync::SyncService::start(
+            bridge.clone(),
+            crate::sync::SyncConfig {
+                node_id: "scn-a".to_string(),
+                listen_port: Some(0),
+                peer: None,
+                interval: Duration::from_secs(3600),
+            },
+        )?)
+    } else {
+        None
+    };
+
+    let server = Server::start_with(
+        bridge.clone(),
+        "127.0.0.1:0",
+        ServerConfig {
+            workers: 2,
+            shed_watermark: sc.shed_watermark.unwrap_or(512),
+            backend: opts.backend,
+            admin_bind: Some("127.0.0.1:0".to_string()),
+            ..ServerConfig::default()
+        },
+    )?;
+    let addr = server.addr;
+    let admin_addr = server
+        .admin_addr
+        .context("admin listener required for scenarios")?;
+
+    // Drive the trace: round-robin events over keep-alive connections,
+    // each sent at its scheduled offset.
+    let conns = opts.conns();
+    let timeout = opts.read_timeout();
+    let reconfig_applied = Arc::new(AtomicBool::new(false));
+    let t0 = Instant::now();
+    let mut samples: Vec<Sample> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..conns {
+            let events = &trace.events;
+            handles.push(s.spawn(move || {
+                let mut client = Client::new(addr, timeout);
+                let mut out = Vec::new();
+                for ev in events.iter().skip(c).step_by(conns) {
+                    let sched = t0 + ev.at;
+                    let now = Instant::now();
+                    if sched > now {
+                        std::thread::sleep(sched - now);
+                    }
+                    let result = client.post("/v1/request", &ev.body);
+                    let lat_us = Instant::now().duration_since(sched).as_micros() as u64;
+                    out.push(classify(ev.at, lat_us, result));
+                }
+                out
+            }));
+        }
+        if let Some(rc) = &sc.reconfig {
+            let body = rc.body.clone();
+            let at = duration.mul_f64(rc.at_frac);
+            let applied = reconfig_applied.clone();
+            handles.push(s.spawn(move || {
+                let sched = t0 + at;
+                let now = Instant::now();
+                if sched > now {
+                    std::thread::sleep(sched - now);
+                }
+                let mut admin = Client::new(admin_addr, timeout);
+                if let Ok(resp) = admin.post("/admin/config", &body) {
+                    if resp.status == 200 {
+                        applied.store(true, Ordering::Release);
+                    }
+                }
+                Vec::new()
+            }));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("driver thread"))
+            .collect()
+    });
+    samples.sort_by_key(|s| s.at);
+
+    // After the run: replicate node A's corpus to a fresh node B and
+    // count the entries B applied.
+    let sync_applied = if sc.two_node {
+        let listen = await_listen_addr(sync_service.as_ref().expect("two_node sync service"))?;
+        let bridge_b = Bridge::from_engine(
+            engine.clone(),
+            BridgeConfig {
+                generation: sc.start_generation,
+                node_id: Some("scn-b".to_string()),
+                ..BridgeConfig::default()
+            },
+        )?;
+        let report = crate::sync::run_once(&bridge_b, &listen.to_string())?;
+        Some(report.applied as u64)
+    } else {
+        None
+    };
+
+    if let Some(svc) = sync_service.as_mut() {
+        svc.stop();
+    }
+    server.stop();
+
+    Ok(summarize(
+        sc,
+        &samples,
+        duration,
+        sc.reconfig.as_ref(),
+        reconfig_applied.load(Ordering::Acquire),
+        sync_applied,
+    ))
+}
+
+fn build_arrivals(
+    sc: &Scenario,
+    opts: &RunOptions,
+    base_rps: f64,
+    duration: Duration,
+) -> ArrivalProcess {
+    let horizon = duration.as_secs_f64();
+    let raw = match sc.shape {
+        ArrivalShape::Poisson { mult } => ArrivalProcess::Poisson {
+            rps: base_rps * mult,
+        },
+        ArrivalShape::DiurnalBurst {
+            base_mult,
+            peak_mult,
+        } => ArrivalProcess::DiurnalBurst {
+            base_rps: base_rps * base_mult,
+            peak_rps: base_rps * peak_mult,
+            period: duration,
+        },
+    };
+    // Bound the schedule so a fast machine doesn't explode the event
+    // count (nor a slow one starve the statistics). Scaling the rate
+    // keeps the *shape* (the overload multiple is relative to capacity;
+    // the cap only bounds wall-clock work).
+    let mean = raw.mean_rps().max(1e-9);
+    let expected = mean * horizon;
+    let factor = if expected > opts.max_events() as f64 {
+        opts.max_events() as f64 / expected
+    } else if expected < opts.min_events() as f64 {
+        opts.min_events() as f64 / expected
+    } else {
+        1.0
+    };
+    match raw {
+        ArrivalProcess::Poisson { rps } => ArrivalProcess::Poisson { rps: rps * factor },
+        ArrivalProcess::DiurnalBurst {
+            base_rps,
+            peak_rps,
+            period,
+        } => ArrivalProcess::DiurnalBurst {
+            base_rps: base_rps * factor,
+            peak_rps: peak_rps * factor,
+            period,
+        },
+    }
+}
+
+/// Poll the sync service until its accept thread has bound.
+fn await_listen_addr(svc: &crate::sync::SyncService) -> Result<std::net::SocketAddr> {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if let Some(addr) = svc.listen_addr() {
+            return Ok(addr);
+        }
+        if Instant::now() > deadline {
+            bail!("sync listener did not bind");
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Turn one roundtrip result into a sample, parsing the wire-visible
+/// metadata (cost, cache outcome, models used) on success and the typed
+/// shed reason on 429/503.
+fn classify(at: Duration, lat_us: u64, result: Result<HttpResponse, HttpError>) -> Sample {
+    let mut sample = Sample {
+        at,
+        lat_us,
+        status: 0,
+        reason: None,
+        cost_usd: 0.0,
+        cache_hit: false,
+        gen: GenClass::CacheOnly,
+    };
+    let resp = match result {
+        Ok(r) => r,
+        Err(e) => {
+            sample.reason = Some(format!("transport:{e}"));
+            return sample;
+        }
+    };
+    sample.status = resp.status;
+    let Ok(j) = Json::parse(&resp.body) else {
+        return sample;
+    };
+    if resp.status == 200 {
+        if let Some(meta) = j.get("metadata") {
+            sample.cost_usd = meta.get("cost_usd").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            sample.cache_hit = match meta.get("cache") {
+                Some(Json::Str(s)) => s == "exact_hit",
+                // Semantic hits serialize as {"kind":"semantic_hit",...}.
+                Some(obj) => obj
+                    .get("kind")
+                    .and_then(|k| k.as_str())
+                    .map(|k| k == "semantic_hit")
+                    .unwrap_or(false),
+                None => false,
+            };
+            sample.gen = classify_generations(meta.get("models_used"));
+        }
+    } else {
+        sample.reason = j.get("reason").and_then(|r| r.as_str()).map(String::from);
+    }
+    sample
+}
+
+fn classify_generations(models_used: Option<&Json>) -> GenClass {
+    let Some(Json::Arr(items)) = models_used else {
+        return GenClass::CacheOnly;
+    };
+    let (mut old, mut new) = (false, false);
+    for item in items {
+        let Some(name) = item.get("model").and_then(|m| m.as_str()) else {
+            return GenClass::Mixed; // unparseable entry: fail loud
+        };
+        match ModelId::parse(name) {
+            Ok(m) => match m.spec().generation {
+                Generation::Old => old = true,
+                Generation::New => new = true,
+            },
+            Err(_) => return GenClass::Mixed,
+        }
+    }
+    match (old, new) {
+        (false, false) => GenClass::CacheOnly,
+        (true, false) => GenClass::Old,
+        (false, true) => GenClass::New,
+        (true, true) => GenClass::Mixed,
+    }
+}
+
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn summarize(
+    sc: &Scenario,
+    samples: &[Sample],
+    duration: Duration,
+    reconfig: Option<&ReconfigSpec>,
+    reconfig_applied: bool,
+    sync_applied: Option<u64>,
+) -> ScenarioOutcome {
+    let scheduled = samples.len() as u64;
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    let mut transport_errors = 0u64;
+    let mut shed_by_reason: BTreeMap<String, u64> = BTreeMap::new();
+    let mut served_lat: Vec<u64> = Vec::new();
+    let mut total_cost = 0.0f64;
+    let mut hits = 0u64;
+    let mut slo_violations = 0u64;
+    let mut cutover_violations = 0u64;
+    let mut inv = InvariantReport::default();
+    let slo_us = sc.slo_ms * 1000;
+
+    let cutover_window = reconfig.map(|rc| {
+        let center = duration.mul_f64(rc.at_frac);
+        let half = duration.mul_f64(rc.window_frac);
+        (center.saturating_sub(half), center + half)
+    });
+
+    for s in samples {
+        match s.status {
+            200 => {
+                served += 1;
+                served_lat.push(s.lat_us);
+                total_cost += s.cost_usd;
+                if s.cache_hit {
+                    hits += 1;
+                }
+                if s.lat_us > slo_us {
+                    slo_violations += 1;
+                    if let Some((lo, hi)) = cutover_window {
+                        if s.at >= lo && s.at <= hi {
+                            cutover_violations += 1;
+                        }
+                    }
+                }
+                if reconfig.is_some() {
+                    inv.checked += 1;
+                    match s.gen {
+                        GenClass::Old => inv.old_only += 1,
+                        GenClass::New => inv.new_only += 1,
+                        GenClass::CacheOnly => inv.cache_only += 1,
+                        GenClass::Mixed => inv.mixed += 1,
+                    }
+                }
+            }
+            429 | 503 => {
+                shed += 1;
+                let reason = s.reason.clone().unwrap_or_else(|| "unknown".into());
+                *shed_by_reason.entry(reason).or_insert(0) += 1;
+            }
+            0 => transport_errors += 1,
+            _ => {
+                let reason = format!("http_{}", s.status);
+                shed += 1;
+                *shed_by_reason.entry(reason).or_insert(0) += 1;
+            }
+        }
+    }
+    served_lat.sort_unstable();
+
+    ScenarioOutcome {
+        name: sc.name.to_string(),
+        offered_rps: scheduled as f64 / duration.as_secs_f64().max(1e-9),
+        scheduled,
+        served,
+        shed,
+        transport_errors,
+        p50_us: percentile(&served_lat, 0.50),
+        p99_us: percentile(&served_lat, 0.99),
+        slo_ms: sc.slo_ms,
+        slo_violations,
+        cost_per_1k_usd: if served == 0 {
+            0.0
+        } else {
+            total_cost / served as f64 * 1000.0
+        },
+        cache_hit_rate: if served == 0 {
+            0.0
+        } else {
+            hits as f64 / served as f64
+        },
+        shed_by_reason,
+        invariant: reconfig.map(|_| inv),
+        cutover_slo_violations: reconfig.map(|_| cutover_violations),
+        reconfig_applied: reconfig.map(|_| reconfig_applied),
+        sync_applied,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_names_are_unique_and_cover_the_regimes() {
+        let m = default_matrix();
+        let names: Vec<&str> = m.iter().map(|s| s.name).collect();
+        let set: std::collections::BTreeSet<&str> = names.iter().copied().collect();
+        assert_eq!(set.len(), names.len(), "duplicate scenario names");
+        for want in [
+            "underload",
+            "overload_shed",
+            "breaker_trip",
+            "cache_cold",
+            "cache_warm",
+            "two_node_sync",
+            "reconfig",
+        ] {
+            assert!(set.contains(want), "matrix missing {want}");
+        }
+        let rc = m.iter().find(|s| s.name == "reconfig").unwrap();
+        assert_eq!(rc.start_generation, Generation::Old);
+        assert!(rc.reconfig.is_some());
+    }
+
+    #[test]
+    fn generation_classification() {
+        let arr = |names: &[&str]| {
+            Json::Arr(
+                names
+                    .iter()
+                    .map(|n| Json::obj(vec![("model", Json::str(*n)), ("role", Json::str("x"))]))
+                    .collect(),
+            )
+        };
+        assert_eq!(
+            classify_generations(Some(&arr(&["gpt-4", "gpt-3.5-turbo"]))),
+            GenClass::Old
+        );
+        assert_eq!(
+            classify_generations(Some(&arr(&["gpt-4o-mini"]))),
+            GenClass::New
+        );
+        assert_eq!(
+            classify_generations(Some(&arr(&["gpt-4", "gpt-4o-mini"]))),
+            GenClass::Mixed
+        );
+        assert_eq!(classify_generations(Some(&arr(&[]))), GenClass::CacheOnly);
+        assert_eq!(classify_generations(None), GenClass::CacheOnly);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        assert_eq!(percentile(&[], 0.5), 0);
+        let v = [1, 2, 3, 4, 100];
+        assert_eq!(percentile(&v, 0.5), 3);
+        assert_eq!(percentile(&v, 0.99), 100);
+    }
+}

@@ -1,0 +1,401 @@
+//! The traffic matrix: per-tenant service-type mixes and deterministic
+//! trace generation.
+//!
+//! A [`TenantSpec`] is one application sharing the proxy: a user pool, an
+//! arrival weight, and a mix over [`ServiceType`]s. [`Trace::generate`]
+//! combines a tenant set with an arrival schedule into a sorted list of
+//! fully serialized HTTP request bodies, each pinned to its scheduled
+//! arrival offset. Everything derives from the seed — two builds of the
+//! same trace are byte-identical, witnessed by [`Trace::fingerprint`]
+//! (and cross-process by `llmbridge trace` + `tests/workload_determinism.rs`).
+//!
+//! Prompt lengths are heavy-tailed ([`bounded_pareto`] over word counts,
+//! alpha ~1.15): most prompts are short, a few are hundreds of words —
+//! the regime PAPERS.md's traffic-source paper warns about. Response
+//! lengths are owned by the serving backend (the generator's per-model
+//! decode lengths are themselves heavy-tailed across the pool); the trace
+//! shapes the input side only.
+
+use std::time::Duration;
+
+use crate::api::{CachePolicy, Request, ServiceType};
+use crate::models::pricing::ModelId;
+use crate::util::rng::Rng;
+use crate::util::{fnv1a, seed_of};
+
+use super::arrivals::ArrivalProcess;
+
+/// One application (tenant) sharing the proxy.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: &'static str,
+    /// Distinct users in this tenant's pool (per-user serialization and
+    /// quotas apply per user, so pool size shapes contention).
+    pub users: usize,
+    /// Relative share of total arrivals.
+    pub weight: f64,
+    /// Service-type mix, weighted; drawn independently per request.
+    pub mix: Vec<(ServiceType, f64)>,
+}
+
+/// Sample from a bounded Pareto distribution via inverse transform:
+/// heavy-tailed in `[xmin, xmax]` with tail index `alpha`.
+pub fn bounded_pareto(rng: &mut Rng, alpha: f64, xmin: f64, xmax: f64) -> f64 {
+    let u = rng.f64();
+    let ratio = (xmin / xmax).powf(alpha);
+    xmin / (1.0 - u * (1.0 - ratio)).powf(1.0 / alpha)
+}
+
+/// The standard tenant set: three applications whose mixes collectively
+/// lower to all seven routing policies (Fixed, QualityMax, CostMin,
+/// BudgetCap, LatencyClass, Allowlist, CascadeVerify).
+pub fn standard_tenants() -> Vec<TenantSpec> {
+    vec![
+        TenantSpec {
+            name: "chat",
+            users: 12,
+            weight: 3.0,
+            mix: vec![
+                (ServiceType::Quality, 0.2),
+                (ServiceType::default(), 0.4), // model_selector cascade
+                (ServiceType::LatencyFirst, 0.4),
+            ],
+        },
+        TenantSpec {
+            name: "classroom",
+            users: 8,
+            weight: 2.0,
+            mix: vec![
+                (
+                    ServiceType::UsageBased {
+                        allowed: vec![
+                            ModelId::Gpt4oMini,
+                            ModelId::Claude3Haiku,
+                            ModelId::Llama38b,
+                            ModelId::Phi3Mini,
+                        ],
+                        fallback: ModelId::Gpt4oMini,
+                    },
+                    0.6,
+                ),
+                (
+                    ServiceType::Budget {
+                        max_usd_per_mtok_in: 1.0,
+                    },
+                    0.4,
+                ),
+            ],
+        },
+        TenantSpec {
+            name: "kb",
+            users: 6,
+            weight: 2.0,
+            mix: vec![
+                (
+                    ServiceType::SmartCache {
+                        model: ModelId::Phi3Mini,
+                    },
+                    0.3,
+                ),
+                (
+                    ServiceType::SmartContext {
+                        k: 3,
+                        model: ModelId::Claude3Haiku,
+                    },
+                    0.2,
+                ),
+                (ServiceType::Cost, 0.3),
+                (
+                    ServiceType::Fixed {
+                        model: ModelId::Gpt4oMini,
+                        cache: CachePolicy::Auto,
+                        context_k: 0,
+                    },
+                    0.2,
+                ),
+            ],
+        },
+    ]
+}
+
+/// Tenants restricted to generation-*delegated* service types (quality /
+/// cost / budget / model_selector): every model in every response derives
+/// from one `router::lower` call over one generation, so the
+/// reconfiguration invariant — all of a response's models belong to a
+/// single generation — is exact, with no pinned-model noise.
+pub fn delegated_tenants() -> Vec<TenantSpec> {
+    vec![
+        TenantSpec {
+            name: "delegated-scored",
+            users: 10,
+            weight: 1.0,
+            mix: vec![
+                (ServiceType::Quality, 0.3),
+                (ServiceType::Cost, 0.4),
+                (
+                    ServiceType::Budget {
+                        max_usd_per_mtok_in: 1.0,
+                    },
+                    0.3,
+                ),
+            ],
+        },
+        TenantSpec {
+            name: "delegated-cascade",
+            users: 10,
+            weight: 1.0,
+            mix: vec![(ServiceType::default(), 1.0)],
+        },
+    ]
+}
+
+/// Tenants whose lowered policies all consult the exact prefetch store,
+/// for the cache-warm vs cache-cold pair.
+pub fn cacheable_tenants() -> Vec<TenantSpec> {
+    vec![TenantSpec {
+        name: "buttons",
+        users: 8,
+        weight: 1.0,
+        mix: vec![
+            (
+                ServiceType::Fixed {
+                    model: ModelId::Gpt4oMini,
+                    cache: CachePolicy::Auto,
+                    context_k: 0,
+                },
+                0.5,
+            ),
+            (ServiceType::LatencyFirst, 0.25),
+            (ServiceType::Cost, 0.25),
+        ],
+    }]
+}
+
+/// One scheduled request.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Scheduled arrival offset from the trace start.
+    pub at: Duration,
+    pub tenant: &'static str,
+    pub user: String,
+    pub prompt: String,
+    /// The serialized `POST /v1/request` body.
+    pub body: String,
+}
+
+/// A deterministic open-loop trace: events sorted by arrival offset.
+#[derive(Debug)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    /// FNV-1a over every `(offset, body)` pair — byte-identical traces
+    /// have equal fingerprints, and any drift in arrivals, tenant
+    /// selection, or request serialization changes it.
+    pub fingerprint: u64,
+}
+
+impl Trace {
+    /// Build the trace for one scenario run. All randomness forks off
+    /// `seed`; the arrival schedule and the per-event draws use
+    /// independent streams so adding tenants never perturbs arrivals.
+    pub fn generate(
+        seed: u64,
+        tenants: &[TenantSpec],
+        arrivals: &ArrivalProcess,
+        duration: Duration,
+    ) -> Trace {
+        let mut root = Rng::new(seed);
+        let mut sched_rng = root.fork(1);
+        let mut pick_rng = root.fork(2);
+        let mut len_rng = root.fork(3);
+
+        let offsets = arrivals.schedule(duration, &mut sched_rng);
+        let total_weight: f64 = tenants.iter().map(|t| t.weight).sum();
+        let mut events = Vec::with_capacity(offsets.len());
+        for (i, at) in offsets.into_iter().enumerate() {
+            let tenant = pick_weighted(&mut pick_rng, tenants, total_weight);
+            let user_idx = pick_rng.below(tenant.users.max(1));
+            let user = format!("{}-u{user_idx}", tenant.name);
+            let mix_total: f64 = tenant.mix.iter().map(|(_, w)| w).sum();
+            let st = pick_mix(&mut pick_rng, &tenant.mix, mix_total);
+            let words = bounded_pareto(&mut len_rng, 1.15, 6.0, 120.0) as usize;
+            let prompt = synth_prompt(tenant.name, i, words, &mut len_rng);
+            let req = Request::new(&user, "scn", &prompt)
+                .service_type(st.clone())
+                .no_context_update();
+            events.push(TraceEvent {
+                at,
+                tenant: tenant.name,
+                user,
+                prompt,
+                body: req.to_json().to_string(),
+            });
+        }
+
+        let mut acc = String::new();
+        for ev in &events {
+            acc.push_str(&ev.at.as_micros().to_string());
+            acc.push('|');
+            acc.push_str(&ev.body);
+            acc.push('\n');
+        }
+        Trace {
+            fingerprint: fnv1a(acc.as_bytes()),
+            events,
+        }
+    }
+
+    /// Distinct prompts, for pre-warming the exact cache.
+    pub fn unique_prompts(&self) -> Vec<&str> {
+        let mut seen = std::collections::BTreeSet::new();
+        self.events
+            .iter()
+            .filter(|e| seen.insert(e.prompt.as_str()))
+            .map(|e| e.prompt.as_str())
+            .collect()
+    }
+}
+
+fn pick_weighted<'a>(
+    rng: &mut Rng,
+    tenants: &'a [TenantSpec],
+    total: f64,
+) -> &'a TenantSpec {
+    let mut x = rng.f64() * total;
+    for t in tenants {
+        x -= t.weight;
+        if x <= 0.0 {
+            return t;
+        }
+    }
+    tenants.last().expect("non-empty tenant set")
+}
+
+fn pick_mix<'a>(
+    rng: &mut Rng,
+    mix: &'a [(ServiceType, f64)],
+    total: f64,
+) -> &'a ServiceType {
+    let mut x = rng.f64() * total;
+    for (st, w) in mix {
+        x -= w;
+        if x <= 0.0 {
+            return st;
+        }
+    }
+    &mix.last().expect("non-empty mix").0
+}
+
+/// Deterministic word-salad prompt of roughly `words` words. The leading
+/// `tenant qN` token keeps every event's prompt unique (cold runs see no
+/// accidental repeats; warm runs seed the exact store from the trace).
+fn synth_prompt(tenant: &str, idx: usize, words: usize, rng: &mut Rng) -> String {
+    const VOCAB: [&str; 24] = [
+        "explain", "the", "difference", "between", "protocol", "cache",
+        "latency", "model", "cost", "summarize", "compare", "quantum",
+        "gateway", "token", "budget", "capital", "history", "of",
+        "transformer", "network", "overview", "tradeoffs", "in", "practice",
+    ];
+    let mut p = format!("{tenant} q{idx}:");
+    for _ in 0..words.max(1) {
+        p.push(' ');
+        p.push_str(VOCAB[rng.below(VOCAB.len())]);
+    }
+    p
+}
+
+/// Fingerprint a tenant set (the `llmbridge trace` CLI surfaces this so
+/// the cross-process determinism test can diff it).
+pub fn tenants_fingerprint(tenants: &[TenantSpec]) -> u64 {
+    let mut acc = String::new();
+    for t in tenants {
+        acc.push_str(t.name);
+        acc.push('|');
+        acc.push_str(&t.users.to_string());
+        acc.push('|');
+        acc.push_str(&t.weight.to_bits().to_string());
+        for (st, w) in &t.mix {
+            acc.push('|');
+            acc.push_str(&st.to_json().to_string());
+            acc.push('|');
+            acc.push_str(&w.to_bits().to_string());
+        }
+        acc.push('\n');
+    }
+    seed_of(&[&acc])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    fn trace(seed: u64) -> Trace {
+        Trace::generate(
+            seed,
+            &standard_tenants(),
+            &ArrivalProcess::Poisson { rps: 400.0 },
+            Duration::from_secs(1),
+        )
+    }
+
+    #[test]
+    fn same_seed_same_fingerprint() {
+        let (a, b) = (trace(42), trace(42));
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.events.len(), b.events.len());
+        assert_ne!(trace(43).fingerprint, a.fingerprint);
+    }
+
+    #[test]
+    fn standard_mix_covers_every_service_type_family() {
+        let t = trace(7);
+        let names: BTreeSet<&str> = standard_tenants()
+            .iter()
+            .flat_map(|t| t.mix.iter().map(|(st, _)| st.name()))
+            .collect();
+        // All seven routing policies: fixed→Fixed, quality→QualityMax,
+        // cost→CostMin, budget→BudgetCap, latency_first→LatencyClass,
+        // usage_based→Allowlist, model_selector→CascadeVerify (plus the
+        // smart_* types, which lower to Fixed routing).
+        for want in [
+            "fixed",
+            "quality",
+            "cost",
+            "budget",
+            "latency_first",
+            "usage_based",
+            "model_selector",
+            "smart_cache",
+            "smart_context",
+        ] {
+            assert!(names.contains(want), "mix missing {want}");
+        }
+        assert!(t.events.len() > 100);
+    }
+
+    #[test]
+    fn pareto_lengths_bounded_and_skewed() {
+        let mut rng = Rng::new(5);
+        let xs: Vec<f64> = (0..20_000)
+            .map(|_| bounded_pareto(&mut rng, 1.15, 6.0, 120.0))
+            .collect();
+        assert!(xs.iter().all(|&x| (6.0..=120.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[xs.len() / 2];
+        // Heavy tail: mean well above median, and the max stretches out.
+        assert!(mean > 1.25 * median, "mean={mean} median={median}");
+        assert!(*sorted.last().unwrap() > 80.0);
+    }
+
+    #[test]
+    fn prompts_unique_and_bodies_parse_back() {
+        let t = trace(9);
+        assert_eq!(t.unique_prompts().len(), t.events.len());
+        let j = crate::util::json::Json::parse(&t.events[0].body).unwrap();
+        let req = Request::from_json(&j).unwrap();
+        assert!(!req.update_context);
+        assert_eq!(req.prompt, t.events[0].prompt);
+    }
+}

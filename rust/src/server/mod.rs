@@ -681,10 +681,12 @@ fn admin_breaker_snapshot(bridge: &Bridge) -> Reply {
 /// `POST /admin/config`: staged hot-reload of the ops tunables. The new
 /// config is built from the current snapshot plus the request's fields
 /// and validated completely; only then is it published — one `Arc` swap
-/// for the server knobs, one call for the breaker — so no request
-/// observes a half-applied config (validate → swap, the Chameleon
-/// happens-before framing). An unknown field or invalid value rejects
-/// the whole request with 400 and changes nothing.
+/// for the server knobs, one call for the breaker, one atomic store for
+/// the model-pool `"generation"` (`"old"`/`"new"`, read once per request
+/// by the router) — so no request observes a half-applied config
+/// (validate → swap, the Chameleon happens-before framing). An unknown
+/// field or invalid value rejects the whole request with 400 and changes
+/// nothing.
 fn admin_config_reload(bridge: &Bridge, state: &ServerState, body: &str) -> Reply {
     let j = match Json::parse(body) {
         Ok(j) => j,
@@ -698,6 +700,7 @@ fn admin_config_reload(bridge: &Bridge, state: &ServerState, body: &str) -> Repl
     // Stage: copy current configs, overlay request fields, validate.
     let mut ops = (*state.ops_config()).clone();
     let mut breaker = bridge.breaker().config();
+    let mut generation: Option<crate::models::pricing::Generation> = None;
     for (key, value) in fields {
         let bad = |msg: &str| Reply::new(400, err_body(&BridgeError::bad_request(msg)));
         match key.as_str() {
@@ -723,16 +726,31 @@ fn admin_config_reload(bridge: &Bridge, state: &ServerState, body: &str) -> Repl
                 }
                 _ => return bad("breaker_cooldown_secs must be a number > 0"),
             },
+            "generation" => match value.as_str() {
+                Some("old") => generation = Some(crate::models::pricing::Generation::Old),
+                Some("new") => generation = Some(crate::models::pricing::Generation::New),
+                _ => return bad("generation must be \"old\" or \"new\""),
+            },
             other => {
                 return bad(&format!("unknown config field '{other}'"));
             }
         }
     }
 
-    // Swap: everything validated; publish atomically per subsystem.
+    // Swap: everything validated; publish atomically per subsystem. The
+    // generation swap is a single atomic store read once per request, so
+    // in-flight requests finish on the pool they admitted with and no
+    // response can mix old- and new-generation models.
     bridge.breaker().set_config(breaker);
     state.set_ops_config(ops.clone());
+    if let Some(g) = generation {
+        bridge.set_generation(g);
+    }
     bridge.telemetry().counters.incr("admin_config_reloads");
+    let live_generation = match bridge.generation() {
+        crate::models::pricing::Generation::Old => "old",
+        crate::models::pricing::Generation::New => "new",
+    };
     Reply::new(
         200,
         Json::obj(vec![
@@ -745,6 +763,7 @@ fn admin_config_reload(bridge: &Bridge, state: &ServerState, body: &str) -> Repl
                 "breaker_cooldown_secs",
                 Json::num(breaker.cooldown.as_secs_f64()),
             ),
+            ("generation", Json::str(live_generation)),
         ])
         .to_string(),
     )

@@ -4,6 +4,8 @@ use std::sync::{Arc, OnceLock};
 
 use llmbridge::coordinator::{Bridge, BridgeConfig};
 use llmbridge::models::pricing::Generation;
+#[allow(unused_imports)]
+pub use llmbridge::scenario::http::{HttpConn, HttpError, HttpResponse};
 
 pub fn artifacts_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -42,40 +44,73 @@ pub fn old_gen_config() -> BridgeConfig {
 /// which holds keep-alive connections open, and correct against the
 /// threaded server, which closes them. Leftover bytes past one response
 /// stay buffered, so pipelined responses read back one at a time.
+///
+/// Transport is [`llmbridge::scenario::http::HttpConn`]: the `try_*`
+/// methods surface its typed failures ([`HttpError::Timeout`],
+/// [`HttpError::Closed`], [`HttpError::Malformed`]) for tests that
+/// exercise misbehaving peers; the unprefixed methods keep the historic
+/// panic-on-failure convenience API. A stuck socket fails within the
+/// read timeout instead of hanging the test binary.
 #[allow(dead_code)]
 pub struct HttpClient {
-    pub stream: std::net::TcpStream,
-    buf: Vec<u8>,
+    pub conn: HttpConn,
+}
+
+// Field/method access forwards to the connection, so existing tests can
+// keep reaching `client.stream` for raw socket surgery.
+impl std::ops::Deref for HttpClient {
+    type Target = HttpConn;
+    fn deref(&self) -> &HttpConn {
+        &self.conn
+    }
+}
+
+impl std::ops::DerefMut for HttpClient {
+    fn deref_mut(&mut self) -> &mut HttpConn {
+        &mut self.conn
+    }
 }
 
 #[allow(dead_code)]
 impl HttpClient {
     pub fn connect(addr: std::net::SocketAddr) -> HttpClient {
-        let stream = std::net::TcpStream::connect(addr).unwrap();
-        stream
-            .set_read_timeout(Some(std::time::Duration::from_secs(30)))
-            .unwrap();
-        HttpClient {
-            stream,
-            buf: Vec::new(),
-        }
+        Self::try_connect(addr, std::time::Duration::from_secs(30)).unwrap()
+    }
+
+    /// [`Self::connect`] with a caller-chosen read timeout and typed errors.
+    pub fn try_connect(
+        addr: std::net::SocketAddr,
+        read_timeout: std::time::Duration,
+    ) -> Result<HttpClient, HttpError> {
+        Ok(HttpClient {
+            conn: HttpConn::connect(addr, read_timeout)?,
+        })
     }
 
     pub fn send_raw(&mut self, raw: &[u8]) {
-        use std::io::Write;
-        self.stream.write_all(raw).unwrap();
+        self.conn.send_raw(raw).unwrap();
     }
 
     /// One GET round-trip (connection stays usable afterward).
     pub fn get(&mut self, path: &str) -> (u16, llmbridge::util::json::Json) {
-        self.send_raw(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes());
-        self.read_response()
+        let r = self.try_get(path).unwrap();
+        (r.status, parse_json(&r.body))
+    }
+
+    /// One GET round-trip with typed transport errors.
+    pub fn try_get(&mut self, path: &str) -> Result<HttpResponse, HttpError> {
+        self.conn.get(path)
     }
 
     /// One POST round-trip (connection stays usable afterward).
     pub fn post(&mut self, path: &str, body: &str) -> (u16, llmbridge::util::json::Json) {
         let (status, _head, json) = self.post_full(path, body);
         (status, json)
+    }
+
+    /// One POST round-trip with typed transport errors.
+    pub fn try_post(&mut self, path: &str, body: &str) -> Result<HttpResponse, HttpError> {
+        self.conn.post(path, body)
     }
 
     /// One POST round-trip that also returns the raw response header
@@ -85,14 +120,8 @@ impl HttpClient {
         path: &str,
         body: &str,
     ) -> (u16, String, llmbridge::util::json::Json) {
-        self.send_raw(
-            format!(
-                "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-                body.len()
-            )
-            .as_bytes(),
-        );
-        self.read_response_full()
+        let r = self.try_post(path, body).unwrap();
+        (r.status, r.head, parse_json(&r.body))
     }
 
     /// One DELETE round-trip (connection stays usable afterward).
@@ -107,44 +136,19 @@ impl HttpClient {
         (status, json)
     }
 
+    /// Read one response with typed transport errors.
+    pub fn try_read_response(&mut self) -> Result<HttpResponse, HttpError> {
+        self.conn.read_response()
+    }
+
     /// [`Self::read_response`], also returning the raw header block.
     pub fn read_response_full(&mut self) -> (u16, String, llmbridge::util::json::Json) {
-        use std::io::Read;
-        fn find(buf: &[u8], needle: &[u8]) -> Option<usize> {
-            buf.windows(needle.len()).position(|w| w == needle)
-        }
-        let mut tmp = [0u8; 4096];
-        let head_end = loop {
-            if let Some(p) = find(&self.buf, b"\r\n\r\n") {
-                break p + 4;
-            }
-            let n = self.stream.read(&mut tmp).unwrap();
-            assert!(n > 0, "connection closed before response head");
-            self.buf.extend_from_slice(&tmp[..n]);
-        };
-        let head = String::from_utf8(self.buf[..head_end].to_vec()).unwrap();
-        let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
-        let clen: usize = head
-            .lines()
-            .find_map(|l| {
-                let (k, v) = l.split_once(':')?;
-                if k.eq_ignore_ascii_case("content-length") {
-                    v.trim().parse().ok()
-                } else {
-                    None
-                }
-            })
-            .unwrap_or(0);
-        while self.buf.len() < head_end + clen {
-            let n = self.stream.read(&mut tmp).unwrap();
-            assert!(n > 0, "connection closed mid-body");
-            self.buf.extend_from_slice(&tmp[..n]);
-        }
-        let body = String::from_utf8(self.buf[head_end..head_end + clen].to_vec()).unwrap();
-        // Keep bytes past this response (pipelined successors) buffered.
-        self.buf.drain(..head_end + clen);
-        let json = llmbridge::util::json::Json::parse(&body)
-            .unwrap_or(llmbridge::util::json::Json::Null);
-        (status, head, json)
+        let r = self.try_read_response().unwrap();
+        (r.status, r.head, parse_json(&r.body))
     }
+}
+
+#[allow(dead_code)]
+fn parse_json(body: &str) -> llmbridge::util::json::Json {
+    llmbridge::util::json::Json::parse(body).unwrap_or(llmbridge::util::json::Json::Null)
 }

@@ -1,0 +1,189 @@
+//! CI gate for the open-loop scenario engine: the full `default_matrix`
+//! in smoke mode, on both server backends, plus typed-error coverage for
+//! the hardened `tests/common` HttpClient.
+//!
+//! These are the same scenarios `benches/scenarios.rs` measures at full
+//! size — here the point is not the numbers but the *invariants*: the
+//! underloaded server serves everything, the overloaded one sheds with a
+//! typed reason, the tripped breaker surfaces as `"breaker"`, the warm
+//! cache actually hits (and costs less than cold), node B applies node
+//! A's entries, and — the tentpole — no response ever observes a
+//! half-applied config during the live generation swap.
+
+mod common;
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use llmbridge::scenario::{default_matrix, run_matrix, RunOptions, ScenarioOutcome};
+use llmbridge::server::ServerBackend;
+
+/// The two matrix runs share one process; serialize them so neither's
+/// calibration measures the other's load.
+static MATRIX_LOCK: Mutex<()> = Mutex::new(());
+
+fn run_smoke_matrix(backend: ServerBackend) -> Vec<ScenarioOutcome> {
+    let _guard = MATRIX_LOCK.lock().unwrap();
+    let engine = common::bridge().engine().clone();
+    run_matrix(&engine, &default_matrix(), &RunOptions::new(backend, true))
+        .expect("scenario matrix")
+}
+
+fn by_name<'a>(outcomes: &'a [ScenarioOutcome], name: &str) -> &'a ScenarioOutcome {
+    outcomes
+        .iter()
+        .find(|o| o.name == name)
+        .unwrap_or_else(|| panic!("no outcome named {name}"))
+}
+
+fn assert_matrix_invariants(outcomes: &[ScenarioOutcome], backend: &str) {
+    assert_eq!(outcomes.len(), default_matrix().len(), "[{backend}] one outcome per scenario");
+
+    // Underload: everything scheduled is served; nothing shed or dropped.
+    let under = by_name(outcomes, "underload");
+    assert!(under.served > 0, "[{backend}] underload served nothing");
+    assert_eq!(under.shed, 0, "[{backend}] underload shed: {:?}", under.shed_by_reason);
+    assert_eq!(under.transport_errors, 0, "[{backend}] underload transport errors");
+    assert_eq!(under.served, under.scheduled, "[{backend}] underload dropped requests");
+    assert!(under.p50_us > 0, "[{backend}] latencies were measured");
+
+    // Overload with watermark 1: admission control must visibly engage.
+    let over = by_name(outcomes, "overload_shed");
+    assert!(over.shed > 0, "[{backend}] overload_shed shed nothing");
+    assert!(
+        over.shed_by_reason.contains_key("admission"),
+        "[{backend}] overload shed reasons missing 'admission': {:?}",
+        over.shed_by_reason
+    );
+    assert!(over.served + over.shed + over.transport_errors == over.scheduled);
+
+    // A tripped per-model breaker surfaces as typed 503 "breaker" sheds
+    // on the quality tenant, while other tenants keep being served.
+    let trip = by_name(outcomes, "breaker_trip");
+    assert!(trip.served > 0, "[{backend}] breaker_trip served nothing");
+    assert!(
+        trip.shed_by_reason.get("breaker").copied().unwrap_or(0) > 0,
+        "[{backend}] breaker_trip shed reasons missing 'breaker': {:?}",
+        trip.shed_by_reason
+    );
+
+    // Cache: the pre-warmed exact store hits nearly always; the cold one
+    // (the serve path never writes the exact store) essentially never.
+    let cold = by_name(outcomes, "cache_cold");
+    let warm = by_name(outcomes, "cache_warm");
+    assert!(
+        warm.cache_hit_rate > 0.9,
+        "[{backend}] warm hit rate {} <= 0.9",
+        warm.cache_hit_rate
+    );
+    assert!(
+        cold.cache_hit_rate < 0.1,
+        "[{backend}] cold hit rate {} >= 0.1",
+        cold.cache_hit_rate
+    );
+    assert!(
+        warm.cost_per_1k_usd < cold.cost_per_1k_usd,
+        "[{backend}] warm cost/1k {} not below cold {}",
+        warm.cost_per_1k_usd,
+        cold.cost_per_1k_usd
+    );
+
+    // Two-node: node B applied node A's replicated cache entries.
+    let sync = by_name(outcomes, "two_node_sync");
+    assert!(
+        sync.sync_applied.unwrap_or(0) > 0,
+        "[{backend}] two_node_sync applied nothing: {:?}",
+        sync.sync_applied
+    );
+
+    // Reconfig: the swap landed, traffic ran on both sides of it, and —
+    // the invariant — not one response mixed old- and new-pool models.
+    let rc = by_name(outcomes, "reconfig");
+    assert_eq!(rc.reconfig_applied, Some(true), "[{backend}] admin config swap failed");
+    let inv = rc.invariant.expect("reconfig invariant report");
+    assert_eq!(inv.checked, rc.served, "[{backend}] every served response was checked");
+    assert_eq!(
+        inv.mixed, 0,
+        "[{backend}] {} responses observed a half-applied config",
+        inv.mixed
+    );
+    assert!(inv.old_only > 0, "[{backend}] no traffic on the old pool before cutover");
+    assert!(inv.new_only > 0, "[{backend}] no traffic on the new pool after cutover");
+    assert!(rc.cutover_slo_violations.is_some(), "[{backend}] cutover window measured");
+}
+
+#[test]
+fn smoke_matrix_auto_backend() {
+    let outcomes = run_smoke_matrix(ServerBackend::Auto);
+    assert_matrix_invariants(&outcomes, "auto");
+}
+
+#[test]
+fn smoke_matrix_threaded_backend() {
+    let outcomes = run_smoke_matrix(ServerBackend::Threaded);
+    assert_matrix_invariants(&outcomes, "threaded");
+}
+
+// ---- typed-error coverage for the hardened tests/common HttpClient ----
+
+/// A one-shot peer that writes `payload` and then either drops the
+/// connection or goes silent.
+fn misbehaving_peer(payload: &'static [u8], drop_after: bool) -> std::net::SocketAddr {
+    use std::io::{Read, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut sink = [0u8; 4096];
+        let _ = s.read(&mut sink);
+        s.write_all(payload).unwrap();
+        if drop_after {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        } else {
+            std::thread::sleep(Duration::from_secs(5));
+        }
+    });
+    addr
+}
+
+#[test]
+fn http_client_read_timeout_is_typed() {
+    // Headers promise a body that never arrives: the old client hung for
+    // 30 s then panicked; the hardened one returns Timeout within the
+    // configured read timeout.
+    let addr = misbehaving_peer(
+        b"HTTP/1.1 200 OK\r\nContent-Length: 64\r\nConnection: keep-alive\r\n\r\n",
+        false,
+    );
+    let mut c = common::HttpClient::try_connect(addr, Duration::from_millis(200)).unwrap();
+    let t0 = std::time::Instant::now();
+    let err = c.try_get("/v1/health").unwrap_err();
+    assert_eq!(err, common::HttpError::Timeout("body"));
+    assert!(t0.elapsed() < Duration::from_secs(3), "timed out promptly");
+}
+
+#[test]
+fn http_client_mid_response_drop_is_typed() {
+    let addr = misbehaving_peer(
+        b"HTTP/1.1 200 OK\r\nContent-Length: 64\r\nConnection: keep-alive\r\n\r\npartial",
+        true,
+    );
+    let mut c = common::HttpClient::try_connect(addr, Duration::from_secs(2)).unwrap();
+    assert_eq!(
+        c.try_post("/v1/request", "{}").unwrap_err(),
+        common::HttpError::Closed("body")
+    );
+}
+
+#[test]
+fn http_client_panicking_api_still_works_end_to_end() {
+    let addr = misbehaving_peer(
+        b"HTTP/1.1 200 OK\r\nContent-Length: 15\r\nConnection: close\r\n\r\n{\"status\":\"ok\"}",
+        true,
+    );
+    let mut c = common::HttpClient::connect(addr);
+    let (status, head, json) = c.post_full("/x", "{}");
+    assert_eq!(status, 200);
+    assert!(head.to_ascii_lowercase().contains("connection: close"));
+    assert_eq!(json.get("status").and_then(|s| s.as_str()), Some("ok"));
+}

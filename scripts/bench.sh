@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# Perf-trajectory runner: build release, run the hotpath and throughput
-# benches, and write BENCH_hotpath.json / BENCH_throughput.json at the
-# repo root so successive PRs have a comparable baseline.
+# Perf-trajectory runner: build release, run the hotpath, throughput, and
+# scenario benches, and write BENCH_hotpath.json / BENCH_throughput.json /
+# BENCH_scenarios.json at the repo root so successive PRs have a
+# comparable baseline.
 #
 # The hotpath bench includes the persist micro-benches
 # (persist/wal_append_interaction, persist/cold_restore_20k, and
@@ -20,6 +21,12 @@
 # omission) plus the admission-shed rate. Results land in
 # BENCH_throughput.json under throughput/open_loop_0.6x,
 # throughput/open_loop_1.5x, and the summary throughput/open_loop_p99.
+#
+# The scenarios bench generalizes that probe to the full trace-driven
+# scenario matrix (underload, diurnal overload + shedding, breaker trip,
+# cache cold/warm, two-node sync, live reconfiguration with the
+# old-or-new-snapshot invariant); one scenarios/<name> entry per scenario
+# lands in BENCH_scenarios.json.
 #
 # Usage: scripts/bench.sh [--fast|--smoke]
 #   --fast    shrink iteration counts (LLMBRIDGE_BENCH_FAST=1).
@@ -74,4 +81,7 @@ LLMBRIDGE_BENCH_JSON="$ROOT/BENCH_hotpath.json" \
 LLMBRIDGE_BENCH_JSON="$ROOT/BENCH_throughput.json" \
   cargo bench --bench throughput
 
-echo "wrote $ROOT/BENCH_hotpath.json and $ROOT/BENCH_throughput.json"
+LLMBRIDGE_BENCH_JSON="$ROOT/BENCH_scenarios.json" \
+  cargo bench --bench scenarios
+
+echo "wrote $ROOT/BENCH_hotpath.json, $ROOT/BENCH_throughput.json and $ROOT/BENCH_scenarios.json"

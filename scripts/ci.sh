@@ -16,7 +16,10 @@
 # plus the ops-resilience suite: panic isolation, breaker trips,
 # rate-limit hot-reload, admin surface — plus the two-node replication
 # convergence harness — debug-mode timing hides races the optimized loop
-# would hit), then
+# would hit), a release-mode smoke of the open-loop scenario matrix on
+# both server backends (LLMBRIDGE_BENCH_SMOKE=1 --test scenarios: the
+# reduced-corpus traffic matrix plus the live-reconfiguration snapshot
+# invariant), then
 # cargo fmt --check, cargo clippy --workspace -D warnings, rustdoc with
 # -D warnings (the docs gate — broken intra-doc links and malformed docs
 # fail the build, so module docs can't rot), a pure-shell markdown link
@@ -56,6 +59,12 @@ LLMBRIDGE_FORCE_SCALAR=1 cargo test --workspace -q
 
 echo "==> server stress: cargo test --release --test server_evented --test server_http --test server_ops --test replication"
 cargo test --release --test server_evented --test server_http --test server_ops --test replication -q
+
+echo "==> scenario matrix smoke: LLMBRIDGE_BENCH_SMOKE=1 cargo test --release --test scenarios"
+# Release mode: the open-loop driver holds scheduled arrival times against
+# a live server on both backends; debug-mode timing would distort the
+# shapes the assertions (shed reasons, cutover invariant) depend on.
+LLMBRIDGE_BENCH_SMOKE=1 cargo test --release --test scenarios -q
 
 echo "==> cargo fmt --check"
 cargo fmt --all -- --check
